@@ -1,0 +1,37 @@
+"""Spark-role analogue: streaming fit throughput of the full LTR pipeline
+(rows/s through all estimator statistics) and transform throughput."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.apps.ltr_pipeline import build_ltr_pipeline
+from repro.core import KamaeSparkPipeline
+from repro.apps.ltr_pipeline import build_ltr_stages
+from repro.data import ltr_rows
+
+from .common import emit
+
+
+def run() -> None:
+    n = 1024
+    batches = [ltr_rows(n, seed=s) for s in range(4)]
+
+    stages, _ = build_ltr_stages()
+    pipe = KamaeSparkPipeline(stages=stages)
+    t0 = time.perf_counter()
+    fitted = pipe.fit(lambda: iter(batches))
+    dt = time.perf_counter() - t0
+    rows = n * len(batches)
+    emit("fit_ltr_pipeline", dt * 1e6 / rows, f"rows_per_s={rows/dt:.0f} passes={fitted.n_passes}")
+
+    tf = jax.jit(fitted.transform)
+    out = tf(batches[0])
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for b in batches:
+        out = tf(b)
+    jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    emit("transform_ltr_pipeline", dt * 1e6 / rows, f"rows_per_s={rows/dt:.0f}")

@@ -1,0 +1,61 @@
+"""Render the §Dry-run / §Roofline tables of EXPERIMENTS.md from the dry-run
+artifacts.  Usage: PYTHONPATH=src python -m benchmarks.report [dir]"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirpath):
+    rows = {}
+    for p in sorted(pathlib.Path(dirpath).glob("*.json")):
+        r = json.loads(p.read_text())
+        key = (r["arch"], r["shape"], r["mesh"])
+        rows[key] = r
+    return rows
+
+
+def gib(b):
+    return f"{b / 2**30:.2f}"
+
+
+def render(dirpath="benchmarks/artifacts/dryrun") -> str:
+    rows = load(dirpath)
+    archs = sorted({k[0] for k in rows})
+    out = []
+    for mesh in ("16x16", "2x16x16"):
+        out.append(f"\n#### Mesh {mesh} ({256 if mesh=='16x16' else 512} chips)\n")
+        out.append(
+            "| arch | shape | status | peak GiB/dev | HLO GFLOP/dev | coll GiB/dev "
+            "| compute_s | memory_s | collective_s | dominant | useful | roofline frac |"
+        )
+        out.append("|---|---|---|---|---|---|---|---|---|---|---|---|")
+        for a in archs:
+            for sh in SHAPE_ORDER:
+                r = rows.get((a, sh, mesh))
+                if r is None:
+                    continue
+                if "skipped" in r:
+                    out.append(f"| {a} | {sh} | SKIP (sub-quadratic-only shape) | — | — | — | — | — | — | — | — | — |")
+                    continue
+                if "error" in r:
+                    out.append(f"| {a} | {sh} | ERROR | — | — | — | — | — | — | — | — | — |")
+                    continue
+                t = r["roofline"]
+                out.append(
+                    f"| {a} | {sh} | ok ({r['compile_s']:.0f}s compile) "
+                    f"| {gib(r['memory']['peak_est_bytes_per_dev'])} "
+                    f"| {r['cost']['flops_per_dev']/1e9:.0f} "
+                    f"| {gib(r['collectives']['total_bytes_per_dev'])} "
+                    f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} | {t['collective_s']:.4f} "
+                    f"| {t['dominant'].replace('_s','')} | {t['useful_flops_ratio']:.2f} "
+                    f"| {t['roofline_fraction']:.3f} |"
+                )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(render(sys.argv[1] if len(sys.argv) > 1 else "benchmarks/artifacts/dryrun"))

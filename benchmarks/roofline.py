@@ -1,0 +1,39 @@
+"""Roofline table: reads the dry-run artifacts (benchmarks/artifacts/dryrun)
+and prints the per-(arch x shape x mesh) terms — the §Roofline source."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def rows(mesh_filter=None):
+    out = []
+    for p in sorted(ARTIFACTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        if "roofline" not in r:
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        r["_name"] = p.stem  # distinguishes hillclimb _iterN artifacts
+        out.append(r)
+    return out
+
+
+def run() -> None:
+    rs = rows()
+    if not rs:
+        print("roofline,0,no dry-run artifacts yet — run repro.launch.dryrun")
+        return
+    for r in rs:
+        t = r["roofline"]
+        name = f"roofline_{r['_name']}"
+        dominant_s = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        derived = (
+            f"dom={t['dominant']} frac={t['roofline_fraction']:.3f} "
+            f"comp={t['compute_s']:.3f}s mem={t['memory_s']:.3f}s "
+            f"coll={t['collective_s']:.3f}s useful={t['useful_flops_ratio']:.2f} "
+            f"peakGiB={r['memory']['peak_est_bytes_per_dev']/2**30:.2f}"
+        )
+        print(f"{name},{dominant_s*1e6:.1f},{derived}")

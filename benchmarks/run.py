@@ -1,0 +1,28 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+#   preprocessing    — paper §3: fused vs unfused vs interpreted serve latency
+#   indexing         — paper §2: string/hash/bloom indexing variants
+#   fit_throughput   — Spark-role streaming fit + transform throughput
+#   decode           — serve_step latency for the LM substrate (smoke scale)
+#   roofline         — dry-run-derived roofline terms per (arch, shape, mesh)
+import sys
+
+
+def main() -> None:
+    from . import fit_throughput, indexing, preprocessing, roofline
+
+    print("name,us_per_call,derived")
+    preprocessing.run()
+    indexing.run()
+    fit_throughput.run()
+    try:
+        from . import decode
+
+        decode.run()
+    except Exception as e:  # decode bench is optional on very slow hosts
+        print(f"decode_bench,0,skipped:{type(e).__name__}")
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""repro — Kamae-on-JAX: train/serve-parity preprocessing + multi-pod LM framework.
+
+x64 is enabled globally: the core preprocessing layer hashes strings with
+64-bit FNV-1a (collision-free vocabularies at data-lake cardinalities).
+All model/training code passes explicit dtypes and is unaffected.
+"""
+import jax as _jax
+
+_jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,1 @@
+"""Application-level pipelines (the paper's use-cases as library code)."""

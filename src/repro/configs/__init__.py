@@ -1,0 +1,30 @@
+"""Assigned architecture configs (exact published shapes) + paper use-cases.
+
+Every config module exposes CONFIG (the full published architecture) built on
+:class:`repro.configs.base.ArchConfig`; ``get(name)`` resolves by id.
+"""
+from importlib import import_module
+
+ARCH_IDS = [
+    "codeqwen1_5_7b",
+    "stablelm_3b",
+    "deepseek_coder_33b",
+    "qwen2_5_32b",
+    "pixtral_12b",
+    "deepseek_moe_16b",
+    "deepseek_v2_236b",
+    "whisper_medium",
+    "recurrentgemma_9b",
+    "mamba2_780m",
+]
+
+_ALIAS = {i.replace("_", "-"): i for i in ARCH_IDS}
+_ALIAS.update({
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "qwen2.5-32b": "qwen2_5_32b",
+})
+
+
+def get(name: str):
+    mod = _ALIAS.get(name, name).replace("-", "_").replace(".", "_")
+    return import_module(f"repro.configs.{mod}").CONFIG

@@ -1,0 +1,117 @@
+"""ArchConfig: one declarative schema covering all ten assigned architecture
+families, plus execution policy (dtype, remat, scan, pallas).  Each file in
+this package instantiates the EXACT published config and a reduced smoke
+config of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ArchConfig:
+    name: str = "arch"
+    family: str = "dense"  # dense | moe | mla_moe | whisper | vlm | rglru | mamba2
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 512
+    vocab: int = 1024
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rotary_pct: float = 1.0  # partial rotary (stablelm-2 uses 0.25)
+    norm: str = "rms"  # rms | ln
+    tie_embed: bool = False
+
+    # --- MoE ---------------------------------------------------------------
+    n_routed_experts: int = 0
+    n_shared_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0  # leading layers with dense FFN (DeepSeek)
+    first_dense_ff: int = 0
+    moe_aux_coef: float = 0.001
+    moe_capacity_factor: float = 1.25
+    moe_norm_top_k: bool = True
+
+    # --- MLA (DeepSeek-V2) --------------------------------------------------
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- RG-LRU hybrid (RecurrentGemma) --------------------------------------
+    lru_width: int = 0
+    window: Optional[int] = None  # local attention window
+    block_pattern: Tuple[str, ...] = ()  # e.g. ("rec", "rec", "attn")
+
+    # --- Mamba2 / SSD ---------------------------------------------------------
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_ngroups: int = 1
+    ssm_chunk: int = 64
+    conv_width: int = 4
+
+    # --- modality stubs -------------------------------------------------------
+    num_patches: int = 0  # vlm: stub patch embeddings prepended to text
+    enc_layers: int = 0  # whisper encoder depth
+    enc_seq: int = 1500  # whisper: fixed frame count (stub conv frontend)
+
+    # --- execution policy -------------------------------------------------------
+    compute_dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    use_pallas: bool = False
+    remat: str = "none"  # none | dots | full
+    scan_layers: bool = True
+    max_target_len: int = 448  # whisper decoder positional table size floor
+
+    # ------------------------------------------------------------------
+    @property
+    def d_inner(self) -> int:  # mamba2
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def smoke(self) -> "ArchConfig":
+        """A reduced same-family config for CPU smoke tests."""
+        small = dataclasses.replace(
+            self,
+            n_layers=min(self.n_layers, 4 if not self.block_pattern else len(self.block_pattern) + 1),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 4) if self.n_kv_heads > 1 else 1,
+            head_dim=32,
+            d_ff=256,
+            vocab=512,
+            q_lora_rank=64 if self.q_lora_rank else 0,
+            kv_lora_rank=32 if self.kv_lora_rank else 0,
+            qk_nope_dim=32 if self.qk_nope_dim else 0,
+            qk_rope_dim=16 if self.qk_rope_dim else 0,
+            v_head_dim=32 if self.v_head_dim else 0,
+            n_routed_experts=8 if self.n_routed_experts else 0,
+            n_shared_experts=min(self.n_shared_experts, 1),
+            moe_top_k=min(self.moe_top_k, 2),
+            moe_d_ff=64 if self.moe_d_ff else 0,
+            first_dense_layers=min(self.first_dense_layers, 1),
+            first_dense_ff=128 if self.first_dense_ff else 0,
+            lru_width=128 if self.lru_width else 0,
+            window=min(self.window, 64) if self.window else None,
+            ssm_state=32 if self.ssm_state else 0,
+            ssm_headdim=32 if self.ssm_state else 64,
+            ssm_chunk=16 if self.ssm_state else 64,
+            num_patches=16 if self.num_patches else 0,
+            enc_layers=2 if self.enc_layers else 0,
+            enc_seq=64 if self.enc_layers else 1500,
+            compute_dtype=jnp.float32,
+            remat="none",
+        )
+        return small

@@ -1,0 +1,23 @@
+"""DeepSeekMoE-16B [arXiv:2401.06066] — fine-grained MoE: 2 shared + 64
+routed experts, top-6, first layer dense."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,  # routed expert width
+    vocab=102400,
+    norm="rms",
+    n_routed_experts=64,
+    n_shared_experts=2,
+    moe_top_k=6,
+    moe_d_ff=1408,
+    first_dense_layers=1,
+    first_dense_ff=10944,
+    remat="full",
+)

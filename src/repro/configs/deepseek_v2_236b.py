@@ -1,0 +1,28 @@
+"""DeepSeek-V2-236B [arXiv:2405.04434] — MLA (kv_lora=512) + fine-grained MoE
+(2 shared + 160 routed, top-6), first layer dense."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-236b",
+    family="mla_moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,  # informational; MLA replaces per-head KV
+    head_dim=128,
+    d_ff=1536,  # routed expert width
+    vocab=102400,
+    norm="rms",
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    n_routed_experts=160,
+    n_shared_experts=2,
+    moe_top_k=6,
+    moe_d_ff=1536,
+    first_dense_layers=1,
+    first_dense_ff=12288,
+    remat="full",
+)

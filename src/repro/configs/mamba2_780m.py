@@ -1,0 +1,22 @@
+"""Mamba2-780m [arXiv:2405.21060] — attention-free SSD, state=128."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-780m",
+    family="mamba2",
+    n_layers=48,
+    d_model=1536,
+    n_heads=0,  # attention-free
+    n_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab=50280,
+    norm="rms",
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,
+    ssm_ngroups=1,
+    ssm_chunk=128,
+    tie_embed=True,
+    remat="full",
+)

@@ -1,0 +1,20 @@
+"""Pixtral-12B [hf:mistralai/Pixtral-12B-2409] — mistral-nemo decoder backbone
+with a STUB ViT frontend (input_specs feeds precomputed patch embeddings;
+see DESIGN.md §Arch-applicability)."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="pixtral-12b",
+    family="vlm",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab=131072,
+    rope_theta=1_000_000.0,
+    norm="rms",
+    num_patches=256,  # stub patch-embedding sequence prepended to text
+    remat="full",
+)

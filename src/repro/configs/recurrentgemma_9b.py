@@ -1,0 +1,20 @@
+"""RecurrentGemma-9B [arXiv:2402.19427] — Griffin: RG-LRU + local attention,
+pattern (rec, rec, attn) 1:2, window 2048, MQA kv=1 head_dim=256."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-9b",
+    family="rglru",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab=256000,
+    norm="rms",
+    lru_width=4096,
+    window=2048,
+    block_pattern=("rec", "rec", "attn"),
+    remat="full",
+)

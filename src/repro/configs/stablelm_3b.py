@@ -1,0 +1,19 @@
+"""StableLM (stabilityai family) — dense, LayerNorm, partial rotary 25%."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="stablelm-3b",
+    family="dense",
+    n_layers=32,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=80,
+    d_ff=6912,
+    vocab=50304,
+    qkv_bias=False,
+    rope_theta=10000.0,
+    rotary_pct=0.25,
+    norm="ln",
+    remat="full",
+)

@@ -1,0 +1,22 @@
+"""Whisper-medium [arXiv:2212.04356] — enc-dec; conv/mel frontend is a STUB
+(input_specs feeds (B, 1500, 1024) frame embeddings).  max_target_len is
+sized so the decode_32k stress shape has a positional table to index."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="whisper",
+    n_layers=24,  # decoder layers
+    enc_layers=24,
+    enc_seq=1500,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab=51865,
+    qkv_bias=True,
+    norm="ln",
+    max_target_len=32768,
+    remat="full",
+)

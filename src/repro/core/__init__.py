@@ -1,0 +1,50 @@
+"""repro.core — the paper's contribution: Spark→Keras preprocessing parity,
+re-based onto JAX (the paper's own named future-work backend).
+
+Public API mirrors the paper's:
+
+    from repro.core import KamaeSparkPipeline, StringIndexEstimator, ...
+    pipe = KamaeSparkPipeline(stages=[...])
+    fitted = pipe.fit(batches)            # distributed via Engine(mesh)
+    model = fitted.build_keras_model()    # -> PreprocessModel (pure JAX)
+"""
+from . import hashing, sketches, strops
+from . import types
+from .engine import Engine
+from .export import PreprocessModel
+from .pipeline import FittedPipeline, KamaeSparkPipeline, Pipeline
+from .stage import Estimator, FittedStage, Stage, Transformer
+from .estimators import (
+    ImputeEstimator,
+    MinMaxScaleEstimator,
+    OneHotEncodeEstimator,
+    QuantileBinEstimator,
+    SharedStringIndexEstimator,
+    StandardScaleEstimator,
+    StringIndexEstimator,
+)
+from .transformers import *  # noqa: F401,F403 — the transformer suite
+from .transformers import __all__ as _transformer_names
+
+__all__ = [
+    "types",
+    "strops",
+    "hashing",
+    "sketches",
+    "Engine",
+    "PreprocessModel",
+    "Pipeline",
+    "KamaeSparkPipeline",
+    "FittedPipeline",
+    "Stage",
+    "Transformer",
+    "Estimator",
+    "FittedStage",
+    "StringIndexEstimator",
+    "SharedStringIndexEstimator",
+    "OneHotEncodeEstimator",
+    "StandardScaleEstimator",
+    "MinMaxScaleEstimator",
+    "ImputeEstimator",
+    "QuantileBinEstimator",
+] + list(_transformer_names)

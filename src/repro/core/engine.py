@@ -1,0 +1,99 @@
+"""Distributed fit/transform engine — the "Spark" role of the paper, played
+by a JAX device mesh.
+
+Batches are sharded over the ``data`` axis; estimator statistics are
+replicated outputs, so XLA inserts the cross-shard reductions (all-reduce of
+moment sums, gather+merge of vocab tables) exactly where Spark would run
+treeAggregate.  One code path covers 1 CPU device (tests), one pod, and the
+multi-pod production mesh (where the reduction becomes hierarchical:
+intra-pod ICI then inter-pod DCI).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class Engine:
+    """Execution context for pipeline fit/transform.
+
+    Args:
+      mesh: device mesh; None = single default device.
+      data_axes: mesh axis name(s) carrying the batch dimension.  On the
+        production mesh this is ("pod", "data") so batches shard across pods
+        AND across data-parallel groups within a pod.
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None, data_axes=("data",)):
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes) if not isinstance(data_axes, str) else (data_axes,)
+
+    # -- sharding helpers -------------------------------------------------
+    def batch_spec(self) -> P:
+        return P(self.data_axes)
+
+    def batch_sharding(self):
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, self.batch_spec())
+
+    def shard_batch(self, batch):
+        """Place a host batch onto the mesh, sharded along the batch dim."""
+        if self.mesh is None:
+            return batch
+        sh = self.batch_sharding()
+        return {k: jax.device_put(v, sh) for k, v in batch.items()}
+
+    def data_shard_count(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.data_axes]))
+
+    # -- jit wrappers ------------------------------------------------------
+    def jit_fit_step(self, fn: Callable):
+        """stats, batch -> stats with batch sharded and stats replicated."""
+        if self.mesh is None:
+            return jax.jit(fn)
+        repl = NamedSharding(self.mesh, P())
+        batch_sh = self.batch_sharding()
+
+        def spec_for(stats, batch):
+            stats_sh = jax.tree.map(lambda _: repl, stats)
+            batch_shs = jax.tree.map(lambda _: batch_sh, batch)
+            return stats_sh, batch_shs
+
+        jitted = {}
+
+        def wrapper(stats, batch):
+            key = tuple(sorted(batch.keys()))
+            if key not in jitted:
+                in_sh = spec_for(stats, batch)
+                jitted[key] = jax.jit(
+                    fn,
+                    in_shardings=in_sh,
+                    out_shardings=jax.tree.map(lambda _: repl, stats),
+                )
+            return jitted[key](stats, batch)
+
+        return wrapper
+
+    def jit_transform(self, fn: Callable):
+        """batch -> batch, sharded in and out along the data axes."""
+        if self.mesh is None:
+            return jax.jit(fn)
+        batch_sh = self.batch_sharding()
+        jitted = {}
+
+        def wrapper(batch):
+            key = tuple(sorted(batch.keys()))
+            if key not in jitted:
+                jitted[key] = jax.jit(
+                    fn,
+                    in_shardings=jax.tree.map(lambda _: batch_sh, batch),
+                    out_shardings=None,  # let XLA propagate; outputs stay sharded
+                )
+            return jitted[key](batch)
+
+        return wrapper

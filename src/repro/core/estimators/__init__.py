@@ -1,0 +1,25 @@
+"""Kamae estimators: stages that learn weights from data (paper §2:
+"string-, hash-, bloom-, shared- indexing, standard scaling, and imputation";
+quantile binning is §4 future work, implemented here as a beyond-paper item).
+"""
+from .indexers import (
+    OneHotEncodeEstimator,
+    SharedStringIndexEstimator,
+    StringIndexEstimator,
+)
+from .scalers import (
+    ImputeEstimator,
+    MinMaxScaleEstimator,
+    QuantileBinEstimator,
+    StandardScaleEstimator,
+)
+
+__all__ = [
+    "StringIndexEstimator",
+    "SharedStringIndexEstimator",
+    "OneHotEncodeEstimator",
+    "StandardScaleEstimator",
+    "MinMaxScaleEstimator",
+    "ImputeEstimator",
+    "QuantileBinEstimator",
+]

@@ -1,0 +1,173 @@
+"""Learned indexers: string indexing (vocabulary lookup), shared indexing,
+and the one-hot encoder built on top.
+
+Index layout (Keras-StringLookup compatible, matching the paper's Listing 1):
+
+    [0: maskToken]  [numOOVIndices OOV buckets]  [vocabulary...]
+
+the mask slot exists only when ``maskToken`` is set.  Unseen values hash into
+one of the OOV buckets; with ``numOOVIndices=0`` they fall back to index 0.
+
+Lookup at inference is TPU-native: 64-bit hash of the byte tensor, then a
+branchless binary search (``searchsorted``) in the sorted hash table — O(log V)
+integer ops, no host dictionary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import hashing, sketches, strops
+from .. import types as T
+from ..stage import Estimator, register_stage
+
+
+@register_stage
+@dataclasses.dataclass
+class StringIndexEstimator(Estimator):
+    """Vocabulary indexer (Listing 1's movie_id_string_indexer)."""
+
+    stringOrderType: str = "frequencyDesc"
+    numOOVIndices: int = 1
+    maskToken: Optional[str] = None
+    maxVocabSize: Optional[int] = None
+    vocabCapacity: int = 1 << 15  # sketch capacity; exact below this many uniques
+
+    # ---- statistics monoid -------------------------------------------------
+    def init_stats(self):
+        return sketches.vocab_init(self.vocabCapacity, self.maxLen)
+
+    def update_stats(self, stats, inputs):
+        table = stats
+        for x in inputs:
+            if not T.is_string_col(x):
+                x = strops.number_to_string(x, self.maxLen)
+            h = hashing.fnv1a64(x)
+            table = sketches.vocab_update(table, h, x)
+        return table
+
+    def merge_stats(self, a, b):
+        return sketches.vocab_merge(a, b)
+
+    # ---- host-side finalisation -------------------------------------------
+    def finalize(self, stats) -> Dict[str, jax.Array]:
+        keys = np.asarray(stats["keys"])
+        counts = np.asarray(stats["counts"])
+        reps = np.asarray(stats["reps"])
+        valid = keys != np.uint64(0xFFFFFFFFFFFFFFFF)
+        keys, counts, reps = keys[valid], counts[valid], reps[valid]
+
+        mask_hash = None
+        if self.maskToken is not None:
+            mask_hash = np.asarray(
+                hashing.fnv1a64(jnp.asarray(T.encode_strings([self.maskToken], self.maxLen)))
+            )[0]
+            keep = keys != mask_hash
+            keys, counts, reps = keys[keep], counts[keep], reps[keep]
+
+        order_type = self.stringOrderType
+        if order_type.startswith("frequency"):
+            order = np.lexsort((keys, -counts if order_type.endswith("Desc") else counts))
+        elif order_type.startswith("alphabetical"):
+            dec = T.decode_strings(reps)
+            order = np.argsort(dec, kind="stable")
+            if order_type.endswith("Desc"):
+                order = order[::-1]
+        else:
+            raise ValueError(f"unknown stringOrderType {order_type!r}")
+        keys, counts, reps = keys[order], counts[order], reps[order]
+        if self.maxVocabSize is not None:
+            keys, counts, reps = (
+                keys[: self.maxVocabSize],
+                counts[: self.maxVocabSize],
+                reps[: self.maxVocabSize],
+            )
+
+        base = (1 if self.maskToken is not None else 0) + self.numOOVIndices
+        target = np.arange(len(keys), dtype=np.int64) + base
+        # store sorted by hash for searchsorted lookup
+        o = np.argsort(keys)
+        weights = {
+            "hash_keys": jnp.asarray(keys[o].astype(np.uint64)),
+            "target_idx": jnp.asarray(target[o]),
+            "vocab_bytes": jnp.asarray(reps[o]),
+            "vocab_counts": jnp.asarray(counts[o]),
+        }
+        if mask_hash is not None:
+            weights["mask_hash"] = jnp.asarray(np.uint64(mask_hash))
+        return weights
+
+    # ---- inference ----------------------------------------------------------
+    @property
+    def vocab_base(self) -> int:
+        return (1 if self.maskToken is not None else 0) + self.numOOVIndices
+
+    def vocab_size(self, weights) -> int:
+        return self.vocab_base + int(weights["hash_keys"].shape[0])
+
+    def _lookup(self, weights, x: jax.Array) -> jax.Array:
+        if not T.is_string_col(x):
+            x = strops.number_to_string(x, self.maxLen)
+        h = hashing.fnv1a64(x)
+        table = weights["hash_keys"]
+        v = table.shape[0]
+        pos = jnp.clip(jnp.searchsorted(table, h), 0, max(v - 1, 0))
+        if v == 0:
+            found = jnp.zeros(h.shape, bool)
+            idx = jnp.zeros(h.shape, jnp.int64)
+        else:
+            found = table[pos] == h
+            idx = weights["target_idx"][pos]
+        oov_off = 1 if self.maskToken is not None else 0
+        if self.numOOVIndices > 0:
+            oov = (h % jnp.uint64(self.numOOVIndices)).astype(jnp.int64) + oov_off
+        else:
+            oov = jnp.zeros(h.shape, jnp.int64)
+        out = jnp.where(found, idx, oov)
+        if self.maskToken is not None:
+            out = jnp.where(h == weights["mask_hash"], 0, out)
+        return out
+
+    def apply(self, weights, inputs):
+        return tuple(self._lookup(weights, x) for x in inputs)
+
+
+@register_stage
+@dataclasses.dataclass
+class SharedStringIndexEstimator(StringIndexEstimator):
+    """One vocabulary built over, and applied to, multiple columns
+    (paper §2 "shared string indexing").  Statistics already fold all
+    inputCols; apply maps each column independently."""
+
+
+@register_stage
+@dataclasses.dataclass
+class OneHotEncodeEstimator(StringIndexEstimator):
+    """String-index then one-hot (Listing 1's occupation_one_hot_encoder).
+
+    dropUnseen=True removes the OOV slots from the one-hot width, so unseen
+    values encode as all-zeros (sklearn handle_unknown='ignore' semantics).
+    """
+
+    dropUnseen: bool = False
+    oneHotDtype: str = "float32"
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        idx = self._lookup(weights, x)
+        base = self.vocab_base
+        v = int(weights["hash_keys"].shape[0])
+        if self.dropUnseen:
+            # shift vocab down over the OOV slots; OOV -> negative -> all-zero
+            mask_slots = 1 if self.maskToken is not None else 0
+            idx = jnp.where(idx >= base, idx - self.numOOVIndices,
+                            jnp.where(idx < mask_slots, idx, -1))
+            depth = mask_slots + v
+        else:
+            depth = base + v
+        onehot = (idx[..., None] == jnp.arange(depth)).astype(jnp.dtype(self.oneHotDtype))
+        return (onehot,)

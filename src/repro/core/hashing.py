@@ -1,0 +1,87 @@
+"""64-bit string hashing primitives (TPU-native, pure integer ops).
+
+The paper's hash / bloom indexing maps high-cardinality categoricals to
+integer bins.  On TPU there is no string type, so we hash the uint8 byte
+tensor directly with seeded FNV-1a-64 followed by a Murmur3-style avalanche
+finalizer.  Trailing zero padding is masked out of the hash so the result is
+independent of the configured ``max_len``.
+
+This is the reference (pure-jnp) implementation; ``repro.kernels.bloom_hash``
+provides the Pallas hot-path with identical semantics, and the kernel tests
+assert bit-exactness against these functions.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import types as _types  # noqa: F401  (enables x64 before uint64 constants)
+
+import jax.numpy as jnp  # noqa: E402
+
+FNV_OFFSET = jnp.uint64(14695981039346656037)
+FNV_PRIME = jnp.uint64(1099511628211)
+
+
+def _avalanche(h: jax.Array) -> jax.Array:
+    """Murmur3 fmix64: improves low-bit diffusion of FNV for modulo binning."""
+    h = h ^ (h >> jnp.uint64(33))
+    h = h * jnp.uint64(0xFF51AFD7ED558CCD)
+    h = h ^ (h >> jnp.uint64(33))
+    h = h * jnp.uint64(0xC4CEB9FE1A85EC53)
+    h = h ^ (h >> jnp.uint64(33))
+    return h
+
+
+def fnv1a64(strings: jax.Array, seed: int = 0) -> jax.Array:
+    """Seeded FNV-1a-64 over the trailing byte axis of a string tensor.
+
+    Args:
+      strings: uint8 array ``(..., max_len)``, zero padded.
+      seed: integer seed (bloom indexing uses seeds 0..k-1).
+
+    Returns:
+      uint64 array ``(...,)``.  Padding bytes (0) do not update the state, so
+      hashes are max_len-invariant.
+    """
+    s = strings.astype(jnp.uint64)
+    h = jnp.full(strings.shape[:-1], FNV_OFFSET ^ jnp.uint64(seed), jnp.uint64)
+    # max_len is small and static: unrolled loop lowers to a short chain of
+    # elementwise int ops, which XLA fuses into one kernel.
+    for i in range(strings.shape[-1]):
+        b = s[..., i]
+        upd = (h ^ b) * FNV_PRIME
+        h = jnp.where(b == 0, h, upd)
+    return _avalanche(h)
+
+
+def fold32(h: jax.Array) -> jax.Array:
+    """Fold a 64-bit hash to 32 bits (hi ^ lo) — the TPU-native binning form
+    (TPU vector units have no 64-bit modulo; the Pallas kernel computes the
+    same fold from its 32-bit limbs, keeping kernel/jnp parity bit-exact)."""
+    return (h ^ (h >> jnp.uint64(32))).astype(jnp.uint32)
+
+
+def hash_to_bins(strings: jax.Array, num_bins: int, seed: int = 0) -> jax.Array:
+    """Hash strings into ``[0, num_bins)`` (the paper's HashIndexTransformer)."""
+    return (fold32(fnv1a64(strings, seed)) % jnp.uint32(num_bins)).astype(jnp.int64)
+
+
+def bloom_indices(strings: jax.Array, num_bins: int, num_hashes: int) -> jax.Array:
+    """Bloom encoding [Serrà & Karatzoglou 2017]: ``num_hashes`` independent
+    hash-bin indices per string, stacked on a new trailing axis.
+
+    Returns int64 ``(..., num_hashes)``.
+    """
+    outs = [hash_to_bins(strings, num_bins, seed=k) for k in range(num_hashes)]
+    return jnp.stack(outs, axis=-1)
+
+
+def hash_int64(values: jax.Array, seed: int = 0) -> jax.Array:
+    """Hash an integer column (splitmix-style) — used when inputDtype is not
+    string but hash indexing is requested on raw ids."""
+    h = values.astype(jnp.uint64) + jnp.uint64(0x9E3779B97F4A7C15) * jnp.uint64(seed + 1)
+    return _avalanche(h)
+
+
+def int_to_bins(values: jax.Array, num_bins: int, seed: int = 0) -> jax.Array:
+    return (fold32(hash_int64(values, seed)) % jnp.uint32(num_bins)).astype(jnp.int64)

@@ -1,0 +1,204 @@
+"""Mergeable, fixed-shape statistics sketches for distributed fitting.
+
+Spark fits estimators with treeAggregate over partitions; the JAX analogue
+needs statistics that are (a) fixed-shape pytrees (jit/pjit-able), (b) a
+commutative monoid (mergeable across shards in any order).  This module
+provides the two non-trivial ones:
+
+* :class:`VocabTable` — a heavy-hitter (hash, count, byte-representative)
+  table with capacity-C space-saving eviction.  EXACT whenever the number of
+  distinct values is <= capacity (the common vocab case); an approximate
+  top-C frequency sketch beyond that, as is standard for big-data vocab jobs.
+
+* DDSketch-style log-binned histogram — relative-error quantiles (median
+  imputation, quantile binning) with a fixed 2048-bin layout, mergeable by
+  addition.
+
+Both are pure jnp, so under pjit the per-shard updates run on the shard-local
+slice and the replicated-output reduction becomes XLA all-reduces — the same
+communication shape as Spark's treeAggregate.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+UINT64_MAX = jnp.uint64(0xFFFFFFFFFFFFFFFF)
+
+# ---------------------------------------------------------------------------
+# Vocab (heavy-hitter) table
+# ---------------------------------------------------------------------------
+
+
+def vocab_init(capacity: int, max_len: int) -> Dict[str, jax.Array]:
+    return {
+        "keys": jnp.full((capacity,), UINT64_MAX, jnp.uint64),
+        "counts": jnp.zeros((capacity,), jnp.int64),
+        "reps": jnp.zeros((capacity, max_len), jnp.uint8),
+    }
+
+
+def _aggregate_sorted(
+    keys: jax.Array, counts: jax.Array, reps: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Combine duplicate keys of an unsorted (key,count,rep) multiset.
+
+    Returns arrays of the SAME length with unique keys first (sorted asc),
+    empty slots (key=UINT64_MAX, count=0) at the end.
+    """
+    n = keys.shape[0]
+    order = jnp.argsort(keys)
+    k = keys[order]
+    c = counts[order]
+    r = reps[order]
+    is_first = jnp.concatenate([jnp.ones((1,), bool), k[1:] != k[:-1]])
+    # empty slots (UINT64_MAX) must not create a segment of their own weight
+    valid = k != UINT64_MAX
+    seg = jnp.cumsum(is_first.astype(jnp.int64)) - 1
+    agg_counts = jnp.zeros((n,), jnp.int64).at[seg].add(jnp.where(valid, c, 0))
+    first_pos = jnp.full((n,), n, jnp.int64).at[seg].min(jnp.arange(n, dtype=jnp.int64))
+    first_pos = jnp.clip(first_pos, 0, n - 1)
+    out_keys = jnp.where(jnp.arange(n) <= seg[-1], k[first_pos], UINT64_MAX)
+    out_keys = jnp.where(agg_counts > 0, out_keys, UINT64_MAX)
+    out_counts = jnp.where(out_keys != UINT64_MAX, agg_counts, 0)
+    out_reps = jnp.where((out_keys != UINT64_MAX)[:, None], r[first_pos], 0)
+    return out_keys, out_counts, out_reps
+
+
+def _evict_to_capacity(keys, counts, reps, capacity: int):
+    """Keep the ``capacity`` highest-count entries (ties: smaller key)."""
+    neg = -counts
+    order = jnp.lexsort((keys, neg))  # primary: count desc, secondary: key asc
+    keys, counts, reps = keys[order[:capacity]], counts[order[:capacity]], reps[order[:capacity]]
+    # canonical layout: sorted by key, empties last
+    o2 = jnp.argsort(keys)
+    return {"keys": keys[o2], "counts": counts[o2], "reps": reps[o2]}
+
+
+def vocab_update(
+    table: Dict[str, jax.Array],
+    hashes: jax.Array,
+    reps: jax.Array,
+    weights: Optional[jax.Array] = None,
+) -> Dict[str, jax.Array]:
+    """Fold a batch of (hash, byte-rep) observations into the table."""
+    capacity = table["keys"].shape[0]
+    h = hashes.reshape(-1)
+    r = reps.reshape(-1, reps.shape[-1])
+    w = weights.reshape(-1).astype(jnp.int64) if weights is not None else jnp.ones(h.shape, jnp.int64)
+    if r.shape[-1] != table["reps"].shape[-1]:
+        pad = table["reps"].shape[-1] - r.shape[-1]
+        r = r[..., : table["reps"].shape[-1]] if pad < 0 else jnp.pad(r, ((0, 0), (0, pad)))
+    keys = jnp.concatenate([table["keys"], h])
+    counts = jnp.concatenate([table["counts"], w])
+    reps_all = jnp.concatenate([table["reps"], r])
+    k, c, rr = _aggregate_sorted(keys, counts, reps_all)
+    return _evict_to_capacity(k, c, rr, capacity)
+
+
+def vocab_merge(a: Dict[str, jax.Array], b: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    capacity = a["keys"].shape[0]
+    k, c, r = _aggregate_sorted(
+        jnp.concatenate([a["keys"], b["keys"]]),
+        jnp.concatenate([a["counts"], b["counts"]]),
+        jnp.concatenate([a["reps"], b["reps"]]),
+    )
+    return _evict_to_capacity(k, c, r, capacity)
+
+
+# ---------------------------------------------------------------------------
+# DDSketch-lite quantile histogram
+# ---------------------------------------------------------------------------
+
+DD_BINS = 2048
+_GAMMA = 1.04
+_HALF = DD_BINS // 2  # [0, _HALF) negative magnitudes, _HALF zero-ish, rest positive
+_LOG_GAMMA = float(jnp.log(_GAMMA))
+_MAG_BINS = _HALF - 1  # magnitude bins per sign
+_MIN_EXP = -_MAG_BINS // 2  # symmetric exponent coverage ~ gamma^±512 ≈ 1e±8.7
+
+
+def dd_init() -> jax.Array:
+    return jnp.zeros((DD_BINS,), jnp.int64)
+
+
+def _mag_bin(x_abs: jax.Array) -> jax.Array:
+    e = jnp.floor(jnp.log(jnp.maximum(x_abs, 1e-300)) / _LOG_GAMMA).astype(jnp.int64)
+    return jnp.clip(e - _MIN_EXP, 0, _MAG_BINS - 1)
+
+
+def dd_update(hist: jax.Array, x: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    xf = x.reshape(-1).astype(jnp.float64)
+    m = mask.reshape(-1) if mask is not None else jnp.ones(xf.shape, bool)
+    m = m & ~jnp.isnan(xf)
+    is_zero = jnp.abs(xf) < 1e-12
+    mag = _mag_bin(jnp.abs(xf))
+    idx = jnp.where(
+        is_zero, _HALF, jnp.where(xf > 0, _HALF + 1 + mag, _HALF - 1 - mag)
+    )
+    idx = jnp.where(m, idx, DD_BINS)  # dropped
+    return hist.at[idx].add(1, mode="drop")
+
+
+def dd_merge(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a + b
+
+
+def dd_quantile(hist: jax.Array, q) -> jax.Array:
+    """Approximate quantile(s) with ~4% relative error (vectorised over q)."""
+    q = jnp.atleast_1d(jnp.asarray(q, jnp.float64))
+    total = jnp.sum(hist)
+    cum = jnp.cumsum(hist)
+    target = q * total.astype(jnp.float64)
+    bin_idx = jnp.searchsorted(cum.astype(jnp.float64), target, side="left")
+    bin_idx = jnp.clip(bin_idx, 0, DD_BINS - 1)
+
+    def value_of(i):
+        mag_pos = i - _HALF - 1
+        mag_neg = _HALF - 1 - i
+        vpos = jnp.exp((mag_pos + _MIN_EXP + 0.5) * _LOG_GAMMA)
+        vneg = -jnp.exp((mag_neg + _MIN_EXP + 0.5) * _LOG_GAMMA)
+        return jnp.where(i == _HALF, 0.0, jnp.where(i > _HALF, vpos, vneg))
+
+    return value_of(bin_idx)
+
+
+# ---------------------------------------------------------------------------
+# Moments (count / sum / sum-of-squares), elementwise over the trailing axes
+# ---------------------------------------------------------------------------
+
+
+def moments_init(feature_shape: tuple) -> Dict[str, jax.Array]:
+    return {
+        "count": jnp.zeros(feature_shape, jnp.float64),
+        "sum": jnp.zeros(feature_shape, jnp.float64),
+        "sumsq": jnp.zeros(feature_shape, jnp.float64),
+        "min": jnp.full(feature_shape, jnp.inf, jnp.float64),
+        "max": jnp.full(feature_shape, -jnp.inf, jnp.float64),
+    }
+
+
+def moments_update(m: Dict[str, jax.Array], x: jax.Array, mask=None) -> Dict[str, jax.Array]:
+    fs = m["sum"].shape
+    xf = x.astype(jnp.float64).reshape((-1,) + fs)
+    msk = (mask.reshape((-1,) + fs) if mask is not None else jnp.ones(xf.shape, bool)) & ~jnp.isnan(xf)
+    x0 = jnp.where(msk, xf, 0.0)
+    return {
+        "count": m["count"] + jnp.sum(msk, axis=0),
+        "sum": m["sum"] + jnp.sum(x0, axis=0),
+        "sumsq": m["sumsq"] + jnp.sum(x0 * x0, axis=0),
+        "min": jnp.minimum(m["min"], jnp.min(jnp.where(msk, xf, jnp.inf), axis=0)),
+        "max": jnp.maximum(m["max"], jnp.max(jnp.where(msk, xf, -jnp.inf), axis=0)),
+    }
+
+
+def moments_merge(a, b):
+    return {
+        "count": a["count"] + b["count"],
+        "sum": a["sum"] + b["sum"],
+        "sumsq": a["sumsq"] + b["sumsq"],
+        "min": jnp.minimum(a["min"], b["min"]),
+        "max": jnp.maximum(a["max"], b["max"]),
+    }

@@ -1,0 +1,346 @@
+"""Pure-jnp string primitives over uint8 byte tensors.
+
+Everything here is built from native XLA ops (no host callbacks) — the JAX
+analogue of the paper's "native transformations rather than user-defined
+functions" design rule, which is what lets the compiler (Catalyst there, XLA
+here) fuse and optimise preprocessing.
+
+Shapes: a string tensor is ``(..., L)`` uint8 with trailing zero padding.
+All functions are rank-polymorphic over the leading dims.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import types as T
+
+_ZERO = jnp.uint8(0)
+
+
+# ---------------------------------------------------------------------------
+# numeric <-> string
+# ---------------------------------------------------------------------------
+
+def number_to_string(values: jax.Array, max_len: int = T.DEFAULT_MAX_LEN) -> jax.Array:
+    """Decimal string (uint8 tensor) of an integer column.
+
+    Floats are not supported in-graph (no exact decimal repr on TPU);
+    cast/round on the host side of the pipeline instead.
+    """
+    if not jnp.issubdtype(values.dtype, jnp.integer) and not jnp.issubdtype(
+        values.dtype, jnp.bool_
+    ):
+        raise TypeError(f"number_to_string requires integer input, got {values.dtype}")
+    v = values.astype(jnp.int64)
+    neg = v < 0
+    mag = jnp.where(neg, -v, v).astype(jnp.uint64)
+
+    ndig = 20  # max digits of uint64
+    pows = jnp.asarray([10 ** (ndig - 1 - i) for i in range(ndig)], jnp.uint64)
+    digits = (mag[..., None] // pows) % jnp.uint64(10)  # (..., 20) most-significant first
+    nonzero = digits > 0
+    any_nz = jnp.any(nonzero, axis=-1)
+    lead = jnp.argmax(nonzero, axis=-1)  # first significant digit
+    lead = jnp.where(any_nz, lead, ndig - 1)  # value 0 -> single '0'
+    ndigits = ndig - lead
+
+    out_len = max_len
+    k = jnp.arange(out_len)
+    sign_off = neg.astype(jnp.int64)
+    # out[k] = '-' at k=0 if negative; digit (lead + k - sign_off) otherwise
+    src = lead[..., None] + k - sign_off[..., None]
+    src_c = jnp.clip(src, 0, ndig - 1)
+    dig = jnp.take_along_axis(digits, src_c.astype(jnp.int64), axis=-1)
+    ch = (dig + jnp.uint64(ord("0"))).astype(jnp.uint8)
+    valid = (src >= lead[..., None]) & (src < ndig)
+    out = jnp.where(valid, ch, _ZERO)
+    minus = (k == 0) & neg[..., None]
+    out = jnp.where(minus, jnp.uint8(ord("-")), out)
+    return out
+
+
+def string_to_number(strings: jax.Array, dtype: str = "float32") -> jax.Array:
+    """Parse decimal strings (optional sign, optional fraction) to numbers.
+
+    Unparseable strings yield NaN for float dtypes and 0 for int dtypes.
+    Exponent notation is not supported (documented limitation).
+    """
+    s = strings.astype(jnp.int32)
+    L = strings.shape[-1]
+    shape = strings.shape[:-1]
+
+    val = jnp.zeros(shape, jnp.float64)
+    scale = jnp.ones(shape, jnp.float64)  # 10^-k after the k-th fraction digit
+    seen_dot = jnp.zeros(shape, bool)
+    seen_digit = jnp.zeros(shape, bool)
+    invalid = jnp.zeros(shape, bool)
+    neg = jnp.zeros(shape, bool)
+    for i in range(L):
+        c = s[..., i]
+        is_nul = c == 0
+        is_digit = (c >= 48) & (c <= 57)
+        is_dot = c == 46
+        is_sign = ((c == 43) | (c == 45)) & (i == 0)
+        d = (c - 48).astype(jnp.float64)
+        val = jnp.where(is_digit & ~seen_dot, val * 10.0 + d, val)
+        scale = jnp.where(is_digit & seen_dot, scale * 0.1, scale)
+        val = jnp.where(is_digit & seen_dot, val + d * scale, val)
+        seen_digit = seen_digit | is_digit
+        invalid = invalid | ~(is_nul | is_digit | is_dot | is_sign) | (is_dot & seen_dot)
+        seen_dot = seen_dot | is_dot
+        neg = jnp.where(is_sign & (c == 45), True, neg)
+    invalid = invalid | ~seen_digit
+    out = jnp.where(neg, -val, val)
+    jdt = jnp.dtype(dtype)
+    if jnp.issubdtype(jdt, jnp.floating):
+        out = jnp.where(invalid, jnp.nan, out)
+        return out.astype(jdt)
+    return jnp.where(invalid, 0, out).astype(jdt)
+
+
+# ---------------------------------------------------------------------------
+# case / trim / slice
+# ---------------------------------------------------------------------------
+
+def upper(strings: jax.Array) -> jax.Array:
+    is_lower = (strings >= 97) & (strings <= 122)
+    return jnp.where(is_lower, strings - 32, strings)
+
+
+def lower(strings: jax.Array) -> jax.Array:
+    is_upper = (strings >= 65) & (strings <= 90)
+    return jnp.where(is_upper, strings + 32, strings)
+
+
+def substring(strings: jax.Array, start: int, length: int) -> jax.Array:
+    """Bytes [start, start+length) left-aligned into a fresh tensor."""
+    L = strings.shape[-1]
+    idx = jnp.arange(L) + start
+    ok = idx < L
+    got = jnp.take(strings, jnp.clip(idx, 0, L - 1), axis=-1)
+    got = jnp.where(ok, got, _ZERO)
+    keep = jnp.arange(L) < length
+    return jnp.where(keep, got, _ZERO)
+
+
+def strip_char(strings: jax.Array, char: str = " ") -> jax.Array:
+    """Remove leading and trailing occurrences of ``char``."""
+    c = jnp.uint8(ord(char))
+    L = strings.shape[-1]
+    is_c = strings == c
+    is_nul = strings == 0
+    body = ~is_c & ~is_nul
+    any_body = jnp.any(body, axis=-1, keepdims=True)
+    first = jnp.argmax(body, axis=-1)  # first non-char byte
+    rev_last = jnp.argmax(jnp.flip(body, -1), axis=-1)
+    last = L - 1 - rev_last
+    idx = jnp.arange(L) + first[..., None]
+    got = jnp.take_along_axis(strings, jnp.clip(idx, 0, L - 1), axis=-1)
+    keep = (idx <= last[..., None]) & (idx < L)
+    out = jnp.where(keep & any_body, got, _ZERO)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# search
+# ---------------------------------------------------------------------------
+
+def _match_at(strings: jax.Array, pattern: str) -> jax.Array:
+    """(..., L) bool: does ``pattern`` occur starting at each byte position."""
+    pat = T.encode_strings([pattern], max_len=max(len(pattern), 1))[0][: len(pattern)]
+    L = strings.shape[-1]
+    m = jnp.ones(strings.shape[:-1] + (L,), bool)
+    for j, pb in enumerate(pat):
+        idx = jnp.arange(L) + j
+        ok = idx < L
+        got = jnp.take(strings, jnp.clip(idx, 0, L - 1), axis=-1)
+        m = m & jnp.where(ok, got == jnp.uint8(pb), False)
+    return m
+
+
+def contains(strings: jax.Array, pattern: str) -> jax.Array:
+    return jnp.any(_match_at(strings, pattern), axis=-1)
+
+
+def startswith(strings: jax.Array, pattern: str) -> jax.Array:
+    return _match_at(strings, pattern)[..., 0]
+
+
+def endswith(strings: jax.Array, pattern: str) -> jax.Array:
+    lens = T.string_lengths(strings)
+    pos = lens - len(pattern)
+    m = _match_at(strings, pattern)
+    got = jnp.take_along_axis(m, jnp.clip(pos, 0, m.shape[-1] - 1)[..., None], axis=-1)[
+        ..., 0
+    ]
+    return got & (pos >= 0)
+
+
+def replace_char(strings: jax.Array, old: str, new: str) -> jax.Array:
+    return jnp.where(strings == jnp.uint8(ord(old)), jnp.uint8(ord(new)), strings)
+
+
+# ---------------------------------------------------------------------------
+# concat / split
+# ---------------------------------------------------------------------------
+
+def concat(parts: Sequence[jax.Array], separator: str = "", max_len: int = T.DEFAULT_MAX_LEN) -> jax.Array:
+    """Join string columns with a separator (paper: StringConcatTransformer)."""
+    lead = jnp.broadcast_shapes(*[p.shape[:-1] for p in parts])
+    N = 1
+    for d in lead:
+        N *= d
+    pieces = []
+    if separator:
+        sep_const = jnp.broadcast_to(
+            jnp.asarray(T.encode_strings([separator], len(separator))[0]),
+            (N, len(separator)),
+        )
+    for i, p in enumerate(parts):
+        if i > 0 and separator:
+            pieces.append(sep_const)
+        pieces.append(jnp.broadcast_to(p, lead + p.shape[-1:]).reshape(N, p.shape[-1]))
+
+    out = jnp.zeros((N * max_len,), jnp.uint8)
+    offs = jnp.zeros((N,), jnp.int64)
+    rows = jnp.arange(N)
+    for p in pieces:
+        Lp = p.shape[-1]
+        cols = offs[:, None] + jnp.arange(Lp)[None, :]  # (N, Lp)
+        valid = (p != 0) & (cols < max_len)
+        flat = rows[:, None] * max_len + jnp.clip(cols, 0, max_len - 1)
+        flat = jnp.where(valid, flat, N * max_len)  # dropped
+        out = out.at[flat.reshape(-1)].set(p.reshape(-1), mode="drop")
+        offs = offs + T.string_lengths(p).astype(jnp.int64)
+    return out.reshape((N, max_len)).reshape(lead + (max_len,))
+
+
+def split_to_list(
+    strings: jax.Array,
+    separator: str,
+    list_length: int,
+    default_value: Optional[str] = None,
+    out_max_len: Optional[int] = None,
+) -> jax.Array:
+    """Split on a delimiter into a fixed-length padded list of strings.
+
+    Output shape ``(..., list_length, out_max_len)``.  Missing / empty
+    entries are filled with ``default_value`` (paper: defaultValue="PADDED").
+    Greedy left-to-right non-overlapping delimiter matching.
+    """
+    d = len(separator)
+    if d == 0:
+        raise ValueError("separator must be non-empty")
+    L = strings.shape[-1]
+    ML = out_max_len or L
+    lead = strings.shape[:-1]
+    N = 1
+    for x in lead:
+        N *= x
+    s = strings.reshape(N, L)
+
+    raw = _match_at(s, separator)  # (N, L)
+    # Greedy non-overlap: sequential covered-until carry over the byte axis.
+    starts = []
+    cu = jnp.zeros((N,), jnp.int32)
+    for p in range(L):
+        act = raw[:, p] & (p >= cu)
+        cu = jnp.where(act, p + d, cu)
+        starts.append(act)
+    start = jnp.stack(starts, axis=1)  # (N, L) actual delimiter starts
+    # chars covered by a delimiter occurrence
+    covered = jnp.zeros((N, L), bool)
+    for j in range(d):
+        covered = covered | jnp.roll(start, j, axis=1) & (jnp.arange(L) >= j)
+    # segment id per byte = number of delimiter starts at positions <= p; for
+    # non-delimiter bytes that equals "strictly before p" (start bytes are
+    # covered and dropped below, so their off-by-one seg id is irrelevant).
+    seg = jnp.cumsum(start.astype(jnp.int32), axis=1)
+    # position after the most recent delimiter end (0 if none)
+    ends = jnp.where(start, jnp.arange(L)[None, :] + d, 0)
+    last_end = jax.lax.cummax(ends, axis=1)
+    off = jnp.arange(L)[None, :] - last_end
+
+    vals = s
+    valid = (~covered) & (vals != 0) & (seg < list_length) & (off >= 0) & (off < ML)
+    flat_idx = (
+        jnp.arange(N)[:, None] * (list_length * ML)
+        + jnp.clip(seg, 0, list_length - 1) * ML
+        + jnp.clip(off, 0, ML - 1)
+    )
+    flat_idx = jnp.where(valid, flat_idx, N * list_length * ML)  # dropped
+    out = jnp.zeros((N * list_length * ML,), jnp.uint8)
+    out = out.at[flat_idx.reshape(-1)].set(
+        jnp.where(valid, vals, _ZERO).reshape(-1), mode="drop"
+    )
+    out = out.reshape(N, list_length, ML)
+    if default_value is not None:
+        dv = jnp.asarray(T.encode_strings([default_value], ML)[0])
+        empty = jnp.all(out == 0, axis=-1)
+        out = jnp.where(empty[..., None], dv, out)
+    return out.reshape(lead + (list_length, ML))
+
+
+# ---------------------------------------------------------------------------
+# dates  (proleptic Gregorian; Howard Hinnant's civil algorithms in jnp)
+# ---------------------------------------------------------------------------
+
+def civil_from_days(days: jax.Array):
+    """(year, month, day) from days since 1970-01-01."""
+    z = days.astype(jnp.int64) + 719468
+    era = jnp.where(z >= 0, z, z - 146096) // 146097
+    doe = z - era * 146097
+    yoe = (doe - doe // 1460 + doe // 36524 - doe // 146096) // 365
+    y = yoe + era * 400
+    doy = doe - (365 * yoe + yoe // 4 - yoe // 100)
+    mp = (5 * doy + 2) // 153
+    day = doy - (153 * mp + 2) // 5 + 1
+    month = jnp.where(mp < 10, mp + 3, mp - 9)
+    year = jnp.where(month <= 2, y + 1, y)
+    return year, month, day
+
+
+def days_from_civil(year: jax.Array, month: jax.Array, day: jax.Array) -> jax.Array:
+    y = jnp.where(month <= 2, year - 1, year).astype(jnp.int64)
+    era = jnp.where(y >= 0, y, y - 399) // 400
+    yoe = y - era * 400
+    mp = jnp.where(month > 2, month - 3, month + 9)
+    doy = (153 * mp + 2) // 5 + day - 1
+    doe = yoe * 365 + yoe // 4 - yoe // 100 + doy
+    return era * 146097 + doe - 719468
+
+
+def weekday_from_days(days: jax.Array) -> jax.Array:
+    """ISO weekday 1=Mon..7=Sun."""
+    return ((days.astype(jnp.int64) + 3) % 7) + 1
+
+
+def parse_date(strings: jax.Array) -> jax.Array:
+    """Parse 'YYYY-MM-DD' (fixed positions) -> days since epoch (int64).
+
+    Invalid rows (non-digits in digit positions) return -2**62.
+    """
+
+    def dig(i):
+        c = strings[..., i].astype(jnp.int64)
+        return c - 48, (c >= 48) & (c <= 57)
+
+    total_ok = jnp.ones(strings.shape[:-1], bool)
+    vals = []
+    for pos in [(0, 1, 2, 3), (5, 6), (8, 9)]:
+        v = jnp.zeros(strings.shape[:-1], jnp.int64)
+        for i in pos:
+            d, ok = dig(i)
+            v = v * 10 + d
+            total_ok = total_ok & ok
+        vals.append(v)
+    total_ok = (
+        total_ok
+        & (strings[..., 4] == jnp.uint8(ord("-")))
+        & (strings[..., 7] == jnp.uint8(ord("-")))
+    )
+    days = days_from_civil(vals[0], vals[1], vals[2])
+    return jnp.where(total_ok, days, jnp.int64(-(2**62)))

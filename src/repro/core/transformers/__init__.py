@@ -1,0 +1,52 @@
+"""Kamae transformer suite: stateless, rank-polymorphic column ops.
+
+Grouped as in the paper §2 "Basic Functionalities": mathematical, string,
+date, logical, array/list and conditional operations.  Every transformer maps
+one-to-one onto a node of the exported inference graph.
+"""
+from .math import (
+    AbsoluteValueTransformer,
+    BucketizeTransformer,
+    ClipTransformer,
+    ExpTransformer,
+    LogTransformer,
+    MathBinaryTransformer,
+    PowerTransformer,
+    RoundTransformer,
+    ScaleTransformer,
+    StandardScoreTransformer,
+)
+from .string import (
+    BloomEncodeTransformer,
+    HashIndexTransformer,
+    StringCaseTransformer,
+    StringConcatTransformer,
+    StringContainsTransformer,
+    StringReplaceCharTransformer,
+    StringStripTransformer,
+    StringToStringListTransformer,
+    SubstringTransformer,
+)
+from .date import (
+    DateAddTransformer,
+    DateDiffTransformer,
+    DatePartTransformer,
+    StringToDateTransformer,
+)
+from .array import (
+    ArrayAggregateTransformer,
+    ArrayConcatTransformer,
+    ArraySliceTransformer,
+    OneHotTransformer,
+    VectorAssembleTransformer,
+    VectorDisassembleTransformer,
+)
+from .logical import (
+    CoalesceTransformer,
+    ComparisonTransformer,
+    IfThenElseTransformer,
+    IsNullTransformer,
+    LogicalTransformer,
+)
+
+__all__ = [n for n in dir() if n.endswith("Transformer")]

@@ -1,0 +1,109 @@
+"""Array / list transformers (paper §2 "array, list" ops; §3: "selected
+numerical features are assembled into a single array which is subsequently
+standard scaled and disassembled into original features")."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+from ..stage import Transformer, register_stage
+
+
+@register_stage
+@dataclasses.dataclass
+class VectorAssembleTransformer(Transformer):
+    """Stack N scalar columns into one (..., N) array column."""
+
+    def apply(self, weights, inputs):
+        common = jnp.result_type(*[x.dtype for x in inputs])
+        return (jnp.stack([x.astype(common) for x in inputs], axis=-1),)
+
+
+@register_stage
+@dataclasses.dataclass
+class VectorDisassembleTransformer(Transformer):
+    """Split an (..., N) array column back into N scalar columns."""
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        n = len(self.output_names)
+        if x.shape[-1] != n:
+            raise ValueError(
+                f"{self.name}: array width {x.shape[-1]} != {n} outputCols"
+            )
+        return tuple(x[..., i] for i in range(n))
+
+
+@register_stage
+@dataclasses.dataclass
+class ArrayAggregateTransformer(Transformer):
+    """Aggregate over a list axis (paper: 'applied at the sequence level').
+
+    ``maskValue`` excludes padding from the aggregate (e.g. PADDED genres).
+    """
+
+    op: str = "mean"  # sum | mean | max | min | count
+    axis: int = -1
+    maskValue: Optional[float] = None
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        if self.maskValue is not None:
+            m = x != self.maskValue
+        else:
+            m = jnp.ones_like(x, bool)
+        xf = x.astype(jnp.float64)
+        cnt = jnp.sum(m, axis=self.axis)
+        if self.op == "count":
+            return (cnt.astype(jnp.int64),)
+        if self.op == "sum":
+            return (jnp.sum(jnp.where(m, xf, 0), axis=self.axis),)
+        if self.op == "mean":
+            s = jnp.sum(jnp.where(m, xf, 0), axis=self.axis)
+            return (s / jnp.maximum(cnt, 1),)
+        if self.op == "max":
+            return (jnp.max(jnp.where(m, xf, -jnp.inf), axis=self.axis),)
+        if self.op == "min":
+            return (jnp.min(jnp.where(m, xf, jnp.inf), axis=self.axis),)
+        raise ValueError(f"unknown aggregate {self.op!r}")
+
+
+@register_stage
+@dataclasses.dataclass
+class ArrayConcatTransformer(Transformer):
+    """Concatenate array columns along the last axis."""
+
+    def apply(self, weights, inputs):
+        common = jnp.result_type(*[x.dtype for x in inputs])
+        return (jnp.concatenate([x.astype(common) for x in inputs], axis=-1),)
+
+
+@register_stage
+@dataclasses.dataclass
+class ArraySliceTransformer(Transformer):
+    start: int = 0
+    length: int = 1
+    axis: int = -1
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        idx = [slice(None)] * x.ndim
+        idx[self.axis] = slice(self.start, self.start + self.length)
+        return (x[tuple(idx)],)
+
+
+@register_stage
+@dataclasses.dataclass
+class OneHotTransformer(Transformer):
+    """Fixed-depth one-hot of an integer index column (the learned-vocabulary
+    version is OneHotEncodeEstimator)."""
+
+    depth: int = 2
+    dtype: str = "float32"
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        eye = (x[..., None] == jnp.arange(self.depth)).astype(jnp.dtype(self.dtype))
+        return (eye,)

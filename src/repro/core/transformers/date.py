@@ -1,0 +1,67 @@
+"""Date transformers (paper §3: "date features are disassembled into parts,
+e.g. month, weekday ... particular dates are subtracted to generate
+durations").  Dates are int days-since-epoch in-graph; StringToDateTransformer
+parses the data-lake 'YYYY-MM-DD' format."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .. import strops
+from ..stage import Transformer, register_stage
+
+
+@register_stage
+@dataclasses.dataclass
+class StringToDateTransformer(Transformer):
+    """'YYYY-MM-DD' uint8 strings -> int64 days since 1970-01-01."""
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        return (strops.parse_date(x),)
+
+
+@register_stage
+@dataclasses.dataclass
+class DatePartTransformer(Transformer):
+    """Extract a civil-calendar part from a days-since-epoch column."""
+
+    part: str = "month"  # year | month | day | weekday | dayofyear
+
+    def apply(self, weights, inputs):
+        (d,) = inputs
+        y, m, day = strops.civil_from_days(d)
+        if self.part == "year":
+            out = y
+        elif self.part == "month":
+            out = m
+        elif self.part == "day":
+            out = day
+        elif self.part == "weekday":
+            out = strops.weekday_from_days(d)
+        elif self.part == "dayofyear":
+            out = d - strops.days_from_civil(y, jnp.ones_like(m), jnp.ones_like(day)) + 1
+        else:
+            raise ValueError(f"unknown date part {self.part!r}")
+        return (out.astype(jnp.int64),)
+
+
+@register_stage
+@dataclasses.dataclass
+class DateDiffTransformer(Transformer):
+    """days(inputCols[0]) - days(inputCols[1]) — the paper's durations."""
+
+    def apply(self, weights, inputs):
+        a, b = inputs
+        return ((a - b).astype(jnp.int64),)
+
+
+@register_stage
+@dataclasses.dataclass
+class DateAddTransformer(Transformer):
+    days: int = 0
+
+    def apply(self, weights, inputs):
+        (d,) = inputs
+        return ((d + self.days).astype(jnp.int64),)

@@ -1,0 +1,91 @@
+"""Logical / conditional transformers (paper §2 "logical ... and conditional
+operations").  NaN is the null sentinel for float columns."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from ..stage import Transformer, register_stage
+
+_CMP = {
+    "gt": jnp.greater,
+    "ge": jnp.greater_equal,
+    "lt": jnp.less,
+    "le": jnp.less_equal,
+    "eq": jnp.equal,
+    "ne": jnp.not_equal,
+}
+
+
+@register_stage
+@dataclasses.dataclass
+class ComparisonTransformer(Transformer):
+    op: str = "gt"
+    constant: Optional[float] = None
+
+    def apply(self, weights, inputs):
+        f = _CMP[self.op]
+        if self.constant is not None:
+            (x,) = inputs
+            return (f(x, self.constant),)
+        x, y = inputs
+        return (f(x, y),)
+
+
+@register_stage
+@dataclasses.dataclass
+class LogicalTransformer(Transformer):
+    op: str = "and"  # and | or | not | xor
+
+    def apply(self, weights, inputs):
+        if self.op == "not":
+            (x,) = inputs
+            return (~x.astype(bool),)
+        x, y = (i.astype(bool) for i in inputs)
+        f = {"and": jnp.logical_and, "or": jnp.logical_or, "xor": jnp.logical_xor}[self.op]
+        return (f(x, y),)
+
+
+@register_stage
+@dataclasses.dataclass
+class IfThenElseTransformer(Transformer):
+    """inputCols = [condition, then, else] -> where(condition, then, else)."""
+
+    def apply(self, weights, inputs):
+        c, t, e = inputs
+        return (jnp.where(c.astype(bool), t, e),)
+
+
+@register_stage
+@dataclasses.dataclass
+class IsNullTransformer(Transformer):
+    """True where the value is null (NaN for floats, sentinel for ints)."""
+
+    intSentinel: Optional[int] = None
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return (jnp.isnan(x),)
+        if self.intSentinel is None:
+            return (jnp.zeros(x.shape, bool),)
+        return (x == self.intSentinel,)
+
+
+@register_stage
+@dataclasses.dataclass
+class CoalesceTransformer(Transformer):
+    """Replace nulls (NaN / sentinel) with a fill value."""
+
+    fillValue: float = 0.0
+    intSentinel: Optional[int] = None
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return (jnp.where(jnp.isnan(x), jnp.asarray(self.fillValue, x.dtype), x),)
+        if self.intSentinel is None:
+            return (x,)
+        return (jnp.where(x == self.intSentinel, jnp.asarray(int(self.fillValue), x.dtype), x),)

@@ -1,0 +1,149 @@
+"""Mathematical transformers (paper §2: "mathematical ... operations").
+
+All ops broadcast over arbitrary leading dims, so they apply equally to
+scalar features, ``(batch, list)`` ranking features and nested sequences —
+the paper's "nested-sequence-native" property falls out of jnp broadcasting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..stage import Transformer, register_stage
+
+
+@register_stage
+@dataclasses.dataclass
+class LogTransformer(Transformer):
+    """log(x + alpha); the paper's LTR pipeline log-transforms wide-range
+    numericals (alpha=1 gives log1p)."""
+
+    alpha: float = 0.0
+    base: Optional[float] = None  # natural log if None
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        y = jnp.log(x + self.alpha)
+        if self.base is not None:
+            y = y / jnp.log(jnp.asarray(self.base, y.dtype))
+        return (y,)
+
+
+@register_stage
+@dataclasses.dataclass
+class ExpTransformer(Transformer):
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        return (jnp.exp(x),)
+
+
+@register_stage
+@dataclasses.dataclass
+class PowerTransformer(Transformer):
+    exponent: float = 2.0
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        return (jnp.power(x, self.exponent),)
+
+
+@register_stage
+@dataclasses.dataclass
+class AbsoluteValueTransformer(Transformer):
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        return (jnp.abs(x),)
+
+
+@register_stage
+@dataclasses.dataclass
+class ClipTransformer(Transformer):
+    minValue: Optional[float] = None
+    maxValue: Optional[float] = None
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        return (jnp.clip(x, self.minValue, self.maxValue),)
+
+
+@register_stage
+@dataclasses.dataclass
+class RoundTransformer(Transformer):
+    mode: str = "round"  # round | floor | ceil
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        f = {"round": jnp.round, "floor": jnp.floor, "ceil": jnp.ceil}[self.mode]
+        return (f(x),)
+
+
+@register_stage
+@dataclasses.dataclass
+class ScaleTransformer(Transformer):
+    """y = x * multiplier + offset (fixed affine, no fitting)."""
+
+    multiplier: float = 1.0
+    offset: float = 0.0
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        return (x * self.multiplier + self.offset,)
+
+
+@register_stage
+@dataclasses.dataclass
+class StandardScoreTransformer(Transformer):
+    """(x - mean) / std with *fixed* constants; the learned version is
+    StandardScaleEstimator."""
+
+    mean: float = 0.0
+    std: float = 1.0
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        return ((x - self.mean) / self.std,)
+
+
+@register_stage
+@dataclasses.dataclass
+class BucketizeTransformer(Transformer):
+    """Static-splits bucketing: index i s.t. splits[i-1] <= x < splits[i]."""
+
+    splits: Sequence[float] = ()
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        splits = jnp.asarray(list(self.splits), jnp.float64)
+        return (jnp.searchsorted(splits, x.astype(jnp.float64), side="right").astype(jnp.int64),)
+
+
+_BINARY = {
+    "add": jnp.add,
+    "sub": jnp.subtract,
+    "mul": jnp.multiply,
+    "div": jnp.divide,
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+    "mod": jnp.mod,
+    "pow": jnp.power,
+}
+
+
+@register_stage
+@dataclasses.dataclass
+class MathBinaryTransformer(Transformer):
+    """Elementwise binary op of two columns, or of a column and a constant."""
+
+    op: str = "add"
+    constant: Optional[float] = None  # if set, second operand is a constant
+
+    def apply(self, weights, inputs):
+        f = _BINARY[self.op]
+        if self.constant is not None:
+            (x,) = inputs
+            return (f(x, jnp.asarray(self.constant, x.dtype)),)
+        x, y = inputs
+        return (f(x, y),)

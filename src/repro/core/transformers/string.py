@@ -1,0 +1,144 @@
+"""String transformers over uint8 byte tensors (paper §2 string ops +
+hash/bloom indexing, which are stateless and therefore transformers)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+from .. import hashing, strops
+from .. import types as T
+from ..stage import Transformer, register_stage
+
+
+@register_stage
+@dataclasses.dataclass
+class HashIndexTransformer(Transformer):
+    """Map (possibly non-string) ids into ``[offset, offset+numBins)`` via
+    seeded 64-bit hashing — Listing 1's user_hash_indexer."""
+
+    numBins: int = 1 << 16
+    seed: int = 0
+    indexOffset: int = 0  # reserve low indices (e.g. 0 for padding/mask)
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        if T.is_string_col(x):
+            idx = hashing.hash_to_bins(x, self.numBins, self.seed)
+        else:
+            idx = hashing.int_to_bins(x, self.numBins, self.seed)
+        return (idx + self.indexOffset,)
+
+
+@register_stage
+@dataclasses.dataclass
+class BloomEncodeTransformer(Transformer):
+    """Bloom encoding [9]: numHashes independent bins per value, enabling
+    memory-efficient embeddings of huge-cardinality categoricals.  Output has
+    one extra trailing axis of size numHashes."""
+
+    numBins: int = 1 << 16
+    numHashes: int = 3
+    indexOffset: int = 0
+    useKernel: bool = False  # route through the Pallas hot path
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        if not T.is_string_col(x):
+            x = strops.number_to_string(x, self.maxLen)
+        if self.useKernel:
+            from repro.kernels.bloom_hash import ops as khash
+
+            idx = khash.bloom_indices(x, self.numBins, self.numHashes)
+        else:
+            idx = hashing.bloom_indices(x, self.numBins, self.numHashes)
+        return (idx + self.indexOffset,)
+
+
+@register_stage
+@dataclasses.dataclass
+class StringToStringListTransformer(Transformer):
+    """Split on a delimiter into a fixed-length padded list (Listing 1's
+    genres_split_to_array_transform)."""
+
+    separator: str = ","
+    listLength: int = 8
+    defaultValue: Optional[str] = None
+    outMaxLen: Optional[int] = None
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        return (
+            strops.split_to_list(
+                x, self.separator, self.listLength, self.defaultValue, self.outMaxLen
+            ),
+        )
+
+
+@register_stage
+@dataclasses.dataclass
+class StringCaseTransformer(Transformer):
+    case: str = "lower"  # lower | upper
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        return (strops.lower(x) if self.case == "lower" else strops.upper(x),)
+
+
+@register_stage
+@dataclasses.dataclass
+class StringConcatTransformer(Transformer):
+    separator: str = ""
+    outMaxLen: int = T.DEFAULT_MAX_LEN
+
+    def apply(self, weights, inputs):
+        return (strops.concat(list(inputs), self.separator, self.outMaxLen),)
+
+
+@register_stage
+@dataclasses.dataclass
+class SubstringTransformer(Transformer):
+    start: int = 0
+    length: int = 1
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        return (strops.substring(x, self.start, self.length),)
+
+
+@register_stage
+@dataclasses.dataclass
+class StringContainsTransformer(Transformer):
+    pattern: str = ""
+    mode: str = "contains"  # contains | startswith | endswith
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        f = {
+            "contains": strops.contains,
+            "startswith": strops.startswith,
+            "endswith": strops.endswith,
+        }[self.mode]
+        return (f(x, self.pattern),)
+
+
+@register_stage
+@dataclasses.dataclass
+class StringStripTransformer(Transformer):
+    stripChar: str = " "
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        return (strops.strip_char(x, self.stripChar),)
+
+
+@register_stage
+@dataclasses.dataclass
+class StringReplaceCharTransformer(Transformer):
+    oldChar: str = " "
+    newChar: str = "_"
+
+    def apply(self, weights, inputs):
+        (x,) = inputs
+        return (strops.replace_char(x, self.oldChar, self.newChar),)

@@ -1,0 +1,99 @@
+"""Preprocessing hyperparameter search (paper §2 "Keras Tuner support").
+
+The paper fuses the exported preprocessing model with the neural model and
+lets Keras Tuner search preprocessing hyperparameters (hash bins, embedding
+dims, thresholds).  Here a search space is declared over stage constructor
+kwargs; each trial re-instantiates + refits the pipeline and evaluates a
+user metric (e.g. validation loss of the downstream model).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import random
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class Choice:
+    name: str
+    values: Sequence[Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class IntLog:
+    """Log-uniform integer range (e.g. numBins in 1k..1M)."""
+
+    name: str
+    lo: int
+    hi: int
+
+    def sample(self, rng: random.Random) -> int:
+        return int(round(math.exp(rng.uniform(math.log(self.lo), math.log(self.hi)))))
+
+
+@dataclasses.dataclass
+class Trial:
+    params: Dict[str, Any]
+    score: float
+
+
+class PreprocessingTuner:
+    """Random / grid search over pipeline-builder hyperparameters.
+
+    Args:
+      build_pipeline: hp-dict -> Pipeline (unfitted).
+      evaluate: (FittedPipeline, hp-dict) -> float score (lower is better).
+    """
+
+    def __init__(
+        self,
+        build_pipeline: Callable[[Dict[str, Any]], Any],
+        evaluate: Callable[[Any, Dict[str, Any]], float],
+        space: Sequence[Any],
+        mode: str = "random",
+        max_trials: int = 16,
+        seed: int = 0,
+    ):
+        self.build_pipeline = build_pipeline
+        self.evaluate = evaluate
+        self.space = list(space)
+        self.mode = mode
+        self.max_trials = max_trials
+        self.seed = seed
+        self.trials: List[Trial] = []
+
+    def _candidates(self):
+        if self.mode == "grid":
+            choices = [
+                s.values if isinstance(s, Choice) else [s.lo, s.hi] for s in self.space
+            ]
+            names = [s.name for s in self.space]
+            for combo in itertools.product(*choices):
+                yield dict(zip(names, combo))
+        else:
+            rng = random.Random(self.seed)
+            for _ in range(self.max_trials):
+                hp = {}
+                for s in self.space:
+                    if isinstance(s, Choice):
+                        hp[s.name] = rng.choice(list(s.values))
+                    else:
+                        hp[s.name] = s.sample(rng)
+                yield hp
+
+    def search(self, data, engine=None) -> Trial:
+        best: Optional[Trial] = None
+        for i, hp in enumerate(self._candidates()):
+            if i >= self.max_trials:
+                break
+            pipe = self.build_pipeline(hp)
+            fitted = pipe.fit(data, engine=engine)
+            score = float(self.evaluate(fitted, hp))
+            t = Trial(params=hp, score=score)
+            self.trials.append(t)
+            if best is None or t.score < best.score:
+                best = t
+        assert best is not None, "no trials ran"
+        return best

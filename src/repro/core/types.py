@@ -1,0 +1,124 @@
+"""Core column types for the preprocessing framework.
+
+The paper's Spark engine operates on typed columns; our JAX engine operates on
+dict-of-array "columnar batches".  JAX has no string dtype, so strings are
+represented TPU-natively as fixed-width ``uint8`` byte tensors with trailing
+zero padding: a string column of logical shape ``(...,)`` is stored as a
+``uint8`` array of shape ``(..., max_len)``.  Real strings never contain NUL,
+so zero-padding is unambiguous; all string ops mask trailing zeros.
+
+64-bit integer support is required for low-collision string hashing
+(FNV-1a-64), so this module enables jax x64 mode on import.  All model code in
+this repo passes explicit dtypes and is unaffected by the changed defaults.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, List, Sequence, Union
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402  (after x64 flag)
+import numpy as np  # noqa: E402
+
+# A columnar batch: column name -> array.  String columns carry one extra
+# trailing byte axis relative to their logical shape.
+Batch = Dict[str, jax.Array]
+
+#: Default fixed width for string byte tensors.
+DEFAULT_MAX_LEN = 32
+
+_STRING_KIND = "string"
+_NUMERIC_KINDS = ("float", "int", "bool")
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnSchema:
+    """Schema of one column, mirroring the paper's tf_input_schema entries."""
+
+    name: str
+    dtype: str  # "float32" | "float64" | "int32" | "int64" | "bool" | "string"
+    shape: tuple = ()  # logical shape EXCLUDING batch dim and byte axis
+    max_len: int = DEFAULT_MAX_LEN  # byte width, string columns only
+
+    @property
+    def is_string(self) -> bool:
+        return self.dtype == _STRING_KIND
+
+    def jax_dtype(self):
+        if self.is_string:
+            return jnp.uint8
+        return jnp.dtype(self.dtype)
+
+    def array_shape(self, batch: int) -> tuple:
+        s = (batch,) + tuple(self.shape)
+        if self.is_string:
+            s = s + (self.max_len,)
+        return s
+
+
+def is_string_col(arr: jax.Array) -> bool:
+    """Heuristic used by rank-polymorphic ops: string cols are uint8."""
+    return arr.dtype == jnp.uint8
+
+
+# ---------------------------------------------------------------------------
+# Host-side string <-> byte-tensor conversion (data-pipeline boundary only;
+# never inside a jitted graph).
+# ---------------------------------------------------------------------------
+
+def encode_strings(values, max_len: int = DEFAULT_MAX_LEN) -> np.ndarray:
+    """Encode (nested) lists / numpy arrays of python strings to uint8.
+
+    Output shape = ``np.shape(values) + (max_len,)``.  UTF-8 bytes, truncated
+    to ``max_len``, zero padded.
+    """
+    arr = np.asarray(values, dtype=object)
+    flat = arr.reshape(-1)
+    out = np.zeros((flat.size, max_len), dtype=np.uint8)
+    for i, s in enumerate(flat):
+        if s is None:
+            continue
+        b = str(s).encode("utf-8")[:max_len]
+        out[i, : len(b)] = np.frombuffer(b, dtype=np.uint8)
+    return out.reshape(arr.shape + (max_len,))
+
+
+def decode_strings(arr) -> np.ndarray:
+    """Inverse of :func:`encode_strings` (for debugging / vocab export)."""
+    a = np.asarray(arr, dtype=np.uint8)
+    lead = a.shape[:-1]
+    flat = a.reshape(-1, a.shape[-1])
+    out = np.empty(flat.shape[0], dtype=object)
+    for i, row in enumerate(flat):
+        n = int(np.argmax(row == 0)) if (row == 0).any() else row.shape[0]
+        out[i] = bytes(row[:n]).decode("utf-8", errors="replace")
+    return out.reshape(lead) if lead else out[0]
+
+
+def string_lengths(arr: jax.Array) -> jax.Array:
+    """Length (in bytes) of every string in a uint8 string tensor."""
+    return jnp.sum((arr != 0).astype(jnp.int32), axis=-1)
+
+
+def strings_equal(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Elementwise equality of two string tensors (broadcasts leading dims)."""
+    return jnp.all(a == b, axis=-1)
+
+
+def as_string_constant(s: str, max_len: int = DEFAULT_MAX_LEN) -> jnp.ndarray:
+    """A single python string as a (max_len,) uint8 constant."""
+    return jnp.asarray(encode_strings([s], max_len)[0])
+
+
+def dtype_name(x) -> str:
+    return str(jnp.asarray(x).dtype)
+
+
+def cast_column(arr: jax.Array, dtype: str) -> jax.Array:
+    """Cast a numeric column; 'string' casts are handled by dedicated ops."""
+    if dtype == _STRING_KIND:
+        raise TypeError("use NumberToString/StringToNumber transformers")
+    return arr.astype(jnp.dtype(dtype))

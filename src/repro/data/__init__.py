@@ -1,0 +1,6 @@
+"""Data substrate: synthetic data-lake generators and the sharded,
+prefetching batch pipeline that feeds the fit engine and the trainers."""
+from .pipeline import BatchPipeline, prefetch
+from .synthetic import lm_token_batches, ltr_rows, movielens_rows
+
+__all__ = ["BatchPipeline", "prefetch", "movielens_rows", "ltr_rows", "lm_token_batches"]

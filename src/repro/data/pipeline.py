@@ -1,0 +1,71 @@
+"""Sharded, prefetching batch pipeline.
+
+The "Spark executor" half of the paper's world: streams columnar batches,
+shards them over the mesh's data axes (device_put with a NamedSharding) and
+overlaps host-side generation with device compute via a background prefetch
+thread — the standard input-pipeline overlap trick for keeping TPUs fed.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterable, Iterator, Optional
+
+import jax
+
+from repro.core import types as T
+
+
+def prefetch(it: Iterable[T.Batch], depth: int = 2) -> Iterator[T.Batch]:
+    """Run the producer in a daemon thread, ``depth`` batches ahead."""
+    q: "queue.Queue" = queue.Queue(maxsize=depth)
+    _END = object()
+    err: list = []
+
+    def worker():
+        try:
+            for item in it:
+                q.put(item)
+        except BaseException as e:  # propagate into consumer
+            err.append(e)
+        finally:
+            q.put(_END)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        item = q.get()
+        if item is _END:
+            if err:
+                raise err[0]
+            return
+        yield item
+
+
+class BatchPipeline:
+    """Re-iterable batch source with optional mesh sharding + prefetch.
+
+    ``factory()`` must return a fresh iterator each call (multi-pass fitting
+    re-scans, exactly like Spark re-scanning a DataFrame).
+    """
+
+    def __init__(
+        self,
+        factory: Callable[[], Iterable[T.Batch]],
+        engine=None,
+        prefetch_depth: int = 2,
+    ):
+        self.factory = factory
+        self.engine = engine
+        self.prefetch_depth = prefetch_depth
+
+    def __call__(self) -> Iterator[T.Batch]:
+        it = iter(self.factory())
+        if self.engine is not None and self.engine.mesh is not None:
+            it = (self.engine.shard_batch(b) for b in it)
+        if self.prefetch_depth > 0:
+            it = prefetch(it, self.prefetch_depth)
+        return it
+
+    def __iter__(self) -> Iterator[T.Batch]:
+        return self()

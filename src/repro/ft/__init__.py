@@ -1,0 +1,5 @@
+"""Fault tolerance: heartbeats, supervised restart, straggler detection."""
+from .supervisor import Heartbeat, Supervisor
+from .straggler import StragglerMonitor
+
+__all__ = ["Heartbeat", "Supervisor", "StragglerMonitor"]

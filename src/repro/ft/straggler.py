@@ -1,0 +1,68 @@
+"""Straggler detection: per-step wall-time EWMA with outlier flagging.
+
+On a real pod every host reports its step time; the controller flags hosts
+whose EWMA exceeds the fleet median by a threshold factor (then drains or
+deprioritises them).  The monitor below implements the statistics and the
+policy hook; the launcher wires it to per-step timings (and, multi-host, to
+per-host heartbeat metadata).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+
+class StragglerMonitor:
+    def __init__(
+        self,
+        alpha: float = 0.1,
+        threshold: float = 1.5,
+        warmup_steps: int = 5,
+        on_straggler: Optional[Callable[[str, float, float], None]] = None,
+    ):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup = warmup_steps
+        self.on_straggler = on_straggler
+        self.ewma: Dict[str, float] = {}
+        self.count: Dict[str, int] = {}
+        self.flagged: List[str] = []
+        self._t0: Optional[float] = None
+
+    # -- single-host convenience: time the local step -------------------
+    def step_start(self):
+        self._t0 = time.perf_counter()
+
+    def step_end(self, rank: str = "rank0") -> float:
+        dt = time.perf_counter() - (self._t0 or time.perf_counter())
+        self.report(rank, dt)
+        return dt
+
+    # -- fleet interface --------------------------------------------------
+    def report(self, rank: str, step_time: float) -> None:
+        prev = self.ewma.get(rank)
+        self.ewma[rank] = step_time if prev is None else (
+            self.alpha * step_time + (1 - self.alpha) * prev
+        )
+        self.count[rank] = self.count.get(rank, 0) + 1
+        self._check(rank)
+
+    def _median(self) -> float:
+        vals = sorted(self.ewma.values())
+        return vals[len(vals) // 2] if vals else 0.0
+
+    def _check(self, rank: str) -> None:
+        if self.count[rank] < self.warmup or len(self.ewma) == 0:
+            return
+        med = self._median()
+        if med > 0 and self.ewma[rank] > self.threshold * med and rank not in self.flagged:
+            self.flagged.append(rank)
+            if self.on_straggler:
+                self.on_straggler(rank, self.ewma[rank], med)
+
+    def summary(self) -> dict:
+        return {
+            "ewma": dict(self.ewma),
+            "median": self._median(),
+            "flagged": list(self.flagged),
+        }

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: multi-seed FNV-1a-64 string hashing (bloom encoding).
+
+TPU vector units have no 64-bit integers, so the 64-bit hash state is carried
+as two uint32 limbs and the 64x64->low-64 multiply is synthesised from
+16-bit sublimb products (each fits uint32 exactly).  The result is bit-exact
+with the uint64 reference in ``repro.core.hashing`` — asserted by the kernel
+tests — which is what guarantees the paper's offline/online parity when the
+hot serving path runs this kernel while the Spark-role fit used the jnp path.
+
+Grid: (num_hashes, N / BLOCK_N).  Each program hashes BLOCK_N strings for one
+seed.  Bytes arrive as int32 (widened by ops.py: uint8 VREG lanes are wasted
+on TPU anyway) in a (BLOCK_N, L) VMEM block; the L loop is a static unroll of
+elementwise ops, which Mosaic maps straight onto the VPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+FNV_OFFSET = 14695981039346656037
+FNV_PRIME_HI = 0x00000100  # 0x100000001B3 >> 32
+FNV_PRIME_LO = 0x000001B3
+
+_M1 = 0xFF51AFD7ED558CCD
+_M2 = 0xC4CEB9FE1A85EC53
+
+
+def _u32(x):
+    return jnp.uint32(x)
+
+
+def _mul32_lohi(a, b):
+    """32x32 -> (lo32, hi32) via 16-bit sublimbs (all intermediates < 2^32)."""
+    a0 = a & _u32(0xFFFF)
+    a1 = a >> _u32(16)
+    b0 = b & _u32(0xFFFF)
+    b1 = b >> _u32(16)
+    t0 = a0 * b0
+    t1 = a1 * b0 + (t0 >> _u32(16))
+    t2 = a0 * b1 + (t1 & _u32(0xFFFF))
+    lo = (t2 << _u32(16)) | (t0 & _u32(0xFFFF))
+    hi = a1 * b1 + (t1 >> _u32(16)) + (t2 >> _u32(16))
+    return lo, hi
+
+
+def _mul64(ah, al, bh, bl):
+    """(ah:al) * (bh:bl) mod 2^64 -> (hi, lo)."""
+    lo, carry = _mul32_lohi(al, bl)
+    hi = carry + al * bh + ah * bl  # mod 2^32 wraparound is exactly right
+    return hi, lo
+
+
+def _xor64(ah, al, bh, bl):
+    return ah ^ bh, al ^ bl
+
+
+def _shr64(ah, al, n: int):
+    if n >= 32:
+        return _u32(0), ah >> _u32(n - 32)
+    return ah >> _u32(n), (al >> _u32(n)) | (ah << _u32(32 - n))
+
+
+def _fmix64(h_hi, h_lo):
+    for mult in (_M1, _M2, None):
+        s_hi, s_lo = _shr64(h_hi, h_lo, 33)
+        h_hi, h_lo = _xor64(h_hi, h_lo, s_hi, s_lo)
+        if mult is not None:
+            h_hi, h_lo = _mul64(h_hi, h_lo, _u32(mult >> 32), _u32(mult & 0xFFFFFFFF))
+    return h_hi, h_lo
+
+
+def _kernel(seeds_ref, bytes_ref, out_ref, *, num_bins: int, max_len: int):
+    seed = seeds_ref[0]  # uint32 seed for this program (seeds < 2^32 here)
+    b = bytes_ref[...]  # (BLOCK_N, L) int32
+    n = b.shape[0]
+    h_hi = jnp.full((n,), _u32(FNV_OFFSET >> 32), jnp.uint32)
+    h_lo = jnp.full((n,), _u32(FNV_OFFSET & 0xFFFFFFFF), jnp.uint32) ^ seed
+    p_hi, p_lo = _u32(FNV_PRIME_HI), _u32(FNV_PRIME_LO)
+    for i in range(max_len):
+        byte = b[:, i].astype(jnp.uint32)
+        x_lo = h_lo ^ byte
+        n_hi, n_lo = _mul64(h_hi, x_lo, p_hi, p_lo)
+        live = byte != 0  # zero padding leaves the state untouched
+        h_hi = jnp.where(live, n_hi, h_hi)
+        h_lo = jnp.where(live, n_lo, h_lo)
+    h_hi, h_lo = _fmix64(h_hi, h_lo)
+    folded = h_hi ^ h_lo
+    out_ref[...] = (folded % _u32(num_bins)).astype(jnp.int32)[None, :]
+
+
+def bloom_hash_kernel(
+    byte_tensor: jax.Array,  # (N, L) int32
+    num_bins: int,
+    num_hashes: int,
+    block_n: int = 1024,
+    interpret: bool = True,
+) -> jax.Array:
+    N, L = byte_tensor.shape
+    pad = (-N) % block_n
+    if pad:
+        byte_tensor = jnp.pad(byte_tensor, ((0, pad), (0, 0)))
+    Np = byte_tensor.shape[0]
+    seeds = jnp.arange(num_hashes, dtype=jnp.uint32)
+    out = pl.pallas_call(
+        functools.partial(_kernel, num_bins=num_bins, max_len=L),
+        grid=(num_hashes, Np // block_n),
+        in_specs=[
+            pl.BlockSpec((1,), lambda k, i: (k,)),
+            pl.BlockSpec((block_n, L), lambda k, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda k, i: (k, i)),
+        out_shape=jax.ShapeDtypeStruct((num_hashes, Np), jnp.int32),
+        interpret=interpret,
+    )(seeds, byte_tensor)
+    return out[:, :N].T  # (N, num_hashes)

@@ -1,0 +1,31 @@
+"""jit'd wrapper for the bloom_hash kernel: rank-polymorphic dispatch,
+uint8 -> int32 widening, interpret-mode selection off-TPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .bloom_hash import bloom_hash_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def bloom_indices(strings: jax.Array, num_bins: int, num_hashes: int) -> jax.Array:
+    """(..., L) uint8 -> (..., num_hashes) int64 bloom bin indices."""
+    lead = strings.shape[:-1]
+    L = strings.shape[-1]
+    flat = strings.reshape(-1, L).astype(jnp.int32)
+    out = bloom_hash_kernel(flat, num_bins, num_hashes, interpret=_interpret())
+    return out.reshape(lead + (num_hashes,)).astype(jnp.int64)
+
+
+def hash_indices(strings: jax.Array, num_bins: int, seed: int = 0) -> jax.Array:
+    """Single-seed hash indexing through the same kernel (seed 0 only in the
+    kernel grid; other seeds use the jnp path)."""
+    if seed != 0:
+        from repro.core import hashing
+
+        return hashing.hash_to_bins(strings, num_bins, seed)
+    return bloom_indices(strings, num_bins, 1)[..., 0]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the bloom_hash kernel: seeded FNV-1a-64 + fmix64
+avalanche + 32-bit fold + modulo binning, identical to
+``repro.core.hashing`` (single source of truth — the oracle simply calls it).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import hashing
+
+
+def bloom_indices(strings: jax.Array, num_bins: int, num_hashes: int) -> jax.Array:
+    return hashing.bloom_indices(strings, num_bins, num_hashes)

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: flash-decode — single-token attention against a long
+KV cache.
+
+Grid (B, H, nK), KV blocks innermost with (1,)/(1, hd) f32 scratch carrying
+the online-softmax state.  The query row is tiny; the work is streaming the
+KV cache through VMEM at HBM bandwidth — this kernel exists because decode
+attention is memory-bound and must not materialise (W,) score tensors in f32
+HBM round-trips.  A validity mask handles rolling-window caches and
+not-yet-written slots.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float(-1e30)
+
+
+def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, n_k):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * jnp.float32(scale)  # (hd,)
+    k = k_ref[0, 0].astype(jnp.float32)  # (BK, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    valid = valid_ref[...] != 0  # (BK,)
+
+    s = jnp.sum(k * q[None, :], axis=1)  # (BK,)
+    s = jnp.where(valid, s, jnp.float32(NEG_INF))
+    m_prev = m_scr[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[0] = l_scr[0] * corr + jnp.sum(p)
+    acc_scr[...] = acc_scr[...] * corr + jnp.sum(p[:, None] * v, axis=0)[None]
+    m_scr[0] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_scr[0] / jnp.maximum(l_scr[0], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(
+    q: jax.Array,  # (B, H, hd)
+    k: jax.Array,  # (B, KV, W, hd)
+    v: jax.Array,
+    valid: jax.Array,  # (W,) int32
+    scale: float,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    B, H, hd = q.shape
+    KV, W = k.shape[1], k.shape[2]
+    G = H // KV
+    bk = min(block_k, W)
+    pad = (-W) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, pad),))
+    Wp = k.shape[2]
+    n_k = Wp // bk
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, n_k=n_k),
+        grid=(B, H, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, h, ki: (b, h, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((bk,), lambda b, h, ki: (ki,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, h, ki: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, valid.astype(jnp.int32))
+    return out

@@ -1,0 +1,25 @@
+"""jit'd wrapper: model layout (B,1,H,hd)/(B,W,KV,hd) -> kernel layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def decode_attention(q, k, v, valid, scale):
+    """q (B,1,H,hd), k/v (B,W,KV,hd), valid (W,) bool -> (B,1,H,hd)."""
+    B, _, H, hd = q.shape
+    out = decode_attention_kernel(
+        q[:, 0],
+        jnp.swapaxes(k, 1, 2),
+        jnp.swapaxes(v, 1, 2),
+        valid,
+        scale,
+        interpret=_interpret(),
+    )
+    return out[:, None]

@@ -1,0 +1,18 @@
+"""Full-softmax oracle for flash-decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention(q, k, v, valid, scale):
+    """q (B,H,hd), k/v (B,KV,W,hd), valid (W,) bool."""
+    B, H, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32) * jnp.float32(scale)
+    s = jnp.einsum("bkgh,bkwh->bkgw", qg, k.astype(jnp.float32))
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgw,bkwh->bkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,65 @@
+"""jit'd wrapper: model layout (B,S,H,hd) -> kernel layout, interpret-mode
+selection off-TPU, and a custom VJP that pairs this Pallas forward with the
+rematerialising flash backward from ``repro.models.flash``."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flash as jflash
+
+from .flash_attention import flash_attention_fwd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _fa(q, k, v, scale, causal, window):
+    # kernel layout: (B,H,S,hd) / (B,KV,T,hd)
+    qk = jnp.swapaxes(q, 1, 2)
+    kk = jnp.swapaxes(k, 1, 2)
+    vk = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_fwd(
+        qk, kk, vk, scale, causal=causal, window=window, interpret=_interpret()
+    )
+    return jnp.swapaxes(out, 1, 2)  # back to (B,S,H,hd)
+
+
+def _fa_fwd(q, k, v, scale, causal, window):
+    return _fa(q, k, v, scale, causal, window), (q, k, v)
+
+
+def _fa_bwd(scale, causal, window, res, do):
+    q, k, v = res
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, S, KV, H // KV, hd)
+
+    # reuse the jnp flash custom-vjp backward (identical math)
+    _, vjp = jax.vjp(
+        lambda qq, kk, vv: jflash.flash_attention_grouped(
+            qq, kk, vv, scale, causal, window, min(256, k.shape[1]), 0, k.shape[1]
+        ),
+        qg, k, v,
+    )
+    dq, dk, dv = vjp(do.reshape(qg.shape[:4] + (v.shape[-1],)))
+    return dq.reshape(q.shape), dk, dv
+
+
+_fa.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(
+    q: jax.Array,  # (B,S,H,hd)
+    k: jax.Array,  # (B,T,KV,hd)
+    v: jax.Array,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    return _fa(q, k, v, scale, causal, window)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash_attention kernel: naive full-softmax
+attention in the kernel's (B, H, S, hd) layout."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(
+    q: jax.Array,  # (B, H, S, hd)
+    k: jax.Array,  # (B, KV, T, hd)
+    v: jax.Array,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, S, hd).astype(jnp.float32) * jnp.float32(scale)
+    s = jnp.einsum("bkgsh,bkth->bkgst", qg, k.astype(jnp.float32))
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,bkth->bkgsh", w, v.astype(jnp.float32))
+    return out.reshape(B, H, S, hd).astype(q.dtype)

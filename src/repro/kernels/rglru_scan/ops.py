@@ -1,0 +1,26 @@
+"""jit'd wrapper for the RG-LRU kernel (interpret off-TPU, seq padding with
+identity decay so padded steps don't perturb the carry)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .rglru_scan import rglru_scan
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def rglru(a: jax.Array, x: jax.Array, chunk: int = 128) -> jax.Array:
+    B, S, R = a.shape
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    br = 512
+    while R % br:
+        br //= 2
+    out = rglru_scan(a.astype(jnp.float32), x.astype(jnp.float32), chunk=Q, block_r=br, interpret=_interpret())
+    return out[:, :S]

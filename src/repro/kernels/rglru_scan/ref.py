@@ -1,0 +1,16 @@
+"""Sequential oracle for the RG-LRU recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_sequential(a: jax.Array, x: jax.Array) -> jax.Array:
+    def step(h, inp):
+        at, xt = inp
+        h = at * h + xt
+        return h, h
+
+    h0 = jnp.zeros(a.shape[::2][0:1] + a.shape[2:], jnp.float32)  # (B, R)
+    _, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(x, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: RG-LRU linear recurrence  h_t = a_t h_{t-1} + x_t.
+
+Grid (B, n_width_blocks, n_chunks), chunks innermost; the (BR,) carry scratch
+persists across a row-block's chunks.  Within a chunk the recurrence is a
+rolled loop of (BR,)-wide VPU ops — the GPU paper's custom linear-scan kernel
+maps onto TPU as this memory-bound vector loop (see DESIGN.md hardware
+adaptation notes; training uses the parallel associative scan instead, this
+kernel serves chunked prefill).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, x_ref, h_ref, carry_scr, *, q_len: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        carry_scr[...] = jnp.zeros_like(carry_scr)
+
+    a = a_ref[0].astype(jnp.float32)  # (Q, BR)
+    x = x_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + x[t]
+        h_ref[0, t, :] = h.astype(h_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, q_len, step, carry_scr[...])
+    carry_scr[...] = h
+
+
+def rglru_scan(
+    a: jax.Array,  # (B, S, R) f32 decay in (0,1)
+    x: jax.Array,  # (B, S, R) f32 pre-scaled input
+    chunk: int = 128,
+    block_r: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    B, S, R = a.shape
+    Q = min(chunk, S)
+    BR = min(block_r, R)
+    assert S % Q == 0 and R % BR == 0
+    out = pl.pallas_call(
+        functools.partial(_kernel, q_len=Q),
+        grid=(B, R // BR, S // Q),
+        in_specs=[
+            pl.BlockSpec((1, Q, BR), lambda b, r, c: (b, c, r)),
+            pl.BlockSpec((1, Q, BR), lambda b, r, c: (b, c, r)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, BR), lambda b, r, c: (b, c, r)),
+        out_shape=jax.ShapeDtypeStruct((B, S, R), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((BR,), jnp.float32)],
+        interpret=interpret,
+    )(a, x)
+    return out

@@ -1,0 +1,24 @@
+"""jit'd wrapper for the SSD kernel (interpret off-TPU; seq padding)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ssd_scan import ssd_scan
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ssd(x, dt, A, Bm, Cm, chunk: int = 128):
+    S = x.shape[1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out = ssd_scan(x, dt, A, Bm, Cm, chunk=Q, interpret=_interpret())
+    return out[:, :S]

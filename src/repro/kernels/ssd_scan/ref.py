@@ -1,0 +1,40 @@
+"""Sequential-recurrence oracle for the SSD kernel:
+
+    S_t = exp(dt_t * A) S_{t-1} + dt_t * B_t x_t^T ;  y_t = C_t S_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_sequential(x, dt, A, Bm, Cm):
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)  # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P),(B,H),(B,H,N),(B,H,N)
+        da = jnp.exp(dtt * A[None, :])  # (B,H)
+        state = state * da[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhnp", dtt, bt, xt
+        )
+        y = jnp.einsum("bhn,bhnp->bhp", ct, state)
+        return state, y
+
+    state0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, ys = jax.lax.scan(
+        step,
+        state0,
+        (
+            jnp.moveaxis(xf, 1, 0),
+            jnp.moveaxis(dtf, 1, 0),
+            jnp.moveaxis(Bh, 1, 0),
+            jnp.moveaxis(Ch, 1, 0),
+        ),
+    )
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B,S,H,P)

@@ -1,0 +1,355 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape x
+mesh) cell against the production mesh, prove it fits, and extract the
+roofline terms (compute / memory / collective) from the compiled artifact.
+
+The two XLA_FLAGS lines above MUST precede every other import: jax locks the
+device count at first initialisation.  Smoke tests and benchmarks never
+import this module, so they keep seeing 1 device.
+
+Usage:
+    python -m repro.launch.dryrun --arch codeqwen1.5-7b --shape train_4k
+    python -m repro.launch.dryrun --all                  # every cell, 1 pod
+    python -m repro.launch.dryrun --all --multi-pod      # every cell, 2 pods
+
+Each cell writes benchmarks/artifacts/dryrun/<arch>_<shape>_<mesh>.json —
+re-runs skip existing artifacts (resumable), --force overwrites.
+"""
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import mesh as meshlib
+from repro.launch import specs as S
+from repro.models import common as C
+from repro.models import registry
+from repro.train import AdamWConfig, make_train_step
+from repro.train.step import train_state_abstract, train_state_pspecs
+
+# --- TPU v5e hardware model (per chip) ---------------------------------------
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(.*?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([\d,]*)\]")
+
+
+def parse_collectives(hlo_text: str):
+    """Sum per-device communicated bytes (result shapes) per collective kind."""
+    by_kind = {}
+    count = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m:
+            result_part, kind = m.group(1), m.group(2)
+            nbytes = 0
+            for dt, dims in _SHAPE_RE.findall(result_part):
+                n = 1
+                if dims:
+                    for d in dims.split(","):
+                        n *= int(d)
+                nbytes += n * _DTYPE_BYTES[dt]
+            by_kind[kind] = by_kind.get(kind, 0) + nbytes
+            count[kind] = count.get(kind, 0) + 1
+    return by_kind, count
+
+
+def count_params(defs) -> int:
+    return int(sum(np.prod(d.shape) for d in defs.values()))
+
+
+def count_active_params(cfg, defs) -> int:
+    """Active params for MoE archs: routed experts scaled by top_k / E."""
+    total = 0
+    for path, d in defs.items():
+        n = int(np.prod(d.shape))
+        if cfg.n_routed_experts and re.search(r"/moe/w[gud]$", path):
+            n = int(n * cfg.moe_top_k / cfg.n_routed_experts)
+        total += n
+    return total
+
+
+def _serving_params(model, cfg):
+    """Serving weights: compute-dtype (bf16) ShapeDtypeStructs — deployments
+    serve quantised checkpoints, and fp32 weight gathers were the dominant
+    decode collective (§Perf decode iter-5)."""
+    import jax as _jax
+
+    out = {}
+    for p, d in model.defs().items():
+        dt = cfg.compute_dtype if (len(d.shape) >= 2 and d.dtype == jnp.float32) else d.dtype
+        out[p] = _jax.ShapeDtypeStruct(d.shape, dt)
+    return out
+
+
+def _serving_pspecs(model):
+    """Serving layout: TP over "model" only; REPLICATED over the data axes
+    (no optimizer state to justify FSDP — replication removes every per-step
+    weight all-gather from the decode path)."""
+    return model.pspecs(rules={"embed": None})
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               fsdp: bool = False, unroll_decode: bool = False, accum: int = 1):
+    import dataclasses
+
+    cfg = configs.get(arch)
+    kind = S.SHAPES[shape_name]["kind"]
+    if unroll_decode and kind == "decode":
+        # §Perf: unrolled decode lets XLA alias each layer's cache update
+        # in place; the layer-scan double-buffers the whole KV cache
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    data_ax = meshlib.data_axes(mesh)
+    if fsdp:
+        # §Perf: pure-FSDP layout — the "model" axis joins the batch axes;
+        # no TP activation collectives, weights gathered per layer instead
+        C.set_batch_axes(data_ax + ("model",))
+        C.ACT_RULES["act_model"] = None
+        data_ax = data_ax + ("model",)
+    else:
+        C.set_batch_axes(data_ax)
+        C.ACT_RULES["act_model"] = "model"
+    model = registry.build(cfg)
+    bspec = P(data_ax)
+
+    with jax.set_mesh(mesh):
+        if kind == "train":
+            step = make_train_step(model, AdamWConfig(), accum=accum)
+            state = train_state_abstract(model)
+            sspec = C.legalize_tree(state, train_state_pspecs(model), mesh)
+            state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), sspec)
+            ins = S.input_specs(cfg, shape_name)
+            in_sh = {
+                k: NamedSharding(mesh, C.legalize_pspec(v.shape, P(data_ax, *([None] * (len(v.shape) - 1))), mesh))
+                for k, v in ins.items()
+            }
+            metric_sh = {k: NamedSharding(mesh, P()) for k in ("grad_norm", "lr", "loss")}
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_sh, in_sh),
+                out_shardings=(state_sh, metric_sh),
+                donate_argnums=(0,),
+            )
+            lowered = jitted.lower(state, ins)
+        elif kind == "prefill":
+            params = _serving_params(model, cfg)
+            pspec = C.legalize_tree(params, _serving_pspecs(model), mesh)
+            p_sh = {k: NamedSharding(mesh, s) for k, s in pspec.items()}
+            ins = S.input_specs(cfg, shape_name)
+            in_sh = {
+                k: NamedSharding(mesh, C.legalize_pspec(v.shape, P(data_ax, *([None] * (len(v.shape) - 1))), mesh))
+                for k, v in ins.items()
+            }
+
+            def prefill(params, batch):
+                if cfg.family == "whisper":
+                    logits, _ = model.logits(params, batch["tokens"], batch["frames"])
+                elif cfg.family == "vlm":
+                    logits, _ = model.logits(params, batch["tokens"], batch["patch_embeds"])
+                else:
+                    logits, _ = model.logits(params, batch["tokens"])
+                return logits
+
+            jitted = jax.jit(prefill, in_shardings=(p_sh, in_sh), out_shardings=None)
+            lowered = jitted.lower(params, ins)
+        else:  # decode
+            params = _serving_params(model, cfg)
+            pspec = C.legalize_tree(params, _serving_pspecs(model), mesh)
+            p_sh = {k: NamedSharding(mesh, s) for k, s in pspec.items()}
+            cache = S.cache_abstract(model, cfg, shape_name)
+            c_spec = C.legalize_tree(cache, S.cache_pspecs(cache, mesh), mesh)
+            c_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), c_spec)
+            ins = S.input_specs(cfg, shape_name)
+            in_sh = {
+                k: NamedSharding(mesh, C.legalize_pspec(v.shape, P(data_ax, None), mesh))
+                for k, v in ins.items()
+            }
+
+            def serve_step(params, cache, batch):
+                return model.decode_step(params, cache, batch["tokens"])
+
+            # out_shardings must match the donated cache's shardings or XLA
+            # silently drops the donation and double-buffers the KV cache
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(p_sh, c_sh, in_sh),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params, cache, ins)
+        compiled = lowered.compile()
+    return cfg, model, lowered, compiled, mesh
+
+
+def analyse(arch, shape_name, multi_pod, cfg, model, lowered, compiled, mesh, t_compile):
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # loop-aware static analysis (lax.scan bodies x trip_count); the raw
+    # cost_analysis numbers count scan bodies once and are kept for reference
+    from repro.launch import hloanalysis
+
+    static = hloanalysis.analyse_hlo(hlo)
+    coll_bytes = {k: float(v) for k, v in static["coll_bytes"].items()}
+    coll_count = {k: float(v) for k, v in static["coll_count"].items()}
+    total_coll = sum(coll_bytes.values())
+
+    flops_dev = float(static["flops"])
+    flops_body_once = float(ca.get("flops", 0.0))
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    kind = S.SHAPES[shape_name]["kind"]
+    B, seq = S.SHAPES[shape_name]["batch"], S.SHAPES[shape_name]["seq"]
+    defs = model.defs()
+    n_params = count_params(defs)
+    n_active = count_active_params(cfg, defs)
+    if kind == "train":
+        tokens = B * seq
+        model_flops_total = 6.0 * n_active * tokens
+    elif kind == "prefill":
+        tokens = B * seq
+        model_flops_total = 2.0 * n_active * tokens
+    else:
+        tokens = B  # one token per sequence
+        model_flops_total = 2.0 * n_active * tokens
+    model_flops_dev = model_flops_total / n_dev
+
+    compute_s = flops_dev / PEAK_FLOPS
+    # Two memory models: the raw HLO bytes-accessed (CPU-backend fusion makes
+    # this a loose UPPER bound for TPU) and a resident-traffic LOWER bound
+    # (every resident byte — args, temps, outputs — touched once per step).
+    # The roofline uses the resident-traffic term; both are recorded.
+    memory_s_hlo = bytes_dev / HBM_BW
+    resident = mem.argument_size_in_bytes + mem.temp_size_in_bytes + mem.output_size_in_bytes
+    memory_s = resident / HBM_BW
+    collective_s = total_coll / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "kind": kind,
+        "compile_s": t_compile,
+        "params": n_params,
+        "active_params": n_active,
+        "memory": {
+            "argument_bytes_per_dev": mem.argument_size_in_bytes,
+            "output_bytes_per_dev": mem.output_size_in_bytes,
+            "temp_bytes_per_dev": mem.temp_size_in_bytes,
+            "alias_bytes_per_dev": mem.alias_size_in_bytes,
+            "peak_est_bytes_per_dev": mem.argument_size_in_bytes + mem.temp_size_in_bytes,
+        },
+        "cost": {
+            "flops_per_dev": flops_dev,
+            "flops_cost_analysis_body_once": flops_body_once,
+            "bytes_per_dev_hlo": bytes_dev,
+        },
+        "collectives": {"bytes_per_dev": coll_bytes, "count": coll_count, "total_bytes_per_dev": total_coll},
+        "roofline": {
+            **terms,
+            "memory_s_hlo_upper": memory_s_hlo,
+            "dominant": dominant,
+            "model_flops_per_dev": model_flops_dev,
+            "useful_flops_ratio": (model_flops_dev / flops_dev) if flops_dev else 0.0,
+            "roofline_fraction": (model_flops_dev / PEAK_FLOPS) / max(terms.values())
+            if max(terms.values()) > 0
+            else 0.0,
+        },
+    }
+    return rec
+
+
+def run_cell(arch, shape_name, multi_pod, outdir, force=False,
+             fsdp=False, unroll_decode=False, accum=1, tag=""):
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    out = outdir / f"{arch.replace('/', '_')}_{shape_name}_{mesh_tag}{tag}.json"
+    if out.exists() and not force:
+        print(f"[skip-cached] {arch} {shape_name} {mesh_tag}")
+        return json.loads(out.read_text())
+    cfg = configs.get(arch)
+    ok, why = S.cell_is_applicable(cfg, shape_name)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag, "skipped": why}
+        out.write_text(json.dumps(rec, indent=2))
+        print(f"[skip] {arch} {shape_name}: {why}")
+        return rec
+    t0 = time.time()
+    try:
+        cfg, model, lowered, compiled, mesh = lower_cell(
+            arch, shape_name, multi_pod, fsdp=fsdp,
+            unroll_decode=unroll_decode, accum=accum)
+    except Exception as e:
+        traceback.print_exc()
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag, "error": f"{type(e).__name__}: {e}"}
+        out.write_text(json.dumps(rec, indent=2))
+        return rec
+    t_compile = time.time() - t0
+    rec = analyse(arch, shape_name, multi_pod, cfg, model, lowered, compiled, mesh, t_compile)
+    out.write_text(json.dumps(rec, indent=2))
+    mem = rec["memory"]["peak_est_bytes_per_dev"] / 2**30
+    r = rec["roofline"]
+    print(
+        f"[ok] {arch:20s} {shape_name:12s} {mesh_tag:8s} compile={t_compile:6.1f}s "
+        f"peak={mem:6.2f}GiB/dev flops/dev={rec['cost']['flops_per_dev']:.3e} "
+        f"coll={rec['collectives']['total_bytes_per_dev']/2**20:8.1f}MiB "
+        f"dom={r['dominant']} frac={r['roofline_fraction']:.3f}"
+    )
+    sys.stdout.flush()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(S.SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--unroll-decode", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    args = ap.parse_args()
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    archs = configs.ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(S.SHAPES) if (args.all or args.shape is None) else [args.shape]
+    for a in archs:
+        for sh in shapes:
+            cells.append((a, sh))
+    for a, sh in cells:
+        run_cell(a, sh, args.multi_pod, outdir, force=args.force,
+                 fsdp=args.fsdp, unroll_decode=args.unroll_decode,
+                 accum=args.accum, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Static analysis of compiled HLO text: loop-aware FLOP and collective-byte
+accounting.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so models driven by
+``lax.scan`` over layers (everything here — that is what keeps 62-layer
+compiles tractable) would be undercounted by ~n_layers.  XLA annotates loops
+with ``known_trip_count``, so we recover exact totals by walking the call
+graph:
+
+    total(comp) = local(comp) + sum_child multiplier(child) * total(child)
+
+where multiplier is the trip count for while bodies (1 for conditions,
+fusions, calls; conditionals take the max across branches).
+
+local FLOPs = 2 * prod(result_dims) * prod(contracting_dims) per ``dot``
+(matmul-dominated models; elementwise FLOPs are deliberately excluded and the
+omission is documented in EXPERIMENTS.md).  Collective bytes = result-shape
+bytes per all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_SHAPE_TOK = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|s4|u4|pred|c64|c128)\[([\d,]*)\]")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED = re.compile(r"(?:calls=|to_apply=|body=|condition=|branch_computations=\{)([^,)}]+(?:,\s*%[\w\.\-]+)*)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOK.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> List[int]:
+    m = _SHAPE_TOK.search(text)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.flops = 0.0
+        self.coll_bytes: Dict[str, float] = {}
+        self.coll_count: Dict[str, float] = {}
+        # (child_name, multiplier, is_branch)
+        self.children: List[Tuple[str, float]] = []
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    shapes: Dict[str, str] = {}
+    entry_name = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m and line.strip().endswith("{"):
+                cur = Computation(m.group(1))
+                if line.strip().startswith("ENTRY"):
+                    entry_name = m.group(1)
+                shapes = {}
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # record result shape text (up to the opcode) for operand lookup
+        shapes[name] = rhs.split(" ", 1)[0] if "[" in rhs.split(" ", 1)[0] else rhs
+        # --- dot flops -------------------------------------------------
+        dm = re.search(r"\bdot\(%?([\w\.\-]+)", rhs)
+        if dm:
+            res_dims = _shape_dims(rhs.split("dot(")[0])
+            lhs_name = dm.group(1)
+            lhs_text = shapes.get(lhs_name, "")
+            lhs_dims = _shape_dims(lhs_text)
+            cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+            k = 1
+            if cdims and lhs_dims:
+                for ci in cdims.group(1).split(","):
+                    if ci:
+                        ci = int(ci)
+                        if ci < len(lhs_dims):
+                            k *= lhs_dims[ci]
+            n_res = 1
+            for d in res_dims:
+                n_res *= d
+            cur.flops += 2.0 * n_res * k
+        # --- collectives ----------------------------------------------
+        for kind in COLLECTIVES:
+            if re.search(rf"\b{kind}(?:-start)?\(", rhs):
+                pre = rhs.split(kind)[0]
+                cur.coll_bytes[kind] = cur.coll_bytes.get(kind, 0.0) + _shape_bytes(pre)
+                cur.coll_count[kind] = cur.coll_count.get(kind, 0.0) + 1
+                break
+        # --- children ---------------------------------------------------
+        if "while(" in rhs:
+            tm = _TRIP.search(rhs)
+            trip = float(tm.group(1)) if tm else 1.0
+            bm = re.search(r"body=%?([\w\.\-]+)", rhs)
+            cm = re.search(r"condition=%?([\w\.\-]+)", rhs)
+            if bm:
+                cur.children.append((bm.group(1), trip))
+            if cm:
+                cur.children.append((cm.group(1), trip))
+        else:
+            for attr in ("calls", "to_apply"):
+                am = re.search(rf"{attr}=%?([\w\.\-]+)", rhs)
+                if am:
+                    cur.children.append((am.group(1), 1.0))
+            bm = re.search(r"branch_computations=\{([^}]*)\}", rhs)
+            if bm:
+                for b in bm.group(1).split(","):
+                    cur.children.append((b.strip().lstrip("%"), 1.0))
+    comps["__entry__"] = comps.get(entry_name, Computation("__missing__"))
+    comps["__entry_name__"] = entry_name  # type: ignore
+    return comps
+
+
+def analyse_hlo(hlo: str):
+    comps = parse_module(hlo)
+    entry = comps.pop("__entry_name__", None)
+    comps.pop("__entry__", None)
+    memo: Dict[str, Tuple[float, Dict[str, float], Dict[str, float]]] = {}
+
+    def total(name: str, stack=()):
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return 0.0, {}, {}
+        c = comps[name]
+        f = c.flops
+        cb = dict(c.coll_bytes)
+        cc = dict(c.coll_count)
+        for child, mult in c.children:
+            cf, ccb, ccc = total(child, stack + (name,))
+            f += mult * cf
+            for k, v in ccb.items():
+                cb[k] = cb.get(k, 0.0) + mult * v
+            for k, v in ccc.items():
+                cc[k] = cc.get(k, 0.0) + mult * v
+        memo[name] = (f, cb, cc)
+        return memo[name]
+
+    if entry is None:
+        return {"flops": 0.0, "coll_bytes": {}, "coll_count": {}}
+    f, cb, cc = total(entry)
+    return {"flops": f, "coll_bytes": cb, "coll_count": cc}

@@ -1,0 +1,36 @@
+"""Production mesh definitions.
+
+A TPU v5e pod slice of 256 chips is modelled as a (data=16, model=16) mesh;
+the two-pod production job adds a leading "pod" axis: (2, 16, 16).  Data
+parallelism (and FSDP param sharding) runs over ("pod", "data"); tensor /
+expert parallelism over "model".  Functions, not module constants — importing
+this module never touches jax device state.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    """The batch-carrying axes of a mesh (everything except 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    n = len(jax.devices())
+    data = min(data, n // model) or 1
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

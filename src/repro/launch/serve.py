@@ -1,0 +1,71 @@
+"""Serving CLI: load a preprocessing bundle + backbone, serve batched
+requests through the MicroBatcher (the paper's production deployment shape).
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 200
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.apps.ltr_pipeline import build_ltr_pipeline
+from repro.data import ltr_rows
+from repro.serve import FusedModel
+from repro.serve.batcher import MicroBatcher
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    args = ap.parse_args(argv)
+
+    train = ltr_rows(512, seed=0)
+    fitted, feats = build_ltr_pipeline(train)
+    rng = np.random.default_rng(0)
+    params = {
+        "w1": jnp.asarray(rng.normal(0, 0.1, (len(feats), 64)), jnp.float32),
+        "w2": jnp.asarray(rng.normal(0, 0.1, (64, 1)), jnp.float32),
+    }
+
+    def head(params, f):
+        import jax
+
+        x = jnp.stack([f[c].astype(jnp.float32) for c in feats], axis=-1)
+        h = jax.nn.relu(jnp.einsum("qlf,fh->qlh", x, params["w1"]))
+        return jnp.einsum("qlh,ho->qlo", h, params["w2"])[..., 0]
+
+    fm = FusedModel(fitted.export(outputs=feats), head, params)
+    batcher = MicroBatcher(fm, max_batch=args.max_batch, max_wait_ms=args.max_wait_ms)
+
+    pool = ltr_rows(max(args.requests, 2), seed=3)
+    pool.pop("label_click")
+    lat = []
+    t0 = time.perf_counter()
+    import concurrent.futures as cf
+
+    def one(i):
+        req = {k: np.asarray(v[i]) for k, v in pool.items()}
+        t = time.perf_counter()
+        out = batcher.submit(req)
+        lat.append(time.perf_counter() - t)
+        return out
+
+    with cf.ThreadPoolExecutor(max_workers=16) as ex:
+        list(ex.map(one, range(args.requests)))
+    dt = time.perf_counter() - t0
+    lat.sort()
+    print(
+        f"[serve] {args.requests} req in {dt:.2f}s ({args.requests/dt:.0f} rps) "
+        f"p50={lat[len(lat)//2]*1e3:.1f}ms p99={lat[int(len(lat)*0.99)]*1e3:.1f}ms "
+        f"batches={batcher.batches_run} avg_batch={batcher.rows_served/max(batcher.batches_run,1):.1f}"
+    )
+    batcher.close()
+
+
+if __name__ == "__main__":
+    main()

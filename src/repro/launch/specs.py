@@ -1,0 +1,135 @@
+"""Input/state specs per (architecture x input shape) cell.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins for
+every model input — shardable, zero allocation — exactly what
+``jax.jit(...).lower()`` needs for the dry-run.  Shapes follow the assignment
+table:
+
+    train_4k     seq 4096,   global_batch 256   (train_step)
+    prefill_32k  seq 32768,  global_batch 32    (serve prefill forward)
+    decode_32k   one token,  KV ctx 32768, global_batch 128 (serve_step)
+    long_500k    one token,  ctx 524288, global_batch 1     (sub-quadratic only)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+SHAPES: Dict[str, Dict[str, int]] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# full-attention archs skip long_500k (O(n^2) at 524k is not deployable);
+# see DESIGN.md §Arch-applicability.
+LONG_CONTEXT_FAMILIES = ("rglru", "mamba2")
+
+
+def cell_is_applicable(cfg, shape_name: str) -> Tuple[bool, str]:
+    if shape_name == "long_500k" and cfg.family not in LONG_CONTEXT_FAMILIES:
+        return False, "full quadratic attention at 524k context — documented skip"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg, shape_name: str) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the model inputs of one cell."""
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    kind = sh["kind"]
+    if kind == "train":
+        specs = {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+        if cfg.family == "whisper":
+            specs["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = _sds((B, cfg.num_patches, cfg.d_model), jnp.float32)
+        return specs
+    if kind == "prefill":
+        specs = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "whisper":
+            specs["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = _sds((B, cfg.num_patches, cfg.d_model), jnp.float32)
+        return specs
+    # decode: one new token against a primed cache of S tokens
+    return {"tokens": _sds((B, 1), jnp.int32)}
+
+
+def batch_pspec(mesh) -> P:
+    from .mesh import data_axes
+
+    return P(data_axes(mesh))
+
+
+def input_pspecs(cfg, shape_name: str, mesh) -> Dict[str, P]:
+    b = batch_pspec(mesh)
+    specs = input_specs(cfg, shape_name)
+    out = {}
+    for k, v in specs.items():
+        out[k] = P(b[0], *([None] * (len(v.shape) - 1)))
+    return out
+
+
+def cache_abstract(model, cfg, shape_name: str):
+    sh = SHAPES[shape_name]
+    return jax.eval_shape(lambda: model.init_cache(sh["batch"], sh["seq"]))
+
+
+def cache_pspecs(cache_tree, mesh) -> Any:
+    """PartitionSpecs for a (layer-stacked) decode cache, by leaf name/rank.
+
+    batch axis -> data axes; head/state/feature axes -> "model"."""
+    from .mesh import data_axes
+
+    b = data_axes(mesh)
+
+    def spec(path, leaf):
+        key = None
+        for entry in reversed(path):
+            k = getattr(entry, "key", None)
+            if isinstance(k, str):
+                key = k
+                break
+        nd = len(leaf.shape)
+        in_cross = any(getattr(e, "key", None) == "cross" for e in path)
+        if key == "pos" or nd <= 1:
+            return P()
+        if key in ("k", "v"):
+            if in_cross:  # (L, B, T_enc, H, hd): enc_seq rarely divides -> heads
+                return P(None, b, None, "model", None)
+            # self KV (L, B, W, KV, hd).  Prefer HEAD sharding when the KV
+            # head count fills the TP axis: the rolling/append
+            # dynamic-update-slice then stays shard-local (§Perf change #3 —
+            # a dynamic index on a sharded dim forces GSPMD full
+            # rematerialisation).  Otherwise SEQUENCE-shard (flash-decode
+            # style): softmax/contract over the sharded axis reduce to tiny
+            # per-head all-reduces, at the cost of the DUS gather.
+            tp = mesh.shape.get("model", 1)
+            if len(leaf.shape) == 5 and leaf.shape[3] % tp == 0:
+                return P(None, b, None, "model", None)
+            return P(None, b, "model", None, None)
+        if key == "c":  # MLA latent (L, B, S, kr): seq-sharded
+            return P(None, b, "model", None)
+        if key == "k_rope":  # (L, B, S, dr): seq-sharded
+            return P(None, b, "model", None)
+        if key == "state":  # mamba (L, B, H, N, P)
+            return P(None, b, "model", None, None)
+        if key == "conv":  # (L, B, K, C)
+            return P(None, b, None, "model")
+        if key == "h":  # rg-lru (L, B, R)
+            return P(None, b, "model")
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)

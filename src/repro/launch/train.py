@@ -1,0 +1,133 @@
+"""Training CLI: mesh setup, synthetic data, checkpoint/restart, heartbeat,
+straggler stats.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-780m --smoke \
+        --steps 50 --batch 8 --seq 256 --ckpt-dir /tmp/ck --ckpt-every 20
+
+Designed so the FT supervisor can kill it at any step and a relaunch resumes
+from the newest committed checkpoint.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.ckpt import CheckpointManager
+from repro.ckpt.checkpoint import latest_step
+from repro.data import lm_token_batches
+from repro.ft import Heartbeat, StragglerMonitor
+from repro.launch import mesh as meshlib
+from repro.models import common as C
+from repro.models import registry
+from repro.train import AdamWConfig, make_train_step
+from repro.train.step import train_state_init, train_state_pspecs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--data-mesh", type=int, default=1)
+    ap.add_argument("--model-mesh", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--heartbeat", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--crash-at-step", type=int, default=None,
+                    help="failure injection (FT tests)")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    model = registry.build(cfg)
+
+    mesh = meshlib.make_host_mesh(args.data_mesh, args.model_mesh)
+    C.set_batch_axes(meshlib.data_axes(mesh))
+
+    ocfg = AdamWConfig(lr=args.lr, warmup_steps=args.warmup, total_steps=args.steps)
+    step_fn = make_train_step(model, ocfg, accum=args.accum)
+
+    state = train_state_init(model, args.seed)
+    start_step = 0
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if ckpt is not None and latest_step(args.ckpt_dir) is not None:
+        state = ckpt.restore_latest(state)
+        start_step = int(np.asarray(state["opt"]["step"]))
+        print(f"[train] resumed from checkpoint at step {start_step}", flush=True)
+
+    hb = Heartbeat(args.heartbeat) if args.heartbeat else None
+    mon = StragglerMonitor()
+    jitted = jax.jit(step_fn, donate_argnums=(0,))
+
+    data = lm_token_batches(args.batch, args.seq, cfg.vocab, args.steps * 2, seed=args.seed)
+    losses = []
+    with jax.set_mesh(mesh):
+        for i, batch in enumerate(data):
+            step_i = start_step + i
+            if step_i >= args.steps:
+                break
+            if cfg.family == "whisper":
+                batch = dict(batch)
+                rng = np.random.default_rng(step_i)
+                batch["frames"] = jnp.asarray(
+                    rng.normal(0, 1, (args.batch, cfg.enc_seq, cfg.d_model)), jnp.float32
+                )
+            if cfg.family == "vlm":
+                batch = dict(batch)
+                rng = np.random.default_rng(step_i)
+                batch["patch_embeds"] = jnp.asarray(
+                    rng.normal(0, 1, (args.batch, cfg.num_patches, cfg.d_model)), jnp.float32
+                )
+            mon.step_start()
+            state, metrics = jitted(state, batch)
+            loss = float(metrics["loss"])
+            mon.step_end()
+            losses.append(loss)
+            if hb:
+                hb.beat(step_i, loss=loss)
+            if args.crash_at_step is not None and step_i == args.crash_at_step:
+                # failure injection: crash once per sentinel (so the restarted
+                # process makes progress, as a replaced node would)
+                import os
+
+                sentinel = os.environ.get("CRASH_SENTINEL")
+                if sentinel and not os.path.exists(sentinel):
+                    open(sentinel, "w").write("crashed")
+                    print(f"[train] injected crash at step {step_i}", flush=True)
+                    os._exit(42)
+            if ckpt is not None and (step_i + 1) % args.ckpt_every == 0:
+                ckpt.save_async(step_i + 1, state)
+            if step_i % args.log_every == 0:
+                print(
+                    f"[train] step={step_i} loss={loss:.4f} "
+                    f"lr={float(metrics['lr']):.2e} gnorm={float(metrics['grad_norm']):.3f}",
+                    flush=True,
+                )
+    if ckpt is not None:
+        ckpt.wait()
+        ckpt.save_async(start_step + len(losses), state)
+        ckpt.wait()
+    print(
+        f"[train] done: {len(losses)} steps, loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+        f"straggler={mon.summary()['median']:.3f}s/step",
+        flush=True,
+    )
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model zoo: the ten assigned architectures as composable JAX modules.
+
+Families: dense GQA decoders (codeqwen/stablelm/deepseek-coder/qwen2.5),
+MLA + fine-grained MoE (deepseek-v2), fine-grained MoE (deepseek-moe),
+VLM backbone (pixtral), encoder-decoder (whisper), RG-LRU hybrid
+(recurrentgemma) and SSD state-space (mamba2).
+"""
+from . import common, registry
+
+__all__ = ["common", "registry"]

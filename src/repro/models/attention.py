@@ -1,0 +1,302 @@
+"""Attention blocks: GQA (optionally banded/local, optional QKV bias),
+cross-attention (enc-dec) and DeepSeek-V2 MLA (multi-head latent attention).
+
+Two execution paths share one math definition:
+  * training/prefill: full-sequence attention — jnp einsum reference, or the
+    Pallas flash kernel (``repro.kernels.flash_attention``) when
+    ``cfg.use_pallas`` (TPU target);
+  * decode: single-token attention against a KV cache.  GQA caches (k, v);
+    windowed attention uses a ROLLING cache (window-sized, O(W) memory at
+    524k context); MLA caches the compressed latent + shared rope key and
+    uses the absorbed-weight formulation (the paper-faithful inference path).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+from .common import ParamDef as PD
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_defs(cfg) -> C.Defs:
+    """QKV/O weights stored with MERGED (heads*head_dim) axes so the TP axis
+    always divides (56 or 40 heads x 128 = multiples of 16); the per-head
+    split happens post-matmul where GSPMD pads as needed."""
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": PD((D, H * hd), ("embed", "heads")),
+        "wk": PD((D, KV * hd), ("embed", "kv_heads")),
+        "wv": PD((D, KV * hd), ("embed", "kv_heads")),
+        "wo": PD((H * hd, D), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = PD((H * hd,), ("heads",), init="zeros")
+        defs["bk"] = PD((KV * hd,), ("kv_heads",), init="zeros")
+        defs["bv"] = PD((KV * hd,), ("kv_heads",), init="zeros")
+    return defs
+
+
+def _qkv(p, x, cfg):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = C.dense(x, p["wq"], p.get("bq") if cfg.qkv_bias else None)
+    k = C.dense(x, p["wk"], p.get("bk") if cfg.qkv_bias else None)
+    v = C.dense(x, p["wv"], p.get("bv") if cfg.qkv_bias else None)
+    return (
+        q.reshape(B, S, H, hd),
+        k.reshape(B, S, KV, hd),
+        v.reshape(B, S, KV, hd),
+    )
+
+
+def _sdpa(q, k, v, mask, scale) -> jax.Array:
+    """Grouped scaled-dot-product attention, fp32 softmax.
+
+    q: (B,S,H,hd), k/v: (B,T,KV,hd); H = KV * G.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(B, S, H, hd)
+
+
+def gqa_attention(
+    p: C.Params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Full-sequence (training / prefill) GQA."""
+    q, k, v = _qkv(p, x, cfg)
+    rd = int(cfg.head_dim * cfg.rotary_pct) or None
+    q = C.rope(q, positions, cfg.rope_theta, rotary_dim=rd)
+    k = C.rope(k, positions, cfg.rope_theta, rotary_dim=rd)
+    S = x.shape[1]
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention import ops as fops
+
+        out = fops.flash_attention(q, k, v, causal=True, window=window, scale=scale)
+    elif S > 1024:
+        # memory-bounded chunked attention (O(S) residency) — required for
+        # the 4k train / 32k prefill shapes
+        from . import flash as F
+
+        out = F.flash_attention(q, k, v, scale, causal=True, window=window)
+    else:
+        mask = C.causal_mask(S, S, window=window)[None, None, None]
+        out = _sdpa(q, k, v, mask, scale)
+    B, S = x.shape[:2]
+    return C.dense(out.reshape(B, S, -1), p["wo"])
+
+
+def gqa_cache_init(cfg, batch: int, max_len: int, dtype, window: Optional[int] = None):
+    W = min(window, max_len) if window else max_len
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, W, KV, hd), dtype),
+        "v": jnp.zeros((batch, W, KV, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def gqa_decode(
+    p: C.Params,
+    x: jax.Array,  # (B, 1, D)
+    cache: Dict[str, jax.Array],
+    cfg,
+    window: Optional[int] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode with (rolling, if windowed) KV cache."""
+    pos = cache["pos"]
+    positions = pos[None, None] * jnp.ones((x.shape[0], 1), jnp.int32)
+    q, k, v = _qkv(p, x, cfg)
+    rd = int(cfg.head_dim * cfg.rotary_pct) or None
+    q = C.rope(q, positions, cfg.rope_theta, rotary_dim=rd)
+    k = C.rope(k, positions, cfg.rope_theta, rotary_dim=rd)
+    W = cache["k"].shape[1]
+    # rolling insert (windowed) or append (full)
+    ins = (pos % W) if window else pos
+    zero = jnp.zeros((), jnp.int32)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (zero, ins, zero, zero))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (zero, ins, zero, zero))
+
+    kv_pos = jnp.arange(W)
+    if window:
+        # slot s holds the latest position p <= pos with p % W == s; a slot is
+        # valid once that position has actually been written (p >= 0) — it is
+        # automatically within the window since only one p fits (pos-W, pos].
+        entry_pos = pos - (pos - kv_pos) % W
+        valid = entry_pos >= 0
+    else:
+        valid = kv_pos <= pos
+    mask = valid[None, None, None, None, :]  # (1,1,1,1,W) over (b,kv,g,s,t)
+
+    if cfg.use_pallas:
+        from repro.kernels.decode_attention import ops as dops
+
+        out = dops.decode_attention(q, ck, cv, valid, 1.0 / math.sqrt(cfg.head_dim))
+    else:
+        out = _sdpa(q, ck, cv, mask, 1.0 / math.sqrt(cfg.head_dim))
+    B = x.shape[0]
+    y = C.dense(out.reshape(B, 1, -1), p["wo"])
+    return y, {"k": ck, "v": cv, "pos": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+def cross_defs(cfg) -> C.Defs:
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "wq": PD((D, H * hd), ("embed", "heads")),
+        "wk": PD((D, H * hd), ("embed", "heads")),
+        "wv": PD((D, H * hd), ("embed", "heads")),
+        "wo": PD((H * hd, D), ("heads", "embed")),
+    }
+
+
+def cross_attention(p, x, enc: jax.Array, cfg) -> jax.Array:
+    B, S, _ = x.shape
+    T = enc.shape[1]
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = C.dense(x, p["wq"]).reshape(B, S, H, hd)
+    k = C.dense(enc, p["wk"]).reshape(B, T, H, hd)
+    v = C.dense(enc, p["wv"]).reshape(B, T, H, hd)
+    mask = jnp.ones((1, 1, 1, S, T), bool)
+    out = _sdpa(q, k, v, mask, 1.0 / math.sqrt(cfg.head_dim))
+    return C.dense(out.reshape(B, S, -1), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek-V2 MLA
+# ---------------------------------------------------------------------------
+
+def mla_defs(cfg) -> C.Defs:
+    D, H = cfg.d_model, cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": PD((D, qr), ("embed", None)),
+        "q_norm": PD((qr,), (None,), init="ones"),
+        "wq_b": PD((qr, H * (dn + dr)), (None, "heads")),
+        "wkv_a": PD((D, kr + dr), ("embed", None)),
+        "kv_norm": PD((kr,), (None,), init="ones"),
+        "wk_b": PD((kr, H * dn), (None, "heads")),
+        "wv_b": PD((kr, H * dv), (None, "heads")),
+        "wo": PD((H * dv, D), ("heads", "embed")),
+    }
+
+
+def _mla_q(p, x, positions, cfg):
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    B, S, _ = x.shape
+    q_lat = C.rms_norm(C.dense(x, p["wq_a"]), p["q_norm"])
+    # §Perf: down-project on the SEQ-SHARDED stream, then gather the narrow
+    # latent (q_lora ≪ d_model) instead of letting SPMD gather x itself —
+    # 3.3x fewer bytes on the dominant MLA activation all-gather.
+    q_lat = C.constrain(q_lat, "batch", None, None)
+    q = C.dense(q_lat, p["wq_b"]).reshape(B, S, cfg.n_heads, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = C.rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, positions, cfg):
+    kr, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    ckv = C.dense(x, p["wkv_a"])  # (B,S,kr+dr)
+    ckv = C.constrain(ckv, "batch", None, None)  # gather 576-dim, not 5120-dim
+    c, k_rope = ckv[..., :kr], ckv[..., kr:]
+    c = C.rms_norm(c, p["kv_norm"])
+    k_rope = C.rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    return c, k_rope
+
+
+def mla_attention(p, x, positions, cfg) -> jax.Array:
+    """Training/prefill MLA (materialised per-head keys/values).
+
+    Long sequences route through chunked flash attention by merging the
+    (nope | rope) key parts into one 192-wide qk head — KV=H, G=1."""
+    dn, dv = cfg.qk_nope_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)
+    c, k_rope = _mla_latent(p, x, positions, cfg)
+    B, S, _ = x.shape
+    k_nope = C.dense(c, p["wk_b"]).reshape(B, S, cfg.n_heads, dn)
+    v = C.dense(c, p["wv_b"]).reshape(B, S, cfg.n_heads, dv)
+    if S > 1024:
+        from . import flash as F
+
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        H = q.shape[2]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], k_nope.shape[:3] + (cfg.qk_rope_dim,))],
+            axis=-1,
+        )
+        out = F.flash_attention(q, k, v, scale, causal=True)
+    else:
+        mask = C.causal_mask(S, S)[None, None]
+        scores = (
+            jnp.einsum("bshk,bthk->bhst", q_nope, k_nope)
+            + jnp.einsum("bshk,btk->bhst", q_rope, k_rope)
+        ).astype(jnp.float32) * scale
+        scores = jnp.where(mask, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhst,bthk->bshk", w, v)
+    return C.dense(out.reshape(B, S, -1), p["wo"])
+
+
+def mla_cache_init(cfg, batch: int, max_len: int, dtype):
+    return {
+        "c": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_decode(p, x, cache, cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Absorbed-weight MLA decode: attention runs in the compressed latent
+    space; the cache is (kv_lora + rope) wide — 576 floats/token for V2,
+    ~14x smaller than materialised GQA-128 KV. This is the inference
+    efficiency the architecture was designed for."""
+    pos = cache["pos"]
+    positions = pos[None, None] * jnp.ones((x.shape[0], 1), jnp.int32)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)  # (B,1,H,dn),(B,1,H,dr)
+    c_new, kr_new = _mla_latent(p, x, positions, cfg)
+    zero = jnp.zeros((), jnp.int32)
+    c = jax.lax.dynamic_update_slice(cache["c"], c_new, (zero, pos, zero))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], kr_new, (zero, pos, zero))
+
+    # absorb W^K_b into the query: q_lat = q_nope @ W^K_b  -> latent space
+    H, dn, dv, kr = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    B = x.shape[0]
+    wk_b = p["wk_b"].astype(x.dtype).reshape(kr, H, dn)
+    wv_b = p["wv_b"].astype(x.dtype).reshape(kr, H, dv)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wk_b)
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_lat, c)
+        + jnp.einsum("bshk,btk->bhst", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    valid = (jnp.arange(c.shape[1]) <= pos)[None, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out_lat = jnp.einsum("bhst,btr->bshr", w, c)  # (B,1,H,kr)
+    out = jnp.einsum("bshr,rhk->bshk", out_lat, wv_b)
+    y = C.dense(out.reshape(B, 1, -1), p["wo"])
+    return y, {"c": c, "k_rope": k_rope, "pos": pos + 1}

@@ -1,0 +1,240 @@
+"""Shared model substrate: parameter definitions with logical sharding axes,
+norms, rotary embeddings, embedding tables and dtype policy.
+
+Parameters live in a FLAT dict ``{"path/to/param": array}`` (a valid pytree).
+Each model declares :class:`ParamDef`s carrying *logical* axis names
+("embed", "heads", "mlp", "vocab", "expert", "layer", ...); mesh rules map
+logical axes to mesh axes, giving every param a PartitionSpec.  This is the
+MaxText-style logical-axis pattern, chosen so one model definition serves the
+single-CPU tests, the 16x16 pod and the 2x16x16 multi-pod mesh unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Dict[str, jax.Array]
+
+# logical axis -> mesh axis (None = replicated).  "embed"-like axes use the
+# data axis as an FSDP axis; head/mlp/vocab/expert axes are tensor-parallel.
+DEFAULT_RULES: Dict[str, Any] = {
+    "embed": "data",     # FSDP
+    "heads": "model",    # TP
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",   # EP
+    "expert_mlp": None,
+    "conv": None,
+    "state": "model",
+    "layer": None,       # scan axis, never sharded
+    None: None,
+}
+
+
+# activation logical axes (mutable: the launcher widens "batch" to
+# ("pod","data") on the multi-pod mesh)
+ACT_RULES: Dict[str, Any] = {"batch": ("data",), "act_model": "model"}
+
+
+def set_batch_axes(axes) -> None:
+    ACT_RULES["batch"] = tuple(axes) if not isinstance(axes, str) else (axes,)
+
+
+def constrain(x: jax.Array, *logical: Any) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op outside a mesh."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or not mesh.axis_names:
+        return x
+    spec = []
+    for a in logical:
+        r = ACT_RULES.get(a, DEFAULT_RULES.get(a, None)) if isinstance(a, str) else a
+        spec.append(r)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis name per dim
+    init: str = "normal"  # normal | zeros | ones | embed | truncated_fan_in
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Defs = Dict[str, ParamDef]
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    # weights are stored (in_dim..., out_dim); fan-in = prod of all but last
+    return max(int(jnp.prod(jnp.asarray(shape[:-1]))), 1) if len(shape) > 1 else shape[0]
+
+
+def init_params(defs: Defs, seed: int = 0) -> Params:
+    """Deterministic per-param init: rng folded from the param path hash."""
+    out: Params = {}
+    root = jax.random.PRNGKey(seed)
+    for path in sorted(defs):
+        d = defs[path]
+        key = jax.random.fold_in(root, hash(path) & 0x7FFFFFFF)
+        if d.init == "zeros":
+            v = jnp.zeros(d.shape, d.dtype)
+        elif d.init == "ones":
+            v = jnp.ones(d.shape, d.dtype)
+        elif d.init == "embed":
+            v = jax.random.normal(key, d.shape, d.dtype) * (d.scale or 1.0)
+        else:  # fan-in scaled normal
+            std = d.scale / math.sqrt(_fan_in(d.shape))
+            v = jax.random.normal(key, d.shape, d.dtype) * std
+        out[path] = v
+    return out
+
+
+def abstract_params(defs: Defs) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins — used by the dry-run (no allocation)."""
+    return {p: jax.ShapeDtypeStruct(d.shape, d.dtype) for p, d in defs.items()}
+
+
+def param_pspecs(defs: Defs, rules: Optional[Dict[str, Any]] = None) -> Dict[str, P]:
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    out = {}
+    for path, d in defs.items():
+        out[path] = P(*[rules.get(a, None) for a in d.axes])
+    return out
+
+
+def legalize_pspec(shape, spec: P, mesh) -> P:
+    """Drop sharding on dims the mesh axes don't divide (jit in_shardings
+    require divisibility; inside the graph WSC re-applies padded sharding)."""
+    sizes = dict(mesh.shape)
+    out = []
+    for i, ax in enumerate(tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        out.append(ax if shape[i] % n == 0 else None)
+    return P(*out)
+
+
+def legalize_tree(abstract_tree, spec_tree, mesh):
+    return jax.tree.map(
+        lambda a, s: legalize_pspec(a.shape, s, mesh), abstract_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def stack_defs(defs: Defs, n: int, prefix: str) -> Defs:
+    """Stack per-layer defs along a leading scan ('layer') axis."""
+    return {
+        f"{prefix}/{p}": ParamDef((n,) + d.shape, ("layer",) + d.axes, d.init, d.scale, d.dtype)
+        for p, d in defs.items()
+    }
+
+
+def subtree(params: Params, prefix: str) -> Params:
+    pre = prefix + "/"
+    return {p[len(pre):]: v for p, v in params.items() if p.startswith(pre)}
+
+
+def layer_slice(stacked: Params) -> Params:
+    """Inside lax.scan: stacked params arrive already sliced (leading axis
+    consumed by scan); identity helper for readability."""
+    return stacked
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10000.0, rotary_dim: Optional[int] = None
+) -> jax.Array:
+    """Rotary embedding; x: (..., seq, heads, head_dim), positions: (..., seq)."""
+    hd = x.shape[-1]
+    rd = rotary_dim or hd
+    half = rd // 2
+    freq = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (math.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:rd].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([r1, r2], axis=-1).astype(x.dtype)
+    if rd < hd:
+        out = jnp.concatenate([out, x[..., rd:]], axis=-1)
+    return out
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array, compute_dtype) -> jax.Array:
+    """Vocab-sharded embedding lookup (gather; SPMD turns it into
+    dynamic-slice + all-reduce under a "vocab"->model sharding)."""
+    return table.astype(compute_dtype)[ids]
+
+
+def unembed_logits(x: jax.Array, table: jax.Array, valid_vocab: Optional[int] = None) -> jax.Array:
+    """Tied unembedding: (..., D) x (V, D)^T -> (..., V), fp32 logits.
+    Rows beyond ``valid_vocab`` (vocab padding for TP divisibility) are
+    masked to -inf so they never receive probability mass."""
+    logits = jnp.einsum("...d,vd->...v", x.astype(jnp.float32), table.astype(jnp.float32))
+    V = table.shape[0]
+    if valid_vocab is not None and valid_vocab < V:
+        logits = logits + jnp.where(jnp.arange(V) < valid_vocab, 0.0, -1e30).astype(jnp.float32)
+    return logits
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over all positions; logits fp32 (possibly vocab-sharded)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def dense(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset=0, window: Optional[int] = None) -> jax.Array:
+    """(q_len, kv_len) bool mask; optionally banded for local attention."""
+    q_pos = jnp.arange(q_len) + q_offset
+    k_pos = jnp.arange(kv_len)
+    m = q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m = m & (q_pos[:, None] - k_pos[None, :] < window)
+    return m

@@ -1,0 +1,144 @@
+"""Chunked (flash) attention in pure jnp with a custom VJP.
+
+Memory-bounded attention is a hard requirement for the 32k prefill and 4k
+train cells: materialised (S x T) score tensors at 32k would be terabytes per
+device.  This implementation scans over KV chunks with online-softmax
+accumulation (forward) and a rematerialising two-pass backward (custom_vjp),
+so residency is O(S·d + chunk·S) instead of O(S²).
+
+This is the algorithmic core the Pallas ``flash_attention`` kernel tiles for
+VMEM; the kernel tests assert allclose against this function, and this
+function's tests assert allclose against the naive softmax reference.
+
+Layout: q (B,S,KV,G,hd), k/v (B,T,KV,hd) — grouped GQA form.  ``q_offset``
+supports self-attention where q is a suffix of the kv sequence (prefill
+continuation); ``window`` gives banded/local attention.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # python float: safe under lazy import inside a trace
+
+
+def _chunk_mask(q_pos, k_pos, causal: bool, window: Optional[int], valid_len: int):
+    m = jnp.broadcast_to(k_pos[None, :] < valid_len, (q_pos.shape[0], k_pos.shape[0]))
+    if causal:
+        m = m & (q_pos[:, None] >= k_pos[None, :])
+    if window is not None:
+        m = m & (q_pos[:, None] - k_pos[None, :] < window)
+    return m
+
+
+def _fwd_scan(q, k, v, scale, causal, window, chunk, q_offset, valid_len):
+    B, S, KV, G, hd = q.shape
+    T = k.shape[1]
+    nk = T // chunk
+    qf = q.astype(jnp.float32) * jnp.float32(scale)
+    kc = jnp.moveaxis(k.reshape(B, nk, chunk, KV, k.shape[-1]), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, chunk, KV, v.shape[-1]), 1, 0)
+    q_pos = jnp.arange(S) + q_offset
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, ci = inp
+        k_pos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bskgh,btkh->bskgt", qf, kb.astype(jnp.float32))
+        msk = _chunk_mask(q_pos, k_pos, causal, window, valid_len)[None, :, None, None, :]
+        s = jnp.where(msk, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bskgt,btkh->bskgh", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    hd_v = v.shape[-1]
+    init = (
+        jnp.full((B, S, KV, G), NEG_INF, jnp.float32),
+        jnp.zeros((B, S, KV, G), jnp.float32),
+        jnp.zeros((B, S, KV, G, hd_v), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(body, init, (kc, vc, jnp.arange(nk)))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe[..., None]
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention_grouped(q, k, v, scale, causal=True, window=None, chunk=256, q_offset=0, valid_len=None):
+    out, _ = _fwd_scan(q, k, v, scale, causal, window, chunk, q_offset, valid_len)
+    return out.astype(q.dtype)
+
+
+def _fwd_rule(q, k, v, scale, causal, window, chunk, q_offset, valid_len):
+    out, lse = _fwd_scan(q, k, v, scale, causal, window, chunk, q_offset, valid_len)
+    return out.astype(q.dtype), (q, k, v, out, lse)
+
+
+def _bwd_rule(scale, causal, window, chunk, q_offset, valid_len, res, do):
+    q, k, v, out, lse = res
+    B, S, KV, G, hd = q.shape
+    T = k.shape[1]
+    nk = T // chunk
+    qf = q.astype(jnp.float32) * jnp.float32(scale)
+    dof = do.astype(jnp.float32)
+    # D = rowsum(dO * O)
+    Dr = jnp.sum(dof * out, axis=-1)  # (B,S,KV,G)
+    kc = jnp.moveaxis(k.reshape(B, nk, chunk, KV, k.shape[-1]), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, nk, chunk, KV, v.shape[-1]), 1, 0)
+    q_pos = jnp.arange(S) + q_offset
+
+    def body(dq, inp):
+        kb, vb, ci = inp
+        k_pos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bskgh,btkh->bskgt", qf, kb.astype(jnp.float32))
+        msk = _chunk_mask(q_pos, k_pos, causal, window, valid_len)[None, :, None, None, :]
+        s = jnp.where(msk, s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])  # (B,S,KV,G,t)
+        dp = jnp.einsum("bskgh,btkh->bskgt", dof, vb.astype(jnp.float32))
+        ds = p * (dp - Dr[..., None])  # (B,S,KV,G,t)
+        dq = dq + jnp.einsum("bskgt,btkh->bskgh", ds, kb.astype(jnp.float32)) * jnp.float32(scale)
+        dkb = jnp.einsum("bskgt,bskgh->btkh", ds, qf)
+        dvb = jnp.einsum("bskgt,bskgh->btkh", p, dof)
+        return dq, (dkb, dvb)
+
+    dq0 = jnp.zeros((B, S, KV, G, hd), jnp.float32)  # hd = qk dim
+    dq, (dk_c, dv_c) = jax.lax.scan(body, dq0, (kc, vc, jnp.arange(nk)))
+    dk = jnp.moveaxis(dk_c, 0, 1).reshape(B, T, KV, k.shape[-1])
+    dv = jnp.moveaxis(dv_c, 0, 1).reshape(B, T, KV, v.shape[-1])
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_grouped.defvjp(_fwd_rule, _bwd_rule)
+
+
+def flash_attention(
+    q: jax.Array,  # (B,S,H,hd)
+    k: jax.Array,  # (B,T,KV,hd)
+    v: jax.Array,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 256,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Ungrouped wrapper: pads T to a chunk multiple, returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    T = k.shape[1]
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qg = q.reshape(B, S, KV, H // KV, hd)
+    out = flash_attention_grouped(qg, k, v, scale, causal, window, chunk, q_offset, T)
+    return out.reshape(B, S, H, v.shape[-1])

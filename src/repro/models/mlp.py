@@ -1,0 +1,281 @@
+"""Feed-forward blocks: SwiGLU / GELU MLPs and fine-grained MoE
+(DeepSeek-style shared + routed experts, top-k softmax gating, sort-based
+capacity dispatch — the TPU-native, static-shape formulation).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+from .common import ParamDef as PD
+
+
+# ---------------------------------------------------------------------------
+# dense MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_defs(cfg, d_ff: Optional[int] = None) -> C.Defs:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "wg": PD((D, F), ("embed", "mlp")),
+        "wu": PD((D, F), ("embed", "mlp")),
+        "wd": PD((F, D), ("mlp", "embed")),
+    }
+
+
+def swiglu(p: C.Params, x: jax.Array) -> jax.Array:
+    g = C.dense(x, p["wg"])
+    u = C.dense(x, p["wu"])
+    return C.dense(jax.nn.silu(g) * u, p["wd"])
+
+
+def gelu_mlp_defs(cfg, d_ff: Optional[int] = None) -> C.Defs:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w1": PD((D, F), ("embed", "mlp")),
+        "b1": PD((F,), ("mlp",), init="zeros"),
+        "w2": PD((F, D), ("mlp", "embed")),
+        "b2": PD((D,), ("embed",), init="zeros"),
+    }
+
+
+def gelu_mlp(p: C.Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(C.dense(x, p["w1"], p["b1"]), approximate=True)
+    return C.dense(h, p["w2"], p["b2"])
+
+
+# ---------------------------------------------------------------------------
+# fine-grained MoE (DeepSeekMoE / DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def moe_defs(cfg) -> C.Defs:
+    D, F, E = cfg.d_model, cfg.moe_d_ff, cfg.n_routed_experts
+    defs = {
+        "router": PD((D, E), ("embed", None), scale=0.1),
+        "wg": PD((E, D, F), ("expert", "embed", "expert_mlp")),
+        "wu": PD((E, D, F), ("expert", "embed", "expert_mlp")),
+        "wd": PD((E, F, D), ("expert", "expert_mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.moe_d_ff * cfg.n_shared_experts
+        defs.update(
+            {
+                "shared/wg": PD((D, Fs), ("embed", "mlp")),
+                "shared/wu": PD((D, Fs), ("embed", "mlp")),
+                "shared/wd": PD((Fs, D), ("mlp", "embed")),
+            }
+        )
+    return defs
+
+
+def moe_block(p: C.Params, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """MoE entry point: picks the shard_map all-to-all path when running
+    under a mesh with a "model" axis (the production EP formulation), else
+    the single-device sort-based path below."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if (
+        getattr(cfg, "moe_shard_map", True)
+        and mesh is not None
+        and not mesh.empty
+        and "model" in mesh.axis_names
+    ):
+        bt = C.ACT_RULES.get("batch", ("data",))
+        ndata = 1
+        for a in bt:
+            ndata *= mesh.shape.get(a, 1)
+        tp = mesh.shape["model"]
+        if x.shape[0] % ndata == 0 and cfg.n_routed_experts % tp == 0:
+            return moe_block_a2a(p, x, cfg, mesh)
+    return moe_block_global(p, x, cfg)
+
+
+def moe_block_global(p: C.Params, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_loss).  Sort-based dispatch:
+
+      tokens -> top-k experts -> argsort(expert id) -> capacity-bounded
+      scatter into an (E, C, D) buffer sharded over the EP axis -> per-expert
+      SwiGLU einsum -> gather back, gate-weighted combine.
+
+    All shapes static; the (tokens->buffer) scatter is where SPMD emits the
+    EP all-to-all.  aux_loss is the standard load-balance loss.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_routed_experts, cfg.moe_top_k
+    F = cfg.moe_d_ff
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (T, K)
+    if cfg.moe_norm_top_k:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)
+    onehot_top = jnp.zeros((T, E), probs.dtype).at[jnp.arange(T)[:, None], gate_idx].set(1.0)
+    fe = jnp.mean(onehot_top, axis=0) / K
+    aux = jnp.sum(me * fe) * E * cfg.moe_aux_coef
+
+    # ---- sort-based dispatch -------------------------------------------
+    C_cap = int(math.ceil(T * K / E * cfg.moe_capacity_factor))
+    flat_e = gate_idx.reshape(-1)  # (T*K,)
+    order = jnp.argsort(flat_e)  # stable
+    sorted_e = flat_e[order]
+    token_of = order // K  # source token per sorted slot
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))  # (E,)
+    pos_in_e = jnp.arange(T * K) - starts[sorted_e]
+    keep = pos_in_e < C_cap
+
+    buf_idx = sorted_e * C_cap + pos_in_e  # (T*K,)
+    buf_idx = jnp.where(keep, buf_idx, E * C_cap)  # dropped
+    buf = jnp.zeros((E * C_cap, D), x.dtype).at[buf_idx].set(xt[token_of], mode="drop")
+    buf = buf.reshape(E, C_cap, D)
+    buf = C.constrain(buf, "expert", None, None)
+
+    # ---- expert computation (einsum over the expert axis) ----------------
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wu"].astype(x.dtype))
+    eo = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["wd"].astype(x.dtype))
+    eo = C.constrain(eo, "expert", None, None)
+
+    # ---- combine -----------------------------------------------------------
+    gathered = eo.reshape(E * C_cap, D)[jnp.clip(buf_idx, 0, E * C_cap - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w_sorted = gate_vals.reshape(-1)[order]  # gate weight per sorted slot
+    contrib = gathered * w_sorted[:, None].astype(x.dtype)
+    out = jnp.zeros((T, D), x.dtype).at[token_of].add(contrib)
+
+    if cfg.n_shared_experts:
+        out = out + swiglu(C.subtree(p, "shared"), xt)
+    return out.reshape(B, S, D), aux.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# EP all-to-all MoE (shard_map): the production formulation
+# ---------------------------------------------------------------------------
+#
+# The pjit/global formulation above leaves dispatch to GSPMD, which lowers the
+# cross-sharding sort+scatter as full rematerialisations (measured: 54 TB/dev
+# of all-reduce on deepseek-v2 train_4k — see EXPERIMENTS.md §Perf).  The
+# fix is the standard expert-parallel schedule, written explicitly:
+#
+#   per device: local top-k -> local sort -> (E, C_loc, D) buffer
+#   all_to_all over the EP ("model") axis      [dispatch]
+#   local expert FFN einsum
+#   all_to_all back                            [combine]
+#   local gate-weighted sum
+#
+# Tokens never cross the data axis; the only collectives are two A2As of the
+# capacity buffer plus one psum for the shared expert.
+
+
+def _local_dispatch(xt, gate_idx, E, K, cap):
+    """Sort-based capacity dispatch over LOCAL tokens (all ops local)."""
+    Tl, D = xt.shape
+    flat_e = gate_idx.reshape(-1)
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    token_of = order // K
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos_in_e = jnp.arange(Tl * K) - starts[sorted_e]
+    keep = pos_in_e < cap
+    buf_idx = jnp.where(keep, sorted_e * cap + pos_in_e, E * cap)
+    buf = jnp.zeros((E * cap, D), xt.dtype).at[buf_idx].set(xt[token_of], mode="drop")
+    return buf.reshape(E, cap, D), buf_idx, token_of, keep, order
+
+
+def moe_block_a2a(p: C.Params, x: jax.Array, cfg, mesh) -> Tuple[jax.Array, jax.Array]:
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    E, K, F = cfg.n_routed_experts, cfg.moe_top_k, cfg.moe_d_ff
+    tp = mesh.shape["model"]
+    E_loc = E // tp
+    bt = C.ACT_RULES.get("batch", ("data",))
+    B, S, D = x.shape
+
+    def local_fn(router, wg, wu, wd, sh_g, sh_u, sh_d, x_loc):
+        Bl, Sl, _ = x_loc.shape
+        Tl = Bl * Sl
+        xt = x_loc.reshape(Tl, D)
+        logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router.astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, gate_idx = jax.lax.top_k(probs, K)
+        if cfg.moe_norm_top_k:
+            gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+        # load-balance aux (local stats, averaged across the fleet)
+        me = jnp.mean(probs, axis=0)
+        onehot = jnp.zeros((Tl, E), probs.dtype).at[jnp.arange(Tl)[:, None], gate_idx].set(1.0)
+        fe = jnp.mean(onehot, axis=0) / K
+        aux = jnp.sum(me * fe) * E * cfg.moe_aux_coef
+        for ax in bt + ("model",):
+            aux = jax.lax.pmean(aux, ax)
+
+        cap = int(math.ceil(Tl * K / E * cfg.moe_capacity_factor))
+        buf, buf_idx, token_of, keep, order = _local_dispatch(xt, gate_idx, E, K, cap)
+
+        # ---- dispatch A2A: (E, cap, D) -> (E_loc, tp*cap, D) --------------
+        recv = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=1, tiled=True)
+
+        # ---- local expert FFN ------------------------------------------------
+        g = jnp.einsum("ecd,edf->ecf", recv, wg.astype(x_loc.dtype))
+        u = jnp.einsum("ecd,edf->ecf", recv, wu.astype(x_loc.dtype))
+        eo = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, wd.astype(x_loc.dtype))
+
+        # ---- combine A2A back: (E_loc, tp*cap, D) -> (E, cap, D) -----------
+        back = jax.lax.all_to_all(eo, "model", split_axis=1, concat_axis=0, tiled=True)
+
+        # ---- local gate-weighted combine ------------------------------------
+        flat = back.reshape(E * cap, D)
+        gathered = flat[jnp.clip(buf_idx, 0, E * cap - 1)]
+        gathered = jnp.where(keep[:, None], gathered, 0)
+        w_sorted = gate_vals.reshape(-1)[order]
+        out = jnp.zeros((Tl, D), x_loc.dtype).at[token_of].add(
+            gathered * w_sorted[:, None].astype(x_loc.dtype)
+        )
+
+        # ---- shared experts: computed locally on this shard's tokens.
+        # (A Megatron partial+psum split of Fs would mix token sets here,
+        # because the sequence axis is itself sharded over "model".)
+        if cfg.n_shared_experts:
+            hg = jnp.einsum("td,df->tf", xt, sh_g.astype(x_loc.dtype))
+            hu = jnp.einsum("td,df->tf", xt, sh_u.astype(x_loc.dtype))
+            out = out + jnp.einsum(
+                "tf,fd->td", jax.nn.silu(hg) * hu, sh_d.astype(x_loc.dtype)
+            )
+        return out.reshape(Bl, Sl, D), aux
+
+    # batch over data axes; seq over TP (sequence-parallel form) when it
+    # divides (training/prefill), else replicated over TP (decode, S=1)
+    xspec = P(bt, "model" if S % tp == 0 else None, None)
+    shared_specs = (
+        (P(None, None), P(None, None), P(None, None))  # replicated at boundary
+        if cfg.n_shared_experts
+        else (P(), P(), P())
+    )
+    sh_args = (
+        (p["shared/wg"], p["shared/wu"], p["shared/wd"])
+        if cfg.n_shared_experts
+        else (jnp.zeros(()), jnp.zeros(()), jnp.zeros(()))
+    )
+    fn = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(
+            P(None, None),  # router: replicated (gathered at the boundary)
+            P("model", None, None),  # routed experts: EP-sharded
+            P("model", None, None),
+            P("model", None, None),
+            *shared_specs,
+            xspec,
+        ),
+        out_specs=(xspec, P()),
+        check_rep=False,
+    )
+    return fn(p["router"], p["wg"], p["wu"], p["wd"], *sh_args, x)

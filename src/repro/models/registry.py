@@ -1,0 +1,11 @@
+"""Model registry: ArchConfig -> model object."""
+from __future__ import annotations
+
+from .encdec import EncDecLM
+from .lm import DecoderLM
+
+
+def build(cfg):
+    if cfg.family == "whisper":
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)

@@ -1,0 +1,105 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+    gate branch: g = gelu(W_gate x)
+    rnn branch:  u = W_rnn x -> causal conv1d(w=4) -> RG-LRU
+    out:         W_out (g * h)
+
+RG-LRU (per channel): r_t = sigmoid(W_r u_t); i_t = sigmoid(W_i u_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)          (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t u_t)
+
+Training uses ``jax.lax.associative_scan`` (parallel prefix — the TPU-native
+formulation; the GPU paper uses a custom linear-scan kernel, see DESIGN.md
+hardware-adaptation notes); ``repro.kernels.rglru_scan`` is the Pallas
+version; decode is the O(1) recurrence.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+from .common import ParamDef as PD
+
+_C = 8.0
+
+
+def rglru_defs(cfg) -> C.Defs:
+    D, R = cfg.d_model, cfg.lru_width
+    return {
+        "w_gate": PD((D, R), ("embed", "mlp")),
+        "w_rnn": PD((D, R), ("embed", "mlp")),
+        "conv_w": PD((cfg.conv_width, R), ("conv", "mlp")),
+        "conv_b": PD((R,), ("mlp",), init="zeros"),
+        "w_r": PD((R, R), ("mlp", None), scale=0.5),
+        "b_r": PD((R,), (None,), init="zeros"),
+        "w_i": PD((R, R), ("mlp", None), scale=0.5),
+        "b_i": PD((R,), (None,), init="zeros"),
+        "lam": PD((R,), (None,), init="ones"),  # Lambda (pre-softplus)
+        "w_out": PD((R, D), ("mlp", "embed")),
+    }
+
+
+def _conv1d(u, w, b):
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + u.shape[1], :] * w[i].astype(u.dtype) for i in range(K))
+    return out + b.astype(u.dtype)
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(C.dense(u, p["w_r"], p["b_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(C.dense(u, p["w_i"], p["b_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r  # (B,S,R)
+    a = jnp.exp(log_a)
+    x_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u.astype(jnp.float32))
+    return a, x_in
+
+
+def rglru_seq(p: C.Params, u: jax.Array, cfg) -> jax.Array:
+    """Full-sequence RG-LRU via parallel associative scan over time."""
+    a, x_in = _gates(p, u)
+    if cfg.use_pallas:
+        from repro.kernels.rglru_scan import ops as rops
+
+        h = rops.rglru(a, x_in)
+    else:
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+    return h.astype(u.dtype)
+
+
+def rec_block(p: C.Params, x: jax.Array, cfg) -> jax.Array:
+    g = jax.nn.gelu(C.dense(x, p["w_gate"]), approximate=True)
+    u = C.dense(x, p["w_rnn"])
+    u = _conv1d(u, p["conv_w"], p["conv_b"])
+    h = rglru_seq(p, u, cfg)
+    return C.dense(g * h, p["w_out"])
+
+
+def rec_cache_init(cfg, batch: int, dtype) -> Dict[str, jax.Array]:
+    R = cfg.lru_width
+    return {
+        "h": jnp.zeros((batch, R), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, R), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def rec_decode(p, x, cache, cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    g = jax.nn.gelu(C.dense(x, p["w_gate"]), approximate=True)  # (B,1,R)
+    u_new = C.dense(x, p["w_rnn"])[:, 0]  # (B,R)
+    hist = jnp.concatenate([cache["conv"], u_new[:, None]], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    u = (jnp.einsum("bkr,kr->br", hist, w) + p["conv_b"].astype(x.dtype))[:, None]
+    a, x_in = _gates(p, u)  # (B,1,R)
+    h = a[:, 0] * cache["h"] + x_in[:, 0]
+    y = C.dense(g * h[:, None].astype(x.dtype), p["w_out"])
+    return y, {"h": h, "conv": hist[:, 1:], "pos": cache["pos"] + 1}

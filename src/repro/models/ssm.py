@@ -1,0 +1,206 @@
+"""Mamba2 (state-space duality) block.
+
+Training path = the chunked SSD algorithm in pure einsum form (quadratic
+within a chunk, linear across chunks) — this is the REAL algorithm, so the
+dry-run's HLO FLOPs are faithful; ``repro.kernels.ssd_scan`` provides the
+Pallas-tiled version with identical semantics, and ``ref.py`` the sequential
+recurrence oracle.  Decode path = constant-size recurrent state (the whole
+point of the architecture for long_500k).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+from .common import ParamDef as PD
+
+
+def mamba_defs(cfg) -> C.Defs:
+    D = cfg.d_model
+    DI = cfg.d_inner
+    H = cfg.ssm_nheads
+    N = cfg.ssm_state
+    G = cfg.ssm_ngroups
+    conv_dim = DI + 2 * G * N
+    return {
+        # order: [z (DI), x (DI), B (G*N), C (G*N), dt (H)]
+        "in_proj": PD((D, 2 * DI + 2 * G * N + H), ("embed", "mlp")),
+        "conv_w": PD((cfg.conv_width, conv_dim), ("conv", "mlp")),
+        "conv_b": PD((conv_dim,), ("mlp",), init="zeros"),
+        "A_log": PD((H,), ("heads",), init="zeros"),
+        "dt_bias": PD((H,), ("heads",), init="zeros"),
+        "D": PD((H,), ("heads",), init="ones"),
+        "norm": PD((DI,), ("mlp",), init="ones"),
+        "out_proj": PD((DI, D), ("mlp", "embed")),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    DI, G, N, H = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :DI]
+    x = zxbcdt[..., DI : 2 * DI]
+    Bm = zxbcdt[..., 2 * DI : 2 * DI + G * N]
+    Cm = zxbcdt[..., 2 * DI + G * N : 2 * DI + 2 * G * N]
+    dt = zxbcdt[..., 2 * DI + 2 * G * N :]
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width K: u (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(K):
+        out = out + pad[:, i : i + u.shape[1], :] * w[i].astype(u.dtype)
+    return jax.nn.silu(out + b.astype(u.dtype))
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """L[i,j] = sum_{k=j+1..i} x[k] for i>=j (chunk-local decay exponents)."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., i, j)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD (arXiv:2405.21060 Listing 1, einsum form).
+
+    x: (b,s,h,p) dt: (b,s,h) A: (h,) Bm/Cm: (b,s,g,n) with heads h = g*rep.
+    Returns y (b,s,h,p).
+    """
+    b, s, h, p = x.shape
+    g, n = Bm.shape[-2], Bm.shape[-1]
+    Q = chunk
+    nc = s // Q
+    rep = h // g
+
+    xr = x.reshape(b, nc, Q, h, p)
+    dtr = dt.reshape(b, nc, Q, h)
+    Br = jnp.repeat(Bm.reshape(b, nc, Q, g, n), rep, axis=3)  # (b,c,q,h,n)
+    Cr = jnp.repeat(Cm.reshape(b, nc, Q, g, n), rep, axis=3)
+
+    dA = dtr * A[None, None, None, :]  # (b,c,q,h) negative
+    dA_cs = jnp.cumsum(dA, axis=2)  # within-chunk inclusive cumsum
+
+    # 1) intra-chunk (quadratic in Q)
+    L = jnp.exp(_segsum(jnp.swapaxes(dA, 2, 3)))  # (b,c,h,q,q)
+    CB = jnp.einsum("bcqhn,bckhn->bchqk", Cr, Br)  # (b,c,h,q,k)
+    M = CB * L
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp", M, dtr, xr)
+
+    # 2) per-chunk final states
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (b,c,q,h)
+    S = jnp.einsum("bcqhn,bcqh,bcqh,bcqhp->bchnp", Br, decay_to_end, dtr, xr)
+
+    # 3) inter-chunk recurrence over the (few) chunks
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))  # (b,c,h)
+
+    def step(prev, inp):
+        dec, s_c = inp
+        new = prev * dec[..., None, None] + s_c
+        return new, prev
+
+    _, S_prev = jax.lax.scan(
+        step,
+        jnp.zeros((b, h, n, p), x.dtype),
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S, 1, 0)),
+    )
+    S_prev = jnp.moveaxis(S_prev, 0, 1)  # (b,c,h,n,p) state entering each chunk
+
+    # 4) inter-chunk contribution
+    state_decay = jnp.exp(dA_cs)  # (b,c,q,h)
+    y_off = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp", Cr, S_prev, state_decay)
+
+    return (y_diag + y_off).reshape(b, s, h, p)
+
+
+def mamba_block(p: C.Params, x: jax.Array, cfg) -> jax.Array:
+    """Full-sequence (training / prefill) Mamba2 block."""
+    H, P, N, G = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    B_, S, _ = x.shape
+    zxbcdt = C.dense(x, p["in_proj"])
+    z, xs, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = (
+        conv_out[..., : cfg.d_inner],
+        conv_out[..., cfg.d_inner : cfg.d_inner + G * N],
+        conv_out[..., cfg.d_inner + G * N :],
+    )
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(B_, S, H, P)
+    if cfg.use_pallas:
+        from repro.kernels.ssd_scan import ops as sops
+
+        y = sops.ssd(xh, dt, A, Bm.reshape(B_, S, G, N), Cm.reshape(B_, S, G, N), cfg.ssm_chunk)
+    else:
+        Q = min(cfg.ssm_chunk, S)
+        pad = (-S) % Q
+        xp, dtp = xh, dt
+        Bp, Cp = Bm.reshape(B_, S, G, N), Cm.reshape(B_, S, G, N)
+        if pad:  # causal: trailing pad steps never influence real outputs
+            xp = jnp.pad(xp, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dtp = jnp.pad(dtp, ((0, 0), (0, pad), (0, 0)))
+            Bp = jnp.pad(Bp, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Cp = jnp.pad(Cp, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y = ssd_chunked(
+            xp.astype(jnp.float32),
+            dtp,
+            A,
+            Bp.astype(jnp.float32),
+            Cp.astype(jnp.float32),
+            Q,
+        ).astype(x.dtype)[:, :S]
+    y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B_, S, cfg.d_inner)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = C.rms_norm(y * jax.nn.silu(z), p["norm"])
+    return C.dense(y, p["out_proj"])
+
+
+def mamba_cache_init(cfg, batch: int, dtype) -> Dict[str, jax.Array]:
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * G * N
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_nheads, N, cfg.ssm_headdim), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mamba_decode(p, x, cache, cfg) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode: O(1) state update — no KV growth at 524k context."""
+    H, P, N, G = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    B_ = x.shape[0]
+    zxbcdt = C.dense(x, p["in_proj"])  # (B,1,*)
+    z, xs, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)[:, 0]  # (B,C)
+    hist = jnp.concatenate([cache["conv"], conv_in[:, None]], axis=1)  # (B,K,C)
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"].astype(x.dtype)
+    )
+    xs = conv_out[..., : cfg.d_inner]
+    Bm = conv_out[..., cfg.d_inner : cfg.d_inner + G * N]
+    Cm = conv_out[..., cfg.d_inner + G * N :]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * A)  # (B,H)
+    xh = xs.reshape(B_, H, P).astype(jnp.float32)
+    Bh = jnp.repeat(Bm.reshape(B_, G, N), H // G, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm.reshape(B_, G, N), H // G, axis=1).astype(jnp.float32)
+    state = cache["state"] * da[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dt, Bh, xh
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state) + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B_, 1, cfg.d_inner).astype(x.dtype)
+    y = C.rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = C.dense(y, p["out_proj"])
+    return out, {"conv": hist[:, 1:], "state": state, "pos": cache["pos"] + 1}

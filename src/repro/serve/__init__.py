@@ -1,0 +1,5 @@
+"""Serving layer: fused preprocessing+model bundles, batched decode."""
+from .fused import FusedModel
+from .decode import greedy_decode
+
+__all__ = ["FusedModel", "greedy_decode"]

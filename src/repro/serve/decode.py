@@ -1,0 +1,30 @@
+"""Batched greedy decode loop over a model's serve step."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy_decode(model, params, prompt_tokens: jax.Array, steps: int, max_len: int):
+    """Prefill via single-token steps, then generate ``steps`` new tokens.
+
+    prompt_tokens: (B, P) int32.  Returns (B, steps) generated ids.
+    """
+    B, P = prompt_tokens.shape
+    cache = model.init_cache(B, max_len)
+
+    decode = jax.jit(model.decode_step)
+
+    tok = prompt_tokens[:, :1]
+    logits = None
+    for t in range(P):
+        logits, cache = decode(params, cache, prompt_tokens[:, t : t + 1])
+    outs = []
+    nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    for _ in range(steps):
+        outs.append(nxt)
+        logits, cache = decode(params, cache, nxt)
+        nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,14 @@
+"""Training substrate: optimizer, schedules, train step, grad compression."""
+from .optimizer import AdamWConfig, adamw_init, adamw_update, opt_pspecs
+from .step import make_train_step, train_state_abstract, train_state_init, train_state_pspecs
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "opt_pspecs",
+    "make_train_step",
+    "train_state_abstract",
+    "train_state_init",
+    "train_state_pspecs",
+]

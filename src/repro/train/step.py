@@ -1,0 +1,90 @@
+"""Train step assembly: value_and_grad + microbatch accumulation scan +
+AdamW, all expressed so pjit can shard it (params/optimizer by their
+PartitionSpecs, batch over the data axes).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update, opt_pspecs
+
+
+def train_state_init(model, seed: int = 0) -> Dict[str, Any]:
+    params = model.init(seed)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def train_state_abstract(model) -> Dict[str, Any]:
+    """ShapeDtypeStruct state for dry-run lowering (no allocation)."""
+    from repro.models import common as C
+
+    params = C.abstract_params(model.defs())
+    zeros = {k: jax.ShapeDtypeStruct(v.shape, jnp.float32) for k, v in params.items()}
+    return {
+        "params": params,
+        "opt": {"m": zeros, "v": dict(zeros), "step": jax.ShapeDtypeStruct((), jnp.int32)},
+    }
+
+
+def train_state_pspecs(model, rules=None) -> Dict[str, Any]:
+    ps = model.pspecs(rules)
+    return {"params": ps, "opt": opt_pspecs(ps)}
+
+
+def make_train_step(
+    model,
+    ocfg: AdamWConfig,
+    accum: int = 1,
+    cast_params_once: bool = True,
+) -> Callable:
+    """Returns step(state, batch) -> (state, metrics).
+
+    ``accum > 1`` splits the global batch into ``accum`` microbatches and
+    accumulates gradients with a lax.scan — peak activation memory drops by
+    ~accum at the cost of accum sequential passes (the standard memory /
+    throughput knob at pod scale).
+
+    ``cast_params_once`` casts fp32 master weights (>=2D) to the model compute
+    dtype BEFORE the layer scan, so the per-layer FSDP all-gathers move bf16
+    instead of fp32 — halving the dominant training collective (§Perf change
+    #2; set False for the paper-faithful baseline numbers).
+    """
+    cdt = model.cfg.compute_dtype
+
+    def loss_fn(params, batch):
+        if cast_params_once:
+            params = {
+                k: (v.astype(cdt) if (v.ndim >= 2 and v.dtype == jnp.float32) else v)
+                for k, v in params.items()
+            }
+        return model.loss(params, batch)
+
+    def step(state, batch):
+        params = state["params"]
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + l), None
+
+            micros = jax.tree.map(
+                lambda a: a.reshape((accum, a.shape[0] // accum) + a.shape[1:]), batch
+            )
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(micro, (zero, jnp.zeros((), jnp.float32)), micros)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+        new_p, new_opt, metrics = adamw_update(ocfg, params, grads, state["opt"])
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return {"params": new_p, "opt": new_opt}, metrics
+
+    return step

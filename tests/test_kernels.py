@@ -1,0 +1,143 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import types as T
+
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# bloom_hash: bit-exactness of the 32-bit-limb FNV against the uint64 oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("num_bins,num_hashes,max_len", [
+    (1000, 3, 16), (1 << 16, 5, 24), (7, 1, 8), (2**31 - 1, 2, 32),
+])
+def test_bloom_hash_bit_exact(num_bins, num_hashes, max_len):
+    from repro.kernels.bloom_hash import ops, ref
+
+    words = ["".join(RNG.choice(list("abcdefgh XYZ123!@"), RNG.integers(0, max_len)))
+             for _ in range(300)]
+    s = jnp.asarray(T.encode_strings(words, max_len))
+    got = np.asarray(ops.bloom_indices(s, num_bins, num_hashes))
+    want = np.asarray(ref.bloom_indices(s, num_bins, num_hashes))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bloom_hash_nested_shape():
+    from repro.kernels.bloom_hash import ops
+
+    s = jnp.asarray(T.encode_strings([["a", "b"], ["c", "d"]], 8))
+    out = ops.bloom_indices(s, 100, 3)
+    assert out.shape == (2, 2, 3)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,H,KV,hd,window,dtype", [
+    (1, 128, 4, 2, 64, None, jnp.float32),
+    (2, 256, 4, 4, 32, 64, jnp.float32),
+    (1, 100, 2, 1, 64, None, jnp.float32),
+    (1, 128, 4, 2, 64, None, jnp.bfloat16),
+    (1, 64, 8, 8, 128, None, jnp.float32),
+])
+def test_flash_attention_kernel(B, S, H, KV, hd, window, dtype):
+    from repro.kernels.flash_attention import ref
+    from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+
+    q = jnp.asarray(RNG.normal(0, 1, (B, H, S, hd)), dtype)
+    k = jnp.asarray(RNG.normal(0, 1, (B, KV, S, hd)), dtype)
+    v = jnp.asarray(RNG.normal(0, 1, (B, KV, S, hd)), dtype)
+    scale = 1 / np.sqrt(hd)
+    got = flash_attention_fwd(q, k, v, scale, causal=True, window=window,
+                              block_q=64, block_k=64)
+    want = ref.attention(q, k, v, scale, causal=True, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_kernel_grad_matches_sdpa():
+    from repro.kernels.flash_attention import ops
+    from repro.models.attention import _sdpa
+    from repro.models import common as C
+
+    q = jnp.asarray(RNG.normal(0, 1, (2, 64, 4, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (2, 64, 2, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (2, 64, 2, 32)), jnp.float32)
+    mask = C.causal_mask(64, 64)[None, None, None]
+    g1 = jax.grad(lambda *a: jnp.sum(jnp.sin(ops.flash_attention(*a, 0.17))), (0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: jnp.sum(jnp.sin(_sdpa(*a, mask, 0.17))), (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk", [
+    (2, 64, 4, 16, 2, 8, 16), (1, 96, 2, 32, 1, 16, 32), (1, 128, 8, 8, 8, 4, 64),
+])
+def test_ssd_kernel_vs_sequential(B, S, H, P, G, N, chunk):
+    from repro.kernels.ssd_scan import ops, ref
+
+    x = jnp.asarray(RNG.normal(0, 1, (B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2, (H,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(0, 1, (B, S, G, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(0, 1, (B, S, G, N)), jnp.float32)
+    got = ops.ssd(x, dt, A, Bm, Cm, chunk=chunk)
+    want = ref.ssd_sequential(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+
+def test_ssd_jnp_chunked_matches_sequential():
+    from repro.kernels.ssd_scan import ref
+    from repro.models.ssm import ssd_chunked
+
+    B, S, H, P, G, N = 2, 64, 4, 16, 2, 8
+    x = jnp.asarray(RNG.normal(0, 1, (B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2, (H,)), jnp.float32)
+    Bm = jnp.asarray(RNG.normal(0, 1, (B, S, G, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(0, 1, (B, S, G, N)), jnp.float32)
+    got = ssd_chunked(x, dt, A, Bm, Cm, 16)
+    want = ref.ssd_sequential(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# rglru_scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,R,chunk", [(2, 96, 64, 32), (1, 64, 128, 64), (1, 40, 32, 16)])
+def test_rglru_kernel_vs_sequential(B, S, R, chunk):
+    from repro.kernels.rglru_scan import ops, ref
+
+    a = jnp.asarray(RNG.uniform(0.3, 0.999, (B, S, R)), jnp.float32)
+    x = jnp.asarray(RNG.normal(0, 1, (B, S, R)), jnp.float32)
+    got = ops.rglru(a, x, chunk=chunk)
+    want = ref.rglru_sequential(a, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,H,KV,hd,W", [(2, 8, 2, 32, 200), (1, 4, 4, 64, 64), (1, 16, 1, 128, 512)])
+def test_decode_attention_kernel(B, H, KV, hd, W):
+    from repro.kernels.decode_attention import ops, ref
+
+    q = jnp.asarray(RNG.normal(0, 1, (B, 1, H, hd)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (B, W, KV, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (B, W, KV, hd)), jnp.float32)
+    valid = jnp.asarray(RNG.random(W) < 0.7)
+    valid = valid.at[0].set(True)  # at least one valid slot
+    got = ops.decode_attention(q, k, v, valid, 0.2)
+    want = ref.decode_attention(
+        q[:, 0], jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2), valid, 0.2
+    )[:, None]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)

@@ -1,0 +1,125 @@
+"""Serving layer: micro-batcher correctness under concurrency, greedy decode,
+preprocessing tuner."""
+import concurrent.futures as cf
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.serve.batcher import MicroBatcher
+from repro.serve import greedy_decode
+
+
+def test_microbatcher_matches_direct():
+    calls = []
+
+    @jax.jit
+    def model(feats):
+        return feats["x"] * 2.0 + feats["y"][:, None]
+
+    def model_fn(feats):
+        calls.append(int(feats["x"].shape[0]))
+        return model(feats)
+
+    b = MicroBatcher(model_fn, max_batch=8, max_wait_ms=20.0)
+    rng = np.random.default_rng(0)
+    xs = rng.normal(0, 1, (40, 3)).astype(np.float32)
+    ys = rng.normal(0, 1, (40,)).astype(np.float32)
+
+    def one(i):
+        return np.asarray(b.submit({"x": xs[i], "y": ys[i]}))
+
+    with cf.ThreadPoolExecutor(max_workers=12) as ex:
+        outs = list(ex.map(one, range(40)))
+    for i, o in enumerate(outs):
+        np.testing.assert_allclose(o, xs[i] * 2 + ys[i], rtol=1e-6)
+    assert b.rows_served == 40
+    assert b.batches_run < 40  # actually batched
+    # padded batch sizes come from the bucket list
+    assert all(c in (1, 2, 4, 8) for c in calls)
+    b.close()
+
+
+def test_microbatcher_propagates_errors():
+    def bad(feats):
+        raise ValueError("boom")
+
+    b = MicroBatcher(bad, max_batch=4, max_wait_ms=1.0)
+    import pytest
+
+    with pytest.raises(ValueError):
+        b.submit({"x": np.zeros(2, np.float32)})
+    b.close()
+
+
+def test_greedy_decode_deterministic():
+    from repro import configs
+    from repro.models import registry
+
+    cfg = configs.get("stablelm_3b").smoke()
+    model = registry.build(cfg)
+    params = model.init(0)
+    prompts = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], jnp.int32)
+    out1 = greedy_decode(model, params, prompts, steps=6, max_len=32)
+    out2 = greedy_decode(model, params, prompts, steps=6, max_len=32)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert out1.shape == (2, 6)
+    assert (np.asarray(out1) >= 0).all() and (np.asarray(out1) < cfg.vocab).all()
+
+
+def test_preprocessing_tuner_finds_better_bins():
+    """Tuner (paper §2 Keras-Tuner analogue): searching numBins should find
+    that more bins -> fewer collisions on a high-cardinality id column."""
+    from repro.core import HashIndexTransformer, KamaeSparkPipeline
+    from repro.core.tuning import Choice, PreprocessingTuner
+
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(rng.integers(0, 5000, 2048), jnp.int64)
+    batch = {"id": ids}
+
+    def build(hp):
+        return KamaeSparkPipeline(
+            stages=[
+                HashIndexTransformer(
+                    inputCol="id", outputCol="b", inputDtype="string",
+                    numBins=hp["numBins"],
+                )
+            ]
+        )
+
+    def evaluate(fitted, hp):
+        out = fitted.transform(batch)["b"]
+        # collision rate proxy: distinct buckets vs distinct ids
+        n_ids = len(np.unique(np.asarray(ids)))
+        n_buckets = len(np.unique(np.asarray(out)))
+        return 1.0 - n_buckets / n_ids
+
+    tuner = PreprocessingTuner(
+        build, evaluate, space=[Choice("numBins", [64, 1024, 65536])],
+        mode="grid", max_trials=3,
+    )
+    best = tuner.search(batch)
+    assert best.params["numBins"] == 65536
+    assert len(tuner.trials) == 3
+    assert best.score <= min(t.score for t in tuner.trials)
+
+
+def test_prefetch_pipeline():
+    from repro.data import BatchPipeline, prefetch
+
+    src = [{"x": jnp.ones((4,)) * i} for i in range(5)]
+    got = [float(b["x"][0]) for b in prefetch(iter(src), depth=2)]
+    assert got == [0, 1, 2, 3, 4]
+
+    bp = BatchPipeline(lambda: iter(src), engine=None, prefetch_depth=2)
+    assert [float(b["x"][0]) for b in bp] == [0, 1, 2, 3, 4]
+    assert [float(b["x"][0]) for b in bp] == [0, 1, 2, 3, 4]  # re-iterable
+
+    def boom():
+        yield {"x": jnp.zeros(1)}
+        raise RuntimeError("producer died")
+
+    import pytest
+
+    with pytest.raises(RuntimeError):
+        list(prefetch(boom(), depth=1))

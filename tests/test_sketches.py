@@ -1,0 +1,96 @@
+"""Sketch invariants (hypothesis): vocab-table exactness under capacity,
+merge associativity/commutativity, DDSketch relative error, moments merge."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing, sketches
+from repro.core import types as T
+
+
+def _table_from(words, cap=64, max_len=16):
+    t = sketches.vocab_init(cap, max_len)
+    enc = jnp.asarray(T.encode_strings(words, max_len))
+    h = hashing.fnv1a64(enc)
+    return sketches.vocab_update(t, h, enc)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.sampled_from("abcdefgh"), min_size=1, max_size=200))
+def test_vocab_exact_counts_under_capacity(letters):
+    """<= capacity distinct values => counts are EXACT."""
+    t = _table_from(letters)
+    keys = np.asarray(t["keys"])
+    counts = np.asarray(t["counts"])
+    valid = keys != np.uint64(0xFFFFFFFFFFFFFFFF)
+    got = {}
+    for k, c in zip(keys[valid], counts[valid]):
+        got[int(k)] = int(c)
+    import collections
+
+    want_counts = collections.Counter(letters)
+    enc = jnp.asarray(T.encode_strings(sorted(want_counts), 16))
+    hs = np.asarray(hashing.fnv1a64(enc))
+    for w, h in zip(sorted(want_counts), hs):
+        assert got[int(h)] == want_counts[w]
+    assert valid.sum() == len(want_counts)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(st.sampled_from("abcdefghij"), min_size=1, max_size=100),
+    st.lists(st.sampled_from("abcdefghij"), min_size=1, max_size=100),
+)
+def test_vocab_merge_commutes_and_matches_union(xs, ys):
+    ta, tb = _table_from(xs), _table_from(ys)
+    m1 = sketches.vocab_merge(ta, tb)
+    m2 = sketches.vocab_merge(tb, ta)
+    np.testing.assert_array_equal(np.asarray(m1["keys"]), np.asarray(m2["keys"]))
+    np.testing.assert_array_equal(np.asarray(m1["counts"]), np.asarray(m2["counts"]))
+    tu = _table_from(xs + ys)
+    np.testing.assert_array_equal(np.asarray(m1["keys"]), np.asarray(tu["keys"]))
+    np.testing.assert_array_equal(np.asarray(m1["counts"]), np.asarray(tu["counts"]))
+
+
+def test_vocab_eviction_keeps_heavy_hitters():
+    words = ["hot"] * 50 + ["warm"] * 20 + [f"cold{i}" for i in range(100)]
+    t = sketches.vocab_init(16, 16)
+    enc = jnp.asarray(T.encode_strings(words, 16))
+    t = sketches.vocab_update(t, hashing.fnv1a64(enc), enc)
+    reps = T.decode_strings(np.asarray(t["reps"]))
+    counts = np.asarray(t["counts"])
+    by = dict(zip(list(reps), counts))
+    assert by.get("hot") == 50 and by.get("warm") == 20
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(1e-3, 1e6), min_size=20, max_size=300), st.sampled_from([0.1, 0.5, 0.9]))
+def test_ddsketch_relative_error(vals, q):
+    h = sketches.dd_update(sketches.dd_init(), jnp.asarray(vals, jnp.float64))
+    got = float(sketches.dd_quantile(h, q)[0])
+    want = float(np.quantile(vals, q, method="inverted_cdf"))
+    assert abs(got - want) <= 0.06 * abs(want) + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1, max_size=60),
+    st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1, max_size=60),
+)
+def test_moments_merge_equals_concat(xs, ys):
+    a = sketches.moments_update(sketches.moments_init(()), jnp.asarray(xs, jnp.float64))
+    b = sketches.moments_update(sketches.moments_init(()), jnp.asarray(ys, jnp.float64))
+    m = sketches.moments_merge(a, b)
+    full = sketches.moments_update(
+        sketches.moments_init(()), jnp.asarray(xs + ys, jnp.float64)
+    )
+    for k in ("count", "sum", "sumsq", "min", "max"):
+        np.testing.assert_allclose(
+            np.asarray(m[k]), np.asarray(full[k]), rtol=1e-12, err_msg=k
+        )
+
+
+def test_hash_maxlen_invariance():
+    a = hashing.fnv1a64(jnp.asarray(T.encode_strings(["hello"], 8)))
+    b = hashing.fnv1a64(jnp.asarray(T.encode_strings(["hello"], 64)))
+    assert int(a[0]) == int(b[0])

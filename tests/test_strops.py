@@ -1,0 +1,121 @@
+"""String-primitive tests incl. hypothesis properties (round trips,
+python-semantics equivalence)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import strops
+from repro.core import types as T
+
+SAFE = st.text(
+    alphabet=st.characters(min_codepoint=1, max_codepoint=126), max_size=20
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(SAFE, min_size=1, max_size=8))
+def test_encode_decode_round_trip(words):
+    enc = T.encode_strings(words, 24)
+    dec = T.decode_strings(enc)
+    assert list(dec) == [w[:24] for w in words]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(-(2**31), 2**31 - 1), min_size=1, max_size=16))
+def test_number_to_string_matches_python(vals):
+    arr = jnp.asarray(vals, jnp.int64)
+    out = T.decode_strings(np.asarray(strops.number_to_string(arr, 24)))
+    assert list(out) == [str(v) for v in vals]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-1e6, 1e6, allow_nan=False), min_size=1, max_size=8))
+def test_string_to_number_parses_printed_floats(vals):
+    printed = [f"{v:.4f}" for v in vals]
+    arr = jnp.asarray(T.encode_strings(printed, 24))
+    out = np.asarray(strops.string_to_number(arr, "float64"))
+    np.testing.assert_allclose(out, [float(p) for p in printed], rtol=1e-9, atol=1e-9)
+
+
+def test_string_to_number_invalid():
+    arr = jnp.asarray(T.encode_strings(["abc", "", "1.2.3", "--4"], 8))
+    out = np.asarray(strops.string_to_number(arr, "float32"))
+    assert np.isnan(out).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(
+        st.lists(st.text(alphabet="abcXYZ09", min_size=0, max_size=6), min_size=0, max_size=5),
+        min_size=1,
+        max_size=6,
+    )
+)
+def test_split_matches_python(parts_list):
+    joined = ["|".join(p) for p in parts_list]
+    arr = jnp.asarray(T.encode_strings(joined, 48))
+    out = strops.split_to_list(arr, "|", 5, default_value="PAD", out_max_len=8)
+    dec = T.decode_strings(np.asarray(out))
+    for row, parts in zip(dec, parts_list):
+        want = [p[:8] for p in parts][:5]
+        want = [w if w else "PAD" for w in want]
+        want += ["PAD"] * (5 - len(want))
+        # NB: splitting "" yields zero segments -> all PAD
+        if parts == [""] or parts == []:
+            want = ["PAD"] * 5
+        assert list(row) == want
+
+
+def test_split_multichar_separator():
+    arr = jnp.asarray(T.encode_strings(["a<>bb<>c", "x<>y"], 24))
+    out = T.decode_strings(np.asarray(strops.split_to_list(arr, "<>", 4, "P", 4)))
+    assert list(out[0]) == ["a", "bb", "c", "P"]
+    assert list(out[1]) == ["x", "y", "P", "P"]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(SAFE, min_size=1, max_size=6), st.lists(SAFE, min_size=1, max_size=6))
+def test_concat_matches_python(a, b):
+    n = min(len(a), len(b))
+    a, b = a[:n], b[:n]
+    ea = jnp.asarray(T.encode_strings(a, 24))
+    eb = jnp.asarray(T.encode_strings(b, 24))
+    out = T.decode_strings(np.asarray(strops.concat([ea, eb], "_", 64)))
+    assert list(out) == [f"{x}_{y}" for x, y in zip(a, b)]
+
+
+def test_case_strip_contains():
+    arr = jnp.asarray(T.encode_strings(["  Hello World  ", "ABC", "xyz"], 24))
+    assert list(T.decode_strings(np.asarray(strops.upper(arr)))) == [
+        "  HELLO WORLD  ", "ABC", "XYZ",
+    ]
+    stripped = T.decode_strings(np.asarray(strops.strip_char(arr, " ")))
+    assert list(stripped) == ["Hello World", "ABC", "xyz"]
+    assert list(np.asarray(strops.contains(arr, "World"))) == [True, False, False]
+    assert list(np.asarray(strops.startswith(arr, "AB"))) == [False, True, False]
+    assert list(np.asarray(strops.endswith(arr, "yz"))) == [False, False, True]
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(1, 3000),
+    st.integers(1, 12),
+    st.integers(1, 28),
+)
+def test_civil_round_trip(y, m, d):
+    days = strops.days_from_civil(jnp.asarray([y]), jnp.asarray([m]), jnp.asarray([d]))
+    yy, mm, dd = strops.civil_from_days(days)
+    assert (int(yy[0]), int(mm[0]), int(dd[0])) == (y, m, d)
+
+
+def test_parse_date_and_weekday():
+    arr = jnp.asarray(T.encode_strings(["2026-07-12", "1999-12-31", "bad"], 12))
+    days = strops.parse_date(arr)
+    import datetime
+
+    assert int(days[0]) == (datetime.date(2026, 7, 12) - datetime.date(1970, 1, 1)).days
+    assert int(days[1]) == (datetime.date(1999, 12, 31) - datetime.date(1970, 1, 1)).days
+    assert int(days[2]) < -(2**61)
+    # 2026-07-12 is a Sunday (ISO 7)
+    assert int(strops.weekday_from_days(days[:1])[0]) == 7

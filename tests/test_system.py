@@ -1,0 +1,201 @@
+"""End-to-end behaviour tests: the paper's core guarantee — a pipeline fit by
+the (distributed) engine and the exported inference graph produce IDENTICAL
+preprocessing — plus export pruning, serialisation, and fusion."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    Engine,
+    HashIndexTransformer,
+    KamaeSparkPipeline,
+    LogTransformer,
+    OneHotEncodeEstimator,
+    PreprocessModel,
+    StandardScaleEstimator,
+    StringIndexEstimator,
+    StringToStringListTransformer,
+    VectorAssembleTransformer,
+    VectorDisassembleTransformer,
+)
+from repro.core import types as T
+
+
+@pytest.fixture(scope="module")
+def movielens_batch():
+    rng = np.random.default_rng(0)
+    n = 512
+    return {
+        "UserID": jnp.asarray(rng.integers(1, 5000, n), jnp.int32),
+        "MovieID": jnp.asarray(rng.integers(1, 200, n), jnp.int32),
+        "Occupation": jnp.asarray(rng.integers(0, 21, n), jnp.int32),
+        "Genres": jnp.asarray(
+            T.encode_strings(
+                rng.choice(
+                    ["Action|Comedy", "Drama", "Action|Drama|Thriller", "Comedy"], n
+                ),
+                32,
+            )
+        ),
+        "Price": jnp.asarray(rng.lognormal(3, 2, n), jnp.float32),
+    }
+
+
+@pytest.fixture(scope="module")
+def fitted(movielens_batch):
+    pipe = KamaeSparkPipeline(
+        stages=[
+            HashIndexTransformer(
+                inputCol="UserID", outputCol="UserID_indexed",
+                inputDtype="string", numBins=10000, layerName="user_hash",
+            ),
+            StringIndexEstimator(
+                inputCol="MovieID", outputCol="MovieID_indexed",
+                inputDtype="string", stringOrderType="frequencyDesc",
+                numOOVIndices=1, layerName="movie_idx",
+            ),
+            OneHotEncodeEstimator(
+                inputCol="Occupation", outputCol="Occupation_indexed",
+                inputDtype="string", numOOVIndices=1, dropUnseen=True,
+                layerName="occ_onehot",
+            ),
+            StringToStringListTransformer(
+                inputCol="Genres", outputCol="Genres_split", separator="|",
+                listLength=6, defaultValue="PADDED", layerName="genres_split",
+            ),
+            StringIndexEstimator(
+                inputCol="Genres_split", outputCol="Genres_indexed",
+                numOOVIndices=1, maskToken="PADDED", layerName="genres_idx",
+            ),
+            LogTransformer(inputCol="Price", outputCol="Price_log", alpha=1.0),
+            StandardScaleEstimator(inputCol="Price_log", outputCol="Price_scaled"),
+        ]
+    )
+    return pipe.fit(movielens_batch)
+
+
+def test_single_pass_fit(fitted):
+    # all estimators depend only on transformers -> one streaming pass
+    assert fitted.n_passes == 1
+
+
+def test_engine_vs_export_parity(fitted, movielens_batch):
+    """THE paper property: offline transform == exported online graph."""
+    offline = fitted.transform(movielens_batch)
+    model = fitted.build_keras_model()
+    online = model(movielens_batch)
+    for k in offline:
+        np.testing.assert_allclose(
+            np.asarray(offline[k]), np.asarray(online[k]), err_msg=k, rtol=1e-6
+        )
+
+
+def test_export_is_jittable_single_program(fitted, movielens_batch):
+    model = fitted.build_keras_model()
+    out = model.jit()(movielens_batch)
+    ref = model(movielens_batch)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]), rtol=1e-6)
+
+
+def test_serialisation_round_trip(fitted, movielens_batch):
+    model = fitted.build_keras_model()
+    blob = model.save_bytes()
+    model2 = PreprocessModel.load_bytes(blob)
+    a, b = model(movielens_batch), model2(movielens_batch)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]), err_msg=k)
+
+
+def test_dead_column_elimination(fitted, movielens_batch):
+    model = fitted.export(outputs=["Price_scaled"])
+    names = [n["op"] for n in model.nodes]
+    assert "StringIndexEstimator" not in names  # genre/movie stages pruned
+    out = model(movielens_batch)
+    full = fitted.transform(movielens_batch)
+    np.testing.assert_allclose(
+        np.asarray(out["Price_scaled"]), np.asarray(full["Price_scaled"]), rtol=1e-6
+    )
+
+
+def test_frequency_ordering(fitted, movielens_batch):
+    """frequencyDesc: most frequent genre gets the smallest vocab index."""
+    out = fitted.transform(movielens_batch)
+    idx = np.asarray(out["Genres_indexed"])
+    # mask token occupies 0; indices >= 2 are vocab (1 OOV bucket at 1)
+    assert idx.min() >= 0
+    flat = idx[idx >= 2]
+    counts = {i: int((flat == i).sum()) for i in np.unique(flat)}
+    assert counts[min(counts)] >= counts[max(counts)]
+
+
+def test_assemble_scale_disassemble(movielens_batch):
+    """Paper §3 LTR pattern: assemble -> standard-scale -> disassemble."""
+    pipe = KamaeSparkPipeline(
+        stages=[
+            VectorAssembleTransformer(inputCols=["Price", "Price"], outputCol="vec"),
+            StandardScaleEstimator(outputCol="vec_s", inputCol="vec", featureSize=2),
+            VectorDisassembleTransformer(inputCol="vec_s", outputCols=["p1", "p2"]),
+        ]
+    )
+    fitted2 = pipe.fit(movielens_batch)
+    out = fitted2.transform(movielens_batch)
+    assert abs(float(out["p1"].mean())) < 1e-5
+    assert abs(float(out["p1"].std()) - 1.0) < 1e-3
+    np.testing.assert_allclose(np.asarray(out["p1"]), np.asarray(out["p2"]))
+
+
+def test_streaming_fit_multiple_batches(movielens_batch):
+    """Streaming over 4 batches == fitting the concatenation."""
+    b = movielens_batch
+    quarters = [
+        {k: v[i * 128 : (i + 1) * 128] for k, v in b.items()} for i in range(4)
+    ]
+    mk = lambda: KamaeSparkPipeline(
+        stages=[
+            StandardScaleEstimator(inputCol="Price", outputCol="Price_s"),
+            StringIndexEstimator(
+                inputCol="MovieID", outputCol="MovieID_i", inputDtype="string"
+            ),
+        ]
+    )
+    f_stream = mk().fit(lambda: iter(quarters))
+    f_full = mk().fit(b)
+    o1, o2 = f_stream.transform(b), f_full.transform(b)
+    np.testing.assert_allclose(
+        np.asarray(o1["Price_s"]), np.asarray(o2["Price_s"]), rtol=1e-6
+    )
+    np.testing.assert_array_equal(
+        np.asarray(o1["MovieID_i"]), np.asarray(o2["MovieID_i"])
+    )
+
+
+def test_estimator_chain_needs_two_passes(movielens_batch):
+    """An estimator consuming another estimator's output forces a 2nd pass."""
+    pipe = KamaeSparkPipeline(
+        stages=[
+            StandardScaleEstimator(inputCol="Price", outputCol="Price_s"),
+            StandardScaleEstimator(inputCol="Price_s", outputCol="Price_ss"),
+        ]
+    )
+    fitted2 = pipe.fit(movielens_batch)
+    assert fitted2.n_passes == 2
+    out = fitted2.transform(movielens_batch)
+    assert abs(float(out["Price_ss"].mean())) < 1e-5
+
+
+def test_fused_model_matches_unfused(fitted, movielens_batch):
+    from repro.serve import FusedModel
+
+    w = jnp.asarray(np.random.default_rng(1).normal(0, 0.1, (21, 4)), jnp.float32)
+
+    def model_fn(params, feats):
+        return feats["Occupation_indexed"] @ params
+
+    fm = FusedModel(fitted.export(outputs=["Occupation_indexed"]), model_fn, w)
+    np.testing.assert_allclose(
+        np.asarray(fm(movielens_batch)),
+        np.asarray(fm.call_unfused(movielens_batch)),
+        rtol=1e-6,
+    )
