@@ -1,10 +1,13 @@
-"""Benchmark harness utilities: timed closures, CSV emission."""
+"""Benchmark harness utilities: timed closures, CSV emission, JSON capture."""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Dict, List
 
 import jax
+
+#: Every emit() lands here too, so run.py can persist a BENCH_*.json record.
+RESULTS: List[Dict] = []
 
 
 def time_fn(fn: Callable, *args, warmup: int = 3, iters: int = 20) -> float:
@@ -23,4 +26,5 @@ def time_fn(fn: Callable, *args, warmup: int = 3, iters: int = 20) -> float:
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    RESULTS.append({"name": name, "us_per_call": round(us_per_call, 1), "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")

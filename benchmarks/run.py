@@ -1,17 +1,53 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 #
 #   preprocessing    — paper §3: fused vs unfused vs interpreted serve latency
+#                      + planned-vs-interpreted-vs-naive-jit transform path
 #   indexing         — paper §2: string/hash/bloom indexing variants
 #   fit_throughput   — Spark-role streaming fit + transform throughput
 #   decode           — serve_step latency for the LM substrate (smoke scale)
 #   roofline         — dry-run-derived roofline terms per (arch, shape, mesh)
+#
+# ``--smoke`` runs the preprocessing comparison at tiny sizes and writes the
+# collected rows to BENCH_preprocessing.json — cheap enough for CI, so the
+# perf trajectory (planned vs interpreted, trace time, HLO op count) is
+# recorded on every PR.
+import argparse
+import json
+import pathlib
 import sys
 
 
+def _write_json(path: str) -> None:
+    from . import common
+
+    pathlib.Path(path).write_text(json.dumps(common.RESULTS, indent=2) + "\n")
+    print(f"wrote {path} ({len(common.RESULTS)} rows)", file=sys.stderr)
+
+
 def main() -> None:
-    from . import fit_throughput, indexing, preprocessing, roofline
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny sizes, preprocessing table only, write BENCH_preprocessing.json",
+    )
+    ap.add_argument(
+        "--json",
+        default="BENCH_preprocessing.json",
+        help="output path for the JSON record (written in --smoke mode)",
+    )
+    args = ap.parse_args()
+
+    from . import preprocessing
 
     print("name,us_per_call,derived")
+    if args.smoke:
+        preprocessing.run(smoke=True)
+        _write_json(args.json)
+        return
+
+    from . import fit_throughput, indexing, roofline
+
     preprocessing.run()
     indexing.run()
     fit_throughput.run()
@@ -22,6 +58,8 @@ def main() -> None:
     except Exception as e:  # decode bench is optional on very slow hosts
         print(f"decode_bench,0,skipped:{type(e).__name__}")
     roofline.run()
+    # NB: no JSON here — BENCH_preprocessing.json is the smoke-mode record
+    # CI trends on; a full run's mixed tables would not be comparable.
 
 
 if __name__ == "__main__":

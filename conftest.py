@@ -1,0 +1,24 @@
+"""Root pytest conftest: dependency gating for optional test-time packages.
+
+The container intentionally ships a minimal environment; ``hypothesis`` may be
+absent.  Rather than skipping whole test modules (they contain plenty of
+non-property tests too), we install a small deterministic shim implementing
+the subset of the hypothesis API this suite uses (``given`` / ``settings`` /
+``strategies.{integers,floats,text,characters,lists,sampled_from}``).  The
+shim draws pseudo-random examples from a seed derived from the test name, so
+runs are reproducible.  When the real hypothesis is installed it is used
+unchanged.
+"""
+import importlib.util
+import os
+import sys
+
+try:  # pragma: no cover - prefer the real package when present
+    import hypothesis  # noqa: F401
+except ImportError:
+    _path = os.path.join(os.path.dirname(__file__), "tests", "_hypothesis_stub.py")
+    _spec = importlib.util.spec_from_file_location("hypothesis", _path)
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies

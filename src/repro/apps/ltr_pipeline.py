@@ -79,8 +79,12 @@ def build_ltr_stages() -> Tuple[list, List[str]]:
             inputCol="amenities_idx", outputCol="amenity_count", op="count", maskValue=0,
         ),
         LogTransformer(inputCol="amenity_count", outputCol="amenity_count_log", alpha=1.0, inputDtype="float32"),
-        # --- categorical ids (4) ----------------------------------------------
+        # --- categorical ids (5) ----------------------------------------------
         StringIndexEstimator(inputCol="destination", outputCol="dest_idx", numOOVIndices=1),
+        # dual encoding: vocab index + collision-tolerant hash of the SAME
+        # column (OOV-robust embeddings); the execution planner computes the
+        # shared seed-0 hash once for both stages
+        HashIndexTransformer(inputCol="destination", outputCol="dest_hash", numBins=4096),
         HashIndexTransformer(inputCol="user_id", outputCol="user_hash", inputDtype="string", numBins=65536),
         BloomEncodeTransformer(inputCol="item_id", outputCol="item_bloom", inputDtype="string", numBins=4096, numHashes=2),
         QuantileBinEstimator(inputCol="price_log", outputCol="price_bucket", numBuckets=8),

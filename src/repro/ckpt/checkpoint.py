@@ -28,11 +28,41 @@ import time
 from typing import Any, Dict, Optional
 
 import jax
-import msgpack
 import numpy as np
-import zstandard
+import zlib
 
 _MANIFEST = "MANIFEST.zst"
+
+# ``zstandard``/``msgpack`` are optional: lazy-import with a stdlib
+# (zlib+json) fallback, flagged by a 2-byte header so either build can read
+# manifests written by the other.  Headerless blobs are legacy zstd+msgpack.
+_MAN_MAGIC_ZSTD = b"\x01Z"
+_MAN_MAGIC_ZLIB = b"\x01G"
+
+
+def _pack_manifest(manifest: dict) -> bytes:
+    try:
+        import msgpack
+        import zstandard
+
+        return _MAN_MAGIC_ZSTD + zstandard.ZstdCompressor().compress(
+            msgpack.packb(manifest)
+        )
+    except ImportError:
+        return _MAN_MAGIC_ZLIB + zlib.compress(
+            json.dumps(manifest).encode("utf-8"), 6
+        )
+
+
+def _unpack_manifest(blob: bytes) -> dict:
+    if blob[:2] == _MAN_MAGIC_ZLIB:
+        return json.loads(zlib.decompress(blob[2:]).decode("utf-8"))
+    if blob[:2] == _MAN_MAGIC_ZSTD:
+        blob = blob[2:]
+    import msgpack
+    import zstandard
+
+    return msgpack.unpackb(zstandard.ZstdDecompressor().decompress(blob))
 
 
 def _flatten(tree):
@@ -63,7 +93,7 @@ def save_checkpoint(directory: str, step: int, tree: Any, keep: int = 3) -> str:
                 "digest": hashlib.sha1(arr.tobytes()).hexdigest()[:16],
             }
         )
-    blob = zstandard.ZstdCompressor().compress(msgpack.packb(manifest))
+    blob = _pack_manifest(manifest)
     with open(tmp / _MANIFEST, "wb") as f:
         f.write(blob)
         f.flush()
@@ -105,9 +135,7 @@ def load_checkpoint(
         if step is None:
             raise FileNotFoundError(f"no checkpoint under {directory}")
     path = root / f"step_{step:08d}"
-    manifest = msgpack.unpackb(
-        zstandard.ZstdDecompressor().decompress((path / _MANIFEST).read_bytes())
-    )
+    manifest = _unpack_manifest((path / _MANIFEST).read_bytes())
     leaves_meta = manifest["leaves"]
     ref_leaves, treedef = _flatten(tree_like)
     if len(ref_leaves) != len(leaves_meta):

@@ -13,6 +13,7 @@ from . import types
 from .engine import Engine
 from .export import PreprocessModel
 from .pipeline import FittedPipeline, KamaeSparkPipeline, Pipeline
+from .plan import TransformPlan
 from .stage import Estimator, FittedStage, Stage, Transformer
 from .estimators import (
     ImputeEstimator,
@@ -36,6 +37,7 @@ __all__ = [
     "Pipeline",
     "KamaeSparkPipeline",
     "FittedPipeline",
+    "TransformPlan",
     "Stage",
     "Transformer",
     "Estimator",

@@ -80,14 +80,20 @@ class Engine:
         return wrapper
 
     def jit_transform(self, fn: Callable):
-        """batch -> batch, sharded in and out along the data axes."""
+        """batch -> batch, sharded in and out along the data axes.
+
+        The wrapper cache is keyed on the full input signature — names,
+        shapes AND dtypes — so a batch-size change compiles a new entry
+        instead of silently re-tracing an existing one."""
         if self.mesh is None:
             return jax.jit(fn)
         batch_sh = self.batch_sharding()
         jitted = {}
 
         def wrapper(batch):
-            key = tuple(sorted(batch.keys()))
+            key = tuple(
+                (k, tuple(v.shape), str(v.dtype)) for k, v in sorted(batch.items())
+            )
             if key not in jitted:
                 jitted[key] = jax.jit(
                     fn,

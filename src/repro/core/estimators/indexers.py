@@ -46,7 +46,7 @@ class StringIndexEstimator(Estimator):
         for x in inputs:
             if not T.is_string_col(x):
                 x = strops.number_to_string(x, self.maxLen)
-            h = hashing.fnv1a64(x)
+            h = hashing.fnv1a64_routed(x)
             table = sketches.vocab_update(table, h, x)
         return table
 
@@ -109,10 +109,13 @@ class StringIndexEstimator(Estimator):
     def vocab_size(self, weights) -> int:
         return self.vocab_base + int(weights["hash_keys"].shape[0])
 
-    def _lookup(self, weights, x: jax.Array) -> jax.Array:
-        if not T.is_string_col(x):
-            x = strops.number_to_string(x, self.maxLen)
-        h = hashing.fnv1a64(x)
+    def _lookup(self, weights, x: jax.Array, h: Optional[jax.Array] = None) -> jax.Array:
+        """Index lookup; ``h`` may carry a precomputed (planner-CSE'd) hash —
+        the input bytes are only ever consumed through it."""
+        if h is None:
+            if not T.is_string_col(x):
+                x = strops.number_to_string(x, self.maxLen)
+            h = hashing.fnv1a64_routed(x)
         table = weights["hash_keys"]
         v = table.shape[0]
         pos = jnp.clip(jnp.searchsorted(table, h), 0, max(v - 1, 0))
@@ -134,6 +137,19 @@ class StringIndexEstimator(Estimator):
 
     def apply(self, weights, inputs):
         return tuple(self._lookup(weights, x) for x in inputs)
+
+    # planner protocol: one seed-0 hash per input column, shared via the
+    # plan; numeric ids are hashed through their decimal-string widening
+    # (mirroring _lookup), so the planner may stringify on our behalf
+    plan_hash_stringify = True
+
+    def plan_hash_seeds(self):
+        return [0]
+
+    def apply_hashed(self, weights, inputs, hashes):
+        return tuple(
+            self._lookup(weights, x, h=hs[0]) for x, hs in zip(inputs, hashes)
+        )
 
 
 @register_stage
@@ -158,7 +174,13 @@ class OneHotEncodeEstimator(StringIndexEstimator):
 
     def apply(self, weights, inputs):
         (x,) = inputs
-        idx = self._lookup(weights, x)
+        return (self._onehot(weights, self._lookup(weights, x)),)
+
+    def apply_hashed(self, weights, inputs, hashes):
+        (x,), (hs,) = inputs, hashes
+        return (self._onehot(weights, self._lookup(weights, x, h=hs[0])),)
+
+    def _onehot(self, weights, idx):
         base = self.vocab_base
         v = int(weights["hash_keys"].shape[0])
         if self.dropUnseen:
@@ -169,5 +191,4 @@ class OneHotEncodeEstimator(StringIndexEstimator):
             depth = mask_slots + v
         else:
             depth = base + v
-        onehot = (idx[..., None] == jnp.arange(depth)).astype(jnp.dtype(self.oneHotDtype))
-        return (onehot,)
+        return (idx[..., None] == jnp.arange(depth)).astype(jnp.dtype(self.oneHotDtype))

@@ -8,26 +8,39 @@ input_cols, output_cols)``.  The exported object
   and win 61% latency over pipeline-interpreting MLeap;
 * performs dead-column elimination when ``outputs`` is given (serve only
   computes what the model consumes);
-* serialises to a single zstd-compressed msgpack blob with NO pipeline /
-  estimator / fit-engine dependencies — loading needs only this module and
-  the stateless stage op registry (the analogue of "a generic Keras model
-  without Kamae's package dependencies").
+* serialises to a single compressed blob with NO pipeline / estimator /
+  fit-engine dependencies — loading needs only this module and the stateless
+  stage op registry (the analogue of "a generic Keras model without Kamae's
+  package dependencies").  The container is self-describing (``RPP1`` header
+  + packer/codec flags): zstd+msgpack when available, stdlib zlib+json
+  otherwise, so a bare-python serving host can still load bundles.
 """
 from __future__ import annotations
 
-import io
+import base64
+import json
+import zlib
 from typing import Dict, List, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
-import msgpack
 import numpy as np
-import zstandard
 
 from . import types as T
 from .stage import STAGE_REGISTRY, stage_from_config
 
 _FORMAT_VERSION = 1
+
+# Self-describing container header: magic + packer flag + codec flag.
+# ``zstandard`` / ``msgpack`` are deliberately NOT imported at module scope —
+# they are optional, and the stdlib fallbacks (zlib / json+base64) keep the
+# bundle loadable on a bare-python serving host.  Legacy blobs (pre-header,
+# raw zstd stream) are still recognised on load.
+_MAGIC = b"RPP1"
+_PACKER_MSGPACK = b"M"
+_PACKER_JSON = b"J"
+_CODEC_ZSTD = b"Z"
+_CODEC_ZLIB = b"G"
+_CODEC_RAW = b"R"
 
 
 def _pack_array(a) -> dict:
@@ -37,6 +50,65 @@ def _pack_array(a) -> dict:
 
 def _unpack_array(d) -> np.ndarray:
     return np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])).reshape(d["shape"])
+
+
+def _pack_payload(payload: dict) -> tuple:
+    """(packer_flag, bytes) using msgpack when available, json+base64 else."""
+    try:
+        import msgpack
+
+        return _PACKER_MSGPACK, msgpack.packb(payload, use_bin_type=True)
+    except ImportError:
+        def enc(o):
+            if isinstance(o, bytes):
+                return {"__b64__": base64.b64encode(o).decode("ascii")}
+            if isinstance(o, dict):
+                return {k: enc(v) for k, v in o.items()}
+            if isinstance(o, (list, tuple)):
+                return [enc(v) for v in o]
+            return o
+
+        return _PACKER_JSON, json.dumps(enc(payload)).encode("utf-8")
+
+
+def _unpack_payload(flag: bytes, raw: bytes) -> dict:
+    if flag == _PACKER_MSGPACK:
+        import msgpack
+
+        return msgpack.unpackb(raw, raw=False)
+    if flag == _PACKER_JSON:
+        def dec(o):
+            if isinstance(o, dict):
+                if set(o.keys()) == {"__b64__"}:
+                    return base64.b64decode(o["__b64__"])
+                return {k: dec(v) for k, v in o.items()}
+            if isinstance(o, list):
+                return [dec(v) for v in o]
+            return o
+
+        return dec(json.loads(raw.decode("utf-8")))
+    raise ValueError(f"unknown packer flag {flag!r}")
+
+
+def _compress(raw: bytes) -> tuple:
+    try:
+        import zstandard
+
+        return _CODEC_ZSTD, zstandard.ZstdCompressor(level=9).compress(raw)
+    except ImportError:
+        return _CODEC_ZLIB, zlib.compress(raw, 6)
+
+
+def _decompress(flag: bytes, body: bytes) -> bytes:
+    if flag == _CODEC_ZSTD:
+        import zstandard
+
+        return zstandard.ZstdDecompressor().decompress(body)
+    if flag == _CODEC_ZLIB:
+        return zlib.decompress(body)
+    if flag == _CODEC_RAW:
+        return body
+    raise ValueError(f"unknown codec flag {flag!r}")
 
 
 class PreprocessModel:
@@ -75,10 +147,19 @@ class PreprocessModel:
             b = s.transform(b)
         return b
 
+    def plan(self, outputs: Optional[Sequence[str]] = None):
+        """Compile-once execution plan over the exported node list (see
+        :mod:`repro.core.plan`): coercion/hash CSE + persistent jit cache."""
+        from .plan import TransformPlan
+
+        return TransformPlan(self._stages, outputs=outputs)
+
     def jit(self):
-        """The fused single-XLA-program path (used by FusedModel)."""
+        """The fused single-XLA-program path (used by FusedModel).  Backed by
+        a :class:`~repro.core.plan.TransformPlan`, so repeated calls with the
+        same input signature never re-trace."""
         if self._jitted is None:
-            self._jitted = jax.jit(self.__call__)
+            self._jitted = self.plan()
         return self._jitted
 
     @property
@@ -103,8 +184,9 @@ class PreprocessModel:
                 for n in self.nodes
             ],
         }
-        raw = msgpack.packb(payload, use_bin_type=True)
-        return zstandard.ZstdCompressor(level=9).compress(raw)
+        packer, raw = _pack_payload(payload)
+        codec, body = _compress(raw)
+        return _MAGIC + packer + codec + body
 
     def save(self, path: str) -> None:
         with open(path, "wb") as f:
@@ -112,8 +194,17 @@ class PreprocessModel:
 
     @classmethod
     def load_bytes(cls, blob: bytes) -> "PreprocessModel":
-        raw = zstandard.ZstdDecompressor().decompress(blob)
-        payload = msgpack.unpackb(raw, raw=False)
+        if blob[: len(_MAGIC)] == _MAGIC:
+            packer = blob[4:5]
+            codec = blob[5:6]
+            raw = _decompress(codec, blob[6:])
+            payload = _unpack_payload(packer, raw)
+        else:  # legacy v1 blob: headerless zstd-compressed msgpack
+            import msgpack
+            import zstandard
+
+            raw = zstandard.ZstdDecompressor().decompress(blob)
+            payload = msgpack.unpackb(raw, raw=False)
         if payload["version"] != _FORMAT_VERSION:
             raise ValueError(f"unsupported bundle version {payload['version']}")
         nodes = [

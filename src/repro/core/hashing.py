@@ -12,6 +12,8 @@ assert bit-exactness against these functions.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 
 from . import types as _types  # noqa: F401  (enables x64 before uint64 constants)
@@ -42,15 +44,20 @@ def fnv1a64(strings: jax.Array, seed: int = 0) -> jax.Array:
     Returns:
       uint64 array ``(...,)``.  Padding bytes (0) do not update the state, so
       hashes are max_len-invariant.
+
+    Implementation: a ``lax.scan`` over the byte axis.  The per-step ops are
+    identical to the historical unrolled loop (so results are bit-exact), but
+    the traced/lowered program is O(1) in ``max_len`` instead of O(max_len) —
+    this dominates whole-pipeline trace time once dozens of stages hash
+    32-to-64-byte columns.
     """
-    s = strings.astype(jnp.uint64)
-    h = jnp.full(strings.shape[:-1], FNV_OFFSET ^ jnp.uint64(seed), jnp.uint64)
-    # max_len is small and static: unrolled loop lowers to a short chain of
-    # elementwise int ops, which XLA fuses into one kernel.
-    for i in range(strings.shape[-1]):
-        b = s[..., i]
-        upd = (h ^ b) * FNV_PRIME
-        h = jnp.where(b == 0, h, upd)
+    s = jnp.moveaxis(strings, -1, 0).astype(jnp.uint64)  # (L, ...)
+    h0 = jnp.full(strings.shape[:-1], FNV_OFFSET ^ jnp.uint64(seed), jnp.uint64)
+
+    def step(h, b):
+        return jnp.where(b == 0, h, (h ^ b) * FNV_PRIME), None
+
+    h, _ = jax.lax.scan(step, h0, s)
     return _avalanche(h)
 
 
@@ -85,3 +92,46 @@ def hash_int64(values: jax.Array, seed: int = 0) -> jax.Array:
 
 def int_to_bins(values: jax.Array, num_bins: int, seed: int = 0) -> jax.Array:
     return (fold32(hash_int64(values, seed)) % jnp.uint32(num_bins)).astype(jnp.int64)
+
+
+# ---------------------------------------------------------------------------
+# Pallas routing: on TPU the batch hashing hot path runs the bloom_hash
+# kernel (bit-exact 32-bit-limb FNV); everywhere else the jnp scan above.
+# REPRO_HASH_KERNEL=1 forces the kernel (interpret mode off-TPU, for tests);
+# =0 forces the jnp path even on TPU.
+# ---------------------------------------------------------------------------
+
+def kernel_active() -> bool:
+    flag = os.environ.get("REPRO_HASH_KERNEL")
+    if flag is not None:
+        return flag not in ("0", "false", "")
+    return jax.default_backend() == "tpu"
+
+
+def fnv1a64_routed(strings: jax.Array, seed: int = 0) -> jax.Array:
+    """fnv1a64, routed through the Pallas kernel when it is the fast path.
+
+    The kernel carries the hash as two uint32 limbs (seed folded into the low
+    limb), so only seeds < 2**32 are kernel-eligible; larger seeds fall back.
+    """
+    if kernel_active() and 0 <= seed < 2**32:
+        from repro.kernels.bloom_hash import ops as khash
+
+        return khash.fnv1a64_raw(strings, seed)
+    return fnv1a64(strings, seed)
+
+
+def hash_to_bins_routed(strings: jax.Array, num_bins: int, seed: int = 0) -> jax.Array:
+    if kernel_active() and 0 <= seed < 2**32:
+        from repro.kernels.bloom_hash import ops as khash
+
+        return khash.hash_indices_seeded(strings, num_bins, seed)
+    return hash_to_bins(strings, num_bins, seed)
+
+
+def bloom_indices_routed(strings: jax.Array, num_bins: int, num_hashes: int) -> jax.Array:
+    if kernel_active():
+        from repro.kernels.bloom_hash import ops as khash
+
+        return khash.bloom_indices(strings, num_bins, num_hashes)
+    return bloom_indices(strings, num_bins, num_hashes)

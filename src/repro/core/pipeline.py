@@ -13,6 +13,8 @@ PreprocessModel` — the JAX analogue of ``build_keras_model`` in Listing 1.
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import weakref
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Union
 
 import jax
@@ -63,6 +65,22 @@ class Pipeline:
             for s in self.stages
         ]
 
+        # One cached peek discovers the raw column names; availability in
+        # every later pass derives from these names plus stage metadata, and
+        # the peeked batch is chained back into the first streaming pass — so
+        # a one-epoch data factory is not consumed one extra batch per pass.
+        # An all-transformer pipeline never touches the data at all.
+        raw_cols: frozenset = frozenset()
+        leftover: Optional[Iterable[T.Batch]] = None
+        if any(r is None for r in resolved):
+            peek_iter = iter(factory())
+            try:
+                first_batch = next(peek_iter)
+            except StopIteration:
+                raise ValueError("data factory yielded no batches")
+            raw_cols = frozenset(first_batch.keys())
+            leftover = itertools.chain([first_batch], peek_iter)
+
         n_passes = 0
         while any(r is None for r in resolved):
             n_passes += 1
@@ -71,8 +89,7 @@ class Pipeline:
             # estimators fittable this pass: all inputs TRANSITIVELY
             # producible from raw columns through already-resolved stages
             pending: Dict[int, Estimator] = {}
-            first_batch = next(iter(factory()))
-            available = set(first_batch.keys())
+            available = set(raw_cols)
             for i, s in enumerate(self.stages):
                 if resolved[i] is not None and all(n in available for n in s.input_names):
                     available.update(s.output_names)
@@ -100,7 +117,9 @@ class Pipeline:
                 return out
 
             step = engine.jit_fit_step(pass_step) if engine is not None else jax.jit(pass_step)
-            for batch in factory():
+            batches = leftover if leftover is not None else factory()
+            leftover = None
+            for batch in batches:
                 stats = step(stats, batch)
             for i, e in pending.items():
                 resolved[i] = FittedStage(e, e.finalize(jax.device_get(stats[i])))
@@ -123,15 +142,40 @@ class FittedPipeline:
         self.pipeline = pipeline
         self.stages = list(resolved)
         self.n_passes = n_passes
+        self._plans: Dict[tuple, object] = {}
+        # weak keys: a dead Engine must not pin its mesh, and a recycled
+        # object address must not resurrect a stale compiled wrapper
+        self._engine_jits = weakref.WeakKeyDictionary()
 
     def transform(self, batch: T.Batch) -> T.Batch:
+        """Interpreted reference path (one XLA dispatch per op)."""
         b = dict(batch)
         for s in self.stages:
             b = s.transform(b)
         return b
 
+    def plan(self, outputs: Optional[Sequence[str]] = None, donate: bool = False):
+        """Compile-once execution plan (see :mod:`repro.core.plan`): dead
+        columns eliminated, coercions/hashes CSE'd, jit cached persistently."""
+        from .plan import TransformPlan
+
+        key = (tuple(outputs) if outputs is not None else None, donate)
+        p = self._plans.get(key)
+        if p is None:
+            p = TransformPlan(self.stages, outputs=outputs, donate=donate)
+            self._plans[key] = p
+        return p
+
     def transform_jit(self, batch: T.Batch, engine=None) -> T.Batch:
-        fn = engine.jit_transform(self.transform) if engine is not None else jax.jit(self.transform)
+        """Compiled transform.  The compiled function is cached on the
+        instance (the historical version rebuilt ``jax.jit`` — and therefore
+        re-traced — on every call)."""
+        if engine is None:
+            return self.plan()(batch)
+        fn = self._engine_jits.get(engine)
+        if fn is None:
+            fn = engine.jit_transform(self.plan().fn)
+            self._engine_jits[engine] = fn
         return fn(batch)
 
     # ------------------------------------------------------------------

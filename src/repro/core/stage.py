@@ -104,6 +104,20 @@ class Stage:
             return strops.string_to_number(y, self.outputDtype)
         return y.astype(jnp.dtype(self.outputDtype))
 
+    # ---- planner protocol (see repro.core.plan) ---------------------------
+    def plan_hash_seeds(self) -> Optional[List[int]]:
+        """fnv1a64 seeds this stage consumes per (stringified) input column,
+        or None if the stage does not hash.  Stages returning seeds must also
+        implement :meth:`apply_hashed`; the planner then computes each
+        (column, seed) hash once and shares it across stages."""
+        return None
+
+    def apply_hashed(self, weights, inputs, hashes):
+        """Like ``apply`` but with precomputed hashes: ``hashes[i][j]`` is the
+        uint64 fnv1a64 of the string view of ``inputs[i]`` under
+        ``plan_hash_seeds()[j]``."""
+        raise NotImplementedError
+
     # ---- serialisation ----------------------------------------------------
     def config(self) -> Dict[str, Any]:
         cfg = dataclasses.asdict(self)
@@ -198,6 +212,12 @@ class FittedStage:
 
     def apply(self, weights, inputs):
         return self.stage.apply(weights, inputs)
+
+    def plan_hash_seeds(self):
+        return self.stage.plan_hash_seeds()
+
+    def apply_hashed(self, weights, inputs, hashes):
+        return self.stage.apply_hashed(weights, inputs, hashes)
 
     def _coerce(self, x):
         return self.stage._coerce(x)

@@ -67,19 +67,27 @@ def string_to_number(strings: jax.Array, dtype: str = "float32") -> jax.Array:
 
     Unparseable strings yield NaN for float dtypes and 0 for int dtypes.
     Exponent notation is not supported (documented limitation).
+
+    The per-byte parser state advances via ``lax.scan`` over the byte axis:
+    step ops match the historical unrolled loop exactly (bit-exact results,
+    asserted by tests) while the traced program is O(1) in ``max_len``.
     """
     s = strings.astype(jnp.int32)
     L = strings.shape[-1]
     shape = strings.shape[:-1]
 
-    val = jnp.zeros(shape, jnp.float64)
-    scale = jnp.ones(shape, jnp.float64)  # 10^-k after the k-th fraction digit
-    seen_dot = jnp.zeros(shape, bool)
-    seen_digit = jnp.zeros(shape, bool)
-    invalid = jnp.zeros(shape, bool)
-    neg = jnp.zeros(shape, bool)
-    for i in range(L):
-        c = s[..., i]
+    init = (
+        jnp.zeros(shape, jnp.float64),  # val
+        jnp.ones(shape, jnp.float64),   # scale: 10^-k after k-th fraction digit
+        jnp.zeros(shape, bool),         # seen_dot
+        jnp.zeros(shape, bool),         # seen_digit
+        jnp.zeros(shape, bool),         # invalid
+        jnp.zeros(shape, bool),         # neg
+    )
+
+    def step(carry, xs):
+        val, scale, seen_dot, seen_digit, invalid, neg = carry
+        c, i = xs
         is_nul = c == 0
         is_digit = (c >= 48) & (c <= 57)
         is_dot = c == 46
@@ -92,6 +100,10 @@ def string_to_number(strings: jax.Array, dtype: str = "float32") -> jax.Array:
         invalid = invalid | ~(is_nul | is_digit | is_dot | is_sign) | (is_dot & seen_dot)
         seen_dot = seen_dot | is_dot
         neg = jnp.where(is_sign & (c == 45), True, neg)
+        return (val, scale, seen_dot, seen_digit, invalid, neg), None
+
+    xs = (jnp.moveaxis(s, -1, 0), jnp.arange(L, dtype=jnp.int32))
+    (val, _, _, seen_digit, invalid, neg), _ = jax.lax.scan(step, init, xs)
     invalid = invalid | ~seen_digit
     out = jnp.where(neg, -val, val)
     jdt = jnp.dtype(dtype)
@@ -243,14 +255,21 @@ def split_to_list(
     s = strings.reshape(N, L)
 
     raw = _match_at(s, separator)  # (N, L)
-    # Greedy non-overlap: sequential covered-until carry over the byte axis.
-    starts = []
-    cu = jnp.zeros((N,), jnp.int32)
-    for p in range(L):
-        act = raw[:, p] & (p >= cu)
+
+    # Greedy non-overlap: sequential covered-until carry over the byte axis,
+    # expressed as a scan so the trace does not unroll L steps.
+    def carry_step(cu, xs):
+        rawp, p = xs
+        act = rawp & (p >= cu)
         cu = jnp.where(act, p + d, cu)
-        starts.append(act)
-    start = jnp.stack(starts, axis=1)  # (N, L) actual delimiter starts
+        return cu, act
+
+    _, start_t = jax.lax.scan(
+        carry_step,
+        jnp.zeros((N,), jnp.int32),
+        (jnp.moveaxis(raw, 1, 0), jnp.arange(L, dtype=jnp.int32)),
+    )
+    start = jnp.moveaxis(start_t, 0, 1)  # (N, L) actual delimiter starts
     # chars covered by a delimiter occurrence
     covered = jnp.zeros((N, L), bool)
     for j in range(d):

@@ -25,9 +25,22 @@ class HashIndexTransformer(Transformer):
     def apply(self, weights, inputs):
         (x,) = inputs
         if T.is_string_col(x):
-            idx = hashing.hash_to_bins(x, self.numBins, self.seed)
+            idx = hashing.hash_to_bins_routed(x, self.numBins, self.seed)
         else:
             idx = hashing.int_to_bins(x, self.numBins, self.seed)
+        return (idx + self.indexOffset,)
+
+    # planner protocol: bins derive from one shared fnv1a64(seed) hash.  Only
+    # valid for string inputs (numeric ids use splitmix, not FNV) — the
+    # planner falls back to ``apply`` when the input is not a byte column.
+    plan_hash_stringify = False
+
+    def plan_hash_seeds(self):
+        return [self.seed]
+
+    def apply_hashed(self, weights, inputs, hashes):
+        h = hashes[0][0]
+        idx = (hashing.fold32(h) % jnp.uint32(self.numBins)).astype(jnp.int64)
         return (idx + self.indexOffset,)
 
 
@@ -52,7 +65,25 @@ class BloomEncodeTransformer(Transformer):
 
             idx = khash.bloom_indices(x, self.numBins, self.numHashes)
         else:
-            idx = hashing.bloom_indices(x, self.numBins, self.numHashes)
+            idx = hashing.bloom_indices_routed(x, self.numBins, self.numHashes)
+        return (idx + self.indexOffset,)
+
+    # planner protocol: numHashes seeded hashes per input, shared via the
+    # plan; numeric ids hash through their decimal-string widening (as apply)
+    plan_hash_stringify = True
+
+    def plan_hash_seeds(self):
+        return list(range(self.numHashes))
+
+    def apply_hashed(self, weights, inputs, hashes):
+        hs = hashes[0]
+        idx = jnp.stack(
+            [
+                (hashing.fold32(h) % jnp.uint32(self.numBins)).astype(jnp.int64)
+                for h in hs
+            ],
+            axis=-1,
+        )
         return (idx + self.indexOffset,)
 
 

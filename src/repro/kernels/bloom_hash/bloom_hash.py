@@ -72,9 +72,8 @@ def _fmix64(h_hi, h_lo):
     return h_hi, h_lo
 
 
-def _kernel(seeds_ref, bytes_ref, out_ref, *, num_bins: int, max_len: int):
-    seed = seeds_ref[0]  # uint32 seed for this program (seeds < 2^32 here)
-    b = bytes_ref[...]  # (BLOCK_N, L) int32
+def _hash_block(seed, b, max_len: int):
+    """(BLOCK_N, L) int32 bytes -> avalanched (h_hi, h_lo) uint32 limbs."""
     n = b.shape[0]
     h_hi = jnp.full((n,), _u32(FNV_OFFSET >> 32), jnp.uint32)
     h_lo = jnp.full((n,), _u32(FNV_OFFSET & 0xFFFFFFFF), jnp.uint32) ^ seed
@@ -86,9 +85,39 @@ def _kernel(seeds_ref, bytes_ref, out_ref, *, num_bins: int, max_len: int):
         live = byte != 0  # zero padding leaves the state untouched
         h_hi = jnp.where(live, n_hi, h_hi)
         h_lo = jnp.where(live, n_lo, h_lo)
-    h_hi, h_lo = _fmix64(h_hi, h_lo)
+    return _fmix64(h_hi, h_lo)
+
+
+def _kernel(seeds_ref, bytes_ref, out_ref, *, num_bins: int, max_len: int):
+    seed = seeds_ref[0]  # uint32 seed for this program (seeds < 2^32 here)
+    h_hi, h_lo = _hash_block(seed, bytes_ref[...], max_len)
     folded = h_hi ^ h_lo
     out_ref[...] = (folded % _u32(num_bins)).astype(jnp.int32)[None, :]
+
+
+def _kernel_raw(seeds_ref, bytes_ref, hi_ref, lo_ref, *, max_len: int):
+    """Raw-hash variant: emits the 64-bit hash as uint32 limbs (no fold/mod),
+    for consumers that need the full hash (vocab searchsorted lookup)."""
+    seed = seeds_ref[0]
+    h_hi, h_lo = _hash_block(seed, bytes_ref[...], max_len)
+    hi_ref[...] = h_hi[None, :]
+    lo_ref[...] = h_lo[None, :]
+
+
+def _padded(byte_tensor: jax.Array, block_n: int):
+    N = byte_tensor.shape[0]
+    pad = (-N) % block_n
+    if pad:
+        byte_tensor = jnp.pad(byte_tensor, ((0, pad), (0, 0)))
+    return byte_tensor, N
+
+
+def _resolve_seeds(num_hashes: int, seeds) -> jax.Array:
+    if seeds is None:
+        return jnp.arange(num_hashes, dtype=jnp.uint32)
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    assert seeds.shape == (num_hashes,)
+    return seeds
 
 
 def bloom_hash_kernel(
@@ -97,13 +126,11 @@ def bloom_hash_kernel(
     num_hashes: int,
     block_n: int = 1024,
     interpret: bool = True,
+    seeds=None,  # optional (num_hashes,) uint32; default arange(num_hashes)
 ) -> jax.Array:
-    N, L = byte_tensor.shape
-    pad = (-N) % block_n
-    if pad:
-        byte_tensor = jnp.pad(byte_tensor, ((0, pad), (0, 0)))
-    Np = byte_tensor.shape[0]
-    seeds = jnp.arange(num_hashes, dtype=jnp.uint32)
+    byte_tensor, N = _padded(byte_tensor, block_n)
+    Np, L = byte_tensor.shape
+    seeds = _resolve_seeds(num_hashes, seeds)
     out = pl.pallas_call(
         functools.partial(_kernel, num_bins=num_bins, max_len=L),
         grid=(num_hashes, Np // block_n),
@@ -116,3 +143,33 @@ def bloom_hash_kernel(
         interpret=interpret,
     )(seeds, byte_tensor)
     return out[:, :N].T  # (N, num_hashes)
+
+
+def bloom_hash_kernel_raw(
+    byte_tensor: jax.Array,  # (N, L) int32
+    num_hashes: int,
+    block_n: int = 1024,
+    interpret: bool = True,
+    seeds=None,
+):
+    """Like :func:`bloom_hash_kernel` but returns the raw 64-bit hashes as
+    ``(hi, lo)`` uint32 arrays of shape (N, num_hashes)."""
+    byte_tensor, N = _padded(byte_tensor, block_n)
+    Np, L = byte_tensor.shape
+    seeds = _resolve_seeds(num_hashes, seeds)
+    spec = pl.BlockSpec((1, block_n), lambda k, i: (k, i))
+    hi, lo = pl.pallas_call(
+        functools.partial(_kernel_raw, max_len=L),
+        grid=(num_hashes, Np // block_n),
+        in_specs=[
+            pl.BlockSpec((1,), lambda k, i: (k,)),
+            pl.BlockSpec((block_n, L), lambda k, i: (i, 0)),
+        ],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_hashes, Np), jnp.uint32),
+            jax.ShapeDtypeStruct((num_hashes, Np), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(seeds, byte_tensor)
+    return hi[:, :N].T, lo[:, :N].T

@@ -5,27 +5,51 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .bloom_hash import bloom_hash_kernel
+from .bloom_hash import bloom_hash_kernel, bloom_hash_kernel_raw
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _flat(strings: jax.Array):
+    lead = strings.shape[:-1]
+    return strings.reshape(-1, strings.shape[-1]).astype(jnp.int32), lead
+
+
 def bloom_indices(strings: jax.Array, num_bins: int, num_hashes: int) -> jax.Array:
     """(..., L) uint8 -> (..., num_hashes) int64 bloom bin indices."""
-    lead = strings.shape[:-1]
-    L = strings.shape[-1]
-    flat = strings.reshape(-1, L).astype(jnp.int32)
+    flat, lead = _flat(strings)
     out = bloom_hash_kernel(flat, num_bins, num_hashes, interpret=_interpret())
     return out.reshape(lead + (num_hashes,)).astype(jnp.int64)
 
 
 def hash_indices(strings: jax.Array, num_bins: int, seed: int = 0) -> jax.Array:
-    """Single-seed hash indexing through the same kernel (seed 0 only in the
-    kernel grid; other seeds use the jnp path)."""
-    if seed != 0:
+    """Single-seed hash indexing through the same kernel."""
+    return hash_indices_seeded(strings, num_bins, seed)
+
+
+def hash_indices_seeded(strings: jax.Array, num_bins: int, seed: int = 0) -> jax.Array:
+    """(..., L) uint8 -> (...,) int64 hash-bin indices for one arbitrary
+    uint32 seed (the kernel folds the seed into the low hash limb)."""
+    if not 0 <= seed < 2**32:
         from repro.core import hashing
 
         return hashing.hash_to_bins(strings, num_bins, seed)
-    return bloom_indices(strings, num_bins, 1)[..., 0]
+    flat, lead = _flat(strings)
+    seeds = jnp.asarray([seed], jnp.uint32)
+    out = bloom_hash_kernel(flat, num_bins, 1, interpret=_interpret(), seeds=seeds)
+    return out[..., 0].reshape(lead).astype(jnp.int64)
+
+
+def fnv1a64_raw(strings: jax.Array, seed: int = 0) -> jax.Array:
+    """(..., L) uint8 -> (...,) uint64 raw avalanched hash via the kernel.
+
+    Bit-exact with ``repro.core.hashing.fnv1a64``: the kernel emits the two
+    uint32 limbs and they are recombined here (x64 mode is enabled by
+    ``repro.core.types``)."""
+    flat, lead = _flat(strings)
+    seeds = jnp.asarray([seed], jnp.uint32)
+    hi, lo = bloom_hash_kernel_raw(flat, 1, interpret=_interpret(), seeds=seeds)
+    h = (hi[:, 0].astype(jnp.uint64) << jnp.uint64(32)) | lo[:, 0].astype(jnp.uint64)
+    return h.reshape(lead)

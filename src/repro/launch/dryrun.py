@@ -134,7 +134,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     model = registry.build(cfg)
     bspec = P(data_ax)
 
-    with jax.set_mesh(mesh):
+    with meshlib.use_mesh(mesh):
         if kind == "train":
             step = make_train_step(model, AdamWConfig(), accum=accum)
             state = train_state_abstract(model)

@@ -13,12 +13,29 @@ from typing import Tuple
 import jax
 
 
+def _make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types where supported (jax >= 0.5);
+    0.4.x has neither the kwarg nor jax.sharding.AxisType."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
+
+
+def use_mesh(mesh):
+    """Context manager making ``mesh`` the ambient mesh: ``jax.set_mesh``
+    (jax >= 0.6) / ``jax.sharding.use_mesh`` (0.5.x) / the Mesh object's own
+    context manager (0.4.x resource-env semantics)."""
+    fn = getattr(jax, "set_mesh", None) or getattr(jax.sharding, "use_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh
 
 
 def data_axes(mesh) -> Tuple[str, ...]:
@@ -30,7 +47,4 @@ def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (host) devices exist — tests/examples."""
     n = len(jax.devices())
     data = min(data, n // model) or 1
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((data, model), ("data", "model"))

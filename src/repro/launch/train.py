@@ -75,7 +75,7 @@ def main(argv=None):
 
     data = lm_token_batches(args.batch, args.seq, cfg.vocab, args.steps * 2, seed=args.seed)
     losses = []
-    with jax.set_mesh(mesh):
+    with meshlib.use_mesh(mesh):
         for i, batch in enumerate(data):
             step_i = start_step + i
             if step_i >= args.steps:

@@ -20,6 +20,20 @@ from jax.sharding import PartitionSpec as P
 
 Params = Dict[str, jax.Array]
 
+
+def get_abstract_mesh():
+    """``jax.sharding.get_abstract_mesh`` where available (jax >= 0.5),
+    falling back to the private 0.4.x location.  Returns None when no
+    abstract mesh is active (0.4.x exposes the raw thread-local, whose unset
+    value is not an AbstractMesh)."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    from jax._src import mesh as _mesh
+
+    m = _mesh.get_abstract_mesh()
+    return m if isinstance(m, _mesh.AbstractMesh) else None
+
 # logical axis -> mesh axis (None = replicated).  "embed"-like axes use the
 # data axis as an FSDP axis; head/mlp/vocab/expert axes are tensor-parallel.
 DEFAULT_RULES: Dict[str, Any] = {
@@ -48,7 +62,7 @@ def set_batch_axes(axes) -> None:
 
 def constrain(x: jax.Array, *logical: Any) -> jax.Array:
     """with_sharding_constraint by logical axis names; no-op outside a mesh."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty or not mesh.axis_names:
         return x
     spec = []

@@ -76,7 +76,7 @@ def moe_block(p: C.Params, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
     """MoE entry point: picks the shard_map all-to-all path when running
     under a mesh with a "model" axis (the production EP formulation), else
     the single-device sort-based path below."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = C.get_abstract_mesh()
     if (
         getattr(cfg, "moe_shard_map", True)
         and mesh is not None

@@ -37,12 +37,17 @@ class FusedModel:
         self.model_fn = model_fn
         self.params = params
         self.feature_map = feature_map or {}
+        # the fused path traces the preprocessing through its TransformPlan:
+        # coercions/hashes are CSE'd before XLA ever sees them, which keeps
+        # trace time and HLO size down for wide pipelines.  All jit wrappers
+        # are created once here — never per call.
+        self._plan = preprocess.plan()
         self._fused = jax.jit(self._call)
         self._unfused_pre = jax.jit(preprocess.__call__)
         self._unfused_model = jax.jit(model_fn)
 
     def _call(self, params, raw: T.Batch):
-        feats = self.preprocess(raw)
+        feats = self._plan.fn(raw)
         feats = {self.feature_map.get(k, k): v for k, v in feats.items()}
         return self.model_fn(params, feats)
 

@@ -1,0 +1,130 @@
+"""Deterministic stand-in for the subset of ``hypothesis`` this suite uses.
+
+Loaded by the root ``conftest.py`` only when the real package is missing.
+``@given(...)`` turns a property test into a plain pytest function that runs
+``max_examples`` times over pseudo-random draws; the RNG seed is derived from
+the test's qualified name so failures reproduce run-to-run.  No shrinking —
+the first failing example is reported as-is.
+"""
+from __future__ import annotations
+
+import random
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _as_strategy(obj) -> _Strategy:
+    if isinstance(obj, _Strategy):
+        return obj
+    if isinstance(obj, (str, list, tuple)):
+        seq = list(obj)
+        return _Strategy(lambda rng: rng.choice(seq))
+    raise TypeError(f"cannot coerce {obj!r} to a strategy")
+
+
+def _integers(min_value=-(2**63), max_value=2**63 - 1):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value=-1e9, max_value=1e9, allow_nan=False, allow_infinity=False):
+    def draw(rng):
+        # mix uniform and edge draws so bounds get exercised
+        r = rng.random()
+        if r < 0.05:
+            return float(min_value)
+        if r < 0.10:
+            return float(max_value)
+        return rng.uniform(min_value, max_value)
+
+    return _Strategy(draw)
+
+
+def _characters(min_codepoint=32, max_codepoint=126, **_ignored):
+    return _Strategy(lambda rng: chr(rng.randint(min_codepoint, max_codepoint)))
+
+
+def _text(alphabet=None, min_size=0, max_size=20):
+    if alphabet is None:
+        alphabet = _characters()
+    alpha = _as_strategy(alphabet)
+
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return "".join(alpha.example(rng) for _ in range(n))
+
+    return _Strategy(draw)
+
+
+def _lists(elements, min_size=0, max_size=10):
+    elem = _as_strategy(elements)
+
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elem.example(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def _sampled_from(seq):
+    return _as_strategy(seq)
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.floats = _floats
+strategies.text = _text
+strategies.characters = _characters
+strategies.lists = _lists
+strategies.sampled_from = _sampled_from
+
+
+def given(*strats):
+    strats = tuple(_as_strategy(s) for s in strats)
+
+    def decorate(fn):
+        # NB: deliberately not functools.wraps — copying __wrapped__ /
+        # the signature would make pytest treat property args as fixtures
+        def runner(*args, **kwargs):
+            n = getattr(runner, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = random.Random(seed)
+            for i in range(n):
+                vals = tuple(s.example(rng) for s in strats)
+                try:
+                    fn(*args, *vals, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property failed on example {i}: {vals!r}"
+                    ) from e
+
+        # honour @settings applied below @given (decorator order varies)
+        runner._stub_max_examples = getattr(
+            fn, "_stub_max_examples", DEFAULT_MAX_EXAMPLES
+        )
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__module__ = fn.__module__
+        runner.__doc__ = fn.__doc__
+        # mirror the real attribute shape (pytest plugins peek at inner_test)
+        runner.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return runner
+
+    return decorate
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return decorate

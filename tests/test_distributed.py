@@ -36,7 +36,7 @@ def test_distributed_fit_matches_single_device():
         from repro.core import (Engine, KamaeSparkPipeline, StringIndexEstimator,
                                 StandardScaleEstimator, LogTransformer)
         from repro.core import types as T
-        from repro.launch.mesh import make_host_mesh
+        from repro.launch.mesh import make_host_mesh, use_mesh
 
         rng = np.random.default_rng(0)
         n = 1024
@@ -53,7 +53,7 @@ def test_distributed_fit_matches_single_device():
 
         mesh = make_host_mesh(data=8, model=1)
         eng = Engine(mesh)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             sharded = eng.shard_batch(batch)
             dist = mk().fit(sharded, engine=eng)
             o_dist = dist.transform(batch)
@@ -72,7 +72,7 @@ def test_compressed_dp_grads_close_to_exact():
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
         from repro.train.compression import make_compressed_dp_step, init_errors
-        from repro.launch.mesh import make_host_mesh
+        from repro.launch.mesh import make_host_mesh, use_mesh
 
         mesh = make_host_mesh(data=8, model=1)
         rng = np.random.default_rng(0)
@@ -94,7 +94,7 @@ def test_compressed_dp_grads_close_to_exact():
         # compressed distributed
         state = {"params": params, "opt": {}, "errors": init_errors(params)}
         step = make_compressed_dp_step(loss_fn, update_fn, mesh)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             new_state, metrics = step(state, batch)
         w_exact = W - 0.1 * g_exact
         err = float(jnp.max(jnp.abs(new_state["params"]["w"] - w_exact)))
@@ -120,9 +120,9 @@ def test_dryrun_machinery_small_mesh():
         from repro.train import AdamWConfig, make_train_step
         from repro.train.step import train_state_abstract, train_state_pspecs
         from repro.launch.hloanalysis import analyse_hlo
+        from repro.launch.mesh import use_mesh
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
         C.set_batch_axes(("data",))
         cfg = dataclasses.replace(configs.get("codeqwen1_5_7b").smoke(), remat="full")
         model = registry.build(cfg)
@@ -133,7 +133,7 @@ def test_dryrun_machinery_small_mesh():
         ins = {"tokens": jax.ShapeDtypeStruct((8, 128), jnp.int32),
                "labels": jax.ShapeDtypeStruct((8, 128), jnp.int32)}
         in_sh = {k: NamedSharding(mesh, P("data", None)) for k in ins}
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             lowered = jax.jit(step, in_shardings=(state_sh, in_sh),
                               out_shardings=None, donate_argnums=(0,)).lower(state, ins)
             compiled = lowered.compile()

@@ -1,0 +1,211 @@
+"""TransformPlan: planner-vs-interpreter equivalence on the quickstart
+(MovieLens) and LTR pipelines, output pruning + liveness, persistent jit
+cache (no retrace per call), coercion/hash CSE, and the fit-peek economy."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    HashIndexTransformer,
+    KamaeSparkPipeline,
+    LogTransformer,
+    StringIndexEstimator,
+    StringToStringListTransformer,
+    TransformPlan,
+)
+from repro.core import types as T
+
+
+def _assert_batch_equal(a, b, rtol=1e-6):
+    assert set(a.keys()) == set(b.keys())
+    for k in a:
+        x, y = np.asarray(a[k]), np.asarray(b[k])
+        assert x.shape == y.shape, k
+        if np.issubdtype(x.dtype, np.floating):
+            np.testing.assert_allclose(x, y, rtol=rtol, atol=1e-6, err_msg=k)
+        else:
+            np.testing.assert_array_equal(x, y, err_msg=k)
+
+
+@pytest.fixture(scope="module")
+def movielens():
+    rng = np.random.default_rng(1)
+    n = 256
+    batch = {
+        "UserID": jnp.asarray(rng.integers(1, 5000, n), jnp.int32),
+        "MovieID": jnp.asarray(rng.integers(1, 200, n), jnp.int32),
+        "Genres": jnp.asarray(
+            T.encode_strings(
+                rng.choice(["Action|Comedy", "Drama", "Action|Drama|Thriller"], n), 32
+            )
+        ),
+        "Price": jnp.asarray(rng.lognormal(3, 2, n), jnp.float32),
+    }
+    pipe = KamaeSparkPipeline(
+        stages=[
+            HashIndexTransformer(
+                inputCol="UserID", outputCol="UserID_indexed",
+                inputDtype="string", numBins=10000,
+            ),
+            # UserID also vocab-indexed: seed-0 hash shared with nothing (the
+            # hash indexer hashes the stringified id too -> CSE opportunity)
+            StringIndexEstimator(
+                inputCol="UserID", outputCol="UserID_vocab",
+                inputDtype="string", numOOVIndices=1,
+            ),
+            StringIndexEstimator(
+                inputCol="MovieID", outputCol="MovieID_indexed",
+                inputDtype="string", numOOVIndices=1,
+            ),
+            StringToStringListTransformer(
+                inputCol="Genres", outputCol="Genres_split", separator="|",
+                listLength=4, defaultValue="PADDED",
+            ),
+            StringIndexEstimator(
+                inputCol="Genres_split", outputCol="Genres_indexed",
+                numOOVIndices=1, maskToken="PADDED",
+            ),
+            LogTransformer(inputCol="Price", outputCol="Price_log", alpha=1.0),
+        ]
+    )
+    fitted = pipe.fit(batch)
+    return fitted, batch
+
+
+def test_plan_matches_interpreter_quickstart(movielens):
+    fitted, batch = movielens
+    _assert_batch_equal(fitted.transform(batch), fitted.plan()(batch))
+
+
+def test_plan_matches_interpreter_ltr():
+    from repro.apps.ltr_pipeline import build_ltr_pipeline
+    from repro.data import ltr_rows
+
+    train = ltr_rows(96, seed=0)
+    fitted, cols = build_ltr_pipeline(train)
+    batch = {k: v[:24] for k, v in ltr_rows(48, seed=5).items()}
+    ref = fitted.transform(batch)
+    out = fitted.plan()(batch)
+    _assert_batch_equal(ref, out)
+    # constrained-output plan agrees column-by-column and prunes stages
+    plan = fitted.plan(outputs=cols)
+    sub = plan(batch)
+    assert set(sub.keys()) == set(cols)
+    for k in cols:
+        np.testing.assert_allclose(
+            np.asarray(ref[k]), np.asarray(sub[k]), rtol=1e-6, atol=1e-6, err_msg=k
+        )
+    assert plan.stats["n_stages"] < len(fitted.stages)
+
+
+def test_plan_matches_naive_jit_bitwise(movielens):
+    """Planned graph == whole-pipeline jit BIT-exactly (same XLA program
+    modulo CSE — both compiled, so no eager-vs-fused float drift)."""
+    fitted, batch = movielens
+    ref = jax.jit(fitted.transform)(batch)
+    out = fitted.plan()(batch)
+    for k in ref:
+        np.testing.assert_array_equal(
+            np.asarray(ref[k]), np.asarray(out[k]), err_msg=k
+        )
+
+
+def test_plan_jit_cache_no_retrace(movielens):
+    fitted, batch = movielens
+    plan = TransformPlan(fitted.stages)
+    plan(batch)
+    plan(batch)
+    plan(batch)
+    assert plan.stats["trace_count"] == 1
+    assert plan.stats["signatures_seen"] == 1
+    # a new batch size retraces exactly once more
+    half = {k: v[:128] for k, v in batch.items()}
+    plan(half)
+    plan(half)
+    assert plan.stats["trace_count"] == 2
+    assert plan.stats["signatures_seen"] == 2
+
+
+def test_plan_hash_cse_shared(movielens):
+    """Two stages hashing the same column share one fnv1a64 evaluation."""
+    fitted, batch = movielens
+    plan = fitted.plan()
+    # UserID is consumed by both the hash indexer and the vocab indexer with
+    # seed 0 -> at least one shared hash in the static estimate
+    assert plan.cse_stats["hash_shared"] >= 1
+    # and the shared-coercion count sees the duplicated string coercion
+    assert plan.cse_stats["coerce_shared"] >= 1
+    out = plan(batch)
+    _assert_batch_equal(fitted.transform(batch), out)
+
+
+def test_plan_liveness_drops_intermediates(movielens):
+    fitted, batch = movielens
+    plan = fitted.plan(outputs=["Genres_indexed"])
+    out = plan.eager(batch)  # eager path exercises the dead_after drops
+    assert set(out.keys()) == {"Genres_indexed"}
+    np.testing.assert_array_equal(
+        np.asarray(out["Genres_indexed"]),
+        np.asarray(fitted.transform(batch)["Genres_indexed"]),
+    )
+    # some column must die before the end of the schedule
+    assert any(n.dead_after for n in plan._nodes)
+
+
+def test_transform_jit_cached_on_instance(movielens):
+    fitted, batch = movielens
+    out1 = fitted.transform_jit(batch)
+    out2 = fitted.transform_jit(batch)
+    _assert_batch_equal(out1, out2)
+    assert fitted.plan().stats["trace_count"] == 1
+
+
+def test_preprocess_model_jit_is_planned(movielens):
+    fitted, batch = movielens
+    model = fitted.export()
+    out = model.jit()(batch)
+    _assert_batch_equal(model(batch), out)
+    assert model.jit() is model.jit()  # cached, not rebuilt
+
+
+def test_export_serialisation_round_trip_stdlib_codecs(movielens, tmp_path):
+    """save/load works without zstandard/msgpack (stdlib fallback format)."""
+    fitted, batch = movielens
+    model = fitted.export()
+    blob = model.save_bytes()
+    assert blob[:4] == b"RPP1"
+    from repro.core.export import PreprocessModel
+
+    model2 = PreprocessModel.load_bytes(blob)
+    _assert_batch_equal(model(batch), model2(batch))
+    p = tmp_path / "bundle.rpp"
+    model.save(str(p))
+    model3 = PreprocessModel.load(str(p))
+    _assert_batch_equal(model(batch), model3(batch))
+
+
+def test_fit_consumes_factory_once_per_pass():
+    """The single cached peek is chained back into the first streaming pass:
+    a one-epoch factory fully fits a single-pass pipeline."""
+    rng = np.random.default_rng(2)
+    batches = [
+        {"x": jnp.asarray(T.encode_strings([f"w{rng.integers(0, 9)}" for _ in range(16)], 8))}
+        for _ in range(3)
+    ]
+    calls = {"n": 0}
+
+    def one_epoch_factory():
+        calls["n"] += 1
+        if calls["n"] > 1:
+            raise AssertionError("factory re-instantiated for a 1-pass fit")
+        return iter(batches)
+
+    pipe = KamaeSparkPipeline(
+        stages=[StringIndexEstimator(inputCol="x", outputCol="y", numOOVIndices=1)]
+    )
+    fitted = pipe.fit(one_epoch_factory)
+    assert fitted.n_passes == 1
+    # all 3 batches were seen: every word must be in-vocab (no OOV index)
+    out = fitted.transform(batches[0])
+    assert int(np.asarray(out["y"]).min()) >= 1

@@ -1,0 +1,205 @@
+"""Bit-exactness of the scan-based string/hash primitives against the seed
+(unrolled-loop) reference implementations, over randomized byte tensors —
+padding, signs, fractions, multi-byte separators, every seed the pipelines
+use.  The references below are verbatim copies of the pre-scan code paths."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import hashing, strops
+from repro.core import types as T
+
+RNG = np.random.default_rng(0xC5E)
+
+
+# ---------------------------------------------------------------------------
+# reference implementations (frozen copies of the seed's unrolled loops)
+# ---------------------------------------------------------------------------
+
+def _ref_fnv1a64(strings, seed=0):
+    s = strings.astype(jnp.uint64)
+    h = jnp.full(strings.shape[:-1], hashing.FNV_OFFSET ^ jnp.uint64(seed), jnp.uint64)
+    for i in range(strings.shape[-1]):
+        b = s[..., i]
+        upd = (h ^ b) * hashing.FNV_PRIME
+        h = jnp.where(b == 0, h, upd)
+    return hashing._avalanche(h)
+
+
+def _ref_string_to_number(strings, dtype="float32"):
+    s = strings.astype(jnp.int32)
+    L = strings.shape[-1]
+    shape = strings.shape[:-1]
+    val = jnp.zeros(shape, jnp.float64)
+    scale = jnp.ones(shape, jnp.float64)
+    seen_dot = jnp.zeros(shape, bool)
+    seen_digit = jnp.zeros(shape, bool)
+    invalid = jnp.zeros(shape, bool)
+    neg = jnp.zeros(shape, bool)
+    for i in range(L):
+        c = s[..., i]
+        is_nul = c == 0
+        is_digit = (c >= 48) & (c <= 57)
+        is_dot = c == 46
+        is_sign = ((c == 43) | (c == 45)) & (i == 0)
+        d = (c - 48).astype(jnp.float64)
+        val = jnp.where(is_digit & ~seen_dot, val * 10.0 + d, val)
+        scale = jnp.where(is_digit & seen_dot, scale * 0.1, scale)
+        val = jnp.where(is_digit & seen_dot, val + d * scale, val)
+        seen_digit = seen_digit | is_digit
+        invalid = invalid | ~(is_nul | is_digit | is_dot | is_sign) | (is_dot & seen_dot)
+        seen_dot = seen_dot | is_dot
+        neg = jnp.where(is_sign & (c == 45), True, neg)
+    invalid = invalid | ~seen_digit
+    out = jnp.where(neg, -val, val)
+    jdt = jnp.dtype(dtype)
+    if jnp.issubdtype(jdt, jnp.floating):
+        return jnp.where(invalid, jnp.nan, out).astype(jdt)
+    return jnp.where(invalid, 0, out).astype(jdt)
+
+
+def _ref_split_starts(s, separator):
+    """The seed's greedy covered-until carry (python loop over positions)."""
+    d = len(separator)
+    raw = strops._match_at(s, separator)
+    N, L = raw.shape
+    starts = []
+    cu = jnp.zeros((N,), jnp.int32)
+    for p in range(L):
+        act = raw[:, p] & (p >= cu)
+        cu = jnp.where(act, p + d, cu)
+        starts.append(act)
+    return jnp.stack(starts, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# randomized byte tensors: text-ish, numeric-ish, and adversarial raw bytes
+# ---------------------------------------------------------------------------
+
+def _random_strings(n, max_len, kind):
+    if kind == "bytes":  # arbitrary non-NUL bytes with random zero padding
+        arr = RNG.integers(1, 256, (n, max_len)).astype(np.uint8)
+        lens = RNG.integers(0, max_len + 1, n)
+        for i, l in enumerate(lens):
+            arr[i, l:] = 0
+        return arr
+    words = []
+    for _ in range(n):
+        if kind == "numeric":
+            sign = RNG.choice(["", "-", "+"])
+            ip = str(RNG.integers(0, 10**9))
+            frac = "" if RNG.random() < 0.5 else "." + str(RNG.integers(0, 10**6))
+            w = sign + ip + frac
+            if RNG.random() < 0.2:  # corrupt some rows
+                w = w.replace(w[RNG.integers(0, len(w))], "x", 1)
+        else:
+            alpha = "abcXYZ019 .,|<>-+"
+            w = "".join(RNG.choice(list(alpha), RNG.integers(0, max_len)))
+        words.append(w)
+    return T.encode_strings(words, max_len)
+
+
+@pytest.mark.parametrize("kind", ["text", "numeric", "bytes"])
+@pytest.mark.parametrize("max_len", [8, 32])
+def test_fnv1a64_scan_bit_exact(kind, max_len):
+    s = jnp.asarray(_random_strings(200, max_len, kind))
+    for seed in (0, 1, 5, 2**31):
+        got = np.asarray(hashing.fnv1a64(s, seed))
+        want = np.asarray(_ref_fnv1a64(s, seed))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_fnv1a64_scan_nested_shape():
+    s = jnp.asarray(_random_strings(60, 16, "text")).reshape(3, 20, 16)
+    np.testing.assert_array_equal(
+        np.asarray(hashing.fnv1a64(s)), np.asarray(_ref_fnv1a64(s))
+    )
+
+
+@pytest.mark.parametrize("kind", ["numeric", "text", "bytes"])
+@pytest.mark.parametrize("dtype", ["float64", "float32", "int64"])
+def test_string_to_number_scan_bit_exact(kind, dtype):
+    s = jnp.asarray(_random_strings(300, 24, kind))
+    got = np.asarray(strops.string_to_number(s, dtype))
+    want = np.asarray(_ref_string_to_number(s, dtype))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("sep", ["|", "<>", ",,", "abc"])
+def test_split_carry_scan_bit_exact(sep):
+    # adversarial: separators adjacent, overlapping, at the edges
+    pieces = ["", "a", "ab", sep, sep + sep, "x" + sep, sep + "y", "end"]
+    words = [
+        sep.join(RNG.choice(pieces, RNG.integers(0, 5)).tolist()) for _ in range(200)
+    ]
+    s = jnp.asarray(T.encode_strings(words, 40))
+    got = np.asarray(_ref_split_starts(s, sep))
+    # reproduce the scan path's starts via the public function result: compare
+    # full outputs of split_to_list against a reference split built from the
+    # reference starts — simplest is comparing public output to python split
+    out = T.decode_strings(np.asarray(strops.split_to_list(s, sep, 6, "P", 10)))
+    for row, w in zip(out, words):
+        want = [p[:10] for p in w.split(sep)][:6]
+        want = [p if p else "P" for p in want]
+        if w == "":
+            want = []
+        want += ["P"] * (6 - len(want))
+        assert list(row) == want, (w, list(row), want)
+    # and the internal greedy-carry is identical to the seed loop
+    from repro.core.strops import _match_at
+
+    d = len(sep)
+    raw = _match_at(s, sep)
+
+    def carry_step(cu, xs):
+        rawp, p = xs
+        act = rawp & (p >= cu)
+        return jnp.where(act, p + d, cu), act
+
+    _, start_t = jax.lax.scan(
+        carry_step,
+        jnp.zeros((s.shape[0],), jnp.int32),
+        (jnp.moveaxis(raw, 1, 0), jnp.arange(s.shape[1], dtype=jnp.int32)),
+    )
+    np.testing.assert_array_equal(np.asarray(jnp.moveaxis(start_t, 0, 1)), got)
+
+
+# ---------------------------------------------------------------------------
+# kernel routing: raw-hash and seeded-bin kernel paths match the jnp scan
+# ---------------------------------------------------------------------------
+
+def test_kernel_raw_hash_bit_exact():
+    from repro.kernels.bloom_hash import ops
+
+    s = jnp.asarray(_random_strings(130, 16, "text"))
+    for seed in (0, 3):
+        np.testing.assert_array_equal(
+            np.asarray(ops.fnv1a64_raw(s, seed)),
+            np.asarray(hashing.fnv1a64(s, seed)),
+        )
+
+
+def test_kernel_seeded_bins_bit_exact():
+    from repro.kernels.bloom_hash import ops
+
+    s = jnp.asarray(_random_strings(130, 16, "text"))
+    for seed in (0, 7):
+        np.testing.assert_array_equal(
+            np.asarray(ops.hash_indices_seeded(s, 4096, seed)),
+            np.asarray(hashing.hash_to_bins(s, 4096, seed)),
+        )
+
+
+def test_routed_helpers_jnp_fallback(monkeypatch):
+    # off-TPU with no override, routing must take the jnp path
+    monkeypatch.delenv("REPRO_HASH_KERNEL", raising=False)
+    s = jnp.asarray(_random_strings(50, 16, "text"))
+    np.testing.assert_array_equal(
+        np.asarray(hashing.fnv1a64_routed(s, 2)), np.asarray(hashing.fnv1a64(s, 2))
+    )
+    # forced kernel (interpret mode on CPU) stays bit-exact
+    monkeypatch.setenv("REPRO_HASH_KERNEL", "1")
+    np.testing.assert_array_equal(
+        np.asarray(hashing.fnv1a64_routed(s)), np.asarray(hashing.fnv1a64(s))
+    )

@@ -140,7 +140,7 @@ def test_elastic_restore_different_sharding(tmp_path):
 
     tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
     save_checkpoint(str(tmp_path), 1, tree)
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = jax.make_mesh((1,), ("data",))
     sh = {"w": NamedSharding(mesh, P("data", None))}
     back = load_checkpoint(str(tmp_path), tree, shardings=sh)
     np.testing.assert_array_equal(np.asarray(back["w"]), np.asarray(tree["w"]))
