@@ -19,6 +19,12 @@ A second block measures the transform path in isolation:
 
 with trace-time and HLO-op-count deltas between the naive jit and the
 planned graph — the "cheap to trace, small to compile" claim made concrete.
+
+A third block measures the offline streaming path: a whole epoch of batches
+through the per-batch ``transform_jit`` loop (stage, dispatch, block — every
+batch) vs the :class:`~repro.core.runner.PlanRunner` streaming executor
+(packed superbatches, double-buffered staging, donated buffers), reported as
+rows/s; plus the FusedModel serve path with buffer donation off vs on.
 """
 from __future__ import annotations
 
@@ -30,6 +36,7 @@ import jax.numpy as jnp
 
 from repro.core import types as T
 from repro.core.plan import hlo_op_count
+from repro.core.runner import PlanRunner
 from repro.data import ltr_rows
 from repro.serve import FusedModel
 
@@ -61,11 +68,18 @@ def run(smoke: bool = False) -> None:
     rows = 64 if smoke else 512
     train = ltr_rows(rows, seed=0)
     fitted, out_cols = build_ltr_pipeline(train)
+    # streaming first: it is the most allocation-sensitive measurement, so it
+    # runs before the serve sections grow the live heap
+    _run_streaming_comparison(fitted, out_cols, smoke=smoke)
+
     export = fitted.export(outputs=out_cols)
     init, fwd = _ranking_head(out_cols)
     dim = len(out_cols)
     params = init(dim)
-    fm = FusedModel(export, fwd, params)
+    # donate=False here: time_fn re-submits the SAME request arrays, which
+    # donation would invalidate; the donate win is measured separately below
+    # with a fresh request per call.
+    fm = FusedModel(export, fwd, params, donate=False)
 
     for bs, tag in [(1, "b1"), (64, "b64")]:
         req = {k: v[:bs] for k, v in ltr_rows(max(bs, 2), seed=9).items()}
@@ -95,7 +109,158 @@ def run(smoke: bool = False) -> None:
             f"fused_saves={red_vs_interp:.0f}% (paper reports 61% vs MLeap)",
         )
 
+    _run_donation_comparison(export, fwd, params, smoke=smoke)
     _run_planner_comparison(fitted, smoke=smoke)
+
+
+def _run_donation_comparison(export, fwd, params, smoke: bool = False) -> None:
+    """FusedModel serve path with buffer donation off vs on (the ROADMAP
+    "donation by default" flip, measured).  Each call stages a FRESH request
+    batch — the MicroBatcher's behaviour, and the reason donation is safe as
+    the serve default."""
+    bs = 64
+    iters = 10 if smoke else 30
+    base = {k: np.asarray(v[:bs]) for k, v in ltr_rows(max(bs, 2), seed=21).items()}
+    base.pop("label_click")
+
+    variants = [
+        ("off", FusedModel(export, fwd, params, donate=False)),
+        ("on", FusedModel(export, fwd, params, donate=True)),
+    ]
+    results = {}
+    for tag, fm in variants:
+        for _ in range(3):  # warmup (compile)
+            jax.block_until_ready(fm({k: jnp.asarray(v) for k, v in base.items()}))
+        times = []
+        for _ in range(iters):
+            req = {k: jnp.asarray(v) for k, v in base.items()}  # fresh buffers
+            t0 = time.perf_counter()
+            out = fm(req)
+            jax.block_until_ready(out)
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        results[tag] = times[len(times) // 2] * 1e6
+
+    saved = 100 * (1 - results["on"] / results["off"])
+    emit(f"serve_donate_off_b{bs}", results["off"], "fresh request per call")
+    emit(f"serve_donate_on_b{bs}", results["on"], f"donate_saves={saved:.0f}% (serve default)")
+
+
+def _run_streaming_comparison(fitted, sweep_cols, smoke: bool = False) -> None:
+    """Offline epoch throughput: per-batch transform_jit loop vs the
+    PlanRunner streaming executor, single-device and (devices permitting)
+    mesh-sharded.  Four lines so the comparison is transparent:
+
+      stream_perbatch       transform_jit loop (full env), block per batch
+      stream_runner         PlanRunner, same full-env plan (orchestration
+                            only: prefetch + workers + donation)
+      stream_runner_sweep   PlanRunner on the outputs-pruned plan with
+                            packing and host materialization — the actual
+                            offline feature sweep; the acceptance target
+                            (>=2x per-batch at b>=64, CPU) compares this
+                            against stream_perbatch
+      stream_sharded        the SAME TransformPlan driven through a mesh
+
+    Rows/s counts leading-dim rows."""
+    bs = 64
+    nb = 32 if smoke else 48
+    host_batches = []
+    for i in range(nb):
+        b = {k: np.asarray(v) for k, v in ltr_rows(bs, seed=100 + i).items()}
+        b.pop("label_click")
+        host_batches.append(b)
+    rows_total = bs * nb
+
+    # pipeline fit + compilation leave a large live-object graph; freeze it
+    # out of GC so collector pauses triggered by the streaming loops don't
+    # rescan it every generation (unfrozen in the finally below even if a
+    # section raises — later benchmarks must not run with a frozen heap)
+    import gc
+
+    gc.collect()
+    gc.freeze()
+    try:
+        _streaming_body(fitted, sweep_cols, bs, nb, host_batches, rows_total)
+    finally:
+        gc.unfreeze()
+
+
+def _streaming_body(fitted, sweep_cols, bs, nb, host_batches, rows_total) -> None:
+    plan = fitted.plan()
+    plan_sweep = fitted.plan(outputs=sweep_cols)
+
+    def median_epoch(run_epoch, reps: int = 5) -> float:
+        """Median wall time of a full epoch pass (the first, untimed pass is
+        the compile warmup for every signature involved)."""
+        run_epoch()
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            run_epoch()
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        return times[len(times) // 2]
+
+    def perbatch_epoch():
+        for b in host_batches:
+            out = fitted.transform_jit({k: jnp.asarray(v) for k, v in b.items()})
+            jax.block_until_ready(out)
+
+    t_perbatch = median_epoch(perbatch_epoch)
+    rps_perbatch = rows_total / t_perbatch
+    emit(
+        f"stream_perbatch_b{bs}",
+        1e6 * t_perbatch / nb,
+        f"rows_per_s={rps_perbatch:.0f}",
+    )
+
+    def timed_stream(runner):
+        def epoch():
+            n_out = sum(1 for _ in runner.run(iter(host_batches)))
+            assert n_out == nb
+
+        return median_epoch(epoch)
+
+    t_stream = timed_stream(
+        PlanRunner(plan, donate=True, pack=1, prefetch=2, workers=1)
+    )
+    rps_stream = rows_total / t_stream
+    emit(
+        f"stream_runner_b{bs}",
+        1e6 * t_stream / nb,
+        f"rows_per_s={rps_stream:.0f} vs_perbatch={rps_stream / rps_perbatch:.2f}x "
+        f"(full env, pipelining only)",
+    )
+
+    t_sweep = timed_stream(
+        PlanRunner(plan_sweep, donate=True, pack=8, prefetch=2, materialize="host")
+    )
+    rps_sweep = rows_total / t_sweep
+    emit(
+        f"stream_runner_sweep_b{bs}",
+        1e6 * t_sweep / nb,
+        f"rows_per_s={rps_sweep:.0f} vs_perbatch={rps_sweep / rps_perbatch:.2f}x "
+        f"pack=8 outputs={len(sweep_cols)} (target >=2x)",
+    )
+
+    if len(jax.devices()) > 1:
+        from repro.core import Engine
+        from repro.launch.mesh import make_host_mesh, use_mesh
+
+        mesh = make_host_mesh(data=len(jax.devices()))
+        eng = Engine(mesh)
+        with use_mesh(mesh):
+            t_sh = timed_stream(
+                PlanRunner(plan_sweep, engine=eng, donate=True, pack=8, prefetch=2)
+            )
+        emit(
+            f"stream_sharded_b{bs}",
+            1e6 * t_sh / nb,
+            f"rows_per_s={rows_total / t_sh:.0f} mesh_devices={len(jax.devices())} "
+            f"jit_cache={plan_sweep.stats['jit_cache_entries']}",
+        )
+    else:
+        emit("stream_sharded_b64", 0.0, "skipped: 1 device (see tests/test_runner.py)")
 
 
 def _run_planner_comparison(fitted, smoke: bool = False) -> None:

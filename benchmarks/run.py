@@ -7,14 +7,17 @@
 #   decode           — serve_step latency for the LM substrate (smoke scale)
 #   roofline         — dry-run-derived roofline terms per (arch, shape, mesh)
 #
-# ``--smoke`` runs the preprocessing comparison at tiny sizes and writes the
-# collected rows to BENCH_preprocessing.json — cheap enough for CI, so the
-# perf trajectory (planned vs interpreted, trace time, HLO op count) is
-# recorded on every PR.
+# ``--smoke`` runs the preprocessing comparison (including the streaming
+# rows/s metrics) at tiny sizes and writes the collected rows to
+# BENCH_preprocessing.json — cheap enough for CI, so the perf trajectory
+# (planned vs interpreted, streamed vs per-batch, trace time, HLO op count)
+# is recorded on every PR.  A benchmark that raises fails the run loudly
+# (full traceback + non-zero exit) — never a silent skip.
 import argparse
 import json
 import pathlib
 import sys
+import traceback
 
 
 def _write_json(path: str) -> None:
@@ -22,6 +25,15 @@ def _write_json(path: str) -> None:
 
     pathlib.Path(path).write_text(json.dumps(common.RESULTS, indent=2) + "\n")
     print(f"wrote {path} ({len(common.RESULTS)} rows)", file=sys.stderr)
+
+
+def _loud(name: str, fn, failures: list, **kwargs) -> None:
+    try:
+        fn(**kwargs)
+    except Exception:
+        print(f"\nBENCHMARK FAILED: {name}", file=sys.stderr)
+        traceback.print_exc()
+        failures.append(name)
 
 
 def main() -> None:
@@ -40,26 +52,32 @@ def main() -> None:
 
     from . import preprocessing
 
+    failures: list = []
     print("name,us_per_call,derived")
     if args.smoke:
-        preprocessing.run(smoke=True)
-        _write_json(args.json)
+        _loud("preprocessing", preprocessing.run, failures, smoke=True)
+        _write_json(args.json)  # partial rows still recorded on failure
+        if failures:
+            sys.exit(f"benchmark(s) failed: {', '.join(failures)}")
         return
 
     from . import fit_throughput, indexing, roofline
 
-    preprocessing.run()
-    indexing.run()
-    fit_throughput.run()
-    try:
+    _loud("preprocessing", preprocessing.run, failures)
+    _loud("indexing", indexing.run, failures)
+    _loud("fit_throughput", fit_throughput.run, failures)
+
+    def _decode():
         from . import decode
 
         decode.run()
-    except Exception as e:  # decode bench is optional on very slow hosts
-        print(f"decode_bench,0,skipped:{type(e).__name__}")
-    roofline.run()
+
+    _loud("decode", _decode, failures)
+    _loud("roofline", roofline.run, failures)
     # NB: no JSON here — BENCH_preprocessing.json is the smoke-mode record
     # CI trends on; a full run's mixed tables would not be comparable.
+    if failures:
+        sys.exit(f"benchmark(s) failed: {', '.join(failures)}")
 
 
 if __name__ == "__main__":

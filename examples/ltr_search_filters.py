@@ -68,7 +68,9 @@ def main():
         x = jnp.stack([f[c].astype(jnp.float32) for c in feature_cols], axis=-1)
         return score(params, x)
 
-    fm = FusedModel(fitted.export(outputs=feature_cols), model_fn, params)
+    # donate=False: this script re-submits the same request arrays below; the
+    # serve tier (MicroBatcher) keeps the donating default instead
+    fm = FusedModel(fitted.export(outputs=feature_cols), model_fn, params, donate=False)
     request = {k: v[:4] for k, v in ltr_rows(8, seed=42).items()}
     request.pop("label_click")
     scores = fm(request)

@@ -14,6 +14,7 @@ from .engine import Engine
 from .export import PreprocessModel
 from .pipeline import FittedPipeline, KamaeSparkPipeline, Pipeline
 from .plan import TransformPlan
+from .runner import PlanRunner
 from .stage import Estimator, FittedStage, Stage, Transformer
 from .estimators import (
     ImputeEstimator,
@@ -38,6 +39,7 @@ __all__ = [
     "KamaeSparkPipeline",
     "FittedPipeline",
     "TransformPlan",
+    "PlanRunner",
     "Stage",
     "Transformer",
     "Estimator",

@@ -82,9 +82,15 @@ class Engine:
     def jit_transform(self, fn: Callable):
         """batch -> batch, sharded in and out along the data axes.
 
-        The wrapper cache is keyed on the full input signature — names,
-        shapes AND dtypes — so a batch-size change compiles a new entry
-        instead of silently re-tracing an existing one."""
+        A :class:`~repro.core.plan.TransformPlan` delegates to the plan's own
+        sharding-aware executable cache (keyed on signature + shardings +
+        donation), so the SAME plan instance serves this engine and any other
+        execution context without re-analysis.  For a plain callable, the
+        wrapper cache is keyed on the full input signature — names, shapes
+        AND dtypes — so a batch-size change compiles a new entry instead of
+        silently re-tracing an existing one."""
+        if hasattr(fn, "jit_for"):  # TransformPlan (or compatible)
+            return fn.jit_for(engine=self)
         if self.mesh is None:
             return jax.jit(fn)
         batch_sh = self.batch_sharding()

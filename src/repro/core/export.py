@@ -114,13 +114,17 @@ def _decompress(flag: bytes, body: bytes) -> bytes:
 class PreprocessModel:
     """Dependency-light, fusable inference preprocessing graph."""
 
-    def __init__(self, nodes: List[dict]):
+    def __init__(self, nodes: List[dict], schedule: Optional[dict] = None):
         # node: {op, config, weights: {name: array}, inputs, outputs}
         self.nodes = nodes
         self._stages = [
             stage_from_config(n["op"], n["config"], n["weights"]) for n in nodes
         ]
         self._jitted = None
+        # serialized TransformPlan schedule (cross-request plan persistence):
+        # present on loaded bundles, so serving hosts skip plan analysis
+        self._schedule = schedule
+        self._plans: Dict[Optional[tuple], object] = {}
 
     # -- construction --------------------------------------------------
     @classmethod
@@ -149,10 +153,21 @@ class PreprocessModel:
 
     def plan(self, outputs: Optional[Sequence[str]] = None):
         """Compile-once execution plan over the exported node list (see
-        :mod:`repro.core.plan`): coercion/hash CSE + persistent jit cache."""
+        :mod:`repro.core.plan`): coercion/hash CSE + a persistent,
+        sharding-aware jit cache.  Plans are cached per requested outputs;
+        on a loaded bundle the full plan is rebuilt from the serialized
+        schedule instead of re-running analysis."""
         from .plan import TransformPlan
 
-        return TransformPlan(self._stages, outputs=outputs)
+        key = tuple(outputs) if outputs is not None else None
+        p = self._plans.get(key)
+        if p is None:
+            if key is None and self._schedule is not None:
+                p = TransformPlan.from_schedule(self._stages, self._schedule)
+            else:
+                p = TransformPlan(self._stages, outputs=outputs)
+            self._plans[key] = p
+        return p
 
     def jit(self):
         """The fused single-XLA-program path (used by FusedModel).  Backed by
@@ -161,6 +176,14 @@ class PreprocessModel:
         if self._jitted is None:
             self._jitted = self.plan()
         return self._jitted
+
+    def stream(self, batches, engine=None, **runner_kwargs):
+        """Offline bulk transform through the exported graph: one compiled
+        executable, packed + double-buffered staging, optional mesh sharding
+        (see :class:`~repro.core.runner.PlanRunner`)."""
+        from .runner import PlanRunner
+
+        return PlanRunner(self.plan(), engine=engine, **runner_kwargs).run(batches)
 
     @property
     def output_names(self) -> List[str]:
@@ -183,6 +206,9 @@ class PreprocessModel:
                 }
                 for n in self.nodes
             ],
+            # plan schedule rides along so a serving host can rebuild the
+            # TransformPlan without re-running liveness/CSE analysis on load
+            "schedule": self.plan().schedule(),
         }
         packer, raw = _pack_payload(payload)
         codec, body = _compress(raw)
@@ -217,7 +243,7 @@ class PreprocessModel:
             }
             for n in payload["nodes"]
         ]
-        return cls(nodes)
+        return cls(nodes, schedule=payload.get("schedule"))
 
     @classmethod
     def load(cls, path: str) -> "PreprocessModel":

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import weakref
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Union
 
 import jax
@@ -143,9 +142,6 @@ class FittedPipeline:
         self.stages = list(resolved)
         self.n_passes = n_passes
         self._plans: Dict[tuple, object] = {}
-        # weak keys: a dead Engine must not pin its mesh, and a recycled
-        # object address must not resurrect a stale compiled wrapper
-        self._engine_jits = weakref.WeakKeyDictionary()
 
     def transform(self, batch: T.Batch) -> T.Batch:
         """Interpreted reference path (one XLA dispatch per op)."""
@@ -156,7 +152,8 @@ class FittedPipeline:
 
     def plan(self, outputs: Optional[Sequence[str]] = None, donate: bool = False):
         """Compile-once execution plan (see :mod:`repro.core.plan`): dead
-        columns eliminated, coercions/hashes CSE'd, jit cached persistently."""
+        columns eliminated, coercions/hashes CSE'd, executables cached
+        per (signature, shardings, donate) on the plan itself."""
         from .plan import TransformPlan
 
         key = (tuple(outputs) if outputs is not None else None, donate)
@@ -167,16 +164,20 @@ class FittedPipeline:
         return p
 
     def transform_jit(self, batch: T.Batch, engine=None) -> T.Batch:
-        """Compiled transform.  The compiled function is cached on the
-        instance (the historical version rebuilt ``jax.jit`` — and therefore
-        re-traced — on every call)."""
-        if engine is None:
-            return self.plan()(batch)
-        fn = self._engine_jits.get(engine)
-        if fn is None:
-            fn = engine.jit_transform(self.plan().fn)
-            self._engine_jits[engine] = fn
-        return fn(batch)
+        """Compiled transform.  Routed through the plan's sharding-aware jit
+        cache: the SAME plan (and analysis) serves unsharded calls and any
+        number of engine meshes, each lowered with ``in_shardings`` from
+        ``Engine.batch_sharding()`` and compiled once per signature."""
+        return self.plan()(batch, engine=engine)
+
+    def transform_stream(self, batches, engine=None, **runner_kwargs):
+        """Streaming offline transform: drive a whole batch iterator through
+        one compiled plan with packed, double-buffered host→device staging
+        and donated buffers (see :class:`~repro.core.runner.PlanRunner`).
+        Yields one output batch per input batch."""
+        from .runner import PlanRunner
+
+        return PlanRunner(self.plan(), engine=engine, **runner_kwargs).run(batches)
 
     # ------------------------------------------------------------------
     def export(self, outputs: Optional[Sequence[str]] = None):

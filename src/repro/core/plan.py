@@ -32,16 +32,26 @@ Three optimisations are applied at plan time:
    they are ever traced (measured by ``benchmarks/preprocessing.py`` as
    reduced trace time and HLO op count).
 
-3. **Persistent jit cache with optional buffer donation.**  One ``jax.jit``
-   wrapper lives for the lifetime of the plan, so repeated calls with the
-   same input shapes/dtypes hit XLA's executable cache instead of re-tracing
-   (the bug in the legacy ``transform_jit``, which rebuilt the wrapper per
-   call).  ``donate=True`` additionally donates the input batch buffers to
-   the executable.
+3. **Persistent, sharding-aware jit cache with optional buffer donation.**
+   Compiled executables are cached for the lifetime of the plan, keyed on
+   ``(in_shardings, donate)`` — and within each wrapper XLA's own cache keys
+   on the input signature — so the SAME ``TransformPlan`` object serves the
+   single-device serve path (FusedModel / MicroBatcher) and a pod-sharded
+   offline sweep without re-analysis: :meth:`TransformPlan.jit_for` lowers
+   with ``in_shardings`` from ``Engine.batch_sharding()`` when an engine /
+   mesh is supplied.  ``donate=True`` additionally donates the input batch
+   buffers to the executable.
+
+The static schedule is serialisable (:meth:`TransformPlan.schedule` /
+:meth:`TransformPlan.from_schedule`): the export bundle carries it so a
+serving host skips plan analysis on load entirely.
 
 Hashing inside the plan routes through :func:`repro.core.hashing.
 fnv1a64_routed`, i.e. the Pallas ``bloom_hash`` kernel on TPU and the jnp
 scan elsewhere — both bit-exact with the reference implementation.
+
+Multi-batch streaming execution of a plan (double-buffered host→device
+staging, batch packing, donation) lives in :mod:`repro.core.runner`.
 """
 from __future__ import annotations
 
@@ -64,6 +74,7 @@ class _Node:
     out_cols: List[str]
     hash_seeds: Optional[List[int]]  # seeds the stage can consume, or None
     dead_after: List[str]  # columns to drop from the env after this node
+    stage_index: int = -1  # position in the plan's full stage list
 
 
 def _stage_of(s):
@@ -107,22 +118,33 @@ class TransformPlan:
         outputs: Optional[Sequence[str]] = None,
         donate: bool = False,
     ):
+        self._stages = list(stages)
         self._outputs = list(outputs) if outputs is not None else None
         self._donate = donate
         self._trace_count = 0
         self._seen_signatures: set = set()
-        self._jitted = None
+        # compiled-wrapper cache: (in_shardings, donate) -> jax.jit wrapper.
+        # Within each wrapper jax's own cache keys on the input signature, so
+        # the effective executable key is (signature, mesh/shardings, donate).
+        self._jit_cache: Dict[tuple, object] = {}
+        self.built_from_schedule = False
+        self._analyze()
 
-        work = list(stages)
+    def _analyze(self) -> None:
+        """Build the static schedule from the stage list (runs once per plan;
+        a deserialized schedule skips this entirely — see from_schedule)."""
+        indexed = list(enumerate(self._stages))
         if self._outputs is not None:
-            work = _prune_stages(work, self._outputs)
+            kept = _prune_stages(self._stages, self._outputs)
+            kept_ids = {id(s) for s in kept}
+            indexed = [(i, s) for i, s in indexed if id(s) in kept_ids]
 
         # ---- static schedule: versions, coercion keys, hash seeds --------
         version: Dict[str, int] = {}
         nodes: List[_Node] = []
         coerce_refs: Dict[tuple, int] = {}
         hash_refs: Dict[tuple, int] = {}
-        for s in work:
+        for idx, s in indexed:
             token = _coerce_token(s)
             in_specs = [(c, version.get(c, 0), token) for c in s.input_names]
             seeds = getattr(_stage_of(s), "plan_hash_seeds", lambda: None)()
@@ -137,7 +159,9 @@ class TransformPlan:
                         hash_refs[hk] = hash_refs.get(hk, 0) + 1
             for c in s.output_names:
                 version[c] = version.get(c, 0) + 1
-            nodes.append(_Node(s, in_specs, list(s.output_names), seeds, []))
+            nodes.append(
+                _Node(s, in_specs, list(s.output_names), seeds, [], stage_index=idx)
+            )
 
         # ---- liveness: drop dead columns when outputs are constrained ----
         if self._outputs is not None:
@@ -258,6 +282,87 @@ class TransformPlan:
             return env
         return {k: env[k] for k in self._outputs}
 
+    def required_inputs(self) -> Optional[List[str]]:
+        """Raw input columns the scheduled nodes actually read, or None when
+        the plan returns the full environment (every input column is then
+        part of the output contract).  The streaming runner uses this to
+        stage only live columns."""
+        if self._outputs is None:
+            return None
+        produced: set = set()
+        required: List[str] = []
+        for n in self._nodes:
+            for c, _, _ in n.in_specs:
+                if c not in produced and c not in required:
+                    required.append(c)
+            produced.update(n.out_cols)
+        # requested outputs that are raw passthrough columns stay required
+        for c in self._outputs:
+            if c not in produced and c not in required:
+                required.append(c)
+        return required
+
+    # ------------------------------------------------------------------
+    # schedule serialisation (cross-request plan persistence)
+    # ------------------------------------------------------------------
+    def schedule(self) -> dict:
+        """The static schedule as a plain (msgpack/json-safe) dict.
+
+        Stages are referenced by index into the plan's stage list, so a
+        consumer holding the same stage list (e.g. a loaded PreprocessModel
+        bundle) can rebuild the plan with :meth:`from_schedule` and skip
+        analysis entirely."""
+        return {
+            "outputs": self._outputs,
+            "nodes": [
+                {
+                    "stage": n.stage_index,
+                    "in_specs": [
+                        [c, v, list(t) if t is not None else None]
+                        for c, v, t in n.in_specs
+                    ],
+                    "out_cols": list(n.out_cols),
+                    "hash_seeds": list(n.hash_seeds)
+                    if n.hash_seeds is not None
+                    else None,
+                    "dead_after": list(n.dead_after),
+                }
+                for n in self._nodes
+            ],
+            "cse_stats": dict(self.cse_stats),
+        }
+
+    @classmethod
+    def from_schedule(cls, stages: Sequence, sched: dict, donate: bool = False):
+        """Rebuild a plan from :meth:`schedule` output without re-analysis."""
+        plan = cls.__new__(cls)
+        plan._stages = list(stages)
+        outs = sched.get("outputs")
+        plan._outputs = list(outs) if outs is not None else None
+        plan._donate = donate
+        plan._trace_count = 0
+        plan._seen_signatures = set()
+        plan._jit_cache = {}
+        plan._nodes = [
+            _Node(
+                stage=plan._stages[d["stage"]],
+                in_specs=[
+                    (c, v, tuple(t) if t is not None else None)
+                    for c, v, t in d["in_specs"]
+                ],
+                out_cols=list(d["out_cols"]),
+                hash_seeds=list(d["hash_seeds"])
+                if d.get("hash_seeds") is not None
+                else None,
+                dead_after=list(d["dead_after"]),
+                stage_index=d["stage"],
+            )
+            for d in sched["nodes"]
+        ]
+        plan.cse_stats = dict(sched["cse_stats"])
+        plan.built_from_schedule = True
+        return plan
+
     # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
@@ -276,13 +381,43 @@ class TransformPlan:
             (k, tuple(v.shape), str(v.dtype)) for k, v in sorted(batch.items())
         )
 
-    def __call__(self, batch: T.Batch) -> T.Batch:
-        if self._jitted is None:
-            self._jitted = jax.jit(
-                self._execute, donate_argnums=(0,) if self._donate else ()
+    def jit_for(self, engine=None, in_shardings=None, donate: Optional[bool] = None):
+        """The cached jit wrapper for one execution context.
+
+        ``engine`` (an :class:`~repro.core.engine.Engine` with a mesh)
+        supplies ``in_shardings`` from ``batch_sharding()``; alternatively
+        pass ``in_shardings`` directly (a sharding, or pytree prefix of the
+        batch).  Wrappers are cached on ``(in_shardings, donate)`` — a
+        NamedSharding hashes its mesh, so the same plan serves an unsharded
+        single-device call and any number of mesh-sharded contexts, each
+        compiled at most once per input signature, with zero re-analysis.
+
+        The cache holds strong references: every distinct mesh used with
+        this plan pins its NamedSharding + compiled wrapper for the plan's
+        lifetime.  Bounded in practice (hosts use one or two meshes); a
+        process churning through many throwaway meshes against one
+        long-lived plan should create throwaway plans instead."""
+        if donate is None:
+            donate = self._donate
+        if engine is not None and engine.mesh is not None and in_shardings is None:
+            in_shardings = engine.batch_sharding()
+        key = (in_shardings, donate)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            kwargs = {}
+            if in_shardings is not None:
+                kwargs["in_shardings"] = in_shardings
+            fn = jax.jit(
+                self._execute,
+                donate_argnums=(0,) if donate else (),
+                **kwargs,
             )
+            self._jit_cache[key] = fn
+        return fn
+
+    def __call__(self, batch: T.Batch, engine=None) -> T.Batch:
         self._seen_signatures.add(self.signature(batch))
-        return self._jitted(batch)
+        return self.jit_for(engine=engine)(batch)
 
     def lower(self, batch: T.Batch):
         """Lower (trace) against ``batch`` without executing — used by the
@@ -295,6 +430,7 @@ class TransformPlan:
             "n_stages": len(self._nodes),
             "trace_count": self._trace_count,
             "signatures_seen": len(self._seen_signatures),
+            "jit_cache_entries": len(self._jit_cache),
             **self.cse_stats,
         }
 

@@ -200,7 +200,14 @@ def replace_char(strings: jax.Array, old: str, new: str) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def concat(parts: Sequence[jax.Array], separator: str = "", max_len: int = T.DEFAULT_MAX_LEN) -> jax.Array:
-    """Join string columns with a separator (paper: StringConcatTransformer)."""
+    """Join string columns with a separator (paper: StringConcatTransformer).
+
+    The per-piece scatter advances via ``lax.scan`` over the stacked pieces
+    (parts interleaved with separator constants, each zero-padded to a common
+    width): one traced scatter step regardless of how many columns are
+    joined, where the historical implementation unrolled parts × offsets.
+    Step ops match that unrolled loop exactly — bit-exact, asserted by
+    ``tests/test_scan_exact.py``."""
     lead = jnp.broadcast_shapes(*[p.shape[:-1] for p in parts])
     N = 1
     for d in lead:
@@ -216,17 +223,28 @@ def concat(parts: Sequence[jax.Array], separator: str = "", max_len: int = T.DEF
             pieces.append(sep_const)
         pieces.append(jnp.broadcast_to(p, lead + p.shape[-1:]).reshape(N, p.shape[-1]))
 
-    out = jnp.zeros((N * max_len,), jnp.uint8)
-    offs = jnp.zeros((N,), jnp.int64)
+    # common width: zero padding is invisible to the scatter (pad bytes are
+    # invalid) and to the offset bump (string_lengths masks zeros)
+    Lmax = max(p.shape[-1] for p in pieces)
+    stacked = jnp.stack(
+        [jnp.pad(p, ((0, 0), (0, Lmax - p.shape[-1]))) for p in pieces]
+    )  # (P, N, Lmax)
+
     rows = jnp.arange(N)
-    for p in pieces:
-        Lp = p.shape[-1]
-        cols = offs[:, None] + jnp.arange(Lp)[None, :]  # (N, Lp)
+    cols_base = jnp.arange(Lmax)
+
+    def step(carry, p):
+        out, offs = carry
+        cols = offs[:, None] + cols_base[None, :]  # (N, Lmax)
         valid = (p != 0) & (cols < max_len)
         flat = rows[:, None] * max_len + jnp.clip(cols, 0, max_len - 1)
         flat = jnp.where(valid, flat, N * max_len)  # dropped
         out = out.at[flat.reshape(-1)].set(p.reshape(-1), mode="drop")
         offs = offs + T.string_lengths(p).astype(jnp.int64)
+        return (out, offs), None
+
+    init = (jnp.zeros((N * max_len,), jnp.uint8), jnp.zeros((N,), jnp.int64))
+    (out, _), _ = jax.lax.scan(step, init, stacked)
     return out.reshape((N, max_len)).reshape(lead + (max_len,))
 
 
@@ -256,46 +274,51 @@ def split_to_list(
 
     raw = _match_at(s, separator)  # (N, L)
 
-    # Greedy non-overlap: sequential covered-until carry over the byte axis,
-    # expressed as a scan so the trace does not unroll L steps.
-    def carry_step(cu, xs):
-        rawp, p = xs
-        act = rawp & (p >= cu)
-        cu = jnp.where(act, p + d, cu)
-        return cu, act
+    if d == 1:
+        # single-byte separator: occurrences can never overlap, so every raw
+        # match IS a greedy start (the carry below degenerates to the
+        # identity: after a match at q, cu = q+1 <= any later p) — skip the
+        # L-step scan, which dominates split cost on CPU
+        start = raw
+    else:
+        # Greedy non-overlap: sequential covered-until carry over the byte
+        # axis, expressed as a scan so the trace does not unroll L steps.
+        def carry_step(cu, xs):
+            rawp, p = xs
+            act = rawp & (p >= cu)
+            cu = jnp.where(act, p + d, cu)
+            return cu, act
 
-    _, start_t = jax.lax.scan(
-        carry_step,
-        jnp.zeros((N,), jnp.int32),
-        (jnp.moveaxis(raw, 1, 0), jnp.arange(L, dtype=jnp.int32)),
-    )
-    start = jnp.moveaxis(start_t, 0, 1)  # (N, L) actual delimiter starts
-    # chars covered by a delimiter occurrence
-    covered = jnp.zeros((N, L), bool)
-    for j in range(d):
-        covered = covered | jnp.roll(start, j, axis=1) & (jnp.arange(L) >= j)
-    # segment id per byte = number of delimiter starts at positions <= p; for
-    # non-delimiter bytes that equals "strictly before p" (start bytes are
-    # covered and dropped below, so their off-by-one seg id is irrelevant).
-    seg = jnp.cumsum(start.astype(jnp.int32), axis=1)
-    # position after the most recent delimiter end (0 if none)
-    ends = jnp.where(start, jnp.arange(L)[None, :] + d, 0)
-    last_end = jax.lax.cummax(ends, axis=1)
-    off = jnp.arange(L)[None, :] - last_end
+        _, start_t = jax.lax.scan(
+            carry_step,
+            jnp.zeros((N,), jnp.int32),
+            (jnp.moveaxis(raw, 1, 0), jnp.arange(L, dtype=jnp.int32)),
+        )
+        start = jnp.moveaxis(start_t, 0, 1)  # (N, L) actual delimiter starts
 
-    vals = s
-    valid = (~covered) & (vals != 0) & (seg < list_length) & (off >= 0) & (off < ML)
-    flat_idx = (
-        jnp.arange(N)[:, None] * (list_length * ML)
-        + jnp.clip(seg, 0, list_length - 1) * ML
-        + jnp.clip(off, 0, ML - 1)
+    # Materialise segments by GATHER, not scatter: XLA CPU scatters execute
+    # element-at-a-time and dominated split cost.  Sorting the delimiter
+    # positions (sentinel L for "none") gives, per segment k, its bounding
+    # delimiters: segment k spans (pos[k-1] + d, pos[k]) — so output byte
+    # (k, j) reads source position base_k + j, gated on staying inside the
+    # segment.  Identical output bytes to the historical scatter: bytes are
+    # placed at offset (p - segment start), zeros stay zeros (no compaction),
+    # segments past the last delimiter / beyond list_length come out empty.
+    idx = jnp.arange(L, dtype=jnp.int32)
+    poss = jnp.sort(jnp.where(start, idx[None, :], L), axis=-1)  # (N, L)
+    if L < list_length:
+        poss = jnp.pad(poss, ((0, 0), (0, list_length - L)), constant_values=L)
+    prev = jnp.concatenate(
+        [jnp.full((N, 1), -d, poss.dtype), poss[:, : list_length - 1]], axis=1
     )
-    flat_idx = jnp.where(valid, flat_idx, N * list_length * ML)  # dropped
-    out = jnp.zeros((N * list_length * ML,), jnp.uint8)
-    out = out.at[flat_idx.reshape(-1)].set(
-        jnp.where(valid, vals, _ZERO).reshape(-1), mode="drop"
+    base = prev + d  # (N, list_length): first source byte of each segment
+    bound = poss[:, :list_length]  # (N, list_length): next delimiter (or L)
+    p = base[:, :, None] + jnp.arange(ML, dtype=jnp.int32)[None, None, :]
+    valid = (p < bound[:, :, None]) & (p < L)
+    got = jnp.take_along_axis(
+        s[:, None, :], jnp.clip(p, 0, L - 1).astype(jnp.int32), axis=-1
     )
-    out = out.reshape(N, list_length, ML)
+    out = jnp.where(valid, got, _ZERO)
     if default_value is not None:
         dv = jnp.asarray(T.encode_strings([default_value], ML)[0])
         empty = jnp.all(out == 0, axis=-1)

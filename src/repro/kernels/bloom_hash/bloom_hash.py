@@ -7,10 +7,20 @@ with the uint64 reference in ``repro.core.hashing`` — asserted by the kernel
 tests — which is what guarantees the paper's offline/online parity when the
 hot serving path runs this kernel while the Spark-role fit used the jnp path.
 
-Grid: (num_hashes, N / BLOCK_N).  Each program hashes BLOCK_N strings for one
-seed.  Bytes arrive as int32 (widened by ops.py: uint8 VREG lanes are wasted
-on TPU anyway) in a (BLOCK_N, L) VMEM block; the L loop is a static unroll of
-elementwise ops, which Mosaic maps straight onto the VPU.
+Grid: (num_hashes, N / BLOCK_N) for short strings — each program hashes
+BLOCK_N strings for one seed, and the L loop is a static unroll of
+elementwise ops, which Mosaic maps straight onto the VPU.  For long strings
+(L > chunk_len) the grid grows a trailing byte-chunk dimension:
+(num_hashes, N / BLOCK_N, L / chunk_len).  TPU grids iterate the minor
+dimension sequentially per core, so the running 64-bit state (two uint32
+limb vectors) is carried across chunk steps in VMEM scratch — initialised at
+chunk 0, avalanched and written to the output block at the last chunk.  Only
+chunk_len bytes are ever unrolled into the traced program, so max_len=256
+costs the same trace/compile as max_len=64 while computing the identical
+hash (asserted bit-exact against the unrolled kernel by the tests).
+
+Bytes arrive as int32 (widened by ops.py: uint8 VREG lanes are wasted on TPU
+anyway) in (BLOCK_N, chunk) VMEM blocks.
 """
 from __future__ import annotations
 
@@ -19,6 +29,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 FNV_OFFSET = 14695981039346656037
 FNV_PRIME_HI = 0x00000100  # 0x100000001B3 >> 32
@@ -72,19 +83,30 @@ def _fmix64(h_hi, h_lo):
     return h_hi, h_lo
 
 
-def _hash_block(seed, b, max_len: int):
-    """(BLOCK_N, L) int32 bytes -> avalanched (h_hi, h_lo) uint32 limbs."""
-    n = b.shape[0]
+def _hash_init(seed, n):
+    """Fresh (h_hi, h_lo) uint32 limb vectors for ``n`` strings."""
     h_hi = jnp.full((n,), _u32(FNV_OFFSET >> 32), jnp.uint32)
     h_lo = jnp.full((n,), _u32(FNV_OFFSET & 0xFFFFFFFF), jnp.uint32) ^ seed
+    return h_hi, h_lo
+
+
+def _hash_update(h_hi, h_lo, b, nbytes: int):
+    """Advance the FNV state over ``nbytes`` byte lanes of (BLOCK_N, nbytes)."""
     p_hi, p_lo = _u32(FNV_PRIME_HI), _u32(FNV_PRIME_LO)
-    for i in range(max_len):
+    for i in range(nbytes):
         byte = b[:, i].astype(jnp.uint32)
         x_lo = h_lo ^ byte
         n_hi, n_lo = _mul64(h_hi, x_lo, p_hi, p_lo)
         live = byte != 0  # zero padding leaves the state untouched
         h_hi = jnp.where(live, n_hi, h_hi)
         h_lo = jnp.where(live, n_lo, h_lo)
+    return h_hi, h_lo
+
+
+def _hash_block(seed, b, max_len: int):
+    """(BLOCK_N, L) int32 bytes -> avalanched (h_hi, h_lo) uint32 limbs."""
+    h_hi, h_lo = _hash_init(seed, b.shape[0])
+    h_hi, h_lo = _hash_update(h_hi, h_lo, b, max_len)
     return _fmix64(h_hi, h_lo)
 
 
@@ -104,11 +126,66 @@ def _kernel_raw(seeds_ref, bytes_ref, hi_ref, lo_ref, *, max_len: int):
     lo_ref[...] = h_lo[None, :]
 
 
-def _padded(byte_tensor: jax.Array, block_n: int):
-    N = byte_tensor.shape[0]
-    pad = (-N) % block_n
-    if pad:
-        byte_tensor = jnp.pad(byte_tensor, ((0, pad), (0, 0)))
+# ---------------------------------------------------------------------------
+# chunked variants: grid (num_hashes, N/BLOCK_N, L/chunk); the minor chunk
+# axis runs sequentially, carrying the running limbs in VMEM scratch so only
+# chunk_len bytes are unrolled into the program
+# ---------------------------------------------------------------------------
+
+def _chunk_step(seeds_ref, bytes_ref, state_hi, state_lo, chunk_len: int):
+    """Shared chunk body: (possibly init,) advance state over this chunk."""
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _():
+        h_hi, h_lo = _hash_init(seeds_ref[0], state_hi.shape[1])
+        state_hi[0, :] = h_hi
+        state_lo[0, :] = h_lo
+
+    h_hi, h_lo = _hash_update(
+        state_hi[0, :], state_lo[0, :], bytes_ref[...], chunk_len
+    )
+    state_hi[0, :] = h_hi
+    state_lo[0, :] = h_lo
+
+
+def _kernel_chunked(
+    seeds_ref, bytes_ref, out_ref, state_hi, state_lo, *, num_bins: int, chunk_len: int
+):
+    _chunk_step(seeds_ref, bytes_ref, state_hi, state_lo, chunk_len)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _():
+        h_hi, h_lo = _fmix64(state_hi[0, :], state_lo[0, :])
+        folded = h_hi ^ h_lo
+        out_ref[...] = (folded % _u32(num_bins)).astype(jnp.int32)[None, :]
+
+
+def _kernel_raw_chunked(
+    seeds_ref, bytes_ref, hi_ref, lo_ref, state_hi, state_lo, *, chunk_len: int
+):
+    _chunk_step(seeds_ref, bytes_ref, state_hi, state_lo, chunk_len)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _():
+        h_hi, h_lo = _fmix64(state_hi[0, :], state_lo[0, :])
+        hi_ref[...] = h_hi[None, :]
+        lo_ref[...] = h_lo[None, :]
+
+
+#: Byte width above which the byte-chunk grid replaces the full unroll.
+#: 64 bytes unrolled traces fast and keeps the VPU busy; beyond that the
+#: chunked grid holds trace/compile cost flat in max_len.
+DEFAULT_CHUNK_LEN = 64
+
+
+def _padded(byte_tensor: jax.Array, block_n: int, chunk_len: int = 0):
+    N, L = byte_tensor.shape
+    pad_n = (-N) % block_n
+    pad_l = (-L) % chunk_len if chunk_len else 0
+    if pad_n or pad_l:
+        # zero padding never updates the hash state, so widening L is free
+        byte_tensor = jnp.pad(byte_tensor, ((0, pad_n), (0, pad_l)))
     return byte_tensor, N
 
 
@@ -120,6 +197,15 @@ def _resolve_seeds(num_hashes: int, seeds) -> jax.Array:
     return seeds
 
 
+def _resolve_chunk(L: int, chunk_len) -> int:
+    """0 = unrolled single-shot kernel; >0 = chunked grid of that width."""
+    if chunk_len is None:
+        chunk_len = DEFAULT_CHUNK_LEN if L > DEFAULT_CHUNK_LEN else 0
+    if chunk_len and chunk_len >= L:
+        chunk_len = 0
+    return chunk_len
+
+
 def bloom_hash_kernel(
     byte_tensor: jax.Array,  # (N, L) int32
     num_bins: int,
@@ -127,21 +213,40 @@ def bloom_hash_kernel(
     block_n: int = 1024,
     interpret: bool = True,
     seeds=None,  # optional (num_hashes,) uint32; default arange(num_hashes)
+    chunk_len=None,  # None = auto; 0 forces full unroll; >0 forces that chunk
 ) -> jax.Array:
-    byte_tensor, N = _padded(byte_tensor, block_n)
+    chunk = _resolve_chunk(byte_tensor.shape[1], chunk_len)
+    byte_tensor, N = _padded(byte_tensor, block_n, chunk)
     Np, L = byte_tensor.shape
     seeds = _resolve_seeds(num_hashes, seeds)
-    out = pl.pallas_call(
-        functools.partial(_kernel, num_bins=num_bins, max_len=L),
-        grid=(num_hashes, Np // block_n),
-        in_specs=[
-            pl.BlockSpec((1,), lambda k, i: (k,)),
-            pl.BlockSpec((block_n, L), lambda k, i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_n), lambda k, i: (k, i)),
-        out_shape=jax.ShapeDtypeStruct((num_hashes, Np), jnp.int32),
-        interpret=interpret,
-    )(seeds, byte_tensor)
+    if chunk:
+        out = pl.pallas_call(
+            functools.partial(_kernel_chunked, num_bins=num_bins, chunk_len=chunk),
+            grid=(num_hashes, Np // block_n, L // chunk),
+            in_specs=[
+                pl.BlockSpec((1,), lambda k, i, c: (k,)),
+                pl.BlockSpec((block_n, chunk), lambda k, i, c: (i, c)),
+            ],
+            out_specs=pl.BlockSpec((1, block_n), lambda k, i, c: (k, i)),
+            out_shape=jax.ShapeDtypeStruct((num_hashes, Np), jnp.int32),
+            scratch_shapes=[
+                pltpu.VMEM((1, block_n), jnp.uint32),
+                pltpu.VMEM((1, block_n), jnp.uint32),
+            ],
+            interpret=interpret,
+        )(seeds, byte_tensor)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_kernel, num_bins=num_bins, max_len=L),
+            grid=(num_hashes, Np // block_n),
+            in_specs=[
+                pl.BlockSpec((1,), lambda k, i: (k,)),
+                pl.BlockSpec((block_n, L), lambda k, i: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_n), lambda k, i: (k, i)),
+            out_shape=jax.ShapeDtypeStruct((num_hashes, Np), jnp.int32),
+            interpret=interpret,
+        )(seeds, byte_tensor)
     return out[:, :N].T  # (N, num_hashes)
 
 
@@ -151,25 +256,46 @@ def bloom_hash_kernel_raw(
     block_n: int = 1024,
     interpret: bool = True,
     seeds=None,
+    chunk_len=None,
 ):
     """Like :func:`bloom_hash_kernel` but returns the raw 64-bit hashes as
     ``(hi, lo)`` uint32 arrays of shape (N, num_hashes)."""
-    byte_tensor, N = _padded(byte_tensor, block_n)
+    chunk = _resolve_chunk(byte_tensor.shape[1], chunk_len)
+    byte_tensor, N = _padded(byte_tensor, block_n, chunk)
     Np, L = byte_tensor.shape
     seeds = _resolve_seeds(num_hashes, seeds)
-    spec = pl.BlockSpec((1, block_n), lambda k, i: (k, i))
-    hi, lo = pl.pallas_call(
-        functools.partial(_kernel_raw, max_len=L),
-        grid=(num_hashes, Np // block_n),
-        in_specs=[
-            pl.BlockSpec((1,), lambda k, i: (k,)),
-            pl.BlockSpec((block_n, L), lambda k, i: (i, 0)),
-        ],
-        out_specs=[spec, spec],
-        out_shape=[
-            jax.ShapeDtypeStruct((num_hashes, Np), jnp.uint32),
-            jax.ShapeDtypeStruct((num_hashes, Np), jnp.uint32),
-        ],
-        interpret=interpret,
-    )(seeds, byte_tensor)
+    out_shape = [
+        jax.ShapeDtypeStruct((num_hashes, Np), jnp.uint32),
+        jax.ShapeDtypeStruct((num_hashes, Np), jnp.uint32),
+    ]
+    if chunk:
+        spec = pl.BlockSpec((1, block_n), lambda k, i, c: (k, i))
+        hi, lo = pl.pallas_call(
+            functools.partial(_kernel_raw_chunked, chunk_len=chunk),
+            grid=(num_hashes, Np // block_n, L // chunk),
+            in_specs=[
+                pl.BlockSpec((1,), lambda k, i, c: (k,)),
+                pl.BlockSpec((block_n, chunk), lambda k, i, c: (i, c)),
+            ],
+            out_specs=[spec, spec],
+            out_shape=out_shape,
+            scratch_shapes=[
+                pltpu.VMEM((1, block_n), jnp.uint32),
+                pltpu.VMEM((1, block_n), jnp.uint32),
+            ],
+            interpret=interpret,
+        )(seeds, byte_tensor)
+    else:
+        spec = pl.BlockSpec((1, block_n), lambda k, i: (k, i))
+        hi, lo = pl.pallas_call(
+            functools.partial(_kernel_raw, max_len=L),
+            grid=(num_hashes, Np // block_n),
+            in_specs=[
+                pl.BlockSpec((1,), lambda k, i: (k,)),
+                pl.BlockSpec((block_n, L), lambda k, i: (i, 0)),
+            ],
+            out_specs=[spec, spec],
+            out_shape=out_shape,
+            interpret=interpret,
+        )(seeds, byte_tensor)
     return hi[:, :N].T, lo[:, :N].T

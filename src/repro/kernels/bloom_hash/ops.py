@@ -1,6 +1,12 @@
 """jit'd wrapper for the bloom_hash kernel: rank-polymorphic dispatch,
-uint8 -> int32 widening, interpret-mode selection off-TPU."""
+uint8 -> int32 widening, interpret-mode selection off-TPU.
+
+``REPRO_HASH_CHUNK`` overrides the byte-chunk width of the long-string grid
+(0 forces the historical full unroll; unset = auto, chunking above 64
+bytes)."""
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +18,11 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _chunk_override():
+    v = os.environ.get("REPRO_HASH_CHUNK")
+    return int(v) if v else None
+
+
 def _flat(strings: jax.Array):
     lead = strings.shape[:-1]
     return strings.reshape(-1, strings.shape[-1]).astype(jnp.int32), lead
@@ -20,7 +31,9 @@ def _flat(strings: jax.Array):
 def bloom_indices(strings: jax.Array, num_bins: int, num_hashes: int) -> jax.Array:
     """(..., L) uint8 -> (..., num_hashes) int64 bloom bin indices."""
     flat, lead = _flat(strings)
-    out = bloom_hash_kernel(flat, num_bins, num_hashes, interpret=_interpret())
+    out = bloom_hash_kernel(
+        flat, num_bins, num_hashes, interpret=_interpret(), chunk_len=_chunk_override()
+    )
     return out.reshape(lead + (num_hashes,)).astype(jnp.int64)
 
 
@@ -38,7 +51,10 @@ def hash_indices_seeded(strings: jax.Array, num_bins: int, seed: int = 0) -> jax
         return hashing.hash_to_bins(strings, num_bins, seed)
     flat, lead = _flat(strings)
     seeds = jnp.asarray([seed], jnp.uint32)
-    out = bloom_hash_kernel(flat, num_bins, 1, interpret=_interpret(), seeds=seeds)
+    out = bloom_hash_kernel(
+        flat, num_bins, 1, interpret=_interpret(), seeds=seeds,
+        chunk_len=_chunk_override(),
+    )
     return out[..., 0].reshape(lead).astype(jnp.int64)
 
 
@@ -50,6 +66,8 @@ def fnv1a64_raw(strings: jax.Array, seed: int = 0) -> jax.Array:
     ``repro.core.types``)."""
     flat, lead = _flat(strings)
     seeds = jnp.asarray([seed], jnp.uint32)
-    hi, lo = bloom_hash_kernel_raw(flat, 1, interpret=_interpret(), seeds=seeds)
+    hi, lo = bloom_hash_kernel_raw(
+        flat, 1, interpret=_interpret(), seeds=seeds, chunk_len=_chunk_override()
+    )
     h = (hi[:, 0].astype(jnp.uint64) << jnp.uint64(32)) | lo[:, 0].astype(jnp.uint64)
     return h.reshape(lead)

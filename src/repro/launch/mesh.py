@@ -43,6 +43,30 @@ def data_axes(mesh) -> Tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
+def batch_sharding(mesh):
+    """NamedSharding placing a batch dim across the mesh's data axes — the
+    ``in_shardings`` a TransformPlan is lowered with on this mesh.
+    Delegates to ``Engine`` so the two can never drift; use an Engine
+    directly to shard over non-default data axes."""
+    from repro.core.engine import Engine
+
+    return Engine(mesh, data_axes=data_axes(mesh)).batch_sharding()
+
+
+def mesh_fingerprint(mesh) -> Tuple:
+    """Hashable identity of a mesh: axis names, per-axis sizes, device ids.
+
+    Two meshes with the same fingerprint produce equal NamedShardings and
+    therefore hit the same entry in a TransformPlan's executable cache; a
+    differing fingerprint is a guaranteed cache miss.  Useful for logging
+    which compiled variants a serving/offline host holds."""
+    if mesh is None:
+        return ()
+    sizes = tuple(mesh.shape[a] for a in mesh.axis_names)
+    devs = tuple(int(d.id) for d in mesh.devices.flat)
+    return (tuple(mesh.axis_names), sizes, devs)
+
+
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (host) devices exist — tests/examples."""
     n = len(jax.devices())

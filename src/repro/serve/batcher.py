@@ -6,6 +6,12 @@ requests are batched.  This batcher gathers requests up to ``max_batch`` or
 ``max_wait_ms`` (whichever first), pads the batch to a fixed set of bucket
 sizes (so XLA reuses a handful of compiled programs instead of recompiling
 per batch size), runs the fused model once, and scatters replies.
+
+Host→device staging goes through the same :func:`repro.core.runner.
+stage_batch` helper as the offline PlanRunner, so online and offline paths
+place batches identically — including onto a mesh, when ``sharding`` is
+given.  Each call stages a FRESH device batch, which is what makes the
+FusedModel's default buffer donation safe on this path.
 """
 from __future__ import annotations
 
@@ -17,6 +23,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.runner import stage_batch
 
 
 class _Pending:
@@ -44,6 +52,8 @@ class MicroBatcher:
       max_batch: upper bound on batch size.
       max_wait_ms: latency budget for filling a batch.
       buckets: padded batch sizes to compile for (ascending).
+      sharding: optional jax sharding for staged request batches (a serving
+        tier running the fused model across a mesh); None = default device.
     """
 
     def __init__(
@@ -52,11 +62,13 @@ class MicroBatcher:
         max_batch: int = 32,
         max_wait_ms: float = 2.0,
         buckets: Sequence[int] = (1, 2, 4, 8, 16, 32),
+        sharding=None,
     ):
         self.model_fn = model_fn
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1e3
         self.buckets = tuple(b for b in buckets if b <= max_batch) or (max_batch,)
+        self.sharding = sharding
         self.q: "queue.Queue[_Pending]" = queue.Queue()
         self._stop = False
         self.batches_run = 0
@@ -111,8 +123,8 @@ class MicroBatcher:
                     if bs > n:  # pad with repeats of the last row
                         pad = np.repeat(stacked[-1:], bs - n, axis=0)
                         stacked = np.concatenate([stacked, pad], axis=0)
-                    cols[k] = jnp.asarray(stacked)
-                out = self.model_fn(cols)
+                    cols[k] = stacked
+                out = self.model_fn(stage_batch(cols, self.sharding))
                 out = jax.device_get(out)
                 self.batches_run += 1
                 self.rows_served += n

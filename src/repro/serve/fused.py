@@ -6,9 +6,17 @@ come out, and XLA compiles preprocessing + model as a single program.  This
 is precisely the mechanism behind the paper's production result (61% serving
 latency / 58% cost reduction vs interpreting a preprocessing pipeline — here
 the unfused baseline is measured by ``benchmarks/preprocessing.py``).
+
+Request buffers are DONATED to the fused executable by default: the serving
+tier (MicroBatcher) stages a fresh batch per call, so XLA may reuse the
+request buffers for intermediates/outputs instead of allocating.  Callers
+that re-read a batch after calling the model (donated jax buffers are
+invalidated) opt out per-instance with ``donate=False`` or globally with
+``REPRO_SERVE_DONATE=0``.
 """
 from __future__ import annotations
 
+import os
 from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
@@ -18,6 +26,10 @@ from repro.core import types as T
 from repro.core.export import PreprocessModel
 
 
+def _donate_default() -> bool:
+    return os.environ.get("REPRO_SERVE_DONATE", "1") not in ("0", "false", "")
+
+
 class FusedModel:
     def __init__(
         self,
@@ -25,6 +37,7 @@ class FusedModel:
         model_fn: Callable[[Any, T.Batch], Any],
         params: Any,
         feature_map: Optional[Dict[str, str]] = None,
+        donate: Optional[bool] = None,
     ):
         """
         Args:
@@ -32,17 +45,23 @@ class FusedModel:
           model_fn: (params, features) -> outputs, consuming preprocessed cols.
           params: backbone weights.
           feature_map: renames preprocessed columns to model input names.
+          donate: donate the raw request buffers to the fused executable.
+            None = the ``REPRO_SERVE_DONATE`` env default (on).  Donated
+            input arrays are invalidated after the call.
         """
         self.preprocess = preprocess
         self.model_fn = model_fn
         self.params = params
         self.feature_map = feature_map or {}
+        self.donate = _donate_default() if donate is None else donate
         # the fused path traces the preprocessing through its TransformPlan:
         # coercions/hashes are CSE'd before XLA ever sees them, which keeps
         # trace time and HLO size down for wide pipelines.  All jit wrappers
         # are created once here — never per call.
         self._plan = preprocess.plan()
-        self._fused = jax.jit(self._call)
+        self._fused = jax.jit(
+            self._call, donate_argnums=(1,) if self.donate else ()
+        )
         self._unfused_pre = jax.jit(preprocess.__call__)
         self._unfused_model = jax.jit(model_fn)
 
@@ -52,7 +71,8 @@ class FusedModel:
         return self.model_fn(params, feats)
 
     def __call__(self, raw: T.Batch):
-        """Single-XLA-program serving path (preprocessing fused in)."""
+        """Single-XLA-program serving path (preprocessing fused in).  With
+        donation on (default), ``raw``'s buffers are consumed by the call."""
         return self._fused(self.params, raw)
 
     def call_unfused(self, raw: T.Batch):

@@ -34,6 +34,45 @@ def test_bloom_hash_nested_shape():
     assert out.shape == (2, 2, 3)
 
 
+@pytest.mark.parametrize("max_len", [8, 64, 256])
+def test_bloom_hash_chunked_grid_matches_unrolled(max_len):
+    """The byte-chunk grid (state carried in scratch across the minor grid
+    dim) is bit-exact with the single-shot unrolled kernel — long strings no
+    longer unroll max_len into the traced program."""
+    from repro.kernels.bloom_hash.bloom_hash import (
+        bloom_hash_kernel,
+        bloom_hash_kernel_raw,
+    )
+
+    words = ["".join(RNG.choice(list("abcdefgh XYZ123!@"), RNG.integers(0, max_len)))
+             for _ in range(200)]
+    s = jnp.asarray(T.encode_strings(words, max_len)).astype(jnp.int32)
+    ref = bloom_hash_kernel(s, 4096, 3, block_n=64, interpret=True, chunk_len=0)
+    for chunk in (8, 32, 64):
+        got = bloom_hash_kernel(s, 4096, 3, block_n=64, interpret=True, chunk_len=chunk)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref), err_msg=f"chunk={chunk}")
+    hi0, lo0 = bloom_hash_kernel_raw(s, 2, block_n=64, interpret=True, chunk_len=0)
+    hi1, lo1 = bloom_hash_kernel_raw(s, 2, block_n=64, interpret=True, chunk_len=32)
+    np.testing.assert_array_equal(np.asarray(hi0), np.asarray(hi1))
+    np.testing.assert_array_equal(np.asarray(lo0), np.asarray(lo1))
+
+
+def test_bloom_hash_chunk_env_override(monkeypatch):
+    from repro.core import hashing
+    from repro.kernels.bloom_hash import ops
+
+    s = jnp.asarray(T.encode_strings(
+        ["".join(RNG.choice(list("abcdef"), RNG.integers(0, 100))) for _ in range(50)], 128
+    ))
+    want = np.asarray(hashing.fnv1a64(s, 3))
+    for chunk in ("16", "0", ""):
+        if chunk:
+            monkeypatch.setenv("REPRO_HASH_CHUNK", chunk)
+        else:
+            monkeypatch.delenv("REPRO_HASH_CHUNK", raising=False)
+        np.testing.assert_array_equal(np.asarray(ops.fnv1a64_raw(s, 3)), want)
+
+
 # ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------

@@ -1,0 +1,315 @@
+"""PlanRunner streaming executor + sharding-aware plan cache + persisted
+schedules: batch-for-batch equivalence with the eager interpreter, executable
+cache hits across (signature, mesh) and misses across meshes, one plan
+serving unsharded and mesh-sharded calls without re-analysis, and export
+bundles that reload without re-running plan analysis."""
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    Engine,
+    HashIndexTransformer,
+    KamaeSparkPipeline,
+    LogTransformer,
+    PlanRunner,
+    StringIndexEstimator,
+    TransformPlan,
+)
+from repro.core import types as T
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _assert_batch_close(a, b, keys=None):
+    keys = keys if keys is not None else set(a.keys())
+    assert set(a.keys()) >= set(keys) and set(b.keys()) >= set(keys)
+    for k in keys:
+        x, y = np.asarray(a[k]), np.asarray(b[k])
+        assert x.shape == y.shape, k
+        if np.issubdtype(x.dtype, np.floating):
+            np.testing.assert_allclose(x, y, rtol=1e-6, atol=1e-6, err_msg=k)
+        else:
+            np.testing.assert_array_equal(x, y, err_msg=k)
+
+
+def _mk_batch(n, seed):
+    rng = np.random.default_rng(seed)
+    return {
+        "UserID": np.asarray(rng.integers(1, 500, n), np.int32),
+        "Price": np.asarray(rng.lognormal(3, 2, n), np.float32),
+        "unused_extra": np.asarray(rng.normal(0, 1, n), np.float32),
+    }
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    pipe = KamaeSparkPipeline(
+        stages=[
+            HashIndexTransformer(
+                inputCol="UserID", outputCol="uh", inputDtype="string", numBins=1000
+            ),
+            StringIndexEstimator(
+                inputCol="UserID", outputCol="uv", inputDtype="string", numOOVIndices=1
+            ),
+            LogTransformer(inputCol="Price", outputCol="pl", alpha=1.0),
+        ]
+    )
+    return pipe.fit({k: jnp.asarray(v) for k, v in _mk_batch(64, 0).items()})
+
+
+# ---------------------------------------------------------------------------
+# streaming equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "kwargs",
+    [
+        dict(pack=1, workers=1, prefetch=0),
+        dict(pack=3, workers=1, prefetch=2),
+        dict(pack=4, workers=2, prefetch=2),
+        dict(pack=4, workers=2, prefetch=2, materialize="host"),
+    ],
+)
+def test_runner_matches_eager_batch_for_batch(fitted, kwargs):
+    batches = [_mk_batch(16, 100 + i) for i in range(7)]
+    runner = PlanRunner(fitted.plan(), donate=True, **kwargs)
+    outs = runner.run_collect(iter(batches))
+    assert len(outs) == len(batches)
+    for b, o in zip(batches, outs):
+        ref = fitted.transform({k: jnp.asarray(v) for k, v in b.items()})
+        _assert_batch_close(o, ref)
+    assert runner.stats["rows"] == 16 * 7
+    assert runner.stats["batches_in"] == 7
+
+
+def test_runner_pruned_outputs_and_required_inputs(fitted):
+    plan = fitted.plan(outputs=["uh", "pl"])
+    req = plan.required_inputs()
+    assert set(req) == {"UserID", "Price"}  # unused_extra never staged
+    batches = [_mk_batch(16, 200 + i) for i in range(5)]
+    runner = PlanRunner(plan, pack=2, materialize="host")
+    outs = runner.run_collect(iter(batches))
+    for b, o in zip(batches, outs):
+        assert set(o.keys()) == {"uh", "pl"}
+        assert all(isinstance(v, np.ndarray) for v in o.values())
+        ref = fitted.transform({k: jnp.asarray(v) for k, v in b.items()})
+        _assert_batch_close(o, ref, keys=["uh", "pl"])
+
+
+def test_runner_handles_signature_changes_and_leftovers(fitted):
+    # 3 batches of 16, then 2 of 8: groups flush on signature change and at
+    # iterator end; every batch still comes back, in order
+    batches = [_mk_batch(16, i) for i in range(3)] + [_mk_batch(8, 50 + i) for i in range(2)]
+    runner = PlanRunner(fitted.plan(), pack=8)
+    outs = runner.run_collect(iter(batches))
+    assert [int(next(iter(o.values())).shape[0]) for o in outs] == [16, 16, 16, 8, 8]
+    for b, o in zip(batches, outs):
+        ref = fitted.transform({k: jnp.asarray(v) for k, v in b.items()})
+        _assert_batch_close(o, ref)
+
+
+def test_runner_never_donates_caller_arrays(fitted):
+    """A lone device-resident batch passes through device_put unchanged; the
+    donating executable must still not invalidate the CALLER's arrays."""
+    batch = {k: jnp.asarray(v) for k, v in _mk_batch(16, 77).items()}
+    runner = PlanRunner(fitted.plan(), donate=True, pack=4, workers=1)
+    outs = runner.run_collect(iter([batch]))
+    assert len(outs) == 1
+    # caller's arrays survive the donated execution
+    _ = [np.asarray(v) for v in batch.values()]
+    ref = fitted.transform(batch)
+    _assert_batch_close(outs[0], ref)
+
+
+def test_transform_stream_api(fitted):
+    batches = [_mk_batch(16, 300 + i) for i in range(3)]
+    outs = list(fitted.transform_stream(iter(batches), pack=2))
+    assert len(outs) == 3
+    ref = fitted.transform({k: jnp.asarray(v) for k, v in batches[0].items()})
+    _assert_batch_close(outs[0], ref)
+
+
+# ---------------------------------------------------------------------------
+# sharding-aware executable cache: one plan, many execution contexts
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_unsharded_and_mesh_sharded_without_reanalysis(fitted):
+    from repro.launch.mesh import make_host_mesh, use_mesh
+
+    # fresh plan so trace/cache counters start at zero (the module fixture's
+    # cached plan has served other tests)
+    plan = TransformPlan(fitted.stages)
+    batch = {k: jnp.asarray(v) for k, v in _mk_batch(32, 9).items()}
+
+    out_plain = plan(batch)
+    plan(batch)  # same signature, no engine: cache hit
+    assert plan.stats["trace_count"] == 1
+    assert plan.stats["jit_cache_entries"] == 1
+
+    mesh = make_host_mesh(data=1, model=1)
+    eng = Engine(mesh)
+    with use_mesh(mesh):
+        sharded = eng.shard_batch(batch)
+        out_sh = plan(sharded, engine=eng)
+        # same signature + same mesh: cache hit, no retrace
+        plan(sharded, engine=eng)
+    assert plan.stats["trace_count"] == 2
+    assert plan.stats["jit_cache_entries"] == 2
+
+    # a mesh with different axes is a different sharding -> cache miss
+    mesh2 = jax.make_mesh((1,), ("data",))
+    eng2 = Engine(mesh2)
+    with use_mesh(mesh2):
+        out_sh2 = plan(eng2.shard_batch(batch), engine=eng2)
+    assert plan.stats["trace_count"] == 3
+    assert plan.stats["jit_cache_entries"] == 3
+
+    _assert_batch_close(out_plain, out_sh)
+    _assert_batch_close(out_plain, out_sh2)
+
+    # transform_jit with an engine routes through the pipeline's plan cache:
+    # one new entry for this engine's sharding, then hits
+    pipeline_plan = fitted.plan()
+    n0 = pipeline_plan.stats["jit_cache_entries"]
+    fitted.transform_jit(batch, engine=eng)
+    assert pipeline_plan.stats["jit_cache_entries"] == n0 + 1
+    fitted.transform_jit(batch, engine=eng)
+    assert pipeline_plan.stats["jit_cache_entries"] == n0 + 1
+
+
+def test_engine_jit_transform_delegates_to_plan(fitted):
+    plan = fitted.plan()
+    eng = Engine(None)
+    fn = eng.jit_transform(plan)
+    assert fn is plan.jit_for()  # same cached wrapper object
+
+
+def test_mesh_fingerprint():
+    from repro.launch.mesh import batch_sharding, make_host_mesh, mesh_fingerprint
+
+    assert mesh_fingerprint(None) == ()
+    mesh = make_host_mesh(data=1, model=1)
+    fp = mesh_fingerprint(mesh)
+    assert fp[0] == ("data", "model")
+    assert fp == mesh_fingerprint(make_host_mesh(data=1, model=1))
+    sh = batch_sharding(mesh)
+    assert sh == Engine(mesh).batch_sharding()
+
+
+def test_sharded_stream_matches_single_device():
+    """8 host devices (subprocess): the SAME plan streams a sharded epoch
+    through Engine.batch_sharding() and matches the single-device result."""
+    script = """
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import (Engine, KamaeSparkPipeline, LogTransformer,
+                                PlanRunner, StringIndexEstimator)
+        from repro.launch.mesh import make_host_mesh, use_mesh
+
+        rng = np.random.default_rng(0)
+        def mk(seed):
+            r = np.random.default_rng(seed)
+            return {"MovieID": np.asarray(r.integers(1, 300, 64), np.int32),
+                    "Price": np.asarray(r.lognormal(3, 2, 64), np.float32)}
+        pipe = KamaeSparkPipeline(stages=[
+            StringIndexEstimator(inputCol="MovieID", outputCol="mi", inputDtype="string"),
+            LogTransformer(inputCol="Price", outputCol="pl", alpha=1.0),
+        ])
+        fitted = pipe.fit({k: jnp.asarray(v) for k, v in mk(0).items()})
+        plan = fitted.plan()
+        batches = [mk(10 + i) for i in range(6)]
+
+        # unsharded pass first: entry 1 in the executable cache
+        single = PlanRunner(plan, workers=1).run_collect(iter(batches))
+
+        mesh = make_host_mesh(data=8, model=1)
+        eng = Engine(mesh)
+        with use_mesh(mesh):
+            runner = PlanRunner(plan, engine=eng, pack=2, workers=1)
+            sharded = runner.run_collect(iter(batches))
+        assert plan.stats["jit_cache_entries"] == 2, plan.stats
+        for a, b in zip(single, sharded):
+            for k in a:
+                x, y = np.asarray(a[k]), np.asarray(b[k])
+                if np.issubdtype(x.dtype, np.floating):
+                    np.testing.assert_allclose(x, y, rtol=1e-6, atol=1e-6)
+                else:
+                    np.testing.assert_array_equal(x, y)
+        print("SHARDED_STREAM_OK")
+        """
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True,
+        text=True,
+        timeout=560,
+        env={
+            "PYTHONPATH": str(REPO / "src"),
+            "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+            "PATH": "/usr/bin:/bin",
+            "HOME": "/root",
+        },
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARDED_STREAM_OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# cross-request plan persistence (schedule in the export bundle)
+# ---------------------------------------------------------------------------
+
+def test_bundle_reload_skips_plan_analysis(fitted, monkeypatch):
+    from repro.core.export import PreprocessModel
+
+    model = fitted.export()
+    blob = model.save_bytes()
+    loaded = PreprocessModel.load_bytes(blob)
+    assert loaded._schedule is not None
+
+    # a loaded bundle must never re-run analysis for the full plan
+    def boom(self):
+        raise AssertionError("plan analysis ran on a loaded bundle")
+
+    monkeypatch.setattr(TransformPlan, "_analyze", boom)
+    plan = loaded.plan()
+    assert plan.built_from_schedule
+    assert loaded.plan() is plan  # and it is cached
+    monkeypatch.undo()
+
+    batch = {k: jnp.asarray(v) for k, v in _mk_batch(16, 5).items()}
+    _assert_batch_close(plan(batch), model(batch))
+
+
+def test_bundle_schedule_round_trips_cse_stats(fitted, tmp_path):
+    from repro.core.export import PreprocessModel
+
+    model = fitted.export()
+    p = tmp_path / "bundle.rpp"
+    model.save(str(p))
+    loaded = PreprocessModel.load(str(p))
+    plan0 = model.plan()
+    plan1 = loaded.plan()
+    assert plan1.cse_stats == plan0.cse_stats
+    assert len(plan1._nodes) == len(plan0._nodes)
+    for n0, n1 in zip(plan0._nodes, plan1._nodes):
+        assert n0.in_specs == n1.in_specs
+        assert n0.out_cols == n1.out_cols
+        assert n0.hash_seeds == n1.hash_seeds
+        assert n0.dead_after == n1.dead_after
+
+
+def test_runner_streams_loaded_bundle(fitted):
+    from repro.core.export import PreprocessModel
+
+    loaded = PreprocessModel.load_bytes(fitted.export().save_bytes())
+    batches = [_mk_batch(16, 400 + i) for i in range(4)]
+    outs = list(loaded.stream(iter(batches), pack=2))
+    assert len(outs) == 4
+    for b, o in zip(batches, outs):
+        ref = loaded({k: jnp.asarray(v) for k, v in b.items()})
+        _assert_batch_close(o, ref)

@@ -59,6 +59,36 @@ def _ref_string_to_number(strings, dtype="float32"):
     return jnp.where(invalid, 0, out).astype(jdt)
 
 
+def _ref_concat(parts, separator="", max_len=32):
+    """Frozen copy of the pre-scan concat: python loop over parts x offsets."""
+    lead = jnp.broadcast_shapes(*[p.shape[:-1] for p in parts])
+    N = 1
+    for dd in lead:
+        N *= dd
+    pieces = []
+    if separator:
+        sep_const = jnp.broadcast_to(
+            jnp.asarray(T.encode_strings([separator], len(separator))[0]),
+            (N, len(separator)),
+        )
+    for i, p in enumerate(parts):
+        if i > 0 and separator:
+            pieces.append(sep_const)
+        pieces.append(jnp.broadcast_to(p, lead + p.shape[-1:]).reshape(N, p.shape[-1]))
+    out = jnp.zeros((N * max_len,), jnp.uint8)
+    offs = jnp.zeros((N,), jnp.int64)
+    rows = jnp.arange(N)
+    for p in pieces:
+        Lp = p.shape[-1]
+        cols = offs[:, None] + jnp.arange(Lp)[None, :]
+        valid = (p != 0) & (cols < max_len)
+        flat = rows[:, None] * max_len + jnp.clip(cols, 0, max_len - 1)
+        flat = jnp.where(valid, flat, N * max_len)
+        out = out.at[flat.reshape(-1)].set(p.reshape(-1), mode="drop")
+        offs = offs + T.string_lengths(p).astype(jnp.int64)
+    return out.reshape((N, max_len)).reshape(lead + (max_len,))
+
+
 def _ref_split_starts(s, separator):
     """The seed's greedy covered-until carry (python loop over positions)."""
     d = len(separator)
@@ -163,6 +193,48 @@ def test_split_carry_scan_bit_exact(sep):
         (jnp.moveaxis(raw, 1, 0), jnp.arange(s.shape[1], dtype=jnp.int32)),
     )
     np.testing.assert_array_equal(np.asarray(jnp.moveaxis(start_t, 0, 1)), got)
+
+
+@pytest.mark.parametrize("sep", ["", "-", "||"])
+@pytest.mark.parametrize("max_len", [12, 40])
+def test_concat_scan_bit_exact(sep, max_len):
+    """Scan-based concat == the seed's unrolled parts x offsets loop, over
+    randomized piece widths (truncation at max_len included)."""
+    parts = [
+        jnp.asarray(_random_strings(150, w, kind))
+        for w, kind in [(6, "text"), (10, "bytes"), (4, "numeric"), (14, "text")]
+    ]
+    got = np.asarray(strops.concat(parts, sep, max_len))
+    want = np.asarray(_ref_concat(parts, sep, max_len))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_concat_scan_nested_shape():
+    a = jnp.asarray(_random_strings(60, 8, "text")).reshape(3, 20, 8)
+    b = jnp.asarray(_random_strings(60, 6, "text")).reshape(3, 20, 6)
+    got = np.asarray(strops.concat([a, b], "+", 20))
+    want = np.asarray(_ref_concat([a, b], "+", 20))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("sep", ["|", "<>", "abc"])
+def test_split_gather_bit_exact(sep):
+    """Gather-based split materialisation == the seed's scatter over
+    adversarial inputs (adjacent separators, edges, interior zeros only via
+    padding)."""
+    pieces = ["", "a", "ab", sep, sep + sep, "x" + sep, sep + "y", "end", "0.5"]
+    words = [
+        sep.join(RNG.choice(pieces, RNG.integers(0, 6)).tolist()) for _ in range(300)
+    ]
+    s = jnp.asarray(T.encode_strings(words, 48))
+    out = T.decode_strings(np.asarray(strops.split_to_list(s, sep, 5, "D", 12)))
+    for row, w in zip(out, words):
+        want = [p[:12] for p in w.split(sep)][:5]
+        want = [p if p else "D" for p in want]
+        if w == "":
+            want = []
+        want += ["D"] * (5 - len(want))
+        assert list(row) == want, (w, list(row), want)
 
 
 # ---------------------------------------------------------------------------

@@ -194,8 +194,9 @@ def test_fused_model_matches_unfused(fitted, movielens_batch):
         return feats["Occupation_indexed"] @ params
 
     fm = FusedModel(fitted.export(outputs=["Occupation_indexed"]), model_fn, w)
-    np.testing.assert_allclose(
-        np.asarray(fm(movielens_batch)),
-        np.asarray(fm.call_unfused(movielens_batch)),
-        rtol=1e-6,
-    )
+    assert fm.donate  # serve-path default: request buffers are donated
+    want = np.asarray(fm.call_unfused(movielens_batch))
+    # the fused call consumes its request buffers (donation), so hand it a
+    # private copy rather than the shared module fixture
+    req = {k: jnp.array(v) for k, v in movielens_batch.items()}
+    np.testing.assert_allclose(np.asarray(fm(req)), want, rtol=1e-6)
