@@ -2,6 +2,8 @@
 #
 #   preprocessing    — paper §3: fused vs unfused vs interpreted serve latency
 #                      + planned-vs-interpreted-vs-naive-jit transform path
+#   serving          — ServingGateway under open-loop load: p50/p99,
+#                      throughput, shed rate at fixed arrival rates
 #   indexing         — paper §2: string/hash/bloom indexing variants
 #   fit_throughput   — Spark-role streaming fit + transform throughput
 #   decode           — serve_step latency for the LM substrate (smoke scale)
@@ -54,8 +56,13 @@ def main() -> None:
 
     failures: list = []
     print("name,us_per_call,derived")
+    from . import serving
+
     if args.smoke:
         _loud("preprocessing", preprocessing.run, failures, smoke=True)
+        # short CPU-only gateway load run: seconds, and loud on
+        # regression-shaped output (zero completed / all shed)
+        _loud("serving", serving.run, failures, smoke=True)
         _write_json(args.json)  # partial rows still recorded on failure
         if failures:
             sys.exit(f"benchmark(s) failed: {', '.join(failures)}")
@@ -64,6 +71,7 @@ def main() -> None:
     from . import fit_throughput, indexing, roofline
 
     _loud("preprocessing", preprocessing.run, failures)
+    _loud("serving", serving.run, failures)
     _loud("indexing", indexing.run, failures)
     _loud("fit_throughput", fit_throughput.run, failures)
 

@@ -1,0 +1,169 @@
+"""Online serving tier benchmark: an open-loop load generator driving the
+ServingGateway at fixed arrival rates.
+
+Closed-loop clients (wait for a reply, then send the next request) hide
+overload: the offered rate collapses to whatever the server sustains and the
+latency distribution looks healthy even when capacity is exceeded.  An
+OPEN-loop generator emits request i at ``t0 + i/rate`` no matter what came
+back — the paper's production setting (~200 req/s of user traffic does not
+slow down because the server is busy) — so queueing delay, shedding, and
+backpressure appear in the measurements instead of being absorbed by the
+generator.
+
+The schedule is replayable: request rows come from a seeded generator and
+arrival times are a fixed grid, so two runs offer byte-identical load.
+
+Per rate, four rows land in BENCH_preprocessing.json:
+
+  serve_gw_p50_r<rate>         gateway end-to-end p50 (from the DDSketch)
+  serve_gw_p99_r<rate>         ... p99, plus queue-wait/execute quantiles
+  serve_gw_throughput_r<rate>  completed rows/s over the run window
+  serve_gw_shed_r<rate>        shed+rejected fraction of offered load
+
+A regression-shaped result — nothing completed, or everything shed — raises
+(benchmarks/run.py turns that into a loud failure).
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (
+    HashIndexTransformer,
+    KamaeSparkPipeline,
+    LogTransformer,
+    StandardScaleEstimator,
+)
+from repro.serve import (
+    DeadlineExceededError,
+    FusedModel,
+    GatewayError,
+    ServingGateway,
+)
+
+from .common import emit
+
+
+def _build_fused() -> FusedModel:
+    """A small but real request pipeline: hash-indexed id + log/scaled
+    numerical, fused with a linear head."""
+    rng = np.random.default_rng(0)
+    lake = {
+        "user_id": jnp.asarray(rng.integers(1, 1_000_000, 512), jnp.int64),
+        "price": jnp.asarray(rng.lognormal(3, 2, 512), jnp.float32),
+    }
+    pipe = KamaeSparkPipeline(
+        stages=[
+            HashIndexTransformer(
+                inputCol="user_id", outputCol="uh", inputDtype="string",
+                numBins=4096,
+            ),
+            LogTransformer(inputCol="price", outputCol="pl", alpha=1.0),
+            StandardScaleEstimator(inputCol="pl", outputCol="ps"),
+        ]
+    )
+    export = pipe.fit(lake).export(outputs=["uh", "ps"])
+
+    def fwd(params, feats):
+        return feats["ps"] * params["w"] + feats["uh"] % 97
+
+    return FusedModel(export, fwd, {"w": jnp.float32(0.5)}, donate=True)
+
+
+def _request_rows(n: int, seed: int = 7):
+    rng = np.random.default_rng(seed)
+    return [
+        {
+            "user_id": np.int64(rng.integers(1, 1_000_000)),
+            "price": np.float32(rng.lognormal(3, 2)),
+        }
+        for _ in range(n)
+    ]
+
+
+def run(smoke: bool = False) -> None:
+    fm = _build_fused()
+    rates = [400] if smoke else [200, 800]
+    seconds = 1.5 if smoke else 4.0
+    for rate in rates:
+        # fresh gateway per rate: the latency sketches are cumulative, and a
+        # p99 row labelled r800 must not average in the unloaded r200 run
+        # (the fused executables persist on fm, so re-warmup is trace-free
+        # after the first rate)
+        gw = ServingGateway(max_pending=256, max_wait_ms=2.0, workers=2)
+        gw.register(
+            "ranker",
+            fm,
+            example=_request_rows(1)[0],
+            buckets=(1, 2, 4, 8, 16, 32),
+            max_batch=32,
+        )
+        gw.warmup()
+        try:
+            _drive(gw, fm, rate, seconds, fm.trace_count)
+        finally:
+            gw.close()
+
+
+def _drive(gw, fm, rate: int, seconds: float, traces_after_warmup: int) -> None:
+    n = int(rate * seconds)
+    rows = _request_rows(n, seed=100 + rate)
+    completed, shed, rejected = [], [], []
+
+    def client(i):
+        try:
+            gw.submit("ranker", rows[i], deadline_ms=250.0, timeout=10.0)
+            completed.append(i)
+        except DeadlineExceededError:
+            shed.append(i)
+        except GatewayError:
+            rejected.append(i)
+
+    batches_before = gw.snapshot()["stats"]["batches"]
+    t0 = time.perf_counter()
+    with cf.ThreadPoolExecutor(max_workers=64) as pool:
+        futs = []
+        for i in range(n):  # open loop: dispatch at t0 + i/rate, no matter what
+            target = t0 + i / rate
+            lag = target - time.perf_counter()
+            if lag > 0:
+                time.sleep(lag)
+            futs.append(pool.submit(client, i))
+        for f in futs:
+            f.result()
+    elapsed = time.perf_counter() - t0
+
+    snap = gw.snapshot()["models"]["ranker"]
+    shed_rate = (len(shed) + len(rejected)) / n
+    if not completed or shed_rate >= 1.0:
+        raise RuntimeError(
+            f"regression-shaped serving result at rate={rate}: "
+            f"{len(completed)}/{n} completed, shed_rate={shed_rate:.2f}"
+        )
+    emit(
+        f"serve_gw_p50_r{rate}",
+        snap["e2e"]["p50_us"],
+        f"queue_p50={snap['queue']['p50_us']}us exec_p50={snap['execute']['p50_us']}us",
+    )
+    emit(
+        f"serve_gw_p99_r{rate}",
+        snap["e2e"]["p99_us"],
+        f"queue_p99={snap['queue']['p99_us']}us exec_p99={snap['execute']['p99_us']}us",
+    )
+    n_batches = gw.snapshot()["stats"]["batches"] - batches_before
+    emit(
+        f"serve_gw_throughput_r{rate}",
+        1e6 * elapsed / max(len(completed), 1),
+        f"rows_per_s={len(completed) / elapsed:.0f} offered={rate}/s "
+        f"batches={n_batches}",
+    )
+    emit(
+        f"serve_gw_shed_r{rate}",
+        0.0,
+        f"shed_rate={shed_rate:.3f} shed={len(shed)} rejected={len(rejected)} "
+        f"completed={len(completed)}/{n} "
+        f"traces_since_warmup={fm.trace_count - traces_after_warmup}",
+    )

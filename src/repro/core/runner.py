@@ -43,8 +43,10 @@ The same staging helper (:func:`stage_batch`) backs the online
 from __future__ import annotations
 
 import collections
+import os
+import threading
 import time
-from typing import Iterable, Iterator, List, Optional, Tuple
+from typing import Callable, Iterable, Iterator, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -61,6 +63,57 @@ def stage_batch(batch, sharding=None):
     if sharding is None:
         return {k: jax.device_put(v) for k, v in batch.items()}
     return {k: jax.device_put(v, sharding) for k, v in batch.items()}
+
+
+def _autopack_default() -> bool:
+    return os.environ.get("REPRO_RUNNER_AUTOPACK", "0") not in ("0", "", "false")
+
+
+class _AutoPack:
+    """Halve/double ``pack`` toward a per-superbatch latency target.
+
+    The fixed ``pack=8`` default sits on a cache cliff for some hosts (see
+    ROADMAP): too large a superbatch blows the cache and adds latency, too
+    small leaves per-call fixed cost unamortised.  This controller measures
+    superbatch wall time and walks ``pack`` toward ``target`` seconds per
+    call: above the target it halves, below half the target it doubles, and
+    inside the band (or at a bound) it settles — after which measurement
+    stops and the runner returns to fully-async dispatch.
+
+    The first measured superbatch is discarded: it pays compile cost and
+    would otherwise always read as "too slow".  Leftover groups smaller than
+    the current pack are ignored — they are not representative of a full
+    superbatch.  ``observe`` is thread-safe (worker dispatch threads)."""
+
+    def __init__(self, target_s: float, lo: int = 1, hi: int = 64):
+        self.target = float(target_s)
+        self.lo = int(lo)
+        self.hi = int(hi)
+        self.warmed = False
+        self.settled = False
+        self.adjustments = 0
+        self._lock = threading.Lock()
+
+    def observe(self, pack_used: int, current_pack: int, seconds: float) -> int:
+        with self._lock:
+            if self.settled:
+                return current_pack
+            if not self.warmed:
+                self.warmed = True  # compile superbatch: never representative
+                return current_pack
+            if pack_used < current_pack:
+                return current_pack  # under-full leftover group
+            if seconds > self.target:
+                new = max(self.lo, current_pack // 2)
+            elif seconds < self.target / 2:
+                new = min(self.hi, current_pack * 2)
+            else:
+                new = current_pack
+            if new == current_pack:
+                self.settled = True
+            else:
+                self.adjustments += 1
+            return new
 
 
 class PlanRunner:
@@ -86,6 +139,14 @@ class PlanRunner:
         concurrently across cores; 1 elsewhere — an accelerator serializes
         compute on-device, so extra dispatch threads only add contention).
         Output order is preserved regardless.
+      autopack: adapt ``pack`` at runtime from measured superbatch wall time
+        (halve above ``autopack_target_ms``, double below half of it, settle
+        in between — see :class:`_AutoPack`).  None = the
+        ``REPRO_RUNNER_AUTOPACK=1`` env default (off).
+      autopack_target_ms: target superbatch latency for autopack.  None =
+        the ``REPRO_RUNNER_PACK_TARGET_MS`` env default (50 ms).
+      clock: monotonic time source for autopack measurement (tests inject a
+        fake clock; production uses ``time.perf_counter``).
       materialize: where yielded batches live.  "device" (default) yields
         device arrays (sliced per input batch when packed — each slice is a
         device op).  "host" transfers each computed superbatch to the host
@@ -104,6 +165,9 @@ class PlanRunner:
         staging: Optional[bool] = None,
         workers: Optional[int] = None,
         materialize: str = "device",
+        autopack: Optional[bool] = None,
+        autopack_target_ms: Optional[float] = None,
+        clock: Optional[Callable[[], float]] = None,
     ):
         if materialize not in ("device", "host"):
             raise ValueError("materialize must be 'device' or 'host'")
@@ -130,6 +194,23 @@ class PlanRunner:
         # runner stages only those (the rest never cross host->device)
         req = getattr(plan, "required_inputs", lambda: None)()
         self._required = set(req) if req is not None else None
+        self._clock = clock if clock is not None else time.perf_counter
+        if autopack is None:
+            autopack = _autopack_default()
+        if autopack_target_ms is None:
+            autopack_target_ms = float(
+                os.environ.get("REPRO_RUNNER_PACK_TARGET_MS", "50")
+            )
+        self._autopack = (
+            _AutoPack(autopack_target_ms / 1e3, hi=max(64, pack))
+            if autopack
+            else None
+        )
+        # concurrent dispatches time each other's compute; only SOLO
+        # measurements (no other superbatch in flight for the whole span)
+        # feed the autopack controller
+        self._inflight = 0
+        self._inflight_lock = threading.Lock()
         self._fn = plan.jit_for(engine=engine, donate=donate)
         # pinned staging slots: signature -> list of {col: np.ndarray}
         self._slots: dict = {}
@@ -262,10 +343,35 @@ class PlanRunner:
         self.stats["batches_in"] += len(rows)
         self.stats["rows"] += sum(rows)
 
+    def _dispatch(self, dev: T.Batch, rows: List[int]) -> T.Batch:
+        """One plan call.  While autopack is active the call is synchronous
+        and timed, and ``self.pack`` follows the controller — the staging
+        generator reads ``self.pack`` per group, so adjustments shape the
+        superbatches formed after this one.  Once settled (or with autopack
+        off) dispatch is fully asynchronous again."""
+        ap = self._autopack
+        if ap is None or ap.settled:
+            return self._fn(dev)
+        with self._inflight_lock:
+            self._inflight += 1
+            solo = self._inflight == 1
+        try:
+            t0 = self._clock()
+            out = self._fn(dev)
+            jax.block_until_ready(out)
+            dt = self._clock() - t0
+        finally:
+            with self._inflight_lock:
+                solo = solo and self._inflight == 1
+                self._inflight -= 1
+        if solo:  # overlapped measurements read ~workers x the true cost
+            self.pack = ap.observe(len(rows), self.pack, dt)
+        return out
+
     def _run_serial(self, staged) -> Iterator[T.Batch]:
         inflight: collections.deque = collections.deque()
         for dev, rows in staged:
-            out = self._fn(dev)
+            out = self._dispatch(dev, rows)
             inflight.append((out, rows))
             self._account(rows)
             if len(inflight) > self.prefetch:
@@ -279,7 +385,7 @@ class PlanRunner:
         import concurrent.futures as cf
 
         def one(dev, rows):
-            out = self._fn(dev)
+            out = self._dispatch(dev, rows)
             jax.block_until_ready(out)
             return out, rows
 
@@ -317,7 +423,11 @@ class PlanRunner:
 
     def __repr__(self) -> str:
         sh = "sharded" if self._sharding is not None else "single-device"
+        ap = ""
+        if self._autopack is not None:
+            state = "settled" if self._autopack.settled else "adapting"
+            ap = f", autopack={state}({self._autopack.adjustments} adj)"
         return (
             f"PlanRunner({sh}, pack={self.pack}, prefetch={self.prefetch}, "
-            f"donate={self.donate}, rows={self.stats['rows']})"
+            f"donate={self.donate}, rows={self.stats['rows']}{ap})"
         )

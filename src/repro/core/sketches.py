@@ -143,7 +143,47 @@ def dd_update(hist: jax.Array, x: jax.Array, mask: Optional[jax.Array] = None) -
 
 
 def dd_merge(a: jax.Array, b: jax.Array) -> jax.Array:
+    # plain addition: works for jnp histograms under jit AND for the numpy
+    # host-side histograms produced by dd_update_np (serving telemetry)
     return a + b
+
+
+def dd_bin_np(x) -> "np.ndarray":
+    """Numpy mirror of :func:`dd_update`'s bin mapping (same 2048-bin layout).
+
+    Host-side recorders (the serving gateway's per-request latency telemetry)
+    cannot afford a jit dispatch per observation; this computes the identical
+    bin index with numpy, so the resulting histograms are mergeable with
+    :func:`dd_merge` and queryable with :func:`dd_quantile` alongside the jnp
+    path — asserted bin-for-bin by tests/test_sketches.py."""
+    import numpy as np
+
+    xf = np.asarray(x, np.float64)
+    is_zero = np.abs(xf) < 1e-12
+    e = np.floor(
+        np.log(np.maximum(np.abs(xf), 1e-300)) / _LOG_GAMMA
+    ).astype(np.int64)
+    mag = np.clip(e - _MIN_EXP, 0, _MAG_BINS - 1)
+    return np.where(is_zero, _HALF, np.where(xf > 0, _HALF + 1 + mag, _HALF - 1 - mag))
+
+
+def dd_init_np():
+    """Numpy histogram with the dd_init layout (host-side telemetry)."""
+    import numpy as np
+
+    return np.zeros((DD_BINS,), np.int64)
+
+
+def dd_update_np(hist, x):
+    """In-place numpy fold of observations into ``hist`` (NaNs dropped,
+    matching dd_update's mask semantics).  Returns ``hist``."""
+    import numpy as np
+
+    xf = np.asarray(x, np.float64).reshape(-1)
+    xf = xf[~np.isnan(xf)]
+    if xf.size:
+        np.add.at(hist, dd_bin_np(xf), 1)
+    return hist
 
 
 def dd_quantile(hist: jax.Array, q) -> jax.Array:

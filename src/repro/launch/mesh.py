@@ -67,6 +67,26 @@ def mesh_fingerprint(mesh) -> Tuple:
     return (tuple(mesh.axis_names), sizes, devs)
 
 
+def sharding_fingerprint(sharding) -> Tuple:
+    """Hashable identity of an (optional) sharding: the owning mesh's
+    fingerprint plus the partition spec.  ``None`` (single default device)
+    fingerprints to ``()``.  This is the cache key FusedModel lowers its
+    fused executable under — two shardings with equal fingerprints place
+    batches identically, so they may share one compiled program."""
+    if sharding is None:
+        return ()
+    mesh = getattr(sharding, "mesh", None)
+    spec = getattr(sharding, "spec", None)
+    if mesh is None:  # e.g. SingleDeviceSharding / PositionalSharding
+        # no mesh+spec to identify the layout, so fold in the repr: distinct
+        # layouts over the same devices must NOT collide on one executable
+        # (a collision silently serves the wrong placement; the worst a
+        # too-fine key costs is a duplicate compile)
+        devs = tuple(sorted(int(d.id) for d in getattr(sharding, "device_set", ())))
+        return (type(sharding).__name__, devs, repr(sharding))
+    return (mesh_fingerprint(mesh), str(spec))
+
+
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (host) devices exist — tests/examples."""
     n = len(jax.devices())

@@ -1,5 +1,26 @@
-"""Serving layer: fused preprocessing+model bundles, batched decode."""
-from .fused import FusedModel
+"""Serving layer: fused preprocessing+model bundles, batched decode, and the
+multi-model online gateway (admission control, continuous batching)."""
+from .batcher import BatcherClosedError, MicroBatcher
 from .decode import greedy_decode
+from .fused import FusedModel
+from .gateway import (
+    DeadlineExceededError,
+    GatewayClosedError,
+    GatewayError,
+    QueueFullError,
+    ServingGateway,
+    UnknownModelError,
+)
 
-__all__ = ["FusedModel", "greedy_decode"]
+__all__ = [
+    "FusedModel",
+    "MicroBatcher",
+    "BatcherClosedError",
+    "ServingGateway",
+    "GatewayError",
+    "QueueFullError",
+    "DeadlineExceededError",
+    "GatewayClosedError",
+    "UnknownModelError",
+    "greedy_decode",
+]

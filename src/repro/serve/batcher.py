@@ -7,11 +7,20 @@ requests are batched.  This batcher gathers requests up to ``max_batch`` or
 sizes (so XLA reuses a handful of compiled programs instead of recompiling
 per batch size), runs the fused model once, and scatters replies.
 
+Failure containment: a batch whose model call raises is re-run one request
+at a time, so a single poisoned request receives its own error while the
+rest of the batch still gets results.  ``close()`` drains — requests still
+queued when the loop stops fail fast with :class:`BatcherClosedError`
+instead of leaving their submitters blocked until timeout.
+
 Host→device staging goes through the same :func:`repro.core.runner.
 stage_batch` helper as the offline PlanRunner, so online and offline paths
 place batches identically — including onto a mesh, when ``sharding`` is
 given.  Each call stages a FRESH device batch, which is what makes the
 FusedModel's default buffer donation safe on this path.
+
+The multi-model, admission-controlled serving tier built on the same
+batching ideas lives in :mod:`repro.serve.gateway`.
 """
 from __future__ import annotations
 
@@ -21,10 +30,13 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.runner import stage_batch
+
+
+class BatcherClosedError(RuntimeError):
+    """The batcher was closed before this request could run."""
 
 
 class _Pending:
@@ -38,10 +50,44 @@ class _Pending:
 
 
 def _bucket(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket holding ``n`` rows (``buckets`` ascending)."""
     for b in buckets:
         if n <= b:
             return b
     return buckets[-1]
+
+
+def normalize_buckets(buckets: Sequence[int], max_batch: int):
+    """``(ascending buckets <= max_batch, clamped max_batch)``.
+
+    The bucket list is the CLOSED set of batch shapes the serving tier
+    executes (and, behind a warmed gateway, the only compiled ones); a batch
+    larger than the top bucket would run unpadded at a never-bucketed shape,
+    so ``max_batch`` clamps to it.  Shared by MicroBatcher and the gateway
+    registry so the two tiers bucket identically."""
+    bl = tuple(sorted(b for b in buckets if b <= max_batch)) or (int(max_batch),)
+    return bl, min(int(max_batch), bl[-1])
+
+
+def run_padded_batch(rows_features, bucket_size: int, model_fn, sharding=None):
+    """Run a list of single-row feature dicts as ONE padded model call.
+
+    Stacks rows column-wise, pads to ``bucket_size`` by repeating the last
+    row (padding rows are discarded, never returned), stages the batch
+    (:func:`repro.core.runner.stage_batch`, mesh-sharded when ``sharding``
+    is given) and scatters the host-fetched outputs back per row.  Shared by
+    :class:`MicroBatcher` and the gateway's batch executor so the two
+    serving tiers cannot diverge in padding/staging/scatter semantics."""
+    n = len(rows_features)
+    cols = {}
+    for k in rows_features[0]:
+        stacked = np.stack([np.asarray(f[k]) for f in rows_features])
+        if bucket_size > n:
+            pad = np.repeat(stacked[-1:], bucket_size - n, axis=0)
+            stacked = np.concatenate([stacked, pad], axis=0)
+        cols[k] = stacked
+    out = jax.device_get(model_fn(stage_batch(cols, sharding)))
+    return [jax.tree.map(lambda a, i=i: a[i], out) for i in range(n)]
 
 
 class MicroBatcher:
@@ -65,12 +111,13 @@ class MicroBatcher:
         sharding=None,
     ):
         self.model_fn = model_fn
-        self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1e3
-        self.buckets = tuple(b for b in buckets if b <= max_batch) or (max_batch,)
+        self.buckets, self.max_batch = normalize_buckets(buckets, max_batch)
         self.sharding = sharding
         self.q: "queue.Queue[_Pending]" = queue.Queue()
         self._stop = False
+        self._closed = False
+        self._close_lock = threading.Lock()
         self.batches_run = 0
         self.rows_served = 0
         self._thread = threading.Thread(target=self._loop, daemon=True)
@@ -79,7 +126,13 @@ class MicroBatcher:
     # -- client side ------------------------------------------------------
     def submit(self, features: Dict[str, Any], timeout: float = 30.0):
         p = _Pending(features)
-        self.q.put(p)
+        # closed-check and enqueue are atomic vs close(): a request is either
+        # rejected here or guaranteed to be in the queue before close() runs
+        # its final drain — never silently stranded between the two
+        with self._close_lock:
+            if self._closed:
+                raise BatcherClosedError("MicroBatcher is closed")
+            self.q.put(p)
         if not p.event.wait(timeout):
             raise TimeoutError("serving deadline exceeded")
         if p.error is not None:
@@ -87,8 +140,25 @@ class MicroBatcher:
         return p.result
 
     def close(self):
-        self._stop = True
+        """Stop the loop and DRAIN: any request still queued is failed with
+        :class:`BatcherClosedError` immediately, so its submitter unblocks
+        now rather than at its timeout."""
+        with self._close_lock:
+            self._closed = True
+            self._stop = True
         self._thread.join(timeout=5)
+        self._drain()
+
+    def _drain(self):
+        while True:
+            try:
+                p = self.q.get_nowait()
+            except queue.Empty:
+                return
+            p.error = BatcherClosedError(
+                "MicroBatcher closed before the request ran"
+            )
+            p.event.set()
 
     # -- server side --------------------------------------------------------
     def _collect(self) -> List[_Pending]:
@@ -108,30 +178,32 @@ class MicroBatcher:
                 break
         return batch
 
+    def _run(self, batch: List[_Pending]) -> None:
+        try:
+            n = len(batch)
+            bs = _bucket(n, self.buckets)
+            results = run_padded_batch(
+                [p.features for p in batch], bs, self.model_fn, self.sharding
+            )
+            self.batches_run += 1
+            self.rows_served += n
+            for p, r in zip(batch, results):
+                p.result = r
+                p.event.set()
+        except BaseException as e:
+            if len(batch) == 1:
+                # errors reach exactly the request that caused them
+                batch[0].error = e
+                batch[0].event.set()
+            else:
+                # failure isolation: re-run one request at a time so a single
+                # poisoned request cannot fail the whole batch
+                for p in batch:
+                    self._run([p])
+
     def _loop(self):
         while not self._stop:
             batch = self._collect()
-            if not batch:
-                continue
-            try:
-                n = len(batch)
-                bs = _bucket(n, self.buckets)
-                cols = {}
-                for k in batch[0].features:
-                    rows = [np.asarray(p.features[k]) for p in batch]
-                    stacked = np.stack(rows)
-                    if bs > n:  # pad with repeats of the last row
-                        pad = np.repeat(stacked[-1:], bs - n, axis=0)
-                        stacked = np.concatenate([stacked, pad], axis=0)
-                    cols[k] = stacked
-                out = self.model_fn(stage_batch(cols, self.sharding))
-                out = jax.device_get(out)
-                self.batches_run += 1
-                self.rows_served += n
-                for i, p in enumerate(batch):
-                    p.result = jax.tree.map(lambda a: a[i], out)
-                    p.event.set()
-            except BaseException as e:  # deliver errors to all waiters
-                for p in batch:
-                    p.error = e
-                    p.event.set()
+            if batch:
+                self._run(batch)
+        self._drain()  # requests that raced the close still unblock

@@ -7,23 +7,31 @@ is precisely the mechanism behind the paper's production result (61% serving
 latency / 58% cost reduction vs interpreting a preprocessing pipeline — here
 the unfused baseline is measured by ``benchmarks/preprocessing.py``).
 
+The fused executable cache is **mesh-keyed**, mirroring
+:meth:`repro.core.plan.TransformPlan.jit_for`: wrappers are cached per
+``(sharding fingerprint, donate)`` and within each wrapper XLA keys on the
+input signature, so ONE FusedModel instance serves an unsharded laptop and
+any number of multi-device meshes from the same code path.  Pass a batch
+sharding (``Engine.batch_sharding()`` / ``launch.mesh.batch_sharding``) to
+``__call__``/``jit_for``; params are placed replicated on the same mesh.
+
 Request buffers are DONATED to the fused executable by default: the serving
-tier (MicroBatcher) stages a fresh batch per call, so XLA may reuse the
-request buffers for intermediates/outputs instead of allocating.  Callers
-that re-read a batch after calling the model (donated jax buffers are
-invalidated) opt out per-instance with ``donate=False`` or globally with
-``REPRO_SERVE_DONATE=0``.
+tier (MicroBatcher / ServingGateway) stages a fresh batch per call, so XLA
+may reuse the request buffers for intermediates/outputs instead of
+allocating.  Callers that re-read a batch after calling the model (donated
+jax buffers are invalidated) opt out per-instance with ``donate=False`` or
+globally with ``REPRO_SERVE_DONATE=0``.
 """
 from __future__ import annotations
 
 import os
-from typing import Any, Callable, Dict, Optional, Sequence
+from typing import Any, Callable, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import types as T
 from repro.core.export import PreprocessModel
+from repro.launch.mesh import sharding_fingerprint
 
 
 def _donate_default() -> bool:
@@ -57,23 +65,72 @@ class FusedModel:
         # the fused path traces the preprocessing through its TransformPlan:
         # coercions/hashes are CSE'd before XLA ever sees them, which keeps
         # trace time and HLO size down for wide pipelines.  All jit wrappers
-        # are created once here — never per call.
+        # are created once per (sharding, donate) — never per call.
         self._plan = preprocess.plan()
-        self._fused = jax.jit(
-            self._call, donate_argnums=(1,) if self.donate else ()
-        )
+        self._trace_count = 0
+        self._jit_cache: Dict[tuple, object] = {}
         self._unfused_pre = jax.jit(preprocess.__call__)
         self._unfused_model = jax.jit(model_fn)
 
     def _call(self, params, raw: T.Batch):
+        self._trace_count += 1  # python side effect: runs at trace time only
         feats = self._plan.fn(raw)
         feats = {self.feature_map.get(k, k): v for k, v in feats.items()}
         return self.model_fn(params, feats)
 
-    def __call__(self, raw: T.Batch):
+    def jit_for(self, sharding=None, donate: Optional[bool] = None):
+        """The cached fused wrapper for one execution context (mirrors
+        ``TransformPlan.jit_for``).
+
+        ``sharding`` is the batch placement for the raw request columns — a
+        NamedSharding from ``Engine.batch_sharding()`` for a mesh-sharded
+        serving tier, or None for the default device.  Params are lowered
+        replicated on the sharding's mesh.  Wrappers are cached on
+        ``(sharding_fingerprint, donate)``: equal-fingerprint meshes hit the
+        same compiled program, a differing mesh is a guaranteed miss — one
+        FusedModel serves unsharded and any number of meshes, compiled at
+        most once per input signature."""
+        if donate is None:
+            donate = self.donate
+        key = (sharding_fingerprint(sharding), bool(donate))
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            kwargs = {}
+            if sharding is not None:
+                mesh = getattr(sharding, "mesh", None)
+                if mesh is not None:
+                    from jax.sharding import NamedSharding, PartitionSpec
+
+                    repl = NamedSharding(mesh, PartitionSpec())
+                else:
+                    repl = sharding
+                # pytree prefixes: whole params tree replicated, every raw
+                # column placed with the batch sharding
+                kwargs["in_shardings"] = (repl, sharding)
+            fn = jax.jit(
+                self._call, donate_argnums=(1,) if donate else (), **kwargs
+            )
+            self._jit_cache[key] = fn
+        return fn
+
+    @property
+    def trace_count(self) -> int:
+        """How many times the fused function has been traced — the serving
+        tier's compile-count probe (zero new traces after warmup)."""
+        return self._trace_count
+
+    @property
+    def stats(self) -> dict:
+        return {
+            "trace_count": self._trace_count,
+            "jit_cache_entries": len(self._jit_cache),
+        }
+
+    def __call__(self, raw: T.Batch, sharding=None):
         """Single-XLA-program serving path (preprocessing fused in).  With
-        donation on (default), ``raw``'s buffers are consumed by the call."""
-        return self._fused(self.params, raw)
+        donation on (default), ``raw``'s buffers are consumed by the call.
+        ``sharding`` selects the mesh-keyed executable (see ``jit_for``)."""
+        return self.jit_for(sharding)(self.params, raw)
 
     def call_unfused(self, raw: T.Batch):
         """Two-program baseline (MLeap-style pipeline-then-model) — used by

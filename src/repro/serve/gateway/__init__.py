@@ -1,0 +1,35 @@
+"""repro.serve.gateway — the online serving tier.
+
+One :class:`ServingGateway` front door over many named fused models:
+admission control (bounded queue, backpressure, deadline shedding),
+continuous shape-bucketed batch scheduling with priority + deadline
+awareness, warmup AOT precompilation of every (model, bucket) shape, and
+per-request DDSketch latency telemetry.  See README "Serving tier".
+"""
+from .admission import (
+    AdmissionController,
+    DeadlineExceededError,
+    GatewayClosedError,
+    GatewayError,
+    QueueFullError,
+    UnknownModelError,
+)
+from .gateway import ServingGateway
+from .registry import ModelEntry, ModelRegistry
+from .scheduler import BatchScheduler, Request
+from .telemetry import LatencySketch
+
+__all__ = [
+    "ServingGateway",
+    "ModelRegistry",
+    "ModelEntry",
+    "BatchScheduler",
+    "Request",
+    "LatencySketch",
+    "AdmissionController",
+    "GatewayError",
+    "QueueFullError",
+    "DeadlineExceededError",
+    "GatewayClosedError",
+    "UnknownModelError",
+]

@@ -1,0 +1,86 @@
+"""Admission control for the serving gateway.
+
+A production serving tier (the paper's ~200 req/s chassis) must fail FAST
+and PREDICTABLY when offered load exceeds capacity: an unbounded queue turns
+overload into unbounded latency for every request, while bounding occupancy
+turns it into immediate, cheap rejections for the excess — the client can
+retry elsewhere.  Two mechanisms, two distinct errors:
+
+* **Backpressure** — at most ``max_pending`` requests may be in flight
+  (queued or executing) across the whole gateway; request ``max_pending+1``
+  is rejected at the front door with :class:`QueueFullError`.
+* **Load shedding** — a request carrying a deadline that has already expired
+  (at the door) or that expires while queued (at batch formation, see
+  :mod:`.scheduler`) is dropped with :class:`DeadlineExceededError` instead
+  of wasting an executable slot computing an answer nobody is waiting for.
+
+The deadline is the latest acceptable *launch* time: a request launched at
+or before its deadline is served; one still queued past it is shed.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+
+class GatewayError(RuntimeError):
+    """Base class for gateway-side request failures."""
+
+
+class QueueFullError(GatewayError):
+    """Rejected at admission: the gateway's bounded queue is full."""
+
+
+class DeadlineExceededError(GatewayError):
+    """Shed: the request's deadline expired before it could be launched."""
+
+
+class GatewayClosedError(GatewayError):
+    """The gateway shut down before this request could run."""
+
+
+class UnknownModelError(GatewayError):
+    """No model registered under the requested name."""
+
+
+class AdmissionController:
+    """Bounded-occupancy admission with deadline shedding at the door.
+
+    Args:
+      max_pending: cap on requests admitted but not yet finished.
+      clock: monotonic time source (injectable for tests).
+    """
+
+    def __init__(self, max_pending: int = 256, clock=time.perf_counter):
+        self.max_pending = int(max_pending)
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._pending = 0
+        self.stats = {"admitted": 0, "rejected_full": 0, "shed_at_door": 0}
+
+    def admit(self, deadline=None) -> None:
+        """Take one occupancy slot or raise; every successful admit must be
+        paired with exactly one :meth:`release` when the request finishes
+        (result, error, or shed)."""
+        with self._lock:
+            if deadline is not None and deadline <= self._clock():
+                self.stats["shed_at_door"] += 1
+                raise DeadlineExceededError(
+                    "deadline expired before admission (shed)"
+                )
+            if self._pending >= self.max_pending:
+                self.stats["rejected_full"] += 1
+                raise QueueFullError(
+                    f"gateway queue full ({self.max_pending} pending)"
+                )
+            self._pending += 1
+            self.stats["admitted"] += 1
+
+    def release(self) -> None:
+        with self._lock:
+            self._pending -= 1
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return self._pending

@@ -1,0 +1,259 @@
+"""ServingGateway — the online serving front door.
+
+The paper's production result (61% latency / 58% cost) materialises behind a
+request-serving chassis, not a benchmark loop.  This is that chassis for the
+JAX reproduction: many named fused models behind ONE gateway, with
+
+  client ──► admission (bounded queue, backpressure, door shedding)
+                 │
+                 ▼
+         scheduler groups per (model, row shape); continuous,
+         priority/deadline-aware formation, padded to buckets
+                 │
+                 ▼  (any idle worker)
+         stage_batch ► fused executable (mesh-keyed cache) ► scatter replies
+
+Every stage is measured into mergeable DDSketch histograms (queue wait,
+execute, end-to-end, per model) and surfaced as quantile snapshots; warmup
+AOT-precompiles every (model, bucket) shape so first requests never trace.
+
+Single-model, no-admission serving remains available as
+:class:`~repro.serve.batcher.MicroBatcher`; the gateway is the multi-model,
+overload-safe tier on top of the same staging + bucketing machinery.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.batcher import run_padded_batch
+
+from .admission import (
+    AdmissionController,
+    DeadlineExceededError,
+    GatewayClosedError,
+)
+from .registry import ModelEntry, ModelRegistry
+from .scheduler import BatchScheduler, Request
+from .telemetry import LatencySketch
+
+_STAGES = ("queue", "execute", "e2e")
+
+
+class ServingGateway:
+    """Admission-controlled, continuously-batching, multi-model gateway.
+
+    Args:
+      max_pending: bounded-queue admission cap (backpressure beyond it).
+      max_wait_ms: batch-formation window (a tighter request deadline cuts
+        it short).
+      workers: executor threads pulling formed batches.  Batches for
+        different models execute concurrently when >1.
+      clock: monotonic time source (injectable for tests).
+    """
+
+    def __init__(
+        self,
+        max_pending: int = 256,
+        max_wait_ms: float = 2.0,
+        workers: int = 2,
+        clock=time.perf_counter,
+    ):
+        self.registry = ModelRegistry()
+        self.admission = AdmissionController(max_pending, clock=clock)
+        self.scheduler = BatchScheduler(clock=clock, max_wait_ms=max_wait_ms)
+        self._clock = clock
+        self._seq_lock = threading.Lock()
+        self._seq = 0
+        self.sketches: Dict[Tuple[str, str], LatencySketch] = {}
+        self._stats_lock = threading.Lock()
+        self.stats = {
+            "completed": 0,
+            "shed_queued": 0,
+            "failed": 0,
+            "batches": 0,
+            "rows": 0,
+            "padded_rows": 0,
+        }
+        self._stop = False
+        self._threads = [
+            threading.Thread(target=self._worker, daemon=True)
+            for _ in range(max(int(workers), 1))
+        ]
+        for t in self._threads:
+            t.start()
+
+    # -- registration ------------------------------------------------------
+
+    def register(self, name: str, model, example: Dict[str, Any], **kw) -> ModelEntry:
+        """Register a servable (FusedModel / PreprocessModel / callable)
+        under ``name``; see :meth:`ModelRegistry.register`."""
+        # sketches first: the model becomes submittable the moment the
+        # registry holds it, and a worker may execute (and record) a batch
+        # before this method returns
+        for stage in _STAGES:
+            self.sketches.setdefault((name, stage), LatencySketch())
+        entry = self.registry.register(name, model, example=example, **kw)
+        self.scheduler.set_limit(name, entry.max_batch)
+        return entry
+
+    def warmup(self) -> Dict[str, int]:
+        """AOT-precompile every (model, bucket) shape (see registry)."""
+        return self.registry.warmup()
+
+    # -- client side -------------------------------------------------------
+
+    def submit_async(
+        self,
+        model: str,
+        features: Dict[str, Any],
+        priority: int = 0,
+        deadline_ms: Optional[float] = None,
+    ) -> Request:
+        """Admit and enqueue one request; returns the pending Request (wait
+        on ``.event``, then read ``.result`` / ``.error``).  Raises
+        UnknownModelError / QueueFullError / DeadlineExceededError /
+        GatewayClosedError synchronously at the door."""
+        self.registry.get(model)  # unknown model: reject before admission
+        now = self._clock()
+        deadline = now + deadline_ms / 1e3 if deadline_ms is not None else None
+        self.admission.admit(deadline)
+        try:
+            feats = {k: np.asarray(v) for k, v in features.items()}
+            with self._seq_lock:
+                self._seq += 1
+                seq = self._seq
+            req = Request(model, feats, int(priority), deadline, now, seq)
+            self.scheduler.put(req)
+        except BaseException:
+            self.admission.release()
+            raise
+        return req
+
+    def submit(
+        self,
+        model: str,
+        features: Dict[str, Any],
+        priority: int = 0,
+        deadline_ms: Optional[float] = None,
+        timeout: float = 30.0,
+    ):
+        """Blocking request/reply through the gateway."""
+        req = self.submit_async(model, features, priority, deadline_ms)
+        if not req.event.wait(timeout):
+            raise TimeoutError(f"no reply from model {model!r} in {timeout}s")
+        if req.error is not None:
+            raise req.error
+        return req.result
+
+    # -- server side -------------------------------------------------------
+
+    def _worker(self) -> None:
+        while not self._stop:
+            item = self.scheduler.next_batch(timeout=0.05)
+            if item is None:
+                continue
+            key, batch, shed = item
+            try:
+                for r in shed:
+                    self._finish_error(
+                        r,
+                        DeadlineExceededError(
+                            "deadline expired while queued (shed)"
+                        ),
+                        counter="shed_queued",
+                    )
+                if batch:
+                    entry = self.registry.get(key[0])
+                    now = self._clock()
+                    qsk = self.sketches[(entry.name, "queue")]
+                    for r in batch:
+                        qsk.record(now - r.t_submit)
+                    self._run_batch(entry, batch)
+            except BaseException as e:  # the worker must outlive any batch:
+                # a popped request that never reaches event.set() would leave
+                # its client blocked until timeout and leak its admission slot
+                for r in batch:
+                    if not r.event.is_set():
+                        self._finish_error(r, e, counter="failed")
+
+    def _finish_error(self, req: Request, err: BaseException, counter: str) -> None:
+        req.error = err
+        req.event.set()
+        self.admission.release()
+        with self._stats_lock:
+            self.stats[counter] += 1
+
+    def _run_batch(self, entry: ModelEntry, reqs: List[Request]) -> None:
+        try:
+            n = len(reqs)
+            bs = entry.bucket(n)
+            # "execute" covers stack+stage+run+readback: the device-facing
+            # cost of the batch, as a request experiences it
+            t0 = self._clock()
+            results = run_padded_batch(
+                [r.features for r in reqs], bs, entry.fn, entry.sharding
+            )
+            t1 = self._clock()
+            self.sketches[(entry.name, "execute")].record(t1 - t0)
+            e2e = self.sketches[(entry.name, "e2e")]
+            for r, result in zip(reqs, results):
+                r.result = result
+                e2e.record(t1 - r.t_submit)
+                r.event.set()
+                self.admission.release()
+            with self._stats_lock:
+                self.stats["completed"] += n
+                self.stats["batches"] += 1
+                self.stats["rows"] += n
+                self.stats["padded_rows"] += bs - n
+        except BaseException as e:
+            if len(reqs) == 1:
+                self._finish_error(reqs[0], e, counter="failed")
+            else:
+                # failure isolation (as in MicroBatcher): one poisoned
+                # request must not fail the rest of its batch
+                for r in reqs:
+                    self._run_batch(entry, [r])
+
+    # -- introspection / lifecycle ----------------------------------------
+
+    def snapshot(self) -> dict:
+        """Operational snapshot: counters + per-(model, stage) latency
+        quantiles from the merged DDSketches."""
+        with self._stats_lock:
+            stats = dict(self.stats)
+        stats.update(self.admission.stats)
+        stats["pending"] = self.admission.pending
+        stats["queue_depth"] = self.scheduler.depth
+        models: Dict[str, dict] = {}
+        for name in self.registry.names():
+            entry = self.registry.get(name)
+            models[name] = {
+                stage: self.sketches[(name, stage)].snapshot_us()
+                for stage in _STAGES
+            }
+            models[name]["trace_count"] = entry.trace_count()
+        return {"stats": stats, "models": models}
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Drain and stop: refuse new work, error out queued requests, join
+        the workers.  In-flight batches finish normally."""
+        drained = self.scheduler.close()
+        self._stop = True
+        for t in self._threads:
+            t.join(timeout)
+        for r in drained:
+            self._finish_error(
+                r, GatewayClosedError("gateway closed before the request ran"),
+                counter="failed",
+            )
+
+    def __enter__(self) -> "ServingGateway":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,135 @@
+"""Model registry for the serving gateway: many named models, one front door.
+
+Each entry normalises a servable — a :class:`~repro.serve.fused.FusedModel`,
+a bare :class:`~repro.core.export.PreprocessModel`, or any ``staged batch ->
+outputs`` callable — into the same internal shape: a batch function, a set
+of padded batch-size buckets, an optional mesh sharding for staged request
+batches, and a compile-count probe.
+
+**Warmup = AOT precompilation.**  The bucket list IS the closed set of batch
+shapes the gateway will ever execute (requests are padded up to a bucket),
+so ``warmup()`` drives every ``(model, bucket)`` shape through the model
+once before traffic arrives — first requests never pay trace/compile cost,
+and the probe lets tests assert ZERO new traces after warmup.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.export import PreprocessModel
+from repro.core.runner import stage_batch
+from repro.serve.batcher import _bucket, normalize_buckets
+from repro.serve.fused import FusedModel
+
+from .admission import UnknownModelError
+
+
+@dataclasses.dataclass
+class ModelEntry:
+    name: str
+    fn: Callable  # staged device batch -> outputs (leading axis = batch)
+    example: Dict[str, np.ndarray]  # one request row: shapes/dtypes template
+    buckets: Tuple[int, ...]
+    max_batch: int
+    sharding: Any = None
+    traces: Optional[Callable[[], int]] = None  # compile-count probe
+    warmed: bool = False
+
+    def bucket(self, n: int) -> int:
+        return _bucket(n, self.buckets)
+
+    def trace_count(self) -> int:
+        return self.traces() if self.traces is not None else -1
+
+
+def _normalize(name, model, sharding, donate) -> Tuple[Callable, Optional[Callable]]:
+    """(batch fn, compile-count probe) for any supported servable.
+
+    ``donate=None`` keeps the model's own default (FusedModel's env-driven
+    donation; no donation for a bare PreprocessModel plan)."""
+    if isinstance(model, FusedModel):
+        jfn = model.jit_for(sharding, donate)
+        fn = lambda batch: jfn(model.params, batch)  # noqa: E731
+        return fn, lambda: model.trace_count
+    if isinstance(model, PreprocessModel):
+        plan = model.plan()
+        fn = plan.jit_for(in_shardings=sharding, donate=bool(donate))
+        return fn, lambda: plan.stats["trace_count"]
+    if callable(model):
+        return model, None
+    raise TypeError(f"cannot serve {type(model).__name__} as model {name!r}")
+
+
+class ModelRegistry:
+    def __init__(self):
+        self._entries: Dict[str, ModelEntry] = {}
+
+    def register(
+        self,
+        name: str,
+        model,
+        example: Dict[str, Any],
+        buckets: Sequence[int] = (1, 2, 4, 8, 16, 32),
+        max_batch: int = 32,
+        sharding=None,
+        donate: Optional[bool] = None,
+    ) -> ModelEntry:
+        """Register ``model`` under ``name``.
+
+        ``example`` is ONE request row (features dict) used as the
+        shape/dtype template for warmup batches.  With a mesh ``sharding``,
+        buckets must be divisible by the number of batch shards (device_put
+        splits the leading axis across them).  ``donate=None`` keeps the
+        model's own donation default."""
+        if name in self._entries:
+            raise ValueError(f"model {name!r} already registered")
+        bl, max_batch = normalize_buckets(buckets, max_batch)
+        fn, traces = _normalize(name, model, sharding, donate)
+        entry = ModelEntry(
+            name=name,
+            fn=fn,
+            example={k: np.asarray(v) for k, v in example.items()},
+            buckets=bl,
+            max_batch=max_batch,
+            sharding=sharding,
+            traces=traces,
+        )
+        self._entries[name] = entry
+        return entry
+
+    def get(self, name: str) -> ModelEntry:
+        entry = self._entries.get(name)
+        if entry is None:
+            raise UnknownModelError(
+                f"unknown model {name!r} (registered: {sorted(self._entries)})"
+            )
+        return entry
+
+    def names(self):
+        return sorted(self._entries)
+
+    def __iter__(self):
+        return iter(self._entries.values())
+
+    def __len__(self):
+        return len(self._entries)
+
+    def warmup(self) -> Dict[str, int]:
+        """Precompile every (model, bucket) shape; returns the per-model
+        trace counts afterwards — the baseline for the zero-trace probe."""
+        counts: Dict[str, int] = {}
+        for entry in self:
+            for b in entry.buckets:
+                batch = {
+                    k: np.repeat(v[None], b, axis=0)
+                    for k, v in entry.example.items()
+                }
+                out = entry.fn(stage_batch(batch, entry.sharding))
+                jax.block_until_ready(out)
+            entry.warmed = True
+            counts[entry.name] = entry.trace_count()
+        return counts

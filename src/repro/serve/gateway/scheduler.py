@@ -1,0 +1,176 @@
+"""Continuous, shape-bucketed, priority/deadline-aware batch formation.
+
+The single-queue MicroBatcher blocks its loop on ONE fifo: while a batch
+executes, nothing is formed, and a request for model B waits behind model
+A's batch window.  This scheduler decouples formation from execution
+(continuous batching): requests accumulate into per-``(model, row-shape)``
+groups while executables run, and any idle gateway worker can pull the next
+ready batch the moment one exists.
+
+**Readiness.**  A group is ready when it holds a full batch
+(``max_batch`` requests), when its oldest request has waited ``max_wait``,
+or when its tightest deadline is due — a deadline tighter than the batch
+window cuts the window short rather than being shed by it.  Between events
+the scheduler sleeps on a condition variable until the soonest of these
+times; arrivals re-wake it.
+
+**Ordering.**  Among ready groups, the group holding the most urgent request
+wins; within a group, requests launch in urgency order ``(priority desc,
+deadline asc, arrival asc)``.  Requests whose deadline has already passed at
+formation time are separated out for shedding — they never occupy a slot in
+the padded batch.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .admission import GatewayClosedError
+
+
+class Request:
+    """One admitted request riding through the gateway."""
+
+    __slots__ = (
+        "model",
+        "features",
+        "priority",
+        "deadline",
+        "t_submit",
+        "seq",
+        "event",
+        "result",
+        "error",
+        "shape_sig",
+    )
+
+    def __init__(self, model, features, priority, deadline, t_submit, seq):
+        self.model = model
+        self.features = features
+        self.priority = priority
+        self.deadline = deadline  # absolute clock time, or None
+        self.t_submit = t_submit
+        self.seq = seq
+        self.event = threading.Event()
+        self.result = None
+        self.error: Optional[BaseException] = None
+        self.shape_sig = shape_signature(features)
+
+    def urgency(self) -> tuple:
+        """Sort key: smaller is more urgent."""
+        dl = self.deadline if self.deadline is not None else float("inf")
+        return (-self.priority, dl, self.seq)
+
+
+def shape_signature(features) -> tuple:
+    """Row shape/dtype identity — requests batch only with matching rows."""
+    return tuple(
+        (k, tuple(np.shape(v)), str(getattr(v, "dtype", np.asarray(v).dtype)))
+        for k, v in sorted(features.items())
+    )
+
+
+class BatchScheduler:
+    """Forms batches per (model, row shape) group under one lock.
+
+    ``next_batch`` is safe to call from many worker threads: a group is
+    popped while the lock is held, so no batch is handed out twice.
+    """
+
+    def __init__(self, clock=time.perf_counter, max_wait_ms: float = 2.0):
+        self._cv = threading.Condition()
+        self._groups: Dict[Tuple[str, tuple], List[Request]] = {}
+        self._limits: Dict[str, int] = {}
+        self._clock = clock
+        self.max_wait = max_wait_ms / 1e3
+        self._closed = False
+
+    def set_limit(self, model: str, max_batch: int) -> None:
+        self._limits[model] = int(max_batch)
+
+    def put(self, req: Request) -> None:
+        with self._cv:
+            if self._closed:
+                raise GatewayClosedError("gateway is closed")
+            self._groups.setdefault((req.model, req.shape_sig), []).append(req)
+            self._cv.notify_all()
+
+    @property
+    def depth(self) -> int:
+        with self._cv:
+            return sum(len(g) for g in self._groups.values())
+
+    # -- formation ---------------------------------------------------------
+
+    def _ready_at(self, key, group, now: float) -> float:
+        """Earliest time this group should launch."""
+        if len(group) >= self._limits.get(key[0], 32):
+            return now  # full batch: ready immediately
+        oldest = min(r.t_submit for r in group)
+        due = oldest + self.max_wait
+        tightest = min(
+            (r.deadline for r in group if r.deadline is not None),
+            default=None,
+        )
+        if tightest is not None:
+            due = min(due, tightest)  # launch AT the deadline, not past it
+        return due
+
+    def _pick_ready(self, now: float):
+        best_key, best_urgency = None, None
+        for key, group in self._groups.items():
+            if self._ready_at(key, group, now) > now:
+                continue
+            u = min(r.urgency() for r in group)
+            if best_urgency is None or u < best_urgency:
+                best_key, best_urgency = key, u
+        return best_key
+
+    def _next_event(self, now: float) -> Optional[float]:
+        times = [self._ready_at(k, g, now) for k, g in self._groups.items()]
+        return min(times) if times else None
+
+    def _form(self, key, now: float):
+        group = self._groups.pop(key)
+        group.sort(key=Request.urgency)
+        shed, live = [], []
+        for r in group:
+            (shed if r.deadline is not None and r.deadline < now else live).append(r)
+        limit = self._limits.get(key[0], 32)
+        batch, rest = live[:limit], live[limit:]
+        if rest:
+            self._groups[key] = rest
+            self._cv.notify_all()  # another worker may take the remainder
+        return key, batch, shed
+
+    def next_batch(self, timeout: float = 0.1):
+        """Block up to ``timeout`` for a ready group.
+
+        Returns ``(key, batch, shed)`` — ``batch`` ordered by urgency and
+        capped at the model's ``max_batch``, ``shed`` the requests whose
+        deadline expired while queued — or None on timeout/close."""
+        end = self._clock() + timeout
+        with self._cv:
+            while True:
+                now = self._clock()
+                key = self._pick_ready(now)
+                if key is not None:
+                    return self._form(key, now)
+                if self._closed or now >= end:
+                    return None
+                wake = self._next_event(now)
+                until = end if wake is None else min(end, wake)
+                self._cv.wait(max(until - now, 1e-4))
+
+    def close(self) -> List[Request]:
+        """Refuse new work and hand back everything still queued (the
+        gateway errors the drained requests out)."""
+        with self._cv:
+            self._closed = True
+            drained = [r for g in self._groups.values() for r in g]
+            self._groups.clear()
+            self._cv.notify_all()
+        return drained

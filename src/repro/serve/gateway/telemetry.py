@@ -1,0 +1,65 @@
+"""Per-request latency telemetry on the gateway hot path.
+
+Observations land in the SAME log-binned layout as the mergeable DDSketch in
+:mod:`repro.core.sketches` (``dd_init`` / ``dd_merge`` / ``dd_quantile``),
+via the numpy fast path (``dd_bin_np``) — a jit dispatch per request would
+cost more than the thing being measured.  Each recording thread owns its own
+histogram (no lock on the hot path); because the sketch is a commutative
+monoid under addition, merging the per-thread histograms at snapshot time is
+order-independent — the same property that lets the fitting engine merge
+shard statistics in any order (asserted by tests/test_sketches.py, along
+with the documented ~4% relative quantile error bound).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterable, Tuple
+
+import numpy as np
+
+from repro.core import sketches
+
+
+class LatencySketch:
+    """Thread-sharded DDSketch recorder: seconds in, quantiles out."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._hists: Dict[int, np.ndarray] = {}  # thread ident -> histogram
+
+    def record(self, seconds: float) -> None:
+        tid = threading.get_ident()
+        h = self._hists.get(tid)
+        if h is None:
+            with self._lock:
+                h = self._hists.setdefault(tid, sketches.dd_init_np())
+        h[int(sketches.dd_bin_np(seconds))] += 1
+
+    def merged(self) -> np.ndarray:
+        """One histogram folding every recording thread's observations."""
+        with self._lock:
+            hists = list(self._hists.values())
+        out = sketches.dd_init_np()
+        for h in hists:
+            out = sketches.dd_merge(out, h)
+        return out
+
+    @property
+    def count(self) -> int:
+        return int(self.merged().sum())
+
+    def quantiles(self, qs: Iterable[float] = (0.5, 0.99)) -> Dict[float, float]:
+        qs = tuple(qs)
+        m = self.merged()
+        if m.sum() == 0:
+            return {q: float("nan") for q in qs}
+        vals = np.asarray(sketches.dd_quantile(m, list(qs)))
+        return {q: float(v) for q, v in zip(qs, vals)}
+
+    def snapshot_us(self, qs: Tuple[float, ...] = (0.5, 0.99)) -> Dict[str, float]:
+        """Quantiles in microseconds plus the observation count — the shape
+        the gateway surfaces per (model, stage)."""
+        quants = self.quantiles(qs)
+        out = {f"p{int(q * 100)}_us": round(v * 1e6, 1) for q, v in quants.items()}
+        out["count"] = self.count
+        return out

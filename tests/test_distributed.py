@@ -9,6 +9,10 @@ import textwrap
 
 import pytest
 
+# every test here spawns a fresh python with 8 emulated host devices; hosts
+# that cannot spawn subprocesses deselect with -m "not subprocess"
+pytestmark = pytest.mark.subprocess
+
 REPO = pathlib.Path(__file__).resolve().parents[1]
 
 

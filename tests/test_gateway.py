@@ -1,0 +1,375 @@
+"""ServingGateway end-to-end: two fused models behind one front door,
+concurrent clients with mixed priorities/deadlines, bit-identical outputs,
+zero trace after warmup, distinct shed errors, backpressure, priority
+ordering, drain-on-close, and (subprocess) mesh-sharded parity."""
+import pathlib
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import KamaeSparkPipeline, LogTransformer, ScaleTransformer
+from repro.serve import (
+    DeadlineExceededError,
+    FusedModel,
+    QueueFullError,
+    ServingGateway,
+    UnknownModelError,
+)
+from repro.serve.gateway import GatewayClosedError
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _mk_fused(scale: float, w: float) -> FusedModel:
+    """Elementwise pipeline + elementwise head: outputs are bit-identical
+    across batch sizes, so gateway batching must reproduce direct calls
+    EXACTLY."""
+    pipe = KamaeSparkPipeline(
+        stages=[
+            LogTransformer(inputCol="price", outputCol="pl", alpha=1.0),
+            ScaleTransformer(inputCol="qty", outputCol="qs", multiplier=scale),
+        ]
+    )
+    rng = np.random.default_rng(0)
+    fit_batch = {
+        "price": jnp.asarray(rng.lognormal(3, 1, 64), jnp.float32),
+        "qty": jnp.asarray(rng.integers(1, 50, 64), jnp.float32),
+    }
+    export = pipe.fit(fit_batch).export(outputs=["pl", "qs"])
+
+    def fwd(params, feats):
+        return feats["pl"] * params["w"] + feats["qs"]
+
+    return FusedModel(export, fwd, {"w": jnp.float32(w)}, donate=True)
+
+
+def _row(rng):
+    return {
+        "price": np.float32(rng.lognormal(3, 1)),
+        "qty": np.float32(rng.integers(1, 50)),
+    }
+
+
+def test_gateway_end_to_end_two_models():
+    """The acceptance-criteria test: two fused models on one gateway,
+    concurrent mixed-priority/deadline clients, bit-identical outputs vs
+    direct FusedModel calls, zero trace after warmup, and expired deadlines
+    shed with a distinct error."""
+    fm_a, fm_b = _mk_fused(0.5, 2.0), _mk_fused(3.0, -1.0)
+    gw = ServingGateway(max_pending=128, max_wait_ms=3.0, workers=2)
+    gw.register("a", fm_a, example=_row(np.random.default_rng(7)), buckets=(1, 2, 4, 8), max_batch=8)
+    gw.register("b", fm_b, example=_row(np.random.default_rng(8)), buckets=(1, 2, 4, 8), max_batch=8)
+    warm = gw.warmup()
+    assert warm["a"] == len(gw.registry.get("a").buckets)  # one trace per bucket
+    tc_a, tc_b = fm_a.trace_count, fm_b.trace_count
+
+    rng = np.random.default_rng(42)
+    n = 48
+    rows = [_row(rng) for _ in range(n)]
+    names = ["a" if i % 3 else "b" for i in range(n)]
+    results: list = [None] * n
+    errors: list = [None] * n
+
+    def client(i):
+        try:
+            results[i] = gw.submit(
+                names[i],
+                rows[i],
+                priority=i % 2,
+                deadline_ms=None if i % 4 else 5000.0,
+                timeout=30.0,
+            )
+        except BaseException as e:  # pragma: no cover - failure path
+            errors[i] = e
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert all(e is None for e in errors), errors
+
+    # zero trace after warmup: every served shape was AOT-precompiled
+    assert fm_a.trace_count == tc_a
+    assert fm_b.trace_count == tc_b
+
+    # bit-identical vs the direct FusedModel path (per-row direct calls,
+    # padded to the smallest bucket — the models are elementwise)
+    for i in range(n):
+        fm = fm_a if names[i] == "a" else fm_b
+        direct = fm({k: jnp.asarray(v)[None] for k, v in rows[i].items()})
+        np.testing.assert_array_equal(
+            np.asarray(results[i]), np.asarray(direct)[0]
+        )
+
+    # expired deadline: shed at the door with the DISTINCT shedding error
+    with pytest.raises(DeadlineExceededError):
+        gw.submit("a", rows[0], deadline_ms=0.0)
+
+    snap = gw.snapshot()
+    assert snap["stats"]["completed"] == n
+    assert snap["stats"]["shed_at_door"] == 1
+    assert snap["stats"]["batches"] < n  # actually batched
+    for name in ("a", "b"):
+        for stage in ("queue", "execute", "e2e"):
+            s = snap["models"][name][stage]
+            assert s["count"] > 0
+            assert np.isfinite(s["p50_us"]) and s["p50_us"] >= 0
+            assert s["p99_us"] >= s["p50_us"]
+    gw.close()
+
+
+def test_gateway_sheds_queued_requests_past_deadline():
+    """A request whose deadline expires while the single worker is busy is
+    shed at batch formation, not executed."""
+    order = []
+
+    def slow(batch):
+        time.sleep(0.15)
+        x = np.asarray(batch["x"])
+        order.append(float(x[0]))
+        return {"y": x * 2.0}
+
+    gw = ServingGateway(max_pending=16, max_wait_ms=1.0, workers=1)
+    gw.register("slow", slow, example={"x": np.float32(0.0)}, buckets=(1,), max_batch=1)
+    gw.warmup()
+
+    blocker = gw.submit_async("slow", {"x": np.float32(1.0)})
+    time.sleep(0.03)  # the worker is now inside the blocker's 150 ms sleep
+    doomed = gw.submit_async("slow", {"x": np.float32(2.0)}, deadline_ms=40.0)
+    survivor = gw.submit_async("slow", {"x": np.float32(3.0)}, deadline_ms=5000.0)
+
+    assert blocker.event.wait(5) and blocker.error is None
+    assert doomed.event.wait(5)
+    assert isinstance(doomed.error, DeadlineExceededError)
+    assert survivor.event.wait(5) and survivor.error is None
+    assert 2.0 not in order  # the shed request never reached the model
+    assert gw.snapshot()["stats"]["shed_queued"] == 1
+    gw.close()
+
+
+def test_gateway_backpressure_queue_full():
+    def slow(batch):
+        time.sleep(0.1)
+        return {"y": np.asarray(batch["x"]) * 2.0}
+
+    gw = ServingGateway(max_pending=3, max_wait_ms=1.0, workers=1)
+    gw.register("slow", slow, example={"x": np.float32(0.0)}, buckets=(1,), max_batch=1)
+    gw.warmup()
+
+    admitted, rejected = [], []
+    for i in range(8):
+        try:
+            admitted.append(gw.submit_async("slow", {"x": np.float32(i)}))
+        except QueueFullError as e:
+            rejected.append(e)
+    assert len(rejected) >= 1  # bounded queue pushed back
+    assert len(admitted) <= 3
+    for r in admitted:
+        assert r.event.wait(10) and r.error is None
+    assert gw.snapshot()["stats"]["rejected_full"] == len(rejected)
+    gw.close()
+
+
+def test_gateway_priority_orders_execution():
+    """With the worker pinned, a later high-priority request launches before
+    an earlier low-priority one (max_batch=1 so they cannot share a batch)."""
+    order = []
+
+    def slow(batch):
+        time.sleep(0.08)
+        order.append(float(np.asarray(batch["x"])[0]))
+        return {"y": np.asarray(batch["x"])}
+
+    gw = ServingGateway(max_pending=16, max_wait_ms=1.0, workers=1)
+    gw.register("m", slow, example={"x": np.float32(0.0)}, buckets=(1,), max_batch=1)
+    gw.warmup()
+    order.clear()  # warmup drove the model once with the example row
+
+    blocker = gw.submit_async("m", {"x": np.float32(0.0)})
+    time.sleep(0.02)  # worker now busy; the next two queue up together
+    low = gw.submit_async("m", {"x": np.float32(1.0)}, priority=0)
+    high = gw.submit_async("m", {"x": np.float32(2.0)}, priority=5)
+    for r in (blocker, low, high):
+        assert r.event.wait(5) and r.error is None
+    assert order == [0.0, 2.0, 1.0]
+    gw.close()
+
+
+def test_gateway_error_isolation_and_close_drains():
+    calls = []
+
+    def picky(batch):
+        x = np.asarray(batch["x"])
+        calls.append(x.shape[0])
+        if (x < 0).any():
+            raise ValueError("poisoned feature")
+        return {"y": x * 2.0}
+
+    gw = ServingGateway(max_pending=32, max_wait_ms=20.0, workers=1)
+    gw.register("p", picky, example={"x": np.float32(1.0)}, buckets=(1, 2, 4), max_batch=4)
+    gw.warmup()
+
+    reqs = [
+        gw.submit_async("p", {"x": np.float32(1.0)}),
+        gw.submit_async("p", {"x": np.float32(-1.0)}),  # poisoned
+        gw.submit_async("p", {"x": np.float32(3.0)}),
+    ]
+    for r in reqs:
+        assert r.event.wait(10)
+    assert reqs[0].error is None and float(reqs[0].result["y"]) == 2.0
+    assert isinstance(reqs[1].error, ValueError)
+    assert reqs[2].error is None and float(reqs[2].result["y"]) == 6.0
+
+    # close() drains: a queued request behind a busy worker errors out fast
+    def slow(batch):
+        time.sleep(0.2)
+        return {"y": np.asarray(batch["x"])}
+
+    gw2 = ServingGateway(max_pending=8, max_wait_ms=1.0, workers=1)
+    gw2.register("s", slow, example={"x": np.float32(0.0)}, buckets=(1,), max_batch=1)
+    gw2.warmup()
+    running = gw2.submit_async("s", {"x": np.float32(1.0)})
+    time.sleep(0.03)
+    queued = gw2.submit_async("s", {"x": np.float32(2.0)})
+    t0 = time.perf_counter()
+    gw2.close()
+    assert time.perf_counter() - t0 < 3.0
+    assert running.event.wait(1) and running.error is None  # in-flight finished
+    assert queued.event.is_set()
+    assert isinstance(queued.error, GatewayClosedError)
+    with pytest.raises(GatewayClosedError):
+        gw2.submit("s", {"x": np.float32(3.0)})
+    gw.close()
+
+
+def test_gateway_unknown_model():
+    gw = ServingGateway()
+    with pytest.raises(UnknownModelError):
+        gw.submit("missing", {"x": np.float32(1.0)})
+    assert gw.admission.pending == 0  # rejected before taking a slot
+    gw.close()
+
+
+def test_registry_clamps_max_batch_to_top_bucket():
+    """A batch above the top bucket would execute at a never-warmed shape,
+    breaking the zero-trace-after-warmup invariant — so it cannot form."""
+    gw = ServingGateway()
+    entry = gw.register(
+        "m",
+        lambda b: {"y": np.asarray(b["x"])},
+        example={"x": np.float32(0.0)},
+        buckets=(1, 2, 4, 8),
+        max_batch=32,
+    )
+    assert entry.max_batch == 8
+    assert gw.scheduler._limits["m"] == 8
+    gw.close()
+
+    from repro.serve import MicroBatcher
+
+    b = MicroBatcher(lambda f: f, max_batch=20, buckets=(1, 2, 4, 8, 16, 32))
+    assert b.buckets == (1, 2, 4, 8, 16)
+    assert b.max_batch == 16  # clamped to the top surviving bucket
+    b.close()
+
+
+def test_fused_model_mesh_keyed_cache():
+    """FusedModel.jit_for mirrors TransformPlan.jit_for: cached per
+    (sharding fingerprint, donate), traced once per signature."""
+    from repro.launch.mesh import batch_sharding, make_host_mesh, use_mesh
+
+    fm = _mk_fused(1.0, 1.0)
+    host = {
+        "price": np.asarray([1.0, 2.0, 3.0, 4.0], np.float32),
+        "qty": np.asarray([1.0, 1.0, 2.0, 2.0], np.float32),
+    }
+    # donation is the serve default: stage a FRESH device batch per call
+    fresh = lambda: {k: jnp.asarray(v) for k, v in host.items()}  # noqa: E731
+    assert fm.jit_for() is fm.jit_for()  # same cached wrapper object
+    assert fm.jit_for(donate=False) is not fm.jit_for(donate=True)
+    out0 = np.asarray(fm(fresh()))
+    t0 = fm.trace_count
+    fm(fresh())
+    assert fm.trace_count == t0  # signature cache hit, no retrace
+
+    mesh = make_host_mesh(data=1, model=1)
+    sh = batch_sharding(mesh)
+    assert fm.jit_for(sh) is fm.jit_for(sh)
+    assert fm.jit_for(sh) is not fm.jit_for()
+    # an equal-fingerprint mesh hits the SAME executable entry
+    assert fm.jit_for(batch_sharding(make_host_mesh(data=1, model=1))) is fm.jit_for(sh)
+    with use_mesh(mesh):
+        out_sh = np.asarray(fm(fresh(), sharding=sh))
+    np.testing.assert_array_equal(out0, out_sh)
+    assert fm.stats["jit_cache_entries"] == 3  # (None,d), (None,not d), (mesh,d)
+
+
+@pytest.mark.subprocess
+def test_gateway_serves_mesh_sharded_model():
+    """8 host devices (subprocess): the SAME FusedModel registered unsharded
+    and mesh-sharded behind one gateway produces identical outputs."""
+    script = """
+        import numpy as np, jax, jax.numpy as jnp, threading
+        from repro.core import KamaeSparkPipeline, LogTransformer
+        from repro.launch.mesh import batch_sharding, make_host_mesh
+        from repro.serve import FusedModel, ServingGateway
+
+        rng = np.random.default_rng(0)
+        pipe = KamaeSparkPipeline(stages=[
+            LogTransformer(inputCol="price", outputCol="pl", alpha=1.0)])
+        fitted = pipe.fit({"price": jnp.asarray(rng.lognormal(3, 1, 64), jnp.float32)})
+        export = fitted.export(outputs=["pl"])
+        def fwd(params, feats):
+            return feats["pl"] * params["w"]
+        fm = FusedModel(export, fwd, {"w": jnp.float32(2.0)}, donate=True)
+
+        mesh = make_host_mesh(data=8, model=1)
+        sh = batch_sharding(mesh)
+        gw = ServingGateway(max_pending=64, max_wait_ms=3.0, workers=2)
+        example = {"price": np.float32(10.0)}
+        # buckets on the sharded entry are multiples of the 8 batch shards
+        gw.register("plain", fm, example=example, buckets=(1, 2, 4, 8), max_batch=8)
+        gw.register("sharded", fm, example=example, buckets=(8, 16), max_batch=16,
+                    sharding=sh)
+        # no ambient use_mesh: shardings are passed explicitly everywhere, so
+        # warmup (main thread) and the gateway workers trace in the SAME jit
+        # context — required for the zero-trace-after-warmup property
+        gw.warmup()
+        tc = fm.trace_count
+        rows = rng.lognormal(3, 1, 32).astype(np.float32)
+        outs = {}
+        def client(name, i):
+            outs[(name, i)] = gw.submit(name, {"price": rows[i]}, timeout=60.0)
+        ts = [threading.Thread(target=client, args=(name, i))
+              for name in ("plain", "sharded") for i in range(32)]
+        [t.start() for t in ts]; [t.join() for t in ts]
+        assert fm.trace_count == tc, (fm.trace_count, tc)
+        for i in range(32):
+            a = np.asarray(outs[("plain", i)]); b = np.asarray(outs[("sharded", i)])
+            np.testing.assert_array_equal(a, b)
+        assert fm.stats["jit_cache_entries"] >= 2
+        gw.close()
+        print("GATEWAY_SHARDED_OK")
+        """
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True,
+        text=True,
+        timeout=560,
+        env={
+            "PYTHONPATH": str(REPO / "src"),
+            "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+            "PATH": "/usr/bin:/bin",
+            "HOME": "/root",
+        },
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "GATEWAY_SHARDED_OK" in proc.stdout

@@ -203,6 +203,7 @@ def test_mesh_fingerprint():
     assert sh == Engine(mesh).batch_sharding()
 
 
+@pytest.mark.subprocess
 def test_sharded_stream_matches_single_device():
     """8 host devices (subprocess): the SAME plan streams a sharded epoch
     through Engine.batch_sharding() and matches the single-device result."""
@@ -257,6 +258,94 @@ def test_sharded_stream_matches_single_device():
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "SHARDED_STREAM_OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# adaptive pack (REPRO_RUNNER_AUTOPACK)
+# ---------------------------------------------------------------------------
+
+class _FakeClock:
+    """Monotonic fake: every read advances by ``step``, so any timed span
+    measures exactly ``step`` seconds regardless of real wall time."""
+
+    def __init__(self, step: float):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self) -> float:
+        self.t += self.step
+        return self.t
+
+
+def test_autopack_halves_toward_target(fitted):
+    """Superbatches measuring over the target halve the pack (first
+    measurement is discarded as compile warmup)."""
+    batches = [_mk_batch(8, 500 + i) for i in range(24)]
+    runner = PlanRunner(
+        fitted.plan(),
+        pack=8,
+        prefetch=0,
+        workers=1,
+        autopack=True,
+        autopack_target_ms=10.0,
+        clock=_FakeClock(step=0.040),  # every superbatch "takes" 40ms
+    )
+    outs = runner.run_collect(iter(batches))
+    assert len(outs) == 24
+    for b, o in zip(batches, outs):
+        ref = fitted.transform({k: jnp.asarray(v) for k, v in b.items()})
+        _assert_batch_close(o, ref)
+    # groups: 8 (warmup), 8 -> 4, 4 -> 2, 2 -> 1, then settled at the floor
+    assert runner.pack == 1
+    assert runner._autopack.settled
+
+
+def test_autopack_doubles_when_cheap(fitted):
+    batches = [_mk_batch(8, 600 + i) for i in range(24)]
+    runner = PlanRunner(
+        fitted.plan(),
+        pack=1,
+        prefetch=0,
+        workers=1,
+        autopack=True,
+        autopack_target_ms=10.0,
+        clock=_FakeClock(step=0.001),  # far under target/2: keep doubling
+    )
+    outs = runner.run_collect(iter(batches))
+    assert len(outs) == 24
+    # groups: 1 (warmup), 1 -> 2, 2 -> 4, 4 -> 8, ...
+    assert runner.pack >= 8
+    for b, o in zip(batches, outs):
+        ref = fitted.transform({k: jnp.asarray(v) for k, v in b.items()})
+        _assert_batch_close(o, ref)
+
+
+def test_autopack_settles_inside_band(fitted):
+    runner = PlanRunner(
+        fitted.plan(),
+        pack=4,
+        prefetch=0,
+        workers=1,
+        autopack=True,
+        autopack_target_ms=10.0,
+        clock=_FakeClock(step=0.008),  # inside [target/2, target]
+    )
+    runner.run_collect(iter([_mk_batch(8, 700 + i) for i in range(12)]))
+    assert runner.pack == 4
+    assert runner._autopack.settled
+    assert runner._autopack.adjustments == 0
+
+
+def test_autopack_env_flag(fitted, monkeypatch):
+    monkeypatch.setenv("REPRO_RUNNER_AUTOPACK", "1")
+    monkeypatch.setenv("REPRO_RUNNER_PACK_TARGET_MS", "25")
+    r = PlanRunner(fitted.plan())
+    assert r._autopack is not None
+    assert r._autopack.target == 0.025
+    monkeypatch.setenv("REPRO_RUNNER_AUTOPACK", "0")
+    assert PlanRunner(fitted.plan())._autopack is None
+    monkeypatch.delenv("REPRO_RUNNER_AUTOPACK")
+    assert PlanRunner(fitted.plan())._autopack is None  # off by default
 
 
 # ---------------------------------------------------------------------------

@@ -52,6 +52,77 @@ def test_microbatcher_propagates_errors():
     b.close()
 
 
+def test_microbatcher_isolates_poisoned_request():
+    """A batch whose model call raises is re-run request-by-request: the
+    poisoned request gets ITS error, the rest still get results."""
+    def picky(feats):
+        x = np.asarray(feats["x"])
+        if (x < 0).any():
+            raise ValueError("poisoned feature")
+        return jnp.asarray(x) * 2.0
+
+    # long window so concurrent submits land in ONE batch
+    b = MicroBatcher(picky, max_batch=8, max_wait_ms=50.0)
+    xs = [1.0, -1.0, 3.0, 4.0]
+    outs = [None] * len(xs)
+    errs = [None] * len(xs)
+
+    def one(i):
+        try:
+            outs[i] = b.submit({"x": np.float32(xs[i])}, timeout=10.0)
+        except BaseException as e:
+            errs[i] = e
+
+    with cf.ThreadPoolExecutor(max_workers=4) as ex:
+        list(ex.map(one, range(len(xs))))
+    assert isinstance(errs[1], ValueError)
+    for i in (0, 2, 3):
+        assert errs[i] is None
+        np.testing.assert_allclose(np.asarray(outs[i]), xs[i] * 2.0)
+    assert b.rows_served == 3  # only successful rows counted
+    b.close()
+
+
+def test_microbatcher_close_drains_pending():
+    """close() fails queued requests fast with BatcherClosedError instead of
+    leaving their submitters blocked until timeout."""
+    import time
+
+    from repro.serve import BatcherClosedError
+
+    def slow(feats):
+        time.sleep(0.15)
+        return jnp.asarray(feats["x"]) * 2.0
+
+    b = MicroBatcher(slow, max_batch=1, max_wait_ms=1.0, buckets=(1,))
+    results, errors = {}, {}
+
+    def one(i):
+        try:
+            results[i] = b.submit({"x": np.float32(i)}, timeout=30.0)
+        except BaseException as e:
+            errors[i] = e
+
+    with cf.ThreadPoolExecutor(max_workers=6) as ex:
+        futs = [ex.submit(one, i) for i in range(6)]
+        time.sleep(0.05)  # first request is mid-execution, rest are queued
+        t0 = time.perf_counter()
+        b.close()
+        closed_in = time.perf_counter() - t0
+        for f in futs:
+            f.result(timeout=10)
+
+    assert closed_in < 6.0
+    assert len(results) + len(errors) == 6
+    assert len(errors) >= 1  # queued requests drained...
+    assert all(isinstance(e, BatcherClosedError) for e in errors.values())
+    assert len(results) >= 1  # ...while in-flight work finished normally
+    import pytest
+
+    with pytest.raises(BatcherClosedError):
+        b.submit({"x": np.float32(9.0)})
+
+
 def test_greedy_decode_deterministic():
     from repro import configs
     from repro.models import registry

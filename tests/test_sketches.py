@@ -90,6 +90,69 @@ def test_moments_merge_equals_concat(xs, ys):
         )
 
 
+def test_dd_numpy_path_matches_jnp_bin_for_bin():
+    """dd_update_np (the serving-telemetry hot path) must land every value in
+    the SAME bin as the jnp dd_update, so host and device histograms merge."""
+    rng = np.random.default_rng(0)
+    vals = np.concatenate(
+        [
+            rng.lognormal(0, 4, 500),  # magnitudes across many decades
+            -rng.lognormal(0, 4, 500),
+            np.zeros(7),
+            np.array([np.nan, 1e-13, -1e-13]),
+        ]
+    )
+    h_jnp = np.asarray(sketches.dd_update(sketches.dd_init(), jnp.asarray(vals)))
+    h_np = sketches.dd_update_np(sketches.dd_init_np(), vals)
+    np.testing.assert_array_equal(h_np, h_jnp)
+    # and a merged np+jnp histogram quantile-queries like a pure-jnp one
+    merged = sketches.dd_merge(h_np, h_jnp)
+    q_m = float(sketches.dd_quantile(merged, 0.5)[0])
+    q_j = float(sketches.dd_quantile(h_jnp + h_jnp, 0.5)[0])
+    assert q_m == q_j
+
+
+def test_latency_sketch_thread_merge_order_independent():
+    """Gateway worker threads each own a histogram; the merged result equals
+    a single-threaded fold of all observations regardless of which thread
+    recorded what, and quantiles stay inside the documented relative bound."""
+    import threading
+
+    from repro.serve.gateway import LatencySketch
+
+    rng = np.random.default_rng(1)
+    vals = rng.lognormal(-7, 1.5, 4000)  # latency-shaped: ~1ms scale
+    shards = np.array_split(vals, 8)
+
+    sk = LatencySketch()
+    threads = [
+        threading.Thread(target=lambda s=s: [sk.record(float(v)) for v in s])
+        for s in shards
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sk.count == len(vals)
+
+    # order-independence: any permutation of the per-thread histograms (the
+    # sketch is a commutative monoid under dd_merge) gives the same result
+    single = sketches.dd_update_np(sketches.dd_init_np(), vals)
+    np.testing.assert_array_equal(sk.merged(), single)
+    hists = list(sk._hists.values())
+    for perm in (hists, hists[::-1], hists[3:] + hists[:3]):
+        acc = sketches.dd_init_np()
+        for h in perm:
+            acc = sketches.dd_merge(acc, h)
+        np.testing.assert_array_equal(acc, single)
+
+    # documented relative error bound (~4%, asserted at 6% like the jnp test)
+    for q in (0.1, 0.5, 0.9, 0.99):
+        got = sk.quantiles([q])[q]
+        want = float(np.quantile(vals, q, method="inverted_cdf"))
+        assert abs(got - want) <= 0.06 * abs(want), (q, got, want)
+
+
 def test_hash_maxlen_invariance():
     a = hashing.fnv1a64(jnp.asarray(T.encode_strings(["hello"], 8)))
     b = hashing.fnv1a64(jnp.asarray(T.encode_strings(["hello"], 64)))
