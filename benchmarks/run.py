@@ -61,8 +61,19 @@ def main() -> None:
     if args.smoke:
         _loud("preprocessing", preprocessing.run, failures, smoke=True)
         # short CPU-only gateway load run: seconds, and loud on
-        # regression-shaped output (zero completed / all shed)
+        # regression-shaped output (zero completed / all shed / cost-model
+        # hit-rate below the launch-time-only baseline)
         _loud("serving", serving.run, failures, smoke=True)
+        # the cost-aware rows are the record of the finish-time-feasibility
+        # guarantee; a refactor that silently stops emitting them must fail
+        # CI, mirroring the serve_gw_* guard inside serving.py
+        from . import common
+
+        names = {r["name"] for r in common.RESULTS}
+        for prefix in ("serve_gw_p50", "serve_cost_hitrate", "serve_cost_shedprec"):
+            if not any(n.startswith(prefix) for n in names):
+                print(f"\nBENCHMARK FAILED: no {prefix}_* row emitted", file=sys.stderr)
+                failures.append(f"missing-{prefix}")
         _write_json(args.json)  # partial rows still recorded on failure
         if failures:
             sys.exit(f"benchmark(s) failed: {', '.join(failures)}")

@@ -20,7 +20,20 @@ Per rate, four rows land in BENCH_preprocessing.json:
   serve_gw_throughput_r<rate>  completed rows/s over the run window
   serve_gw_shed_r<rate>        shed+rejected fraction of offered load
 
-A regression-shaped result — nothing completed, or everything shed — raises
+A second experiment replays ONE deadline-carrying load (mixed feasible and
+never-feasible budgets) against a launch-time-only gateway and a cost-model
+gateway, and records the finish-time-feasibility rows:
+
+  serve_cost_hitrate_r<rate>   deadline-hit-rate (finished inside budget /
+                               offered) with the cost model, vs baseline
+  serve_cost_shedprec_r<rate>  shed precision: fraction of shed requests
+                               that truly could not have finished (remaining
+                               budget at shed < the model's known execute
+                               time — exact ground truth, the model is
+                               synthetic with a fixed cost)
+
+A regression-shaped result — nothing completed, everything shed, or a
+cost-model hit-rate materially below the launch-time baseline — raises
 (benchmarks/run.py turns that into a loud failure).
 """
 from __future__ import annotations
@@ -85,6 +98,11 @@ def _request_rows(n: int, seed: int = 7):
 
 
 def run(smoke: bool = False) -> None:
+    _run_gateway(smoke)
+    _run_cost(smoke)
+
+
+def _run_gateway(smoke: bool) -> None:
     fm = _build_fused()
     rates = [400] if smoke else [200, 800]
     seconds = 1.5 if smoke else 4.0
@@ -92,8 +110,13 @@ def run(smoke: bool = False) -> None:
         # fresh gateway per rate: the latency sketches are cumulative, and a
         # p99 row labelled r800 must not average in the unloaded r200 run
         # (the fused executables persist on fm, so re-warmup is trace-free
-        # after the first rate)
-        gw = ServingGateway(max_pending=256, max_wait_ms=2.0, workers=2)
+        # after the first rate).  cost_model=False pins this series to the
+        # launch-time-only configuration it has always measured — the
+        # longitudinal serve_gw_* rows must stay comparable across PRs, and
+        # the cost-model configuration has its own serve_cost_* rows below
+        gw = ServingGateway(
+            max_pending=256, max_wait_ms=2.0, workers=2, cost_model=False
+        )
         gw.register(
             "ranker",
             fm,
@@ -167,3 +190,125 @@ def _drive(gw, fm, rate: int, seconds: float, traces_after_warmup: int) -> None:
         f"completed={len(completed)}/{n} "
         f"traces_since_warmup={fm.trace_count - traces_after_warmup}",
     )
+
+
+# ---------------------------------------------------------------------------
+# Cost-aware scheduling: deadline-hit-rate and shed-precision vs the
+# launch-time-only baseline, at the same offered load
+# ---------------------------------------------------------------------------
+
+_COST_EXEC_MS = 6.0  # synthetic model: KNOWN execute cost = exact feasibility
+#                      ground truth for the shed-precision metric
+
+
+def _sleepy_ranker():
+    def fn(batch):
+        time.sleep(_COST_EXEC_MS / 1e3)
+        return {"y": np.asarray(batch["x"]) * 2.0}
+
+    return fn
+
+
+def _run_cost(smoke: bool) -> None:
+    rate = 140 if smoke else 160
+    seconds = 1.5 if smoke else 4.0
+    out = {}
+    for label, enabled in (("base", False), ("cost", True)):
+        # serial single-slot server near saturation: wasted slots (doomed
+        # requests the baseline launches anyway) visibly delay feasible ones
+        gw = ServingGateway(
+            max_pending=256, max_wait_ms=1.0, workers=1, cost_model=enabled
+        )
+        gw.register(
+            "m",
+            _sleepy_ranker(),
+            example={"x": np.float32(0.0)},
+            buckets=(1,),
+            max_batch=1,
+        )
+        gw.warmup()
+        try:
+            out[label] = _drive_deadlines(gw, rate, seconds)
+        finally:
+            gw.close()
+    base, cost = out["base"], out["cost"]
+    if not base["completed"] or not cost["completed"]:
+        raise RuntimeError(
+            f"regression-shaped cost-serving result: completed "
+            f"base={base['completed']} cost={cost['completed']}"
+        )
+    if not cost["shed"]:
+        raise RuntimeError(
+            "regression-shaped cost-serving result: the cost model shed "
+            "nothing although half the offered load can never finish"
+        )
+    if cost["hit_rate"] + 0.05 < base["hit_rate"]:
+        raise RuntimeError(
+            f"regression-shaped cost-serving result: hit_rate "
+            f"cost={cost['hit_rate']:.3f} < base={base['hit_rate']:.3f}"
+        )
+    # rates, not latencies: us_per_call stays 0.0 (the serve_gw_shed
+    # convention) and the measured fractions live in `derived`
+    emit(
+        f"serve_cost_hitrate_r{rate}",
+        0.0,
+        f"cost={cost['hit_rate']:.3f} base={base['hit_rate']:.3f} "
+        f"offered={rate}/s completed={cost['completed']} "
+        f"late={cost['late']} base_late={base['late']} shed={cost['shed']}",
+    )
+    emit(
+        f"serve_cost_shedprec_r{rate}",
+        0.0,
+        f"shed_precision={cost['shed_precision']:.3f} "
+        f"truly_infeasible={cost['shed_true']}/{cost['shed']} "
+        f"base_shed={base['shed']} exec_ms={_COST_EXEC_MS}",
+    )
+
+
+def _drive_deadlines(gw, rate: int, seconds: float) -> dict:
+    """One replayable open-loop run: even requests carry a feasible 60ms
+    budget, odd ones a 4ms budget that can NEVER finish (execute is 6ms).
+    Hits are measured client-side: reply in hand inside the budget."""
+    n = int(rate * seconds)
+    exec_s = _COST_EXEC_MS / 1e3
+    outcomes = [None] * n
+
+    def client(i):
+        deadline_ms = 4.0 if i % 2 else 60.0
+        t_sub = time.perf_counter()
+        try:
+            gw.submit("m", {"x": np.float32(i)}, deadline_ms=deadline_ms, timeout=10.0)
+            late = (time.perf_counter() - t_sub) * 1e3 > deadline_ms
+            outcomes[i] = ("late" if late else "hit", None)
+        except DeadlineExceededError:
+            remaining = deadline_ms / 1e3 - (time.perf_counter() - t_sub)
+            outcomes[i] = ("shed", remaining)
+        except GatewayError:
+            outcomes[i] = ("rejected", None)
+
+    t0 = time.perf_counter()
+    with cf.ThreadPoolExecutor(max_workers=64) as pool:
+        futs = []
+        for i in range(n):  # open loop: dispatch at t0 + i/rate, no matter what
+            target = t0 + i / rate
+            lag = target - time.perf_counter()
+            if lag > 0:
+                time.sleep(lag)
+            futs.append(pool.submit(client, i))
+        for f in futs:
+            f.result()
+
+    kinds = [o[0] for o in outcomes]
+    shed_budgets = [o[1] for o in outcomes if o[0] == "shed"]
+    # ground truth: a shed request truly could not have finished iff its
+    # remaining budget at shed time was below the (known) execute time
+    shed_true = sum(1 for b in shed_budgets if b < exec_s)
+    n_shed = len(shed_budgets)
+    return {
+        "hit_rate": kinds.count("hit") / n,
+        "completed": kinds.count("hit") + kinds.count("late"),
+        "late": kinds.count("late"),
+        "shed": n_shed,
+        "shed_true": shed_true,
+        "shed_precision": (shed_true / n_shed) if n_shed else float("nan"),
+    }

@@ -1,7 +1,11 @@
 """Serving-gateway demo: TWO fused models (a ranker and a CTR head) behind
 one ServingGateway — the paper's production shape (a request-serving chassis
 around the fused preprocessing+model artifact), with admission control,
-deadline-aware continuous batching, and DDSketch latency telemetry.
+deadline-aware continuous batching, finish-time-feasible shedding (the
+warmup probe seeds a per-(model, bucket) execute-time cost model, so a
+request whose budget cannot cover the estimated execute time is shed with
+``InfeasibleDeadlineError`` instead of being served late), and DDSketch
+latency telemetry.
 
 Run:  PYTHONPATH=src python examples/serve_gateway.py
 """
@@ -17,7 +21,12 @@ from repro.core import (
     LogTransformer,
     StandardScaleEstimator,
 )
-from repro.serve import DeadlineExceededError, FusedModel, ServingGateway
+from repro.serve import (
+    DeadlineExceededError,
+    FusedModel,
+    InfeasibleDeadlineError,
+    ServingGateway,
+)
 
 
 def build_ranker() -> FusedModel:
@@ -84,8 +93,18 @@ def main():
 
     def client(i):
         """Mixed traffic: mostly ranker, some CTR; interactive requests get
-        priority 1 + a 200 ms deadline, batch traffic gets neither."""
+        priority 1 + a 200 ms deadline, batch traffic gets neither — and a
+        few requests carry a 1.5 ms budget below the ~3 ms execute estimate,
+        which the cost model sheds as INFEASIBLE instead of serving late
+        (or as expired, if the budget runs out while queued)."""
         try:
+            if i % 7 == 1:
+                return gw.submit(
+                    "ctr",
+                    {"dwell_ms": np.float32(rng.lognormal(6, 1))},
+                    priority=1,
+                    deadline_ms=1.5,  # cannot finish: shed, never served late
+                )
             if i % 3 == 0:
                 return gw.submit(
                     "ctr",
@@ -101,15 +120,27 @@ def main():
                 },
                 priority=0,
             )
+        except InfeasibleDeadlineError:
+            return "INFEASIBLE"  # cost model: could never have finished
         except DeadlineExceededError:
-            return "SHED"
+            return "SHED"  # budget ran out while queued
 
     with cf.ThreadPoolExecutor(max_workers=32) as pool:
         outs = list(pool.map(client, range(200)))
 
     served = sum(1 for o in outs if not isinstance(o, str))
-    print(f"served {served}/200 requests ({200 - served} shed)")
-    print(json.dumps(gw.snapshot(), indent=2, default=str))
+    infeasible = sum(1 for o in outs if o == "INFEASIBLE")
+    shed = sum(1 for o in outs if o == "SHED")
+    print(
+        f"served {served}/200 requests "
+        f"({infeasible} shed as infeasible, {shed} shed as expired)"
+    )
+    snap = gw.snapshot()
+    print("execute-time estimates (ms) per (model, bucket):")
+    for name in ("ranker", "ctr"):
+        print(f"  {name}: "
+              + json.dumps({b: rec["est_ms"] for b, rec in snap["models"][name]["cost"].items()}))
+    print(json.dumps(snap, indent=2, default=str))
     gw.close()
     print("OK")
 

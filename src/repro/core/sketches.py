@@ -187,7 +187,11 @@ def dd_update_np(hist, x):
 
 
 def dd_quantile(hist: jax.Array, q) -> jax.Array:
-    """Approximate quantile(s) with ~4% relative error (vectorised over q)."""
+    """Approximate quantile(s) with ~4% relative error (vectorised over q).
+
+    An EMPTY histogram has no quantiles: every requested q yields NaN (jit-safe
+    via where), never a garbage bin-0 value — callers (imputers, the serving
+    cost model) must not mistake "no data" for "about -7e8"."""
     q = jnp.atleast_1d(jnp.asarray(q, jnp.float64))
     total = jnp.sum(hist)
     cum = jnp.cumsum(hist)
@@ -202,7 +206,31 @@ def dd_quantile(hist: jax.Array, q) -> jax.Array:
         vneg = -jnp.exp((mag_neg + _MIN_EXP + 0.5) * _LOG_GAMMA)
         return jnp.where(i == _HALF, 0.0, jnp.where(i > _HALF, vpos, vneg))
 
-    return value_of(bin_idx)
+    return jnp.where(total == 0, jnp.float64(jnp.nan), value_of(bin_idx))
+
+
+def dd_quantile_np(hist, q) -> "np.ndarray":
+    """Numpy mirror of :func:`dd_quantile` for host-side callers.
+
+    The gateway's cost model queries an estimate on every batch formation and
+    every admission decision; a jnp dispatch there would cost more than the
+    scheduling decision it informs.  Same bin layout, same NaN-on-empty
+    semantics — parity asserted by tests/test_sketches.py."""
+    import numpy as np
+
+    q = np.atleast_1d(np.asarray(q, np.float64))
+    h = np.asarray(hist)
+    total = h.sum()
+    if total == 0:
+        return np.full(q.shape, np.nan)
+    cum = np.cumsum(h).astype(np.float64)
+    idx = np.searchsorted(cum, q * float(total), side="left")
+    idx = np.clip(idx, 0, DD_BINS - 1)
+    mag_pos = idx - _HALF - 1
+    mag_neg = _HALF - 1 - idx
+    vpos = np.exp((mag_pos + _MIN_EXP + 0.5) * _LOG_GAMMA)
+    vneg = -np.exp((mag_neg + _MIN_EXP + 0.5) * _LOG_GAMMA)
+    return np.where(idx == _HALF, 0.0, np.where(idx > _HALF, vpos, vneg))
 
 
 # ---------------------------------------------------------------------------

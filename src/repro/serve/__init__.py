@@ -5,8 +5,10 @@ from .decode import greedy_decode
 from .fused import FusedModel
 from .gateway import (
     DeadlineExceededError,
+    ExecuteCostModel,
     GatewayClosedError,
     GatewayError,
+    InfeasibleDeadlineError,
     QueueFullError,
     ServingGateway,
     UnknownModelError,
@@ -17,9 +19,11 @@ __all__ = [
     "MicroBatcher",
     "BatcherClosedError",
     "ServingGateway",
+    "ExecuteCostModel",
     "GatewayError",
     "QueueFullError",
     "DeadlineExceededError",
+    "InfeasibleDeadlineError",
     "GatewayClosedError",
     "UnknownModelError",
     "greedy_decode",

@@ -11,9 +11,11 @@ from .admission import (
     DeadlineExceededError,
     GatewayClosedError,
     GatewayError,
+    InfeasibleDeadlineError,
     QueueFullError,
     UnknownModelError,
 )
+from .costmodel import ExecuteCostModel
 from .gateway import ServingGateway
 from .registry import ModelEntry, ModelRegistry
 from .scheduler import BatchScheduler, Request
@@ -26,10 +28,12 @@ __all__ = [
     "BatchScheduler",
     "Request",
     "LatencySketch",
+    "ExecuteCostModel",
     "AdmissionController",
     "GatewayError",
     "QueueFullError",
     "DeadlineExceededError",
+    "InfeasibleDeadlineError",
     "GatewayClosedError",
     "UnknownModelError",
 ]

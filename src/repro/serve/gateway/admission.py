@@ -14,13 +14,19 @@ retry elsewhere.  Two mechanisms, two distinct errors:
   :mod:`.scheduler`) is dropped with :class:`DeadlineExceededError` instead
   of wasting an executable slot computing an answer nobody is waiting for.
 
-The deadline is the latest acceptable *launch* time: a request launched at
-or before its deadline is served; one still queued past it is shed.
+With a cost model wired in (see :mod:`.costmodel`), the deadline becomes a
+*finish*-time bound: a request is shed not only once its deadline has
+passed, but as soon as the gateway can tell it cannot finish in time —
+at the door when the queue's estimated drain time already exceeds the
+request's budget, and at batch formation when ``now + est_execute`` lands
+past the deadline (:class:`InfeasibleDeadlineError`, a distinct subclass so
+clients can tell "you asked too late" from "your deadline expired").
 """
 from __future__ import annotations
 
 import threading
 import time
+from typing import Callable, Optional
 
 
 class GatewayError(RuntimeError):
@@ -33,6 +39,12 @@ class QueueFullError(GatewayError):
 
 class DeadlineExceededError(GatewayError):
     """Shed: the request's deadline expired before it could be launched."""
+
+
+class InfeasibleDeadlineError(DeadlineExceededError):
+    """Shed early: the deadline has NOT passed yet, but the cost model says
+    the request cannot finish by it (queue drain or execute estimate exceeds
+    the remaining budget) — shedding now is cheaper than a late answer."""
 
 
 class GatewayClosedError(GatewayError):
@@ -49,24 +61,62 @@ class AdmissionController:
     Args:
       max_pending: cap on requests admitted but not yet finished.
       clock: monotonic time source (injectable for tests).
+      drain_estimator: optional ``(model, priority, deadline) -> seconds``
+        callable estimating how long already-queued work ahead of a new
+        request will take (the gateway wires this to urgency-aware scheduler
+        depth x cost-model estimates).  When the drain alone exceeds a
+        request's remaining budget, the request is shed at the door with
+        :class:`InfeasibleDeadlineError` instead of occupying a slot it
+        cannot use.
     """
 
-    def __init__(self, max_pending: int = 256, clock=time.perf_counter):
+    def __init__(
+        self,
+        max_pending: int = 256,
+        clock=time.perf_counter,
+        drain_estimator: Optional[Callable[..., float]] = None,
+    ):
         self.max_pending = int(max_pending)
         self._clock = clock
+        self.drain_estimator = drain_estimator
         self._lock = threading.Lock()
         self._pending = 0
-        self.stats = {"admitted": 0, "rejected_full": 0, "shed_at_door": 0}
+        self.stats = {
+            "admitted": 0,
+            "rejected_full": 0,
+            "shed_at_door": 0,
+            "shed_infeasible_door": 0,
+        }
 
-    def admit(self, deadline=None) -> None:
+    def admit(
+        self,
+        deadline=None,
+        model: Optional[str] = None,
+        priority: int = 0,
+    ) -> None:
         """Take one occupancy slot or raise; every successful admit must be
         paired with exactly one :meth:`release` when the request finishes
         (result, error, or shed)."""
+        # the drain estimate is computed OUTSIDE the admission lock: it is
+        # approximate by design, and the estimator takes the scheduler's and
+        # cost model's own locks — holding _lock across it would serialize
+        # every submit (all models, deadline or not) behind batch formation
+        drain = 0.0
+        if deadline is not None and self.drain_estimator is not None:
+            drain = self.drain_estimator(model, priority, deadline)
         with self._lock:
-            if deadline is not None and deadline <= self._clock():
+            now = self._clock()
+            if deadline is not None and deadline <= now:
                 self.stats["shed_at_door"] += 1
                 raise DeadlineExceededError(
                     "deadline expired before admission (shed)"
+                )
+            if drain > 0 and now + drain > deadline:
+                self.stats["shed_infeasible_door"] += 1
+                raise InfeasibleDeadlineError(
+                    f"estimated queue drain {drain * 1e3:.1f}ms exceeds "
+                    f"the request's {(deadline - now) * 1e3:.1f}ms budget "
+                    "(shed at the door)"
                 )
             if self._pending >= self.max_pending:
                 self.stats["rejected_full"] += 1

@@ -1,0 +1,156 @@
+"""Telemetry-driven execute-time cost model for the serving gateway.
+
+The gateway's deadline was a *launch*-time bound: a request launched at
+deadline−ε whose batch takes 10 ms still returns far past its deadline,
+silently violating the contract the client asked for.  Turning the deadline
+into a *finish*-time bound needs an estimate of how long a batch will take
+before it runs — per ``(model, bucket)``, because the padded bucket size IS
+the executable shape and each shape has its own cost.
+
+:class:`ExecuteCostModel` keeps one DDSketch histogram per (model, bucket),
+fed online from the same measured execute durations the gateway already
+records (stack+stage+run+readback, exactly what a request experiences) and
+seeded by a timed warmup probe so estimates exist before the first real
+request.  An estimate is a high quantile of the observed distribution times
+a safety factor — quantile, not mean, because shedding decisions care about
+the tail a request would actually hit.
+
+Fallback chain when a bucket has too few samples:
+
+1. the nearest *smaller* bucket with data, else the nearest larger one —
+   an under-estimate serves a doomed request (the status-quo failure mode)
+   while an over-estimate sheds a servable one (a new, worse failure mode);
+2. the configured prior (``REPRO_GW_COST_PRIOR_MS``).  The default prior is
+   0 ms — i.e. *never shed on ignorance*: before any measurement the gateway
+   behaves exactly like the launch-time-only baseline.  Deployments that
+   would rather reject than risk a late answer can raise it.
+
+Estimates are cached per (model, bucket) and invalidated by observation
+count, so the formation/admission hot paths pay a dict lookup, not a
+quantile scan.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Dict, Optional, Tuple
+
+from repro.core import sketches
+
+
+def _env_float(name: str, default: float) -> float:
+    try:
+        return float(os.environ.get(name, default))
+    except ValueError:
+        return default
+
+
+class _BucketStats:
+    __slots__ = ("hist", "count", "cached_at", "est")
+
+    def __init__(self):
+        self.hist = sketches.dd_init_np()
+        self.count = 0
+        self.cached_at = -1  # observation count the cached estimate reflects
+        self.est = float("nan")
+
+
+class ExecuteCostModel:
+    """Per-(model, bucket) execute-time estimator.
+
+    Args (each falls back to its env knob, then the documented default):
+      quantile: which quantile of observed execute time to estimate with
+        (``REPRO_GW_COST_Q``, default 0.9).
+      safety: multiplier on the quantile (``REPRO_GW_COST_SAFETY``, 1.0).
+      prior_ms: estimate used before any data exists for a model
+        (``REPRO_GW_COST_PRIOR_MS``, default 0.0 = assume feasible).
+      min_samples: observations a bucket needs before its own histogram is
+        trusted over the fallback chain (``REPRO_GW_COST_MIN_SAMPLES``, 1).
+    """
+
+    def __init__(
+        self,
+        quantile: Optional[float] = None,
+        safety: Optional[float] = None,
+        prior_ms: Optional[float] = None,
+        min_samples: Optional[int] = None,
+    ):
+        self.quantile = quantile if quantile is not None else _env_float("REPRO_GW_COST_Q", 0.9)
+        self.safety = safety if safety is not None else _env_float("REPRO_GW_COST_SAFETY", 1.0)
+        pm = prior_ms if prior_ms is not None else _env_float("REPRO_GW_COST_PRIOR_MS", 0.0)
+        self.prior_s = pm / 1e3
+        self.min_samples = int(
+            min_samples if min_samples is not None else _env_float("REPRO_GW_COST_MIN_SAMPLES", 1)
+        )
+        self._lock = threading.Lock()
+        self._stats: Dict[Tuple[str, int], _BucketStats] = {}
+        self.observed = {"live": 0, "warmup": 0}
+
+    # -- feeding -----------------------------------------------------------
+
+    def observe(self, model: str, bucket: int, seconds: float, source: str = "live") -> None:
+        """Fold one measured batch execute duration into the model.
+
+        ``source`` is bookkeeping only ("live" | "warmup"); retried executes
+        are deliberately NOT fed here (see gateway._run_batch) — a poisoned
+        batch's rerun sweep says nothing about healthy execute cost.
+        """
+        if not (seconds >= 0.0):  # drops NaN and negatives
+            return
+        with self._lock:
+            rec = self._stats.setdefault((model, int(bucket)), _BucketStats())
+            sketches.dd_update_np(rec.hist, seconds)
+            rec.count += 1
+            self.observed[source] = self.observed.get(source, 0) + 1
+
+    # -- querying ----------------------------------------------------------
+
+    def _estimate_locked(self, rec: _BucketStats) -> float:
+        if rec.cached_at != rec.count:
+            q = sketches.dd_quantile_np(rec.hist, self.quantile)[0]
+            rec.est = float(q) * self.safety
+            rec.cached_at = rec.count
+        return rec.est
+
+    def _nearest_locked(self, model: str, bucket: int) -> Optional[_BucketStats]:
+        known = [
+            (b, rec)
+            for (m, b), rec in self._stats.items()
+            if m == model and rec.count >= self.min_samples
+        ]
+        if not known:
+            return None
+        smaller = [(b, r) for b, r in known if b <= bucket]
+        if smaller:
+            return max(smaller)[1]  # nearest smaller: err toward serving
+        return min(known)[1]
+
+    def estimate(self, model: str, bucket: int) -> Optional[float]:
+        """Estimated execute seconds for one (model, bucket) batch, or None
+        when nothing is known and no prior is configured (callers treat None
+        as "assume feasible")."""
+        with self._lock:
+            rec = self._stats.get((model, int(bucket)))
+            if rec is None or rec.count < self.min_samples:
+                rec = self._nearest_locked(model, int(bucket))
+            if rec is not None:
+                return self._estimate_locked(rec)
+        return self.prior_s if self.prior_s > 0 else None
+
+    # -- introspection -----------------------------------------------------
+
+    def snapshot(self) -> Dict[str, Dict[str, dict]]:
+        """``{model: {bucket: {count, est_ms}}}`` for gateway.snapshot()."""
+        with self._lock:
+            keys = sorted(self._stats)
+        out: Dict[str, Dict[str, dict]] = {}
+        for model, bucket in keys:
+            est = self.estimate(model, bucket)
+            with self._lock:
+                rec = self._stats.get((model, bucket))
+                count = rec.count if rec is not None else 0
+            out.setdefault(model, {})[str(bucket)] = {
+                "count": count,
+                "est_ms": None if est is None else round(est * 1e3, 3),
+            }
+        return out

@@ -23,6 +23,7 @@ overload-safe tier on top of the same staging + bucketing machinery.
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
@@ -35,12 +36,18 @@ from .admission import (
     AdmissionController,
     DeadlineExceededError,
     GatewayClosedError,
+    InfeasibleDeadlineError,
+    UnknownModelError,
 )
+from .costmodel import ExecuteCostModel
 from .registry import ModelEntry, ModelRegistry
 from .scheduler import BatchScheduler, Request
 from .telemetry import LatencySketch
 
-_STAGES = ("queue", "execute", "e2e")
+# execute_retry: durations of per-request reruns after a batch failure.  They
+# are kept OUT of "execute" (and out of the cost model) so one poisoned batch
+# cannot distort the latency record or the scheduling estimates.
+_STAGES = ("queue", "execute", "execute_retry", "e2e")
 
 
 class ServingGateway:
@@ -53,6 +60,10 @@ class ServingGateway:
       workers: executor threads pulling formed batches.  Batches for
         different models execute concurrently when >1.
       clock: monotonic time source (injectable for tests).
+      cost_model: finish-time feasibility (see :mod:`.costmodel`).  ``None``
+        (default) builds an :class:`ExecuteCostModel` unless
+        ``REPRO_GW_COST_MODEL=0``; ``False`` disables it (launch-time-only
+        deadlines, the pre-cost-model behaviour); an instance is used as-is.
     """
 
     def __init__(
@@ -61,10 +72,25 @@ class ServingGateway:
         max_wait_ms: float = 2.0,
         workers: int = 2,
         clock=time.perf_counter,
+        cost_model=None,
     ):
+        if cost_model is None:
+            enabled = os.environ.get("REPRO_GW_COST_MODEL", "1") != "0"
+            cost_model = ExecuteCostModel() if enabled else None
+        elif cost_model is False:
+            cost_model = None
+        elif cost_model is True:
+            cost_model = ExecuteCostModel()
+        self.cost = cost_model
         self.registry = ModelRegistry()
-        self.admission = AdmissionController(max_pending, clock=clock)
-        self.scheduler = BatchScheduler(clock=clock, max_wait_ms=max_wait_ms)
+        self.admission = AdmissionController(
+            max_pending,
+            clock=clock,
+            drain_estimator=self._drain_estimate if self.cost is not None else None,
+        )
+        self.scheduler = BatchScheduler(
+            clock=clock, max_wait_ms=max_wait_ms, cost_model=self.cost
+        )
         self._clock = clock
         self._seq_lock = threading.Lock()
         self._seq = 0
@@ -73,6 +99,7 @@ class ServingGateway:
         self.stats = {
             "completed": 0,
             "shed_queued": 0,
+            "shed_infeasible": 0,
             "failed": 0,
             "batches": 0,
             "rows": 0,
@@ -97,12 +124,43 @@ class ServingGateway:
         for stage in _STAGES:
             self.sketches.setdefault((name, stage), LatencySketch())
         entry = self.registry.register(name, model, example=example, **kw)
-        self.scheduler.set_limit(name, entry.max_batch)
+        self.scheduler.set_limit(name, entry.max_batch, buckets=entry.buckets)
         return entry
 
     def warmup(self) -> Dict[str, int]:
-        """AOT-precompile every (model, bucket) shape (see registry)."""
-        return self.registry.warmup()
+        """AOT-precompile every (model, bucket) shape (see registry); with a
+        cost model attached, a second timed probe per bucket seeds its
+        execute-time estimates before any traffic arrives."""
+        observe = None
+        if self.cost is not None:
+            observe = lambda name, bucket, dt: self.cost.observe(  # noqa: E731
+                name, bucket, dt, source="warmup"
+            )
+        return self.registry.warmup(observe=observe, clock=self._clock)
+
+    def _drain_estimate(self, model: Optional[str], priority: int, deadline) -> float:
+        """Seconds of already-queued work ahead of a new request for
+        ``model``: full batches of MORE-URGENT queued requests x estimated
+        execute per batch, divided over the workers.  Deliberately an
+        UNDER-estimate (partial batches count zero, in-flight batches and
+        less-urgent queued work are ignored) — over-estimating drain would
+        shed servable requests at the door, and formation is urgency-
+        ordered, so a high-priority or tight-deadline request jumps ahead
+        of queue depth it will never wait behind."""
+        if self.cost is None or model is None:
+            return 0.0
+        try:
+            entry = self.registry.get(model)
+        except UnknownModelError:
+            return 0.0
+        ahead = self.scheduler.depth_ahead(model, priority, deadline)
+        batches_ahead = ahead // max(entry.max_batch, 1)
+        if batches_ahead == 0:
+            return 0.0
+        est = self.cost.estimate(model, entry.buckets[-1])
+        if est is None:
+            return 0.0
+        return batches_ahead * est / len(self._threads)
 
     # -- client side -------------------------------------------------------
 
@@ -120,7 +178,7 @@ class ServingGateway:
         self.registry.get(model)  # unknown model: reject before admission
         now = self._clock()
         deadline = now + deadline_ms / 1e3 if deadline_ms is not None else None
-        self.admission.admit(deadline)
+        self.admission.admit(deadline, model=model, priority=int(priority))
         try:
             feats = {k: np.asarray(v) for k, v in features.items()}
             with self._seq_lock:
@@ -158,13 +216,15 @@ class ServingGateway:
                 continue
             key, batch, shed = item
             try:
-                for r in shed:
+                for r, err in shed:
                     self._finish_error(
                         r,
-                        DeadlineExceededError(
-                            "deadline expired while queued (shed)"
+                        err,
+                        counter=(
+                            "shed_infeasible"
+                            if isinstance(err, InfeasibleDeadlineError)
+                            else "shed_queued"
                         ),
-                        counter="shed_queued",
                     )
                 if batch:
                     entry = self.registry.get(key[0])
@@ -187,7 +247,7 @@ class ServingGateway:
         with self._stats_lock:
             self.stats[counter] += 1
 
-    def _run_batch(self, entry: ModelEntry, reqs: List[Request]) -> None:
+    def _run_batch(self, entry: ModelEntry, reqs: List[Request], retry: bool = False) -> None:
         try:
             n = len(reqs)
             bs = entry.bucket(n)
@@ -198,7 +258,12 @@ class ServingGateway:
                 [r.features for r in reqs], bs, entry.fn, entry.sharding
             )
             t1 = self._clock()
-            self.sketches[(entry.name, "execute")].record(t1 - t0)
+            # retried executes are tagged apart and kept out of the cost
+            # model: a poisoned batch's rerun sweep must not distort the
+            # healthy execute record it schedules by
+            self.sketches[(entry.name, "execute_retry" if retry else "execute")].record(t1 - t0)
+            if not retry and self.cost is not None:
+                self.cost.observe(entry.name, bs, t1 - t0)
             e2e = self.sketches[(entry.name, "e2e")]
             for r, result in zip(reqs, results):
                 r.result = result
@@ -207,17 +272,58 @@ class ServingGateway:
                 self.admission.release()
             with self._stats_lock:
                 self.stats["completed"] += n
-                self.stats["batches"] += 1
+                if not retry:
+                    self.stats["batches"] += 1
                 self.stats["rows"] += n
                 self.stats["padded_rows"] += bs - n
         except BaseException as e:
             if len(reqs) == 1:
+                # a directly-formed single-request batch still executed once
+                # (a solo RERUN is part of its sweep's single batch count)
+                if not retry:
+                    with self._stats_lock:
+                        self.stats["batches"] += 1
                 self._finish_error(reqs[0], e, counter="failed")
             else:
                 # failure isolation (as in MicroBatcher): one poisoned
-                # request must not fail the rest of its batch
+                # request must not fail the rest of its batch.  The whole
+                # rerun sweep counts as ONE batch, and a request whose
+                # deadline expired — or whose remaining budget cannot cover
+                # a solo rerun — during the failed attempt is re-shed, not
+                # re-executed into a late answer.
+                with self._stats_lock:
+                    self.stats["batches"] += 1
+                est_solo = (
+                    self.cost.estimate(entry.name, entry.bucket(1))
+                    if self.cost is not None
+                    else None
+                )
                 for r in reqs:
-                    self._run_batch(entry, [r])
+                    now = self._clock()
+                    if r.deadline is not None and r.deadline < now:
+                        self._finish_error(
+                            r,
+                            DeadlineExceededError(
+                                "deadline expired before retry (shed)"
+                            ),
+                            counter="shed_queued",
+                        )
+                    elif (
+                        r.deadline is not None
+                        and est_solo is not None
+                        and now + est_solo > r.deadline
+                    ):
+                        self._finish_error(
+                            r,
+                            InfeasibleDeadlineError(
+                                f"estimated rerun {est_solo * 1e3:.1f}ms exceeds "
+                                f"the request's {(r.deadline - now) * 1e3:.1f}ms "
+                                "remaining budget (shed before retry)"
+                            ),
+                            counter="shed_infeasible",
+                        )
+                    else:
+                        self._run_batch(entry, [r], retry=True)
 
     # -- introspection / lifecycle ----------------------------------------
 
@@ -230,6 +336,7 @@ class ServingGateway:
         stats["pending"] = self.admission.pending
         stats["queue_depth"] = self.scheduler.depth
         models: Dict[str, dict] = {}
+        cost_snap = self.cost.snapshot() if self.cost is not None else {}
         for name in self.registry.names():
             entry = self.registry.get(name)
             models[name] = {
@@ -237,6 +344,7 @@ class ServingGateway:
                 for stage in _STAGES
             }
             models[name]["trace_count"] = entry.trace_count()
+            models[name]["cost"] = cost_snap.get(name, {})
         return {"stats": stats, "models": models}
 
     def close(self, timeout: float = 5.0) -> None:

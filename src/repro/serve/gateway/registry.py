@@ -118,9 +118,18 @@ class ModelRegistry:
     def __len__(self):
         return len(self._entries)
 
-    def warmup(self) -> Dict[str, int]:
+    def warmup(self, observe=None, clock=None) -> Dict[str, int]:
         """Precompile every (model, bucket) shape; returns the per-model
-        trace counts afterwards — the baseline for the zero-trace probe."""
+        trace counts afterwards — the baseline for the zero-trace probe.
+
+        With ``observe`` (an ``(name, bucket, seconds)`` callback, wired to
+        the gateway's cost model), each bucket is driven a SECOND time after
+        the compiling call and that steady-state duration — stage, execute,
+        readback, exactly what gateway "execute" measures — is reported, so
+        execute-time estimates exist before the first real request."""
+        import time as _time
+
+        clock = clock or _time.perf_counter
         counts: Dict[str, int] = {}
         for entry in self:
             for b in entry.buckets:
@@ -130,6 +139,12 @@ class ModelRegistry:
                 }
                 out = entry.fn(stage_batch(batch, entry.sharding))
                 jax.block_until_ready(out)
+                if observe is not None:
+                    # second call: compile cost is paid, so this times the
+                    # steady-state execute the cost model must predict
+                    t0 = clock()
+                    jax.device_get(entry.fn(stage_batch(batch, entry.sharding)))
+                    observe(entry.name, b, clock() - t0)
             entry.warmed = True
             counts[entry.name] = entry.trace_count()
         return counts

@@ -19,6 +19,22 @@ wins; within a group, requests launch in urgency order ``(priority desc,
 deadline asc, arrival asc)``.  Requests whose deadline has already passed at
 formation time are separated out for shedding — they never occupy a slot in
 the padded batch.
+
+**Finish-time feasibility (cost model).**  With an
+:class:`~repro.serve.gateway.costmodel.ExecuteCostModel` attached, the
+deadline is a *finish*-time bound, not a launch-time bound:
+
+* a group becomes ready at ``tightest_deadline - est_execute`` rather than
+  at the deadline itself, so the batch can still finish in time;
+* at formation, a request that could not finish even in the cheapest
+  possible launch (``now + est_execute(model, smallest bucket) > deadline``)
+  is shed with :class:`InfeasibleDeadlineError` *before* occupying a padded
+  slot;
+* under overload, if padding the whole live group up to the next bucket
+  would blow a member's deadline but a smaller bucket finishes in time, the
+  batch is trimmed to the most-urgent prefix that fits the cheaper bucket
+  (smaller bucket = earlier finish) and the remainder re-queued for the next
+  formation instead of being dragged past its budget.
 """
 from __future__ import annotations
 
@@ -28,7 +44,13 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .admission import GatewayClosedError
+from repro.serve.batcher import _bucket
+
+from .admission import (
+    DeadlineExceededError,
+    GatewayClosedError,
+    InfeasibleDeadlineError,
+)
 
 
 class Request:
@@ -80,16 +102,20 @@ class BatchScheduler:
     popped while the lock is held, so no batch is handed out twice.
     """
 
-    def __init__(self, clock=time.perf_counter, max_wait_ms: float = 2.0):
+    def __init__(self, clock=time.perf_counter, max_wait_ms: float = 2.0, cost_model=None):
         self._cv = threading.Condition()
         self._groups: Dict[Tuple[str, tuple], List[Request]] = {}
         self._limits: Dict[str, int] = {}
+        self._buckets: Dict[str, Tuple[int, ...]] = {}
         self._clock = clock
         self.max_wait = max_wait_ms / 1e3
+        self.cost_model = cost_model
         self._closed = False
 
-    def set_limit(self, model: str, max_batch: int) -> None:
+    def set_limit(self, model: str, max_batch: int, buckets=None) -> None:
         self._limits[model] = int(max_batch)
+        if buckets:
+            self._buckets[model] = tuple(sorted(int(b) for b in buckets))
 
     def put(self, req: Request) -> None:
         with self._cv:
@@ -103,7 +129,40 @@ class BatchScheduler:
         with self._cv:
             return sum(len(g) for g in self._groups.values())
 
+    def depth_for(self, model: str) -> int:
+        """Queued (not yet formed) requests for one model."""
+        with self._cv:
+            return sum(len(g) for k, g in self._groups.items() if k[0] == model)
+
+    def depth_ahead(self, model: str, priority: int, deadline) -> int:
+        """Queued requests for ``model`` that would launch BEFORE a new
+        request with this (priority, deadline) — the admission controller's
+        drain estimate reads this, not total depth: formation is urgency-
+        ordered, so a high-priority or tight-deadline request jumps the
+        queue and must not be door-shed as if it waited behind all of it."""
+        p_key = -int(priority)
+        d_key = deadline if deadline is not None else float("inf")
+        with self._cv:
+            n = 0
+            for k, g in self._groups.items():
+                if k[0] != model:
+                    continue
+                for r in g:
+                    rp = -r.priority
+                    rd = r.deadline if r.deadline is not None else float("inf")
+                    if rp < p_key or (rp == p_key and rd <= d_key):
+                        n += 1
+            return n
+
     # -- formation ---------------------------------------------------------
+
+    def _est(self, model: str, n: int) -> Optional[float]:
+        """Estimated execute seconds for an ``n``-request batch of ``model``
+        (padded to its bucket), or None when no cost model / no data."""
+        if self.cost_model is None:
+            return None
+        bl = self._buckets.get(model)
+        return self.cost_model.estimate(model, _bucket(n, bl) if bl else n)
 
     def _ready_at(self, key, group, now: float) -> float:
         """Earliest time this group should launch."""
@@ -116,7 +175,11 @@ class BatchScheduler:
             default=None,
         )
         if tightest is not None:
-            due = min(due, tightest)  # launch AT the deadline, not past it
+            # launch early enough to FINISH by the deadline, not merely to
+            # start at it; without an estimate this degrades to launch-at-
+            # deadline (the pre-cost-model behaviour)
+            est = self._est(key[0], min(len(group), self._limits.get(key[0], 32)))
+            due = min(due, tightest - (est or 0.0))
         return due
 
     def _pick_ready(self, now: float):
@@ -134,24 +197,81 @@ class BatchScheduler:
         return min(times) if times else None
 
     def _form(self, key, now: float):
+        model = key[0]
         group = self._groups.pop(key)
         group.sort(key=Request.urgency)
-        shed, live = [], []
+        shed: List[Tuple[Request, Exception]] = []
+        live: List[Request] = []
         for r in group:
-            (shed if r.deadline is not None and r.deadline < now else live).append(r)
-        limit = self._limits.get(key[0], 32)
+            if r.deadline is not None and r.deadline < now:
+                shed.append(
+                    (r, DeadlineExceededError("deadline expired while queued (shed)"))
+                )
+            else:
+                live.append(r)
+        # finish-time feasibility: a request that cannot finish even in the
+        # cheapest possible launch (smallest bucket, starting now) is shed
+        # BEFORE it occupies a padded slot
+        est_min = self._est(model, 1)
+        if est_min is not None and est_min > 0 and live:
+            still = []
+            for r in live:
+                if r.deadline is not None and now + est_min > r.deadline:
+                    shed.append(
+                        (
+                            r,
+                            InfeasibleDeadlineError(
+                                f"estimated execute {est_min * 1e3:.1f}ms exceeds the "
+                                f"request's {(r.deadline - now) * 1e3:.1f}ms remaining "
+                                "budget (shed at formation)"
+                            ),
+                        )
+                    )
+                else:
+                    still.append(r)
+            live = still
+        limit = self._limits.get(model, 32)
         batch, rest = live[:limit], live[limit:]
+        bl = self._buckets.get(model)
+        if batch and self.cost_model is not None and bl:
+            batch, extra = self._feasible_prefix(model, batch, bl, now)
+            rest = extra + rest
         if rest:
             self._groups[key] = rest
             self._cv.notify_all()  # another worker may take the remainder
         return key, batch, shed
 
+    def _feasible_prefix(self, model, batch, bl, now):
+        """Largest most-urgent prefix of ``batch`` whose covering bucket
+        lets every member finish by its deadline.
+
+        Padding always-up is wrong under overload: a group of 5 padded to
+        bucket 8 pays est(8) for everyone, while serving the 4 most urgent
+        at bucket 4 finishes earlier — so when est(bucket_up) would blow a
+        member's deadline, descend to the cheapest covering bucket that does
+        not, re-queueing the overflow for the next formation (it is NOT
+        shed; its own feasibility is re-judged when its batch forms)."""
+        b_up = _bucket(len(batch), bl)
+        sizes = [len(batch)] + [b for b in reversed(bl) if b < b_up]
+        for s in sizes:
+            take = batch[:s]
+            est = self.cost_model.estimate(model, _bucket(len(take), bl))
+            if est is None or all(
+                r.deadline is None or now + est <= r.deadline for r in take
+            ):
+                return take, batch[len(take):]
+        # estimates moved concurrently; serve the most urgent request alone
+        # rather than spin (its infeasibility was already re-checked above)
+        return batch[:1], batch[1:]
+
     def next_batch(self, timeout: float = 0.1):
         """Block up to ``timeout`` for a ready group.
 
         Returns ``(key, batch, shed)`` — ``batch`` ordered by urgency and
-        capped at the model's ``max_batch``, ``shed`` the requests whose
-        deadline expired while queued — or None on timeout/close."""
+        capped at the model's ``max_batch``; ``shed`` is a list of
+        ``(request, error)`` pairs: requests whose deadline expired while
+        queued (DeadlineExceededError) or that cannot finish in time under
+        the cost model (InfeasibleDeadlineError) — or None on timeout/close."""
         end = self._clock() + timeout
         with self._cv:
             while True:

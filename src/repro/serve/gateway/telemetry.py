@@ -50,16 +50,25 @@ class LatencySketch:
 
     def quantiles(self, qs: Iterable[float] = (0.5, 0.99)) -> Dict[float, float]:
         qs = tuple(qs)
-        m = self.merged()
-        if m.sum() == 0:
-            return {q: float("nan") for q in qs}
-        vals = np.asarray(sketches.dd_quantile(m, list(qs)))
+        # dd_quantile_np handles the empty histogram (NaN per q) and avoids a
+        # jnp dispatch on the snapshot path
+        vals = sketches.dd_quantile_np(self.merged(), list(qs))
         return {q: float(v) for q, v in zip(qs, vals)}
 
     def snapshot_us(self, qs: Tuple[float, ...] = (0.5, 0.99)) -> Dict[str, float]:
         """Quantiles in microseconds plus the observation count — the shape
         the gateway surfaces per (model, stage)."""
         quants = self.quantiles(qs)
-        out = {f"p{int(q * 100)}_us": round(v * 1e6, 1) for q, v in quants.items()}
+        out = {quantile_label(q): round(v * 1e6, 1) for q, v in quants.items()}
         out["count"] = self.count
         return out
+
+
+def quantile_label(q: float) -> str:
+    """``0.5 -> 'p50_us'``, ``0.99 -> 'p99_us'``, ``0.999 -> 'p99_9_us'``.
+
+    Truncating with ``int(q * 100)`` collapsed 0.99 and 0.999 onto the same
+    ``p99_us`` key, silently dropping one of them from a snapshot dict."""
+    pct = round(q * 100, 6)
+    text = f"{pct:g}".replace(".", "_")
+    return f"p{text}_us"

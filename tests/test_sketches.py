@@ -153,6 +153,31 @@ def test_latency_sketch_thread_merge_order_independent():
         assert abs(got - want) <= 0.06 * abs(want), (q, got, want)
 
 
+def test_dd_quantile_empty_histogram_is_nan():
+    """An empty histogram must answer NaN, not the bin-0 value (≈ -7e8):
+    the serving cost model and any direct caller would otherwise read a
+    nonsense 'estimate' out of no data at all."""
+    empty = sketches.dd_init()
+    out = np.asarray(sketches.dd_quantile(empty, [0.5, 0.99]))
+    assert np.isnan(out).all(), out
+    out_np = sketches.dd_quantile_np(sketches.dd_init_np(), [0.1, 0.5, 0.999])
+    assert np.isnan(out_np).all(), out_np
+
+
+def test_dd_quantile_np_matches_jnp():
+    """The host-side quantile query (cost-model hot path) answers exactly
+    what the jnp dd_quantile answers, for the same histogram and qs."""
+    rng = np.random.default_rng(3)
+    vals = np.concatenate(
+        [rng.lognormal(-6, 2, 800), -rng.lognormal(0, 3, 200), np.zeros(5)]
+    )
+    h = sketches.dd_update_np(sketches.dd_init_np(), vals)
+    qs = [0.01, 0.1, 0.5, 0.9, 0.99, 0.999]
+    got_np = sketches.dd_quantile_np(h, qs)
+    got_jnp = np.asarray(sketches.dd_quantile(jnp.asarray(h), qs))
+    np.testing.assert_allclose(got_np, got_jnp, rtol=1e-12)
+
+
 def test_hash_maxlen_invariance():
     a = hashing.fnv1a64(jnp.asarray(T.encode_strings(["hello"], 8)))
     b = hashing.fnv1a64(jnp.asarray(T.encode_strings(["hello"], 64)))
