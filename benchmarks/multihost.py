@@ -1,0 +1,113 @@
+"""Multi-host smoke benchmark: the fake-device N-process job, measured.
+
+Real multi-host numbers need a pod; this records that the multi-host MACHINERY
+works and what it costs on the CPU harness, every PR:
+
+  stream_mh_1p        1-process baseline of the differential stream payload
+  stream_mh_2p        2-process per-host shard feeding (same logical stream,
+                      each process staging/computing only its row block);
+                      derived carries aggregate rows/s and the bit-identity
+                      cross-check against the 1-process run
+  serve_mh_p50_2p     2-process routed gateway replay: e2e p50 (+p99), with
+                      per-shard round-trip p50s in `derived`
+  serve_mh_shed_2p    completed/offered accounting of the routed replay
+                      (everything must complete; sheds here are a failure)
+
+``benchmarks/run.py --smoke`` fails loudly when these rows are missing —
+a refactor that silently stops exercising multi-host must fail CI.
+"""
+from __future__ import annotations
+
+import importlib.util
+import os
+import sys
+
+import numpy as np
+
+from .common import emit
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _launcher():
+    path = os.path.join(_REPO, "tests", "multihost.py")
+    spec = importlib.util.spec_from_file_location("mh_launcher", path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules.setdefault("mh_launcher", mod)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def run(smoke: bool = False) -> None:
+    mh = _launcher()
+    _stream(mh, smoke)
+    _serve(mh, smoke)
+
+
+def _stream(mh, smoke: bool) -> None:
+    sizes = [256] * (4 if smoke else 12)
+    payload = {"seed": 21, "sizes": sizes, "pack": 2}
+    ref = mh.launch("stream_plan", 1, payload)
+    parts = mh.launch("stream_plan", 2, payload)
+    n_rows = sum(sizes)
+
+    def rate(results):
+        secs = max(r["stats"]["seconds"] for r in results)
+        rows = sum(r["stats"]["local_rows"] for r in results)
+        return rows / max(secs, 1e-9), secs
+
+    r1, s1 = rate(ref)
+    r2, s2 = rate(parts)
+    # bit-identity cross-check rides along with the measurement: the bench
+    # must never record a number for a wrong answer
+    for i in range(len(sizes)):
+        for k in ref[0]["outputs"][i]:
+            joined = np.concatenate(
+                [p["outputs"][i][k] for p in parts], axis=0
+            )
+            np.testing.assert_array_equal(ref[0]["outputs"][i][k], joined)
+    emit(
+        "stream_mh_1p",
+        1e6 * s1 / len(sizes),
+        f"rows_per_s={r1:.0f} rows={n_rows}",
+    )
+    emit(
+        "stream_mh_2p",
+        1e6 * s2 / len(sizes),
+        f"rows_per_s={r2:.0f} vs_1p={r2 / max(r1, 1e-9):.2f}x "
+        f"rows={n_rows} bit_identical=yes",
+    )
+
+
+def _serve(mh, smoke: bool) -> None:
+    payload = {
+        "seed": 22,
+        "requests": 64 if smoke else 256,
+        "buckets": (2, 4, 8),
+        "max_batch": 8,
+        "cost_model": False,
+    }
+    res = mh.launch("gateway_replay", 2, payload)
+    coord, worker = res[0], res[1]
+    n = payload["requests"]
+    if coord["stats"]["completed"] != n or worker["batches"] == 0:
+        raise RuntimeError(
+            f"regression-shaped multi-host serve: completed="
+            f"{coord['stats']['completed']}/{n}, worker_batches={worker['batches']}"
+        )
+    shard_p50 = " ".join(
+        f"{k}_p50={v.get('p50_us')}us" for k, v in sorted(coord["shard_us"].items())
+    )
+    emit(
+        "serve_mh_p50_2p",
+        coord["e2e_us"]["p50_us"],
+        f"p99={coord['e2e_us']['p99_us']}us exec_p50={coord['execute_us']['p50_us']}us "
+        f"{shard_p50}",
+    )
+    emit(
+        "serve_mh_shed_2p",
+        0.0,
+        f"completed={coord['stats']['completed']}/{n} "
+        f"worker_batches={worker['batches']} shards={coord['shards']} "
+        f"traces_since_warmup={coord['traces_since_warmup']}",
+    )

@@ -19,14 +19,36 @@ import argparse
 import json
 import pathlib
 import sys
+import time
 import traceback
 
 
 def _write_json(path: str) -> None:
+    """Append this run's rows to the longitudinal record.
+
+    The file holds EVERY recorded run (rows tagged with a monotonically
+    increasing ``run`` id; pre-longitudinal rows read as run 0), so the
+    bench trajectory across PRs lives in the repo instead of being
+    overwritten each time.  Consumers wanting only the latest run filter on
+    ``max(run)``."""
     from . import common
 
-    pathlib.Path(path).write_text(json.dumps(common.RESULTS, indent=2) + "\n")
-    print(f"wrote {path} ({len(common.RESULTS)} rows)", file=sys.stderr)
+    p = pathlib.Path(path)
+    history: list = []
+    if p.exists():
+        try:
+            history = json.loads(p.read_text())
+        except (json.JSONDecodeError, OSError):
+            print(f"warning: could not parse {path}; starting fresh", file=sys.stderr)
+    run_id = max((r.get("run", 0) for r in history), default=-1) + 1
+    stamp = time.strftime("%Y-%m-%dT%H:%M:%S")
+    rows = [dict(r, run=run_id, ts=stamp) for r in common.RESULTS]
+    p.write_text(json.dumps(history + rows, indent=2) + "\n")
+    print(
+        f"wrote {path} (+{len(rows)} rows as run {run_id}; "
+        f"{len(history) + len(rows)} total)",
+        file=sys.stderr,
+    )
 
 
 def _loud(name: str, fn, failures: list, **kwargs) -> None:
@@ -64,16 +86,28 @@ def main() -> None:
         # regression-shaped output (zero completed / all shed / cost-model
         # hit-rate below the launch-time-only baseline)
         _loud("serving", serving.run, failures, smoke=True)
-        # the cost-aware rows are the record of the finish-time-feasibility
-        # guarantee; a refactor that silently stops emitting them must fail
-        # CI, mirroring the serve_gw_* guard inside serving.py
+        # 2-process fake-device multi-host smoke: per-host shard-fed stream
+        # (bit-identity cross-checked in the bench itself) + routed gateway
+        from . import multihost
+
+        _loud("multihost", multihost.run, failures, smoke=True)
+        # the cost-aware and multi-host rows are the record of the
+        # finish-time-feasibility and cross-process guarantees; a refactor
+        # that silently stops emitting them must fail CI, mirroring the
+        # serve_gw_* guard inside serving.py
         from . import common
 
         names = {r["name"] for r in common.RESULTS}
-        for prefix in ("serve_gw_p50", "serve_cost_hitrate", "serve_cost_shedprec"):
+        for prefix in (
+            "serve_gw_p50",
+            "serve_cost_hitrate",
+            "serve_cost_shedprec",
+            "stream_mh_",
+            "serve_mh_",
+        ):
             if not any(n.startswith(prefix) for n in names):
-                print(f"\nBENCHMARK FAILED: no {prefix}_* row emitted", file=sys.stderr)
-                failures.append(f"missing-{prefix}")
+                print(f"\nBENCHMARK FAILED: no {prefix}* row emitted", file=sys.stderr)
+                failures.append(f"missing-{prefix.rstrip('_')}")
         _write_json(args.json)  # partial rows still recorded on failure
         if failures:
             sys.exit(f"benchmark(s) failed: {', '.join(failures)}")
@@ -83,6 +117,10 @@ def main() -> None:
 
     _loud("preprocessing", preprocessing.run, failures)
     _loud("serving", serving.run, failures)
+
+    from . import multihost
+
+    _loud("multihost", multihost.run, failures)
     _loud("indexing", indexing.run, failures)
     _loud("fit_throughput", fit_throughput.run, failures)
 

@@ -136,10 +136,13 @@ def main():
         f"({infeasible} shed as infeasible, {shed} shed as expired)"
     )
     snap = gw.snapshot()
-    print("execute-time estimates (ms) per (model, bucket):")
+    print("execute-time estimates (ms) per (model, bucket), + rows→time fit:")
     for name in ("ranker", "ctr"):
-        print(f"  {name}: "
-              + json.dumps({b: rec["est_ms"] for b, rec in snap["models"][name]["cost"].items()}))
+        cost = snap["models"][name]["cost"]
+        ests = {b: rec["est_ms"] for b, rec in cost.items() if b != "fit"}
+        fit = cost.get("fit", {})
+        print(f"  {name}: " + json.dumps(ests)
+              + f"  fit: {fit.get('slope_ms_per_row')} ms/row + {fit.get('intercept_ms')} ms")
     print(json.dumps(snap, indent=2, default=str))
     gw.close()
     print("OK")

@@ -39,6 +39,28 @@ of a :class:`~repro.core.plan.TransformPlan`:
 
 The same staging helper (:func:`stage_batch`) backs the online
 ``MicroBatcher``, keeping offline and serving host→device handling unified.
+
+**Multi-host shard feeding.**  With a
+:class:`~repro.launch.mesh.ProcessMesh`, every process of a multi-process
+job drives the SAME logical batch stream, but each stages only its
+addressable rows of every superbatch:
+
+* ``shard_mode="global"`` — the process device_puts its row block per
+  addressable data shard and assembles the globally-sharded superbatch with
+  ``jax.make_array_from_single_device_arrays``; the executable is lowered
+  with the global batch sharding (SPMD: every process runs the same
+  program).  This is the TPU-pod path; it also runs single-process over a
+  virtual topology (all shards addressable), which is how tests cover it.
+* ``shard_mode="local"`` — the process computes ONLY its row block, on a
+  mesh over its own devices.  Row-wise plans need no cross-shard
+  collectives, so concatenating the per-process outputs in process order is
+  bit-identical to the single-process result (asserted by the differential
+  tests in ``tests/test_multihost.py``).  This is the default off-TPU,
+  where XLA cannot execute cross-process programs.
+
+Donation and pinned staging work unchanged in both modes (slots are sized
+to the local block, so steady-state staging still does no host allocation),
+and ``materialize="host"`` yields this process's rows as numpy views.
 """
 from __future__ import annotations
 
@@ -52,6 +74,21 @@ import jax
 import numpy as np
 
 from . import types as T
+
+
+def gather_addressable(v):
+    """Host numpy copy of a value's ADDRESSABLE rows: the whole array when
+    fully addressable (or not a jax array), else this process's addressable
+    row block — per-shard data concatenated in row order.  ``np.asarray``
+    on a multi-process global array raises; this is the multi-host-safe
+    spelling the host-materialising paths use."""
+    if isinstance(v, jax.Array) and not v.is_fully_addressable:
+        shards = sorted(
+            v.addressable_shards,
+            key=lambda s: s.index[0].start if s.index and s.index[0].start else 0,
+        )
+        return np.concatenate([np.asarray(s.data) for s in shards], axis=0)
+    return np.asarray(v)
 
 
 def stage_batch(batch, sharding=None):
@@ -153,6 +190,17 @@ class PlanRunner:
         once and yields zero-copy numpy views per batch — the right mode for
         an offline sweep that writes results out, and much cheaper than
         per-batch device slicing when packing.
+      process_mesh: a :class:`~repro.launch.mesh.ProcessMesh` for multi-host
+        execution — every process drives the same logical stream, stages
+        only its addressable rows of each superbatch, and (in "local" shard
+        mode) yields only its row block per input batch.  Mutually exclusive
+        with ``engine``.
+      shard_mode: "global" (assemble globally-sharded superbatches, run the
+        SPMD executable on the global mesh), "local" (compute only this
+        process's row block on its own devices — exact for row-wise plans),
+        or None/"auto": "global" when the runtime can execute it (single
+        process with a virtual topology, or a non-CPU backend), else
+        "local" (XLA CPU cannot run cross-process programs).
     """
 
     def __init__(
@@ -168,6 +216,8 @@ class PlanRunner:
         autopack: Optional[bool] = None,
         autopack_target_ms: Optional[float] = None,
         clock: Optional[Callable[[], float]] = None,
+        process_mesh=None,
+        shard_mode: Optional[str] = None,
     ):
         if materialize not in ("device", "host"):
             raise ValueError("materialize must be 'device' or 'host'")
@@ -185,11 +235,32 @@ class PlanRunner:
         if workers is None:
             workers = 2 if jax.default_backend() == "cpu" else 1
         self.workers = max(int(workers), 1)
-        self._sharding = (
-            engine.batch_sharding()
-            if engine is not None and engine.mesh is not None
-            else None
-        )
+        if process_mesh is not None and engine is not None:
+            raise ValueError("pass either engine= or process_mesh=, not both")
+        self.process_mesh = process_mesh
+        if shard_mode not in (None, "auto", "local", "global"):
+            raise ValueError(f"unknown shard_mode {shard_mode!r}")
+        if process_mesh is not None and shard_mode in (None, "auto"):
+            # global execution needs a runtime that can actually run the
+            # SPMD program: one process addressing the whole (virtual) mesh,
+            # or a backend with cross-process execution (TPU).  XLA CPU
+            # multi-process falls back to exact local-block execution.
+            can_global = process_mesh.global_mesh is not None and (
+                jax.process_count() == 1 or jax.default_backend() != "cpu"
+            )
+            shard_mode = "global" if can_global else "local"
+        self.shard_mode = shard_mode if process_mesh is not None else None
+        if process_mesh is not None:
+            if self.shard_mode == "global":
+                self._sharding = process_mesh.global_batch_sharding()
+            else:
+                self._sharding = process_mesh.local_batch_sharding()
+        else:
+            self._sharding = (
+                engine.batch_sharding()
+                if engine is not None and engine.mesh is not None
+                else None
+            )
         # outputs-constrained plans declare which raw columns they read; the
         # runner stages only those (the rest never cross host->device)
         req = getattr(plan, "required_inputs", lambda: None)()
@@ -211,62 +282,135 @@ class PlanRunner:
         # feed the autopack controller
         self._inflight = 0
         self._inflight_lock = threading.Lock()
-        self._fn = plan.jit_for(engine=engine, donate=donate)
+        if process_mesh is not None:
+            self._fn = plan.jit_for(in_shardings=self._sharding, donate=donate)
+        else:
+            self._fn = plan.jit_for(engine=engine, donate=donate)
         # pinned staging slots: signature -> list of {col: np.ndarray}
         self._slots: dict = {}
         self.stats = {
             "batches_in": 0,
             "superbatches": 0,
             "rows": 0,
+            "local_rows": 0,
             "seconds": 0.0,
         }
 
     # -- staging -----------------------------------------------------------
 
+    def _geometry(self, n: int) -> Tuple[int, int, int, int]:
+        """Staging geometry of an ``n``-row superbatch: ``(s, e, store,
+        n_global)`` — this process stages superbatch rows ``[s, min(e, n))``
+        into a ``store``-row block (zero rows beyond the real data pad the
+        block to shard divisibility — row-wise plans make them inert and
+        emission never yields them), and the assembled/global row count is
+        ``n_global``.  Without a process mesh: the whole superbatch."""
+        pm = self.process_mesh
+        if pm is None:
+            return 0, n, n, n
+        if self.shard_mode == "global":
+            # jax can only assemble evenly-sharded global arrays: pad the
+            # LOGICAL batch to shard divisibility, identically on every
+            # process (the pad rows land on the trailing shards)
+            n_global = n + (-n) % pm.num_data_shards
+            s, e = pm.addressable_row_block(n_global)
+            return s, e, e - s, n_global
+        s, e = pm.row_block(n)
+        lshards = pm.my_shards[1] - pm.my_shards[0]
+        store = (e - s) + (-(e - s)) % lshards
+        return s, e, store, n
+
     def _stage(self, group: List[T.Batch], slot_idx: int) -> T.Batch:
         """Pack a group of host batches and place it on device.  Numpy
         columns concatenate/copy directly into a reused staging slot (one
         copy, no steady-state allocation); device-resident columns
-        concatenate on device."""
+        concatenate on device.  With a process mesh, only this process's
+        row block of the packed superbatch crosses host→device — the slot
+        is sized to the block, and each input batch contributes its
+        intersection with the block."""
         if self._required is not None:
             group = [
                 {k: v for k, v in b.items() if k in self._required} for b in group
             ]
-        slot = self._slot_for(group, slot_idx) if self.staging else None
+        rows = [int(np.shape(next(iter(b.values())))[0]) for b in group]
+        n = sum(rows)
+        s, e, store, n_global = self._geometry(n)
+        # clamp DOWN to s as well: a process whose global-mode block lies
+        # entirely in the divisibility-pad region (n < its first row) stages
+        # pure zero padding — e_real < s would corrupt the pad arithmetic
+        e_real = max(min(e, n), s)
+        # (batch index, src slice into the batch, dst offset in the block)
+        pieces: List[Tuple[int, slice, int]] = []
+        off = 0
+        for i, r in enumerate(rows):
+            a = min(max(off, s), e_real)
+            b = min(max(off + r, s), e_real)
+            if b > a:
+                pieces.append((i, slice(a - off, b - off), a - s))
+            off += r
+        fill = e_real - s  # real rows staged; [fill, store) is zero padding
+        slot = self._slot_for(group, slot_idx, store) if self.staging else None
         host: T.Batch = {}
         for k in group[0]:
-            vals = [b[k] for b in group]
+            vals = [group[i][k][sl] for i, sl, _ in pieces]
             if not all(isinstance(v, np.ndarray) for v in vals):
                 import jax.numpy as jnp
 
+                if fill < store:
+                    pad = jnp.zeros(
+                        (store - fill,) + tuple(np.shape(group[0][k]))[1:],
+                        group[0][k].dtype,
+                    )
+                    vals = [jnp.asarray(v) for v in vals] + [pad]
                 if len(vals) > 1:
                     host[k] = jnp.concatenate([jnp.asarray(v) for v in vals], axis=0)
-                elif self.donate and isinstance(vals[0], jax.Array):
+                elif not vals:  # empty block (store == 0): 0-row column
+                    host[k] = jnp.asarray(group[0][k])[0:0]
+                elif self.donate and isinstance(vals[0], jax.Array) and (s, e) == (0, n):
                     # a lone device array would pass through device_put
                     # unchanged — donation would invalidate the CALLER's
-                    # buffer, so take a private copy first
+                    # buffer, so take a private copy first (a block slice is
+                    # already a fresh buffer)
                     host[k] = jnp.copy(vals[0])
                 else:
                     host[k] = vals[0]
             elif slot is not None:
-                if len(vals) == 1:
-                    np.copyto(slot[k], vals[0])
-                else:
-                    np.concatenate(vals, axis=0, out=slot[k])
+                for v, (_, _, dst) in zip(vals, pieces):
+                    slot[k][dst : dst + v.shape[0]] = v
+                if fill < store:
+                    slot[k][fill:store] = 0  # slots are reused: re-zero the pad
                 host[k] = slot[k]
             else:
-                host[k] = np.concatenate(vals, axis=0) if len(vals) > 1 else vals[0]
+                if fill < store:
+                    vals = vals + [
+                        np.zeros(
+                            (store - fill,) + np.shape(group[0][k])[1:],
+                            group[0][k].dtype,
+                        )
+                    ]
+                host[k] = (
+                    np.concatenate(vals, axis=0)
+                    if len(vals) > 1
+                    else (
+                        vals[0]
+                        if vals
+                        else np.asarray(group[0][k])[0:0]  # empty block
+                    )
+                )
+        self.stats["local_rows"] += fill
+        if self.process_mesh is not None and self.shard_mode == "global":
+            return self.process_mesh.stage_global(host, n_global)
         return stage_batch(host, self._sharding)
 
-    def _slot_for(self, group: List[T.Batch], slot_idx: int):
-        """Pinned numpy buffers for this group's packed signature, or None
-        when the group has no numpy columns."""
+    def _slot_for(self, group: List[T.Batch], slot_idx: int, n_rows: int):
+        """Pinned numpy buffers for this group's packed signature (``n_rows``
+        = the rows this process stages), or None when the group has no numpy
+        columns."""
         np_cols = {
             k: v for k, v in group[0].items() if isinstance(v, np.ndarray)
         }
         if not np_cols:
             return None
-        n_rows = sum(int(next(iter(b.values())).shape[0]) for b in group)
         sig = tuple(
             (k, (n_rows,) + v.shape[1:], str(v.dtype))
             for k, v in sorted(np_cols.items())
@@ -301,7 +445,19 @@ class PlanRunner:
             staged = self._stage(group, slot_idx % n_slots)
             slot_idx += 1
             group = []
-            return staged, rows
+            # multihost emission spans: in local shard mode outputs cover
+            # only this process's row block (each input batch yields its
+            # intersection); in global mode the assembled output may carry
+            # divisibility padding, which the span clips off
+            span = None
+            if self.process_mesh is not None:
+                n = sum(rows)
+                span = (
+                    (0, n)
+                    if self.shard_mode == "global"
+                    else self.process_mesh.row_block(n)
+                )
+            return staged, rows, span
 
         for b in batches:
             # shape/dtype only — never np.asarray, which would drag a
@@ -370,9 +526,9 @@ class PlanRunner:
 
     def _run_serial(self, staged) -> Iterator[T.Batch]:
         inflight: collections.deque = collections.deque()
-        for dev, rows in staged:
+        for dev, rows, span in staged:
             out = self._dispatch(dev, rows)
-            inflight.append((out, rows))
+            inflight.append((out, rows, span))
             self._account(rows)
             if len(inflight) > self.prefetch:
                 yield from self._emit(*inflight.popleft())
@@ -392,18 +548,47 @@ class PlanRunner:
         window = self.workers + self.prefetch
         with cf.ThreadPoolExecutor(max_workers=self.workers) as pool:
             futs: collections.deque = collections.deque()
-            for dev, rows in staged:
-                futs.append(pool.submit(one, dev, rows))
+            for dev, rows, span in staged:
+                futs.append((pool.submit(one, dev, rows), span))
                 self._account(rows)
                 if len(futs) >= window:
-                    yield from self._emit(*futs.popleft().result())
+                    fut, sp = futs.popleft()
+                    yield from self._emit(*fut.result(), sp)
             while futs:
-                yield from self._emit(*futs.popleft().result())
+                fut, sp = futs.popleft()
+                yield from self._emit(*fut.result(), sp)
 
-    def _emit(self, out: T.Batch, rows: List[int]) -> Iterator[T.Batch]:
+    def _emit(
+        self, out: T.Batch, rows: List[int], span: Optional[Tuple[int, int]] = None
+    ) -> Iterator[T.Batch]:
         jax.block_until_ready(out)
         if self.materialize == "host":
-            out = {k: np.asarray(v) for k, v in out.items()}
+            partial = any(
+                isinstance(v, jax.Array) and not v.is_fully_addressable
+                for v in out.values()
+            )
+            out = {k: gather_addressable(v) for k, v in out.items()}
+            if partial and self.shard_mode == "global":
+                # real multi-process runtime: the host copy holds only this
+                # process's addressable row block, so emit per-batch
+                # intersections exactly as local mode does (the block's
+                # trailing divisibility padding falls outside the span)
+                n = sum(rows)
+                n_global = n + (-n) % self.process_mesh.num_data_shards
+                s, e = self.process_mesh.addressable_row_block(n_global)
+                span = (s, max(min(e, n), s))
+        if span is not None:
+            # local shard mode: ``out`` covers rows [s, e) of the logical
+            # superbatch; every input batch yields its intersection (possibly
+            # zero rows — the batch belongs to another process entirely)
+            s, e = span
+            off = 0
+            for r in rows:
+                a = min(max(off, s), e) - s
+                b = min(max(off + r, s), e) - s
+                yield {k: v[a:b] for k, v in out.items()}
+                off += r
+            return
         if len(rows) == 1:
             yield out
             return
@@ -423,6 +608,8 @@ class PlanRunner:
 
     def __repr__(self) -> str:
         sh = "sharded" if self._sharding is not None else "single-device"
+        if self.process_mesh is not None:
+            sh = f"multihost[{self.shard_mode}] {self.process_mesh!r}"
         ap = ""
         if self._autopack is not None:
             state = "settled" if self._autopack.settled else "adapting"

@@ -1,16 +1,33 @@
-"""Production mesh definitions.
+"""Production mesh definitions and the process-aware mesh descriptor.
 
 A TPU v5e pod slice of 256 chips is modelled as a (data=16, model=16) mesh;
 the two-pod production job adds a leading "pod" axis: (2, 16, 16).  Data
 parallelism (and FSDP param sharding) runs over ("pod", "data"); tensor /
 expert parallelism over "model".  Functions, not module constants — importing
 this module never touches jax device state.
+
+Multi-host topology lives in :class:`ProcessMesh`: which process owns which
+data shards of a global mesh, which rows of a global batch this process must
+feed, and how to assemble a globally-sharded array from per-host staged
+shards (``jax.make_array_from_single_device_arrays``).  Three constructors
+cover the deployment spectrum:
+
+* :meth:`ProcessMesh.from_runtime` — a genuinely multi-process jax runtime
+  (``jax.distributed.initialize`` was called; ``jax.process_count() >= 1``).
+* :meth:`ProcessMesh.virtual` — ONE process partitions its own devices into
+  virtual "hosts" (tests / examples exercise the per-host staging and global
+  assembly code paths without a pod).
+* :meth:`ProcessMesh.emulated` — one process of an N-process fake-device
+  harness (see ``tests/multihost.py``): jax only sees the local devices, the
+  global topology is synthesized from ``(process_id, num_processes)``.
 """
 from __future__ import annotations
 
-from typing import Tuple
+import dataclasses
+from typing import List, Optional, Tuple
 
 import jax
+import numpy as np
 
 
 def _make_mesh(shape, axes):
@@ -54,16 +71,24 @@ def batch_sharding(mesh):
 
 
 def mesh_fingerprint(mesh) -> Tuple:
-    """Hashable identity of a mesh: axis names, per-axis sizes, device ids.
+    """Hashable identity of a mesh: axis names, per-axis sizes, device ids,
+    and — when any device is remote — the per-device owning process.
 
     Two meshes with the same fingerprint produce equal NamedShardings and
     therefore hit the same entry in a TransformPlan's executable cache; a
-    differing fingerprint is a guaranteed cache miss.  Useful for logging
-    which compiled variants a serving/offline host holds."""
+    differing fingerprint is a guaranteed cache miss.  Process topology is
+    part of the identity: the same device ids partitioned over a different
+    number of hosts lower to different programs (different collectives), so
+    they must not collide on one executable.  Single-process meshes keep the
+    historical 3-tuple shape (all-zero process rows add no information and
+    would churn every existing cache key)."""
     if mesh is None:
         return ()
     sizes = tuple(mesh.shape[a] for a in mesh.axis_names)
     devs = tuple(int(d.id) for d in mesh.devices.flat)
+    procs = tuple(int(getattr(d, "process_index", 0)) for d in mesh.devices.flat)
+    if any(p != 0 for p in procs):
+        return (tuple(mesh.axis_names), sizes, devs, procs)
     return (tuple(mesh.axis_names), sizes, devs)
 
 
@@ -92,3 +117,327 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n // model) or 1
     return _make_mesh((data, model), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# Process-aware topology: which host feeds which rows of a global batch
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessMesh:
+    """Process topology of a (possibly multi-host) device mesh.
+
+    The contract every consumer relies on: the global batch dimension is
+    sharded over ``num_data_shards`` equal(ish) row blocks in data-shard
+    order, and shard ``i`` belongs to process ``shard_process[i]``.  Shards
+    owned by one process are required to be CONTIGUOUS in that order, so a
+    process's contribution to any global batch is one row slice —
+    :meth:`row_block` — which is what the PlanRunner stages and what the
+    gateway's coordinator routes.
+
+    Fields:
+      process_id / num_processes: this process's coordinate in the job.
+      shard_process: owning process per global data shard (length =
+        ``num_data_shards``), non-decreasing.
+      local_mesh: mesh over THIS process's devices (execution happens here
+        in ``local`` shard mode; in ``global`` mode it is the staging target
+        for the addressable shards of the global array).
+      global_mesh: the whole-job mesh, when this process can see it (real
+        ``jax.distributed`` runtime, or single-process virtual topology).
+        ``None`` in the emulated-subprocess harness, where jax only knows
+        the local devices.
+      data_axes: mesh axis name(s) carrying the batch dimension.
+    """
+
+    process_id: int
+    num_processes: int
+    shard_process: Tuple[int, ...]
+    local_mesh: object
+    global_mesh: Optional[object] = None
+    data_axes: Tuple[str, ...] = ("data",)
+
+    def __post_init__(self):
+        if not 0 <= self.process_id < self.num_processes:
+            raise ValueError(
+                f"process_id {self.process_id} outside [0, {self.num_processes})"
+            )
+        if list(self.shard_process) != sorted(self.shard_process):
+            # non-contiguous ownership would make a process's rows of a
+            # global batch a gather, not a slice — nothing downstream
+            # (pinned staging, zero-copy host views) supports that
+            raise ValueError(
+                f"per-process data shards must be contiguous, got {self.shard_process}"
+            )
+        if self.my_shards == (None, None):
+            raise ValueError(
+                f"process {self.process_id} owns no data shard of {self.shard_process}"
+            )
+
+    # -- constructors ------------------------------------------------------
+
+    @classmethod
+    def from_runtime(cls, mesh=None, data_axes=("data",)) -> "ProcessMesh":
+        """Topology of the live jax runtime (``jax.distributed``-style).
+
+        ``mesh`` defaults to a 1-D ``("data",)`` mesh over every device of
+        every process, in `jax.devices()` order.  Each data shard must be
+        owned by exactly one process (model-axis groups never straddle
+        hosts — true of TPU slices and of the fake-device harness)."""
+        data_axes = (data_axes,) if isinstance(data_axes, str) else tuple(data_axes)
+        if mesh is None:
+            mesh = jax.make_mesh((len(jax.devices()),), data_axes[:1])
+        shard_process = _shard_process_map(mesh, data_axes)
+        pid = int(jax.process_index())
+        nproc = int(jax.process_count())
+        local = [d for d in mesh.devices.flat if d.process_index == pid]
+        local_mesh = _submesh(mesh, local, data_axes) if nproc > 1 else mesh
+        return cls(pid, nproc, shard_process, local_mesh, mesh, data_axes)
+
+    @classmethod
+    def virtual(
+        cls, mesh, num_processes: int, process_id: int = 0, data_axes=("data",)
+    ) -> "ProcessMesh":
+        """One process plays host ``process_id`` of ``num_processes`` over a
+        mesh it fully owns — the data shards are partitioned into contiguous
+        per-"host" blocks.  Because every device is addressable, the GLOBAL
+        staging path (``make_array_from_single_device_arrays``) genuinely
+        runs, which is how the single-process tests exercise it."""
+        data_axes = (data_axes,) if isinstance(data_axes, str) else tuple(data_axes)
+        n_shards = len(_shard_process_map(mesh, data_axes))
+        if n_shards % num_processes:
+            raise ValueError(
+                f"{n_shards} data shards do not partition over {num_processes} processes"
+            )
+        per = n_shards // num_processes
+        shard_process = tuple(i // per for i in range(n_shards))
+        local = _shard_devices(mesh, data_axes, process_id, shard_process)
+        local_mesh = _submesh(mesh, local, data_axes)
+        return cls(process_id, num_processes, shard_process, local_mesh, mesh, data_axes)
+
+    @classmethod
+    def emulated(
+        cls, num_processes: int, process_id: int, local_mesh=None, data_axes=("data",)
+    ) -> "ProcessMesh":
+        """One process of an N-process fake-device harness: jax sees only
+        the local devices; the global topology (every process shaped like
+        this one) is synthesized.  ``local_mesh`` defaults to a 1-D
+        ``("data",)`` mesh over the local devices."""
+        data_axes = (data_axes,) if isinstance(data_axes, str) else tuple(data_axes)
+        if local_mesh is None:
+            local_mesh = jax.make_mesh((len(jax.devices()),), data_axes[:1])
+        local_shards = len(_shard_process_map(local_mesh, data_axes))
+        shard_process = tuple(
+            p for p in range(num_processes) for _ in range(local_shards)
+        )
+        return cls(process_id, num_processes, shard_process, local_mesh, None, data_axes)
+
+    # -- shard / row arithmetic -------------------------------------------
+
+    @property
+    def num_data_shards(self) -> int:
+        return len(self.shard_process)
+
+    @property
+    def my_shards(self) -> Tuple[Optional[int], Optional[int]]:
+        """(first, one-past-last) global data shard owned by this process."""
+        mine = [i for i, p in enumerate(self.shard_process) if p == self.process_id]
+        if not mine:
+            return (None, None)
+        return (mine[0], mine[-1] + 1)
+
+    def shard_row_blocks(self, n_rows: int) -> List[Tuple[int, int]]:
+        """Row range of every global data shard for an ``n_rows`` batch.
+
+        Uneven row counts follow ``np.array_split`` (leading shards one row
+        longer) — the layout jax itself uses for uneven shardings, and the
+        one the local execution mode can always honour."""
+        base, extra = divmod(n_rows, self.num_data_shards)
+        blocks, start = [], 0
+        for i in range(self.num_data_shards):
+            stop = start + base + (1 if i < extra else 0)
+            blocks.append((start, stop))
+            start = stop
+        return blocks
+
+    def row_block(self, n_rows: int) -> Tuple[int, int]:
+        """The contiguous row slice of an ``n_rows`` global batch THIS
+        process feeds (and, in local shard mode, computes)."""
+        blocks = self.shard_row_blocks(n_rows)
+        lo, hi = self.my_shards
+        return (blocks[lo][0], blocks[hi - 1][1])
+
+    @property
+    def addressable_shards(self) -> Tuple[int, int]:
+        """(first, one-past-last) data shard whose devices the CURRENT jax
+        process can stage onto.  Equal to :attr:`my_shards` on a real
+        multi-process runtime and in the emulated harness; in virtual
+        topologies one process owns every device, so global assembly must
+        cover all shards (jax requires every addressable shard)."""
+        if self.global_mesh is None:
+            return self.my_shards
+        pid = int(jax.process_index())
+        mine = [
+            i
+            for i in range(self.num_data_shards)
+            if all(
+                int(getattr(d, "process_index", 0)) == pid
+                for d in _shard_devices(self.global_mesh, self.data_axes, i)
+            )
+        ]
+        if not mine:
+            raise ValueError("no addressable data shards on this process")
+        return (mine[0], mine[-1] + 1)
+
+    def addressable_row_block(self, n_rows: int) -> Tuple[int, int]:
+        """Rows of an ``n_rows`` global batch this jax process must place
+        on device for global assembly (see :attr:`addressable_shards`)."""
+        blocks = self.shard_row_blocks(n_rows)
+        lo, hi = self.addressable_shards
+        return (blocks[lo][0], blocks[hi - 1][1])
+
+    # -- fingerprints ------------------------------------------------------
+
+    def fingerprint(self) -> Tuple:
+        """Job-wide identity: same on every process of one job (the compiled
+        program is SPMD), different across topologies."""
+        return (
+            mesh_fingerprint(self.global_mesh),
+            self.num_processes,
+            self.shard_process,
+            self.data_axes,
+        )
+
+    def local_fingerprint(self) -> Tuple:
+        """Per-process identity: the job fingerprint plus which host this is
+        and what it executes on (local executable caches key on this)."""
+        return self.fingerprint() + (self.process_id, mesh_fingerprint(self.local_mesh))
+
+    # -- staging -----------------------------------------------------------
+
+    def local_batch_sharding(self):
+        """Row sharding of this process's block over the local mesh."""
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        axes = tuple(a for a in self.data_axes if a in self.local_mesh.axis_names)
+        return NamedSharding(self.local_mesh, PartitionSpec(axes or None))
+
+    def global_batch_sharding(self):
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        if self.global_mesh is None:
+            raise ValueError(
+                "no global mesh: emulated topologies execute in 'local' shard "
+                "mode (the harness reassembles host-side)"
+            )
+        return NamedSharding(self.global_mesh, PartitionSpec(self.data_axes))
+
+    def stage_global(self, local_block: dict, n_rows: int) -> dict:
+        """Assemble globally-sharded arrays from this process's row block.
+
+        ``local_block`` holds host columns covering exactly
+        ``addressable_row_block(n_rows)``; each addressable data shard's rows
+        are placed
+        on its devices and the global array is assembled with
+        ``jax.make_array_from_single_device_arrays`` — every process calls
+        this with only ITS rows, which is the whole point: no host ever
+        materialises the global batch.  Requires ``n_rows`` to divide evenly
+        over the data shards (jax's constraint on assembled arrays)."""
+        sharding = self.global_batch_sharding()
+        blocks = self.shard_row_blocks(n_rows)
+        if len({b[1] - b[0] for b in blocks}) != 1:
+            raise ValueError(
+                f"global staging needs {n_rows} rows to divide over "
+                f"{self.num_data_shards} shards"
+            )
+        lo, hi = self.addressable_shards
+        start = blocks[lo][0]
+        out = {}
+        for k, col in local_block.items():
+            shards = []
+            for i in range(lo, hi):
+                b0, b1 = blocks[i]
+                rows = col[b0 - start : b1 - start]
+                for d in _shard_devices(self.global_mesh, self.data_axes, i):
+                    shards.append(jax.device_put(rows, d))
+            out[k] = jax.make_array_from_single_device_arrays(
+                (n_rows,) + tuple(np.shape(col))[1:], sharding, shards
+            )
+        return out
+
+    def __repr__(self) -> str:
+        kind = (
+            "emulated"
+            if self.global_mesh is None
+            else ("virtual" if self.num_processes > 1 and jax.process_count() == 1 else "runtime")
+        )
+        return (
+            f"ProcessMesh({kind}, process {self.process_id}/{self.num_processes}, "
+            f"shards={self.my_shards} of {self.num_data_shards})"
+        )
+
+
+def _data_coords(mesh, data_axes) -> List[Tuple[int, ...]]:
+    """Data-shard coordinates of ``mesh`` in row-major (shard-index) order."""
+    sizes = [mesh.shape[a] for a in data_axes if a in mesh.axis_names]
+    return [tuple(c) for c in np.ndindex(*sizes)] if sizes else [()]
+
+
+def _shard_devices(mesh, data_axes, shard: int, shard_process=None) -> List:
+    """Devices holding global data shard ``shard`` (its model-axis group).
+    With ``shard_process`` given, instead returns every device of process
+    ``shard`` (the virtual-topology constructor's grouping)."""
+    axis_pos = {a: i for i, a in enumerate(mesh.axis_names)}
+    data_pos = [axis_pos[a] for a in data_axes if a in axis_pos]
+    coords = _data_coords(mesh, data_axes)
+    devs = []
+    for idx in np.ndindex(*mesh.devices.shape):
+        c = tuple(idx[p] for p in data_pos)
+        i = coords.index(c)
+        if shard_process is not None:
+            if shard_process[i] == shard:
+                devs.append(mesh.devices[idx])
+        elif i == shard:
+            devs.append(mesh.devices[idx])
+    return devs
+
+
+def _shard_process_map(mesh, data_axes) -> Tuple[int, ...]:
+    """Owning process per data shard; raises if a shard straddles hosts."""
+    procs = []
+    for shard in range(len(_data_coords(mesh, data_axes))):
+        owners = {
+            int(getattr(d, "process_index", 0))
+            for d in _shard_devices(mesh, data_axes, shard)
+        }
+        if len(owners) != 1:
+            raise ValueError(
+                f"data shard {shard} straddles processes {sorted(owners)}: "
+                "model-axis groups must live on one host"
+            )
+        procs.append(owners.pop())
+    return tuple(procs)
+
+
+def _submesh(mesh, devices, data_axes):
+    """Mesh over one process's devices, same axis names: data axes collapse
+    into the FIRST data axis (local shard count), model axes keep their
+    sizes.  Shardings written against the global axis names keep working."""
+    from jax.sharding import Mesh
+
+    axis_pos = {a: i for i, a in enumerate(mesh.axis_names)}
+    model_axes = [a for a in mesh.axis_names if a not in data_axes]
+    model_sizes = [mesh.shape[a] for a in model_axes]
+    n_local = len(devices)
+    model_total = int(np.prod(model_sizes)) if model_sizes else 1
+    shape = []
+    first_data = True
+    for a in mesh.axis_names:
+        if a in data_axes:
+            shape.append(n_local // model_total if first_data else 1)
+            first_data = False
+        else:
+            shape.append(mesh.shape[a])
+    # devices arrive in mesh-iteration order (data-major); reshape directly
+    arr = np.array(devices, dtype=object).reshape(tuple(shape))
+    return Mesh(arr, mesh.axis_names)

@@ -9,9 +9,14 @@ from .gateway import (
     GatewayClosedError,
     GatewayError,
     InfeasibleDeadlineError,
+    MultiHostExecutor,
+    MultiHostServable,
     QueueFullError,
     ServingGateway,
+    ShardServer,
     UnknownModelError,
+    WorkerFailedError,
+    accept_workers,
 )
 
 __all__ = [
@@ -20,6 +25,11 @@ __all__ = [
     "BatcherClosedError",
     "ServingGateway",
     "ExecuteCostModel",
+    "MultiHostExecutor",
+    "MultiHostServable",
+    "ShardServer",
+    "WorkerFailedError",
+    "accept_workers",
     "GatewayError",
     "QueueFullError",
     "DeadlineExceededError",

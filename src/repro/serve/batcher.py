@@ -69,7 +69,7 @@ def normalize_buckets(buckets: Sequence[int], max_batch: int):
     return bl, min(int(max_batch), bl[-1])
 
 
-def run_padded_batch(rows_features, bucket_size: int, model_fn, sharding=None):
+def run_padded_batch(rows_features, bucket_size: int, model_fn, sharding=None, stage: bool = True):
     """Run a list of single-row feature dicts as ONE padded model call.
 
     Stacks rows column-wise, pads to ``bucket_size`` by repeating the last
@@ -77,7 +77,13 @@ def run_padded_batch(rows_features, bucket_size: int, model_fn, sharding=None):
     (:func:`repro.core.runner.stage_batch`, mesh-sharded when ``sharding``
     is given) and scatters the host-fetched outputs back per row.  Shared by
     :class:`MicroBatcher` and the gateway's batch executor so the two
-    serving tiers cannot diverge in padding/staging/scatter semantics."""
+    serving tiers cannot diverge in padding/staging/scatter semantics.
+
+    ``stage=False`` hands the padded HOST columns straight to ``model_fn``
+    — for self-staging servables (the multi-host gateway's
+    :class:`~repro.serve.gateway.multihost.MultiHostServable`), where each
+    process stages exactly its own row block and a coordinator-side
+    device_put would be a wasted full-batch copy."""
     n = len(rows_features)
     cols = {}
     for k in rows_features[0]:
@@ -86,7 +92,8 @@ def run_padded_batch(rows_features, bucket_size: int, model_fn, sharding=None):
             pad = np.repeat(stacked[-1:], bucket_size - n, axis=0)
             stacked = np.concatenate([stacked, pad], axis=0)
         cols[k] = stacked
-    out = jax.device_get(model_fn(stage_batch(cols, sharding)))
+    out = model_fn(stage_batch(cols, sharding) if stage else cols)
+    out = jax.device_get(out)
     return [jax.tree.map(lambda a, i=i: a[i], out) for i in range(n)]
 
 

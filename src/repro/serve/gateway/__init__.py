@@ -17,6 +17,13 @@ from .admission import (
 )
 from .costmodel import ExecuteCostModel
 from .gateway import ServingGateway
+from .multihost import (
+    MultiHostExecutor,
+    MultiHostServable,
+    ShardServer,
+    WorkerFailedError,
+    accept_workers,
+)
 from .registry import ModelEntry, ModelRegistry
 from .scheduler import BatchScheduler, Request
 from .telemetry import LatencySketch
@@ -29,6 +36,11 @@ __all__ = [
     "Request",
     "LatencySketch",
     "ExecuteCostModel",
+    "MultiHostExecutor",
+    "MultiHostServable",
+    "ShardServer",
+    "WorkerFailedError",
+    "accept_workers",
     "AdmissionController",
     "GatewayError",
     "QueueFullError",

@@ -17,17 +17,24 @@ the tail a request would actually hit.
 
 Fallback chain when a bucket has too few samples:
 
-1. the nearest *smaller* bucket with data, else the nearest larger one —
+1. a LINEAR rows→time fit across this model's observed buckets (least
+   squares over the per-bucket quantile estimates, at least two distinct
+   buckets required): execute time is dominated by per-row work plus a
+   fixed launch cost, so an unseen bucket size starts from an informed
+   interpolation/extrapolation instead of a neighbour's number.  Clamped at
+   zero; disable with ``REPRO_GW_COST_FIT=0`` / ``fit=False``;
+2. the nearest *smaller* bucket with data, else the nearest larger one —
    an under-estimate serves a doomed request (the status-quo failure mode)
    while an over-estimate sheds a servable one (a new, worse failure mode);
-2. the configured prior (``REPRO_GW_COST_PRIOR_MS``).  The default prior is
+3. the configured prior (``REPRO_GW_COST_PRIOR_MS``).  The default prior is
    0 ms — i.e. *never shed on ignorance*: before any measurement the gateway
-   behaves exactly like the launch-time-only baseline.  Deployments that
+   behaves exactly like the launch-time-only baseline (the fit never
+   invents an estimate for a model with no data at all).  Deployments that
    would rather reject than risk a late answer can raise it.
 
-Estimates are cached per (model, bucket) and invalidated by observation
-count, so the formation/admission hot paths pay a dict lookup, not a
-quantile scan.
+Estimates (and the fit coefficients) are cached per model and invalidated
+by observation count, so the formation/admission hot paths pay a dict
+lookup, not a quantile scan or a regression.
 """
 from __future__ import annotations
 
@@ -66,6 +73,8 @@ class ExecuteCostModel:
         (``REPRO_GW_COST_PRIOR_MS``, default 0.0 = assume feasible).
       min_samples: observations a bucket needs before its own histogram is
         trusted over the fallback chain (``REPRO_GW_COST_MIN_SAMPLES``, 1).
+      fit: linear rows→time fallback for unseen buckets
+        (``REPRO_GW_COST_FIT``, on).
     """
 
     def __init__(
@@ -74,6 +83,7 @@ class ExecuteCostModel:
         safety: Optional[float] = None,
         prior_ms: Optional[float] = None,
         min_samples: Optional[int] = None,
+        fit: Optional[bool] = None,
     ):
         self.quantile = quantile if quantile is not None else _env_float("REPRO_GW_COST_Q", 0.9)
         self.safety = safety if safety is not None else _env_float("REPRO_GW_COST_SAFETY", 1.0)
@@ -82,8 +92,14 @@ class ExecuteCostModel:
         self.min_samples = int(
             min_samples if min_samples is not None else _env_float("REPRO_GW_COST_MIN_SAMPLES", 1)
         )
+        if fit is None:
+            fit = os.environ.get("REPRO_GW_COST_FIT", "1") not in ("0", "false", "")
+        self.fit = bool(fit)
         self._lock = threading.Lock()
         self._stats: Dict[Tuple[str, int], _BucketStats] = {}
+        # model -> (total observation count the fit reflects, slope s/row,
+        # intercept s, points fitted); None coefficients = not fittable yet
+        self._fits: Dict[str, Tuple[int, Optional[float], Optional[float], int]] = {}
         self.observed = {"live": 0, "warmup": 0}
 
     # -- feeding -----------------------------------------------------------
@@ -125,14 +141,46 @@ class ExecuteCostModel:
             return max(smaller)[1]  # nearest smaller: err toward serving
         return min(known)[1]
 
+    def _fit_locked(self, model: str) -> Tuple[Optional[float], Optional[float], int]:
+        """(slope s/row, intercept s, points) of the least-squares line
+        through this model's per-bucket estimates; (None, None, n) while
+        fewer than two distinct buckets have trustworthy data.  Cached and
+        invalidated by the model's total observation count."""
+        known = [
+            (b, rec)
+            for (m, b), rec in self._stats.items()
+            if m == model and rec.count >= self.min_samples
+        ]
+        total = sum(rec.count for _, rec in known)
+        cached = self._fits.get(model)
+        if cached is not None and cached[0] == total:
+            return cached[1], cached[2], cached[3]
+        slope = intercept = None
+        if len(known) >= 2:
+            xs = [float(b) for b, _ in known]
+            ys = [self._estimate_locked(rec) for _, rec in known]
+            n = len(xs)
+            mx, my = sum(xs) / n, sum(ys) / n
+            den = sum((x - mx) ** 2 for x in xs)
+            if den > 0:
+                slope = sum((x - mx) * (y - my) for x, y in zip(xs, ys)) / den
+                intercept = my - slope * mx
+        self._fits[model] = (total, slope, intercept, len(known))
+        return slope, intercept, len(known)
+
     def estimate(self, model: str, bucket: int) -> Optional[float]:
         """Estimated execute seconds for one (model, bucket) batch, or None
         when nothing is known and no prior is configured (callers treat None
         as "assume feasible")."""
         with self._lock:
             rec = self._stats.get((model, int(bucket)))
-            if rec is None or rec.count < self.min_samples:
-                rec = self._nearest_locked(model, int(bucket))
+            if rec is not None and rec.count >= self.min_samples:
+                return self._estimate_locked(rec)
+            if self.fit:
+                slope, intercept, _ = self._fit_locked(model)
+                if slope is not None:
+                    return max(intercept + slope * int(bucket), 0.0)
+            rec = self._nearest_locked(model, int(bucket))
             if rec is not None:
                 return self._estimate_locked(rec)
         return self.prior_s if self.prior_s > 0 else None
@@ -140,7 +188,8 @@ class ExecuteCostModel:
     # -- introspection -----------------------------------------------------
 
     def snapshot(self) -> Dict[str, Dict[str, dict]]:
-        """``{model: {bucket: {count, est_ms}}}`` for gateway.snapshot()."""
+        """``{model: {bucket: {count, est_ms}, "fit": {...}}}`` for
+        gateway.snapshot()."""
         with self._lock:
             keys = sorted(self._stats)
         out: Dict[str, Dict[str, dict]] = {}
@@ -153,4 +202,13 @@ class ExecuteCostModel:
                 "count": count,
                 "est_ms": None if est is None else round(est * 1e3, 3),
             }
+        if self.fit:
+            for model in out:
+                with self._lock:
+                    slope, intercept, points = self._fit_locked(model)
+                out[model]["fit"] = {
+                    "slope_ms_per_row": None if slope is None else round(slope * 1e3, 4),
+                    "intercept_ms": None if intercept is None else round(intercept * 1e3, 4),
+                    "buckets_fit": points,
+                }
         return out

@@ -255,7 +255,11 @@ class ServingGateway:
             # cost of the batch, as a request experiences it
             t0 = self._clock()
             results = run_padded_batch(
-                [r.features for r in reqs], bs, entry.fn, entry.sharding
+                [r.features for r in reqs],
+                bs,
+                entry.fn,
+                entry.sharding,
+                stage=entry.stage_inputs,
             )
             t1 = self._clock()
             # retried executes are tagged apart and kept out of the cost
@@ -333,6 +337,7 @@ class ServingGateway:
         with self._stats_lock:
             stats = dict(self.stats)
         stats.update(self.admission.stats)
+        stats.update(self.scheduler.stats_snapshot())
         stats["pending"] = self.admission.pending
         stats["queue_depth"] = self.scheduler.depth
         models: Dict[str, dict] = {}
@@ -345,6 +350,12 @@ class ServingGateway:
             }
             models[name]["trace_count"] = entry.trace_count()
             models[name]["cost"] = cost_snap.get(name, {})
+            models[name]["shards"] = entry.shards
+            shard_snap = getattr(entry.fn, "shard_snapshot", None)
+            if shard_snap is not None:
+                # multi-host routing: coordinator-measured per-process
+                # round-trip quantiles
+                models[name]["shard_us"] = shard_snap()
         return {"stats": stats, "models": models}
 
     def close(self, timeout: float = 5.0) -> None:

@@ -1,0 +1,384 @@
+"""Cross-process batch routing for the serving gateway.
+
+One COORDINATOR process runs the full gateway — admission control, the
+continuous batch scheduler, telemetry, the cost model — and routes each
+formed batch across the processes of a :class:`~repro.launch.mesh.
+ProcessMesh`: every process executes its contiguous row block of the padded
+batch on its own devices, and the coordinator reassembles the outputs and
+scatters replies.  The cost model keeps its per-(model, bucket) estimates,
+fed from the wall time the COORDINATOR measures around the whole
+scatter→execute→gather round trip — that is the cost a request actually
+experiences, so it is the right number for finish-time feasibility.
+
+Transport is ``multiprocessing.connection`` (length-prefixed pickle over a
+socket, authkey-authenticated): the coordinator listens, each worker process
+dials in and announces its process id, and the executor then speaks a strict
+request/reply protocol per connection.  A connection carries one in-flight
+batch at a time (guarded by a per-connection lock); batches for different
+models serialise on the wire but their device execution still overlaps with
+the coordinator's own shard.
+
+Fidelity note: each worker executes through the SAME servable normalisation
+as a single-process gateway (``registry._normalize``), i.e. a FusedModel
+worker runs ``FusedModel.jit_for`` — on a real multi-host TPU runtime the
+identical code path lowers against the global mesh; on the fake-device CPU
+harness it lowers on the worker's local devices, which is exact for the
+row-wise programs this repo serves (asserted bit-identical by
+``tests/test_multihost.py``).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.runner import stage_batch
+
+from .telemetry import LatencySketch
+
+
+def _concat_outputs(parts: List[Any]):
+    """Concatenate per-process output pytrees along the batch axis."""
+    parts = [p for p in parts if p is not None]
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *parts)
+
+
+class WorkerFailedError(RuntimeError):
+    """A shard worker reported an exception while executing its block."""
+
+
+class MultiHostServable:
+    """A gateway servable that fans each batch out across processes.
+
+    Registered like any callable model; the registry recognises
+    ``self_staging`` and hands it HOST columns (no coordinator-side
+    device staging) — each process stages exactly its own rows, which is the
+    per-host shard feeding contract of the serve path.
+    """
+
+    self_staging = True
+
+    def __init__(self, executor: "MultiHostExecutor", name: str):
+        self._ex = executor
+        self.name = name
+
+    @property
+    def num_processes(self) -> int:
+        return self._ex.num_processes
+
+    @property
+    def num_data_shards(self) -> int:
+        """Row blocks are carved per data shard — the registry floors
+        bucket sizes here so no shard's block ever routes empty."""
+        return self._ex.pm.num_data_shards
+
+    def __call__(self, host_cols: Dict[str, np.ndarray]):
+        return self._ex.execute(self.name, host_cols)
+
+    def trace_count(self) -> int:
+        """Job-wide compile probe: coordinator + every worker (the gateway's
+        zero-trace-after-warmup assertion covers all processes)."""
+        return self._ex.trace_count(self.name)
+
+    def shard_snapshot(self) -> Dict[str, dict]:
+        """Per-process round-trip latency quantiles (coordinator-measured)."""
+        return self._ex.shard_snapshot(self.name)
+
+
+class MultiHostExecutor:
+    """Coordinator-side router: splits a batch into per-process row blocks,
+    executes the local block in-process, the rest over worker connections.
+
+    Args:
+      process_mesh: topology (this process must be process 0).
+      sharding: optional sharding for the coordinator's local staging.
+    """
+
+    def __init__(self, process_mesh, sharding=None):
+        if process_mesh.process_id != 0:
+            raise ValueError("the gateway coordinator must be process 0")
+        self.pm = process_mesh
+        self.num_processes = process_mesh.num_processes
+        self._local: Dict[str, Tuple[Any, Any]] = {}
+        self._sharding = sharding
+        self._conns: Dict[int, Any] = {}  # process id -> connection
+        self._conn_locks: Dict[int, threading.Lock] = {}
+        self._shard_lat: Dict[Tuple[str, int], LatencySketch] = {}
+        self._lock = threading.Lock()
+
+    # -- wiring ------------------------------------------------------------
+
+    def add_model(self, name: str, model, donate=None) -> MultiHostServable:
+        """Normalise ``model`` (FusedModel / PreprocessModel / callable —
+        the registry's own normaliser) as the coordinator-side shard
+        executor for ``name``; workers must serve the same name.  Returns
+        the servable to ``gateway.register``."""
+        from .registry import _normalize
+
+        fn, traces = _normalize(name, model, self._sharding, donate)
+        self._local[name] = (fn, traces)
+        return MultiHostServable(self, name)
+
+    def servable(self, name: str) -> MultiHostServable:
+        if name not in self._local:
+            raise KeyError(f"no local shard executor for {name!r}")
+        return MultiHostServable(self, name)
+
+    def attach(self, process_id: int, conn) -> None:
+        """Adopt an accepted worker connection (see :func:`accept_workers`)."""
+        if not 0 < process_id < self.num_processes:
+            raise ValueError(f"worker process id {process_id} out of range")
+        if process_id in self._conns:
+            # a silent overwrite would strand the displaced worker forever
+            # and keep `connected` false until timeout — fail with the real
+            # misconfiguration instead
+            raise ValueError(f"worker process {process_id} already attached")
+        self._conns[process_id] = conn
+        self._conn_locks[process_id] = threading.Lock()
+
+    @property
+    def connected(self) -> bool:
+        return len(self._conns) == self.num_processes - 1
+
+    # -- execution ---------------------------------------------------------
+
+    def _process_blocks(self, n: int) -> List[Tuple[int, int]]:
+        """Contiguous (start, stop) row block per process for an n-row
+        padded batch (shard blocks merged by owning process)."""
+        shard_blocks = self.pm.shard_row_blocks(n)
+        out: List[Tuple[int, int]] = []
+        for p in range(self.num_processes):
+            mine = [
+                shard_blocks[i]
+                for i, owner in enumerate(self.pm.shard_process)
+                if owner == p
+            ]
+            out.append((mine[0][0], mine[-1][1]))
+        return out
+
+    def execute(self, name: str, host_cols: Dict[str, np.ndarray]):
+        """One routed batch: scatter row blocks, run the local shard while
+        workers run theirs, gather and reassemble in process order."""
+        if not self.connected:
+            raise RuntimeError(
+                f"executor has {len(self._conns)}/{self.num_processes - 1} workers"
+            )
+        n = int(next(iter(host_cols.values())).shape[0])
+        blocks = self._process_blocks(n)
+        t_send = {}
+        # every acquired per-connection lock is released in the one finally
+        # below: a failure anywhere (send to a dead worker, the local shard
+        # raising, a broken recv) must not leave a lock held — that would
+        # deadlock every later batch on that connection forever.  A request
+        # that was SENT but whose reply was not consumed is drained first:
+        # a stale reply left in the pipe would answer the NEXT batch.
+        acquired: List[int] = []
+        sent: set = set()
+        replied: set = set()
+        try:
+            for p, (s, e) in enumerate(blocks):
+                if p == 0:
+                    continue
+                block = {k: v[s:e] for k, v in host_cols.items()}
+                self._conn_locks[p].acquire()
+                acquired.append(p)
+                t_send[p] = time.perf_counter()
+                self._conns[p].send(("execute", name, block))
+                sent.add(p)
+            # the coordinator's own shard overlaps with the workers'
+            s0, e0 = blocks[0]
+            fn, _ = self._local[name]
+            local_out = jax.device_get(
+                fn(stage_batch({k: v[s0:e0] for k, v in host_cols.items()}, self._sharding))
+            )
+            parts = [local_out]
+            err: Optional[BaseException] = None
+            for p in range(1, self.num_processes):
+                status, payload = self._conns[p].recv()
+                replied.add(p)
+                self._shard_sketch(name, p).record(time.perf_counter() - t_send[p])
+                if status != "ok":
+                    err = err or WorkerFailedError(
+                        f"worker process {p} failed on model {name!r}: {payload}"
+                    )
+                    parts.append(None)
+                else:
+                    parts.append(payload)
+        finally:
+            for p in acquired:
+                if p in sent and p not in replied:
+                    try:
+                        self._conns[p].recv()
+                    except (EOFError, OSError):
+                        pass  # worker gone: the connection is dead anyway
+                self._conn_locks[p].release()
+        if err is not None:
+            raise err
+        return _concat_outputs(parts)
+
+    # -- introspection -----------------------------------------------------
+
+    def _shard_sketch(self, name: str, p: int) -> LatencySketch:
+        key = (name, p)
+        sk = self._shard_lat.get(key)
+        if sk is None:
+            with self._lock:
+                sk = self._shard_lat.setdefault(key, LatencySketch())
+        return sk
+
+    def shard_snapshot(self, name: str) -> Dict[str, dict]:
+        return {
+            f"process{p}": sk.snapshot_us()
+            for (n, p), sk in sorted(self._shard_lat.items())
+            if n == name
+        }
+
+    def trace_count(self, name: str) -> int:
+        _, traces = self._local[name]
+        total = traces() if traces is not None else 0
+        for p in sorted(self._conns):
+            with self._conn_locks[p]:
+                self._conns[p].send(("traces", name))
+                status, payload = self._conns[p].recv()
+            if status == "ok" and payload >= 0:
+                total += payload
+        return total
+
+    def close(self) -> None:
+        """Tell every worker to exit its serve loop and drop connections."""
+        for p, conn in sorted(self._conns.items()):
+            try:
+                with self._conn_locks[p]:
+                    conn.send(("close",))
+                    conn.close()
+            except (OSError, EOFError, BrokenPipeError):
+                pass
+        self._conns.clear()
+
+
+def accept_workers(listener, executor: MultiHostExecutor, timeout_s: float = 60.0):
+    """Accept worker dial-ins on ``listener`` (a ``multiprocessing.
+    connection.Listener``) until the executor has every process attached.
+    Each worker announces ``("hello", process_id)`` on connect.
+
+    The deadline bounds the whole wait, including the blocking accept: a
+    worker that never dials in (crashed during startup) raises TimeoutError
+    instead of hanging the coordinator, and a connection that never
+    completes its hello (stray client, worker killed mid-handshake) is
+    dropped rather than wedging the loop."""
+    import multiprocessing.connection as mpc
+    import select
+
+    deadline = time.monotonic() + timeout_s
+    # the stdlib socket Listener exposes its socket; without one (e.g. a
+    # test double) fall back to blocking accepts with between-accept checks
+    sock = getattr(getattr(listener, "_listener", None), "_socket", None)
+    while not executor.connected:
+        remaining = deadline - time.monotonic()
+        if remaining <= 0:
+            raise TimeoutError(
+                f"workers missing: have {len(executor._conns)} of "
+                f"{executor.num_processes - 1}"
+            )
+        if sock is not None:
+            ready, _, _ = select.select([sock], [], [], min(remaining, 1.0))
+            if not ready:
+                continue
+        try:
+            conn = listener.accept()
+        except (mpc.AuthenticationError, EOFError, OSError):
+            continue  # stray/dead client: keep waiting for real workers
+        if not conn.poll(max(deadline - time.monotonic(), 0.1)):
+            conn.close()  # connected but silent: never sent its hello
+            continue
+        try:
+            tag, pid = conn.recv()
+        except (EOFError, OSError):
+            conn.close()
+            continue
+        if tag != "hello":
+            conn.close()
+            raise RuntimeError(f"unexpected first message {tag!r} from a worker")
+        executor.attach(int(pid), conn)
+    return executor
+
+
+class ShardServer:
+    """Worker-process side: executes this process's row block of every
+    routed batch.
+
+    Models are normalised through the registry's ``_normalize`` — the very
+    code path a single-process gateway serves through — so a FusedModel
+    worker executes via ``jit_for`` with its compile probe intact.
+
+    Args:
+      process_mesh: this worker's topology (process id >= 1).
+      models: ``{name: model}`` — FusedModel / PreprocessModel / callable,
+        under the same names the coordinator registers.
+      sharding: optional staging sharding for the worker's block.
+    """
+
+    def __init__(self, process_mesh, models: Dict[str, Any], sharding=None):
+        from .registry import _normalize
+
+        if process_mesh.process_id == 0:
+            raise ValueError("process 0 is the coordinator, not a shard worker")
+        self.pm = process_mesh
+        self._sharding = sharding
+        self._fns: Dict[str, Tuple[Any, Any]] = {}
+        for name, model in models.items():
+            fn, traces = _normalize(name, model, sharding, donate=None)
+            self._fns[name] = (fn, traces)
+
+    def connect_and_serve(self, address, authkey: bytes, timeout_s: float = 60.0) -> int:
+        """Dial the coordinator (retrying until its listener is up — workers
+        routinely boot faster than a coordinator that compiles models
+        first), announce this process, serve until told to close.  Returns
+        the number of batches executed."""
+        import time as _time
+        from multiprocessing.connection import Client
+
+        deadline = _time.monotonic() + timeout_s
+        while True:
+            try:
+                conn = Client(address, authkey=authkey)
+                break
+            except (ConnectionRefusedError, FileNotFoundError, OSError):
+                if _time.monotonic() > deadline:
+                    raise
+                _time.sleep(0.05)
+        conn.send(("hello", self.pm.process_id))
+        try:
+            return self.serve(conn)
+        finally:
+            conn.close()
+
+    def serve(self, conn) -> int:
+        batches = 0
+        while True:
+            try:
+                msg = conn.recv()
+            except (EOFError, OSError):
+                return batches
+            if msg[0] == "close":
+                return batches
+            if msg[0] == "traces":
+                _, traces = self._fns.get(msg[1], (None, None))
+                conn.send(("ok", traces() if traces is not None else -1))
+                continue
+            if msg[0] != "execute":
+                conn.send(("error", f"unknown message {msg[0]!r}"))
+                continue
+            _, name, block = msg
+            try:
+                fn, _ = self._fns[name]
+                out = jax.device_get(fn(stage_batch(block, self._sharding)))
+                conn.send(("ok", out))
+                batches += 1
+            except BaseException as e:  # the reply slot must always be filled
+                conn.send(("error", f"{type(e).__name__}: {e}"))

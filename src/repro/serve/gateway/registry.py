@@ -38,6 +38,11 @@ class ModelEntry:
     sharding: Any = None
     traces: Optional[Callable[[], int]] = None  # compile-count probe
     warmed: bool = False
+    # self-staging servables (multi-host routing) receive padded HOST
+    # columns: each process stages its own row block, so the gateway must
+    # not device_put the full batch first
+    stage_inputs: bool = True
+    shards: int = 1  # processes a routed batch spans (1 = this process only)
 
     def bucket(self, n: int) -> int:
         return _bucket(n, self.buckets)
@@ -51,6 +56,11 @@ def _normalize(name, model, sharding, donate) -> Tuple[Callable, Optional[Callab
 
     ``donate=None`` keeps the model's own default (FusedModel's env-driven
     donation; no donation for a bare PreprocessModel plan)."""
+    if getattr(model, "self_staging", False):
+        # cross-process servable (gateway.multihost): routes host columns
+        # itself and aggregates its own job-wide compile probe
+        traces = getattr(model, "trace_count", None)
+        return model, traces
     if isinstance(model, FusedModel):
         jfn = model.jit_for(sharding, donate)
         fn = lambda batch: jfn(model.params, batch)  # noqa: E731
@@ -88,6 +98,20 @@ class ModelRegistry:
         if name in self._entries:
             raise ValueError(f"model {name!r} already registered")
         bl, max_batch = normalize_buckets(buckets, max_batch)
+        shards = int(getattr(model, "num_processes", 1))
+        if shards > 1:
+            # a bucket with fewer rows than DATA SHARDS leaves trailing
+            # shards empty, i.e. zero-row blocks routed over the network;
+            # padding a small batch up to >= one row per shard is strictly
+            # cheaper than a zero-row round trip (blocks are carved per
+            # data shard, so the floor is num_data_shards, not processes)
+            floor = max(shards, int(getattr(model, "num_data_shards", shards)))
+            bl = tuple(b for b in bl if b >= floor)
+            if not bl:
+                raise ValueError(
+                    f"model {name!r}: no bucket holds >= {floor} rows "
+                    f"(one per data shard)"
+                )
         fn, traces = _normalize(name, model, sharding, donate)
         entry = ModelEntry(
             name=name,
@@ -97,6 +121,8 @@ class ModelRegistry:
             max_batch=max_batch,
             sharding=sharding,
             traces=traces,
+            stage_inputs=not getattr(model, "self_staging", False),
+            shards=shards,
         )
         self._entries[name] = entry
         return entry
@@ -137,13 +163,21 @@ class ModelRegistry:
                     k: np.repeat(v[None], b, axis=0)
                     for k, v in entry.example.items()
                 }
-                out = entry.fn(stage_batch(batch, entry.sharding))
-                jax.block_until_ready(out)
+
+                def call():  # self-staging servables stage per process
+                    staged = (
+                        stage_batch(batch, entry.sharding)
+                        if entry.stage_inputs
+                        else batch
+                    )
+                    return entry.fn(staged)
+
+                jax.block_until_ready(call())
                 if observe is not None:
                     # second call: compile cost is paid, so this times the
                     # steady-state execute the cost model must predict
                     t0 = clock()
-                    jax.device_get(entry.fn(stage_batch(batch, entry.sharding)))
+                    jax.device_get(call())
                     observe(entry.name, b, clock() - t0)
             entry.warmed = True
             counts[entry.name] = entry.trace_count()

@@ -111,6 +111,20 @@ class BatchScheduler:
         self.max_wait = max_wait_ms / 1e3
         self.cost_model = cost_model
         self._closed = False
+        # formation counters, mutated only under _cv: an independent record
+        # of what _form decided, cross-checkable against the gateway's
+        # per-error counters (snapshot-consistency tests rely on this)
+        self._stats = {
+            "sched_formed_batches": 0,
+            "sched_formed_rows": 0,
+            "sched_shed_expired": 0,
+            "sched_shed_infeasible": 0,
+            "sched_requeued": 0,
+        }
+
+    def stats_snapshot(self) -> Dict[str, int]:
+        with self._cv:
+            return dict(self._stats)
 
     def set_limit(self, model: str, max_batch: int, buckets=None) -> None:
         self._limits[model] = int(max_batch)
@@ -239,6 +253,15 @@ class BatchScheduler:
         if rest:
             self._groups[key] = rest
             self._cv.notify_all()  # another worker may take the remainder
+        if batch:
+            self._stats["sched_formed_batches"] += 1
+            self._stats["sched_formed_rows"] += len(batch)
+        self._stats["sched_requeued"] += len(rest)
+        for _, err in shed:
+            if isinstance(err, InfeasibleDeadlineError):
+                self._stats["sched_shed_infeasible"] += 1
+            else:
+                self._stats["sched_shed_expired"] += 1
         return key, batch, shed
 
     def _feasible_prefix(self, model, batch, bl, now):

@@ -1,0 +1,467 @@
+"""Reusable fake-device multi-host launcher.
+
+Real multi-host jax runs need a TPU pod (or at least a cluster) — CI has one
+machine.  This launcher gives every multi-host code path a faithful stand-in:
+it spawns N python subprocesses, each with its OWN jax runtime over
+``--xla_force_host_platform_device_count`` fake CPU devices, and hands all of
+them a shared coordinator address (process 0 listens, the rest dial in) plus
+a results channel back to the launching process.  Entry functions run inside
+the children; whatever they return is pickled back, so a pytest (or a
+benchmark, or an example) can launch the same scenario at nproc=1 and
+nproc=N and compare outputs bit-for-bit.
+
+Used by ``tests/test_multihost.py`` (differential multi-host tests, marker
+``multihost``), ``benchmarks/multihost.py`` (stream_mh_*/serve_mh_* rows)
+and ``examples/stream_multihost.py``.
+
+Usage from the launching process::
+
+    from multihost import launch
+    results = launch("stream_plan", nproc=2, payload={"seed": 7})
+
+Entry functions receive ``(ctx, payload)`` where ``ctx`` is an
+:class:`MHContext`:
+
+* ``ctx.process_id`` / ``ctx.num_processes`` — this child's coordinate;
+* ``ctx.process_mesh()`` — a ``ProcessMesh.emulated`` over the child's
+  fake devices;
+* ``ctx.listen()`` / ``ctx.connect()`` — the shared coordinator address
+  (``multiprocessing.connection`` Listener / Client with a shared authkey);
+* ``ctx.init_jax_distributed()`` — a REAL ``jax.distributed.initialize``
+  against a second shared port, for tests of the global-runtime topology
+  paths (device enumeration works on CPU; cross-process XLA execution does
+  not — execution tests use the local shard mode instead).
+
+The child process re-executes THIS file; entry functions are looked up in
+its module namespace (or importable as ``"pkg.mod:fn"``).
+"""
+from __future__ import annotations
+
+import base64
+import os
+import pickle
+import socket
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_AUTH = b"repro-multihost"
+
+
+def free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+class MHContext:
+    """Per-child handle on the launched job (see module docstring)."""
+
+    def __init__(self, process_id, num_processes, coord_port, jaxdist_port, devices):
+        self.process_id = int(process_id)
+        self.num_processes = int(num_processes)
+        self.coord_address = ("127.0.0.1", int(coord_port))
+        self.jaxdist_port = int(jaxdist_port)
+        self.devices_per_process = int(devices)
+        self.authkey = _AUTH
+
+    @property
+    def is_coordinator(self) -> bool:
+        return self.process_id == 0
+
+    def process_mesh(self, data_axes=("data",)):
+        from repro.launch.mesh import ProcessMesh
+
+        return ProcessMesh.emulated(
+            self.num_processes, self.process_id, data_axes=data_axes
+        )
+
+    def listen(self):
+        """Coordinator-side Listener on the shared address (process 0)."""
+        from multiprocessing.connection import Listener
+
+        return Listener(self.coord_address, authkey=self.authkey)
+
+    def connect(self, timeout_s: float = 60.0):
+        """Worker-side Client to the coordinator (retries until it is up)."""
+        from multiprocessing.connection import Client
+
+        deadline = time.monotonic() + timeout_s
+        while True:
+            try:
+                return Client(self.coord_address, authkey=self.authkey)
+            except (ConnectionRefusedError, FileNotFoundError, OSError):
+                if time.monotonic() > deadline:
+                    raise
+                time.sleep(0.05)
+
+    def init_jax_distributed(self):
+        """Initialize the real multi-process jax runtime (global device
+        enumeration + process topology over the shared jaxdist port)."""
+        import jax
+
+        jax.distributed.initialize(
+            coordinator_address=f"127.0.0.1:{self.jaxdist_port}",
+            num_processes=self.num_processes,
+            process_id=self.process_id,
+        )
+
+
+def launch(
+    entry: str,
+    nproc: int,
+    payload=None,
+    devices_per_proc: int = 2,
+    timeout_s: float = 480.0,
+    extra_env=None,
+):
+    """Run ``entry`` in ``nproc`` fresh fake-device processes; returns the
+    per-process results in process order.  Any child failure raises with
+    that child's traceback and stderr tail."""
+    from multiprocessing.connection import Listener
+
+    coord_port, jaxdist_port, result_port = free_port(), free_port(), free_port()
+    env = {
+        "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+        "HOME": os.environ.get("HOME", "/root"),
+        "PYTHONPATH": os.path.join(REPO, "src"),
+        "XLA_FLAGS": f"--xla_force_host_platform_device_count={devices_per_proc}",
+        # the fake-device harness is CPU by definition; without the pin a
+        # container with libtpu baked in stalls for minutes probing the TPU
+        # metadata service before falling back
+        "JAX_PLATFORMS": "cpu",
+        "REPRO_MH_PAYLOAD": base64.b64encode(pickle.dumps(payload)).decode(),
+    }
+    env.update(extra_env or {})
+    listener = Listener(("127.0.0.1", result_port), authkey=_AUTH)
+    procs = []
+    try:
+        for pid in range(nproc):
+            procs.append(
+                subprocess.Popen(
+                    [
+                        sys.executable,
+                        os.path.abspath(__file__),
+                        entry,
+                        str(pid),
+                        str(nproc),
+                        str(coord_port),
+                        str(jaxdist_port),
+                        str(result_port),
+                        str(devices_per_proc),
+                    ],
+                    env=env,
+                    stdout=subprocess.PIPE,
+                    stderr=subprocess.PIPE,
+                    text=True,
+                    cwd=REPO,
+                )
+            )
+        import select
+
+        results = {}
+        deadline = time.monotonic() + timeout_s
+        sock = listener._listener._socket  # select-able accept (stdlib impl)
+        while len(results) < nproc:
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"{entry}: {len(results)}/{nproc} results before timeout"
+                )
+            ready, _, _ = select.select([sock], [], [], 1.0)
+            if not ready:
+                # a child that crashed before dialing in would block accept
+                # forever; fail fast with its stderr instead
+                for i, p in enumerate(procs):
+                    if i not in results and p.poll() not in (None, 0):
+                        err = p.stderr.read() if p.stderr else ""
+                        raise RuntimeError(
+                            f"{entry}: process {i} exited rc={p.returncode} "
+                            f"before reporting:\n{err[-3000:]}"
+                        )
+                continue
+            conn = listener.accept()
+            status, pid, value = conn.recv()
+            conn.close()
+            if status != "ok":
+                raise RuntimeError(f"{entry}: process {pid} failed:\n{value}")
+            results[pid] = value
+        for p in procs:
+            p.wait(timeout=30)
+        return [results[i] for i in range(nproc)]
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+        # surface child stderr on failure paths (pytest shows it on raise)
+        for i, p in enumerate(procs):
+            if p.returncode not in (0, None):
+                err = p.stderr.read() if p.stderr else ""
+                sys.stderr.write(f"--- {entry} process {i} stderr ---\n{err[-3000:]}\n")
+        listener.close()
+
+
+# ---------------------------------------------------------------------------
+# entry functions (run inside the children)
+# ---------------------------------------------------------------------------
+
+
+def _bitstable_pipeline(seed: int):
+    """A fitted pipeline of bit-stable stages: hash / vocab indexing and
+    affine scaling only.  Transcendental stages (log etc.) are excluded on
+    purpose — XLA CPU's vectorised libm differs by lanes-per-call, so their
+    outputs are only ulp-close, not bit-identical, across shard widths."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import (
+        HashIndexTransformer,
+        KamaeSparkPipeline,
+        StandardScaleEstimator,
+        StringIndexEstimator,
+    )
+
+    rng = np.random.default_rng(seed)
+    lake = {
+        "MovieID": jnp.asarray(rng.integers(1, 300, 256), jnp.int32),
+        "Price": jnp.asarray(rng.lognormal(3, 2, 256), jnp.float32),
+    }
+    pipe = KamaeSparkPipeline(
+        stages=[
+            StringIndexEstimator(
+                inputCol="MovieID", outputCol="mi", inputDtype="string"
+            ),
+            HashIndexTransformer(
+                inputCol="MovieID", outputCol="mh", inputDtype="string", numBins=997
+            ),
+            StandardScaleEstimator(inputCol="Price", outputCol="ps"),
+        ]
+    )
+    return pipe.fit(lake)
+
+
+def _stream_batches(payload):
+    import numpy as np
+
+    rng_sizes = payload.get("sizes", [16, 16, 16, 12, 16, 8])
+    out = []
+    for i, n in enumerate(rng_sizes):
+        r = np.random.default_rng(1000 + payload.get("seed", 0) * 97 + i)
+        out.append(
+            {
+                "MovieID": np.asarray(r.integers(1, 300, n), np.int32),
+                "Price": np.asarray(r.lognormal(3, 2, n), np.float32),
+            }
+        )
+    return out
+
+
+def stream_plan(ctx: MHContext, payload):
+    """Differential PlanRunner stream: every process drives the SAME batch
+    stream through the same TransformPlan, staging only its addressable
+    rows (local shard mode); returns its per-batch output blocks."""
+    import numpy as np
+
+    from repro.core import PlanRunner
+
+    fitted = _bitstable_pipeline(payload.get("seed", 0))
+    pm = ctx.process_mesh()
+    runner = PlanRunner(
+        fitted.plan(),
+        process_mesh=pm,
+        shard_mode=payload.get("shard_mode", "local"),
+        pack=payload.get("pack", 2),
+        workers=1,
+        materialize="host",
+    )
+    outs = runner.run_collect(iter(_stream_batches(payload)))
+    return {
+        "outputs": [{k: np.asarray(v) for k, v in o.items()} for o in outs],
+        "stats": dict(runner.stats),
+        "fingerprint": pm.fingerprint(),
+    }
+
+
+def _fused_model(seed: int):
+    """A FusedModel whose fwd is affine (bit-stable across shard widths)."""
+    import jax.numpy as jnp
+
+    from repro.serve import FusedModel
+
+    fitted = _bitstable_pipeline(seed)
+    export = fitted.export(outputs=["mh", "ps"])
+
+    def fwd(params, feats):
+        return feats["ps"] * params["w"] + feats["mh"] % 97
+
+    return FusedModel(export, fwd, {"w": jnp.float32(0.5)}, donate=True)
+
+
+def _replay_rows(payload):
+    import numpy as np
+
+    n = payload.get("requests", 48)
+    rng = np.random.default_rng(2000 + payload.get("seed", 0))
+    return [
+        {
+            "MovieID": np.int32(rng.integers(1, 300)),
+            "Price": np.float32(rng.lognormal(3, 2)),
+        }
+        for _ in range(n)
+    ]
+
+
+def gateway_replay(ctx: MHContext, payload):
+    """Differential gateway traffic replay.
+
+    Process 0 runs the WHOLE gateway (admission, scheduler, cost model) and
+    replays a seeded request schedule; at nproc>1 each formed batch is
+    routed across the shard workers.  Workers run :class:`ShardServer` over
+    the coordinator address.  Returns, from process 0, the per-request
+    results plus snapshot facts; workers return their batch counts."""
+    import numpy as np
+
+    from repro.serve import MultiHostExecutor, ServingGateway, ShardServer, accept_workers
+
+    seed = payload.get("seed", 0)
+    pm = ctx.process_mesh()
+    if not ctx.is_coordinator:
+        server = ShardServer(pm, {"ranker": _fused_model(seed)})
+        batches = server.connect_and_serve(ctx.coord_address, ctx.authkey)
+        return {"batches": batches}
+
+    # listen BEFORE the (slow) model build so early worker dial-ins land in
+    # the backlog instead of racing connect_and_serve's retry window
+    listener = ctx.listen() if ctx.num_processes > 1 else None
+    fm = _fused_model(seed)
+    gw = ServingGateway(
+        max_pending=256,
+        max_wait_ms=payload.get("max_wait_ms", 1.0),
+        workers=2,
+        cost_model=payload.get("cost_model", False),
+    )
+    ex = None
+    if ctx.num_processes > 1:
+        ex = MultiHostExecutor(pm)
+        servable = ex.add_model("ranker", fm)
+        accept_workers(listener, ex)
+        listener.close()
+        gw.register(
+            "ranker",
+            servable,
+            example=_replay_rows(payload)[0],
+            buckets=tuple(payload.get("buckets", (2, 4, 8))),
+            max_batch=payload.get("max_batch", 8),
+        )
+    else:
+        gw.register(
+            "ranker",
+            fm,
+            example=_replay_rows(payload)[0],
+            buckets=tuple(payload.get("buckets", (2, 4, 8))),
+            max_batch=payload.get("max_batch", 8),
+        )
+    gw.warmup()
+    entry = gw.registry.get("ranker")
+    traces_after_warmup = entry.trace_count()
+    rows = _replay_rows(payload)
+    import concurrent.futures as cf
+
+    results = [None] * len(rows)
+
+    def client(i):
+        results[i] = np.asarray(gw.submit("ranker", rows[i], timeout=60.0))
+
+    with cf.ThreadPoolExecutor(max_workers=8) as pool:
+        list(pool.map(client, range(len(rows))))
+    snap = gw.snapshot()
+    out = {
+        "results": results,
+        "traces_since_warmup": entry.trace_count() - traces_after_warmup,
+        "stats": snap["stats"],
+        "shards": snap["models"]["ranker"]["shards"],
+        "e2e_us": snap["models"]["ranker"]["e2e"],
+        "execute_us": snap["models"]["ranker"]["execute"],
+        "shard_us": snap["models"]["ranker"].get("shard_us", {}),
+    }
+    if ex is not None:
+        ex.close()
+    gw.close()
+    return out
+
+
+def jaxdist_topology(ctx: MHContext, payload):
+    """Real ``jax.distributed`` initialization over fake CPU devices: every
+    process sees the global device set, ProcessMesh.from_runtime computes
+    the same topology everywhere, and global batch assembly via
+    ``make_array_from_single_device_arrays`` places exactly this process's
+    addressable rows.  (Cross-process XLA execution is not available on the
+    CPU backend — execution paths are covered by the local shard mode.)"""
+    ctx.init_jax_distributed()
+    import jax
+    import numpy as np
+
+    from repro.core.runner import gather_addressable
+    from repro.launch.mesh import ProcessMesh
+
+    pm = ProcessMesh.from_runtime()
+    n = payload.get("rows", 16)
+    rows = np.arange(n, dtype=np.float32) * 2.0
+    s, e = pm.addressable_row_block(n)
+    staged = pm.stage_global({"x": rows[s:e]}, n)
+    gathered = gather_addressable(staged["x"])
+    shards = sorted(
+        (int(sh.index[0].start or 0), np.asarray(sh.data)) for sh in staged["x"].addressable_shards
+    )
+    return {
+        "process_id": pm.process_id,
+        "num_processes": pm.num_processes,
+        "global_devices": len(jax.devices()),
+        "local_devices": len(jax.local_devices()),
+        "shard_process": pm.shard_process,
+        "fingerprint": pm.fingerprint(),
+        "row_block": pm.row_block(n),
+        "staged_shape": tuple(staged["x"].shape),
+        "staged_shards": shards,
+        "fully_addressable": bool(staged["x"].is_fully_addressable),
+        "gathered": gathered,
+        "addressable_block": (s, e),
+    }
+
+
+# ---------------------------------------------------------------------------
+# child main
+# ---------------------------------------------------------------------------
+
+
+def _child_main(argv):
+    entry, pid, nproc, coord_port, jaxdist_port, result_port, devices = argv
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    ctx = MHContext(pid, nproc, coord_port, jaxdist_port, devices)
+    payload = pickle.loads(base64.b64decode(os.environ["REPRO_MH_PAYLOAD"]))
+    if ":" in entry:
+        mod_name, fn_name = entry.split(":", 1)
+        import importlib
+
+        fn = getattr(importlib.import_module(mod_name), fn_name)
+    else:
+        fn = globals()[entry]
+    from multiprocessing.connection import Client
+
+    try:
+        value = fn(ctx, payload or {})
+        status = ("ok", ctx.process_id, value)
+    except BaseException:
+        import traceback
+
+        traceback.print_exc()  # the launcher surfaces child stderr too
+        status = ("err", ctx.process_id, traceback.format_exc())
+    conn = Client(("127.0.0.1", int(result_port)), authkey=_AUTH)
+    conn.send(status)
+    conn.close()
+    if status[0] == "err":
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    _child_main(sys.argv[1:])

@@ -59,7 +59,10 @@ def test_costmodel_estimates_quantile_with_safety():
 
 
 def test_costmodel_fallback_chain():
-    cm = ExecuteCostModel(quantile=0.5, safety=1.0, prior_ms=0.0)
+    # fit=False isolates the nearest-bucket leg of the chain (with the fit
+    # enabled, two known buckets answer unseen ones by inter/extrapolation —
+    # covered by the fit tests below)
+    cm = ExecuteCostModel(quantile=0.5, safety=1.0, prior_ms=0.0, fit=False)
     for _ in range(3):
         cm.observe("m", 8, 0.050)
     est8 = cm.estimate("m", 8)
@@ -72,6 +75,75 @@ def test_costmodel_fallback_chain():
     assert cm.estimate("other", 4) is None
     cm_prior = ExecuteCostModel(quantile=0.5, safety=1.0, prior_ms=7.0)
     assert cm_prior.estimate("other", 4) == pytest.approx(7e-3)
+
+
+def test_costmodel_linear_fit_interpolates_and_extrapolates():
+    cm = ExecuteCostModel(quantile=0.5, safety=1.0, prior_ms=0.0)
+    for _ in range(4):
+        cm.observe("m", 2, 0.010)
+        cm.observe("m", 8, 0.040)
+    # line through (2, 10ms) and (8, 40ms): 5 ms/row, zero intercept
+    # (within the sketch's ~4% relative quantile error)
+    assert cm.estimate("m", 4) == pytest.approx(0.020, rel=0.15)  # interpolate
+    assert cm.estimate("m", 16) == pytest.approx(0.080, rel=0.15)  # extrapolate up
+    assert cm.estimate("m", 1) == pytest.approx(0.005, rel=0.30)  # extrapolate down
+    # observed buckets still answer from their own histograms, not the line
+    assert cm.estimate("m", 2) == pytest.approx(0.010, rel=0.10)
+    fit = cm.snapshot()["m"]["fit"]
+    assert fit["buckets_fit"] == 2
+    assert fit["slope_ms_per_row"] == pytest.approx(5.0, rel=0.15)
+
+
+def test_costmodel_fit_never_negative_and_never_invents():
+    cm = ExecuteCostModel(quantile=0.5, safety=1.0, prior_ms=0.0)
+    # decreasing-cost anomaly: a negative-slope extrapolation clamps at 0
+    # (callers treat 0 as "don't shed"), never goes negative
+    for _ in range(3):
+        cm.observe("m", 2, 0.050)
+        cm.observe("m", 8, 0.010)
+    assert cm.estimate("m", 64) == 0.0
+    # never-shed-on-ignorance survives the fit: no data at all -> unknown
+    assert cm.estimate("fresh", 4) is None
+    # a single observed bucket cannot fit a line -> nearest-bucket answer
+    cm2 = ExecuteCostModel(quantile=0.5, safety=1.0, prior_ms=0.0)
+    for _ in range(3):
+        cm2.observe("m", 4, 0.030)
+    assert cm2.estimate("m", 16) == pytest.approx(0.030, rel=0.10)
+    assert cm2.snapshot()["m"]["fit"]["slope_ms_per_row"] is None
+
+
+def test_costmodel_fit_env_kill_switch(monkeypatch):
+    monkeypatch.setenv("REPRO_GW_COST_FIT", "0")
+    cm = ExecuteCostModel(quantile=0.5, safety=1.0)
+    assert cm.fit is False
+    for _ in range(3):
+        cm.observe("m", 2, 0.010)
+        cm.observe("m", 8, 0.040)
+    # nearest smaller, not the fitted line
+    assert cm.estimate("m", 4) == pytest.approx(0.010, rel=0.10)
+    monkeypatch.delenv("REPRO_GW_COST_FIT")
+    assert ExecuteCostModel().fit is True
+
+
+def test_scheduler_uses_fitted_estimate_for_unseen_bucket_fake_clock():
+    """An unseen bucket's fitted estimate drives batch formation: padding 3
+    requests up to the never-observed bucket 4 would blow their deadlines
+    (fit: ~40ms), so the scheduler trims to bucket 2 (~20ms) and re-queues
+    the overflow — all on a fake clock, no execution."""
+    fc = FakeClock(100.0)
+    cm = ExecuteCostModel(quantile=0.5, safety=1.0)
+    for _ in range(4):
+        cm.observe("m", 1, 0.010)
+        cm.observe("m", 2, 0.020)
+    assert cm.estimate("m", 4) == pytest.approx(0.040, rel=0.15)  # fitted
+    sched = BatchScheduler(clock=fc, max_wait_ms=0.0, cost_model=cm)
+    sched.set_limit("m", 4, buckets=(1, 2, 4))
+    for i in range(3):
+        sched.put(_req("m", float(i), deadline=fc() + 0.030, t=fc(), seq=i + 1))
+    key, batch, shed = sched.next_batch(timeout=0.05)
+    assert not shed
+    assert len(batch) == 2  # trimmed to the feasible bucket
+    assert sched.depth == 1  # overflow re-queued, not shed
 
 
 def test_costmodel_min_samples():
@@ -417,9 +489,11 @@ def test_warmup_seeds_cost_model_and_snapshot_surfaces_it():
         est = gw.cost.estimate("m", b)
         assert est is not None and est > 0
     snap = gw.snapshot()
-    assert set(snap["models"]["m"]["cost"]) == {"1", "2", "4"}
-    for rec in snap["models"]["m"]["cost"].values():
+    assert set(snap["models"]["m"]["cost"]) == {"1", "2", "4", "fit"}
+    for b in ("1", "2", "4"):
+        rec = snap["models"]["m"]["cost"][b]
         assert rec["count"] == 1 and rec["est_ms"] > 0
+    assert snap["models"]["m"]["cost"]["fit"]["buckets_fit"] == 3
     assert snap["stats"]["shed_infeasible"] == 0
     assert snap["stats"]["shed_infeasible_door"] == 0
     gw.close()

@@ -25,6 +25,10 @@ def _run(script: str, timeout=560) -> str:
         env={
             "PYTHONPATH": str(REPO / "src"),
             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+            # these children emulate CPU host devices by construction; the
+            # pin stops jax probing for a TPU runtime on containers that
+            # bake libtpu in (minutes of metadata retries per child)
+            "JAX_PLATFORMS": "cpu",
             "PATH": "/usr/bin:/bin",
             "HOME": "/root",
         },

@@ -367,9 +367,135 @@ def test_gateway_serves_mesh_sharded_model():
         env={
             "PYTHONPATH": str(REPO / "src"),
             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+            # CPU-emulation child: stop jax probing for a TPU runtime
+            "JAX_PLATFORMS": "cpu",
             "PATH": "/usr/bin:/bin",
             "HOME": "/root",
         },
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "GATEWAY_SHARDED_OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# snapshot() under concurrent mutation
+# ---------------------------------------------------------------------------
+
+
+def test_latency_sketch_merge_is_order_independent():
+    """Per-thread histograms are a commutative monoid: folding them in ANY
+    order yields the same merged histogram — which is what makes snapshot()
+    safe to call while recording threads are live."""
+    from repro.core import sketches
+    from repro.serve.gateway.telemetry import LatencySketch
+
+    sk = LatencySketch()
+    rng = np.random.default_rng(11)
+    vals = rng.lognormal(-7, 1, 400)
+    barrier = threading.Barrier(4)  # overlap all 4 lives: distinct idents
+
+    def recorder(chunk):
+        barrier.wait()
+        for v in chunk:
+            sk.record(float(v))
+        barrier.wait()
+
+    threads = [
+        threading.Thread(target=recorder, args=(vals[i::4],)) for i in range(4)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    hists = list(sk._hists.values())
+    assert len(hists) == 4
+    ref = sk.merged()
+    rng.shuffle(hists)
+    out = sketches.dd_init_np()
+    for h in hists:
+        out = sketches.dd_merge(out, h)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+    assert sk.count == len(vals)
+
+
+def test_snapshot_consistent_under_concurrent_load():
+    """snapshot() is read continuously while a replayed mixed-feasibility
+    load runs: counters only ever move forward, per-bucket cost fields are
+    present from warmup on, and when the dust settles every shed_infeasible*
+    increment corresponds to exactly one InfeasibleDeadlineError raised to a
+    client (and likewise for the other outcome classes)."""
+    from repro.serve import InfeasibleDeadlineError
+
+    exec_s = 0.004
+
+    def sleepy(batch):
+        time.sleep(exec_s)
+        return {"y": np.asarray(batch["x"]) * 3.0}
+
+    gw = ServingGateway(max_pending=128, max_wait_ms=1.0, workers=2)
+    gw.register(
+        "m", sleepy, example={"x": np.float32(0.0)}, buckets=(1, 2, 4), max_batch=4
+    )
+    gw.warmup()
+    snap0 = gw.snapshot()
+    cost0 = snap0["models"]["m"]["cost"]
+    assert {"1", "2", "4"} <= set(cost0)  # per-bucket fields exist pre-traffic
+    assert all(cost0[b]["count"] >= 1 for b in ("1", "2", "4"))
+
+    outcomes = {"ok": 0, "infeasible": 0, "deadline": 0}
+    out_lock = threading.Lock()
+
+    def client(i):
+        # odd requests carry a budget the 4ms execute can never meet
+        deadline_ms = 1.0 if i % 2 else 400.0
+        try:
+            gw.submit("m", {"x": np.float32(i)}, deadline_ms=deadline_ms, timeout=15.0)
+            kind = "ok"
+        except InfeasibleDeadlineError:
+            kind = "infeasible"
+        except DeadlineExceededError:
+            kind = "deadline"
+        with out_lock:
+            outcomes[kind] += 1
+
+    monotone = [
+        "completed", "shed_queued", "shed_infeasible", "shed_at_door",
+        "shed_infeasible_door", "batches", "admitted",
+        "sched_formed_batches", "sched_shed_infeasible", "sched_shed_expired",
+    ]
+    stop = threading.Event()
+    seen = {"snaps": 0}
+
+    def poller():
+        prev = {k: 0 for k in monotone}
+        while not stop.is_set():
+            s = gw.snapshot()["stats"]
+            for k in monotone:
+                assert s[k] >= prev[k], (k, s[k], prev[k])
+                prev[k] = s[k]
+            seen["snaps"] += 1
+
+    pt = threading.Thread(target=poller)
+    pt.start()
+    n = 60
+    import concurrent.futures as cf
+
+    with cf.ThreadPoolExecutor(max_workers=16) as pool:
+        list(pool.map(client, range(n)))
+    stop.set()
+    pt.join()
+    assert seen["snaps"] > 3  # the poller genuinely raced the load
+
+    s = gw.snapshot()["stats"]
+    assert sum(outcomes.values()) == n
+    assert s["completed"] == outcomes["ok"]
+    # every infeasible error a client saw is counted exactly once, at the
+    # door or at formation — and formation sheds agree with the scheduler's
+    # own independent counter
+    assert s["shed_infeasible"] + s["shed_infeasible_door"] == outcomes["infeasible"]
+    assert s["sched_shed_infeasible"] == s["shed_infeasible"]
+    assert s["shed_at_door"] + s["shed_queued"] == outcomes["deadline"]
+    assert s["sched_shed_expired"] == s["shed_queued"]  # no retries ran here
+    assert s["failed"] == 0
+    assert s["pending"] == 0  # every admission slot released
+    gw.close()

@@ -1,0 +1,304 @@
+"""Multi-host streaming and serving, differentially tested.
+
+The launcher (``tests/multihost.py``) spawns N subprocesses with a shared
+coordinator address over fake CPU devices; these tests assert the headline
+contract: the SAME TransformPlan stream and the SAME replayed gateway
+traffic produce BIT-IDENTICAL results on 1-process and N-process meshes.
+
+Bit-identity is asserted on hash/vocab-index/affine stages — ops XLA CPU
+computes identically at any shard width.  Transcendental stages (log) are
+only ulp-close across widths (vectorised libm), which is a property of the
+compiler, not of the multi-host machinery under test here.
+
+Topology arithmetic (no subprocesses, no extra devices) is tested at the
+bottom; everything spawning processes carries ``multihost`` (and
+``subprocess``) markers so constrained hosts can deselect.
+"""
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+from multihost import launch  # noqa: E402
+
+
+def _join_outputs(per_proc, batch_idx, keys):
+    """Concatenate one batch's per-process blocks in process order."""
+    return {
+        k: np.concatenate(
+            [p["outputs"][batch_idx][k] for p in per_proc], axis=0
+        )
+        for k in keys
+    }
+
+
+@pytest.mark.parametrize("nproc", [2, 3])
+@pytest.mark.multihost
+@pytest.mark.subprocess
+def test_stream_differential_bit_identical(nproc):
+    """The same plan stream: 1-process output == concat of N per-process
+    row blocks, bit-for-bit, including uneven batch sizes and leftovers."""
+    payload = {"seed": 3, "sizes": [16, 16, 12, 16, 8, 13], "pack": 2}
+    ref = launch("stream_plan", 1, payload)[0]
+    parts = launch("stream_plan", nproc, payload)
+    assert len({tuple(p["fingerprint"]) for p in parts}) == 1  # one job identity
+    total_local = sum(p["stats"]["local_rows"] for p in parts)
+    assert total_local == sum(payload["sizes"])  # every row fed exactly once
+    for i, ref_out in enumerate(ref["outputs"]):
+        keys = set(ref_out)
+        joined = _join_outputs(parts, i, keys)
+        for k in keys:
+            np.testing.assert_array_equal(ref_out[k], joined[k], err_msg=f"batch {i} col {k}")
+
+
+@pytest.mark.multihost
+@pytest.mark.subprocess
+def test_gateway_differential_replay_bit_identical():
+    """The same replayed traffic through a 1-process gateway and through the
+    2-process routed gateway (coordinator + shard worker): every request's
+    reply is bit-identical, no post-warmup traces anywhere in the job, and
+    the worker actually executed batches."""
+    payload = {"seed": 5, "requests": 48, "buckets": (2, 4, 8), "max_batch": 8}
+    ref = launch("gateway_replay", 1, payload)[0]
+    got = launch("gateway_replay", 2, payload)
+    coord, worker = got[0], got[1]
+    assert coord["shards"] == 2
+    assert coord["traces_since_warmup"] == 0
+    assert worker["batches"] > 0  # routing genuinely crossed processes
+    assert coord["stats"]["completed"] == payload["requests"]
+    assert len(ref["results"]) == len(coord["results"])
+    for i, (a, b) in enumerate(zip(ref["results"], coord["results"])):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+
+
+@pytest.mark.multihost
+@pytest.mark.subprocess
+def test_gateway_replay_with_cost_model_routes_and_completes():
+    """Cost model on: warmup seeds per-(model, bucket) estimates from the
+    coordinator's measured routed wall times and traffic still completes
+    bit-identically to the launch-time-only configuration."""
+    base = {"seed": 9, "requests": 24, "buckets": (2, 4), "max_batch": 4}
+    ref = launch("gateway_replay", 2, dict(base, cost_model=False))[0]
+    got = launch("gateway_replay", 2, dict(base, cost_model=True))[0]
+    assert got["stats"]["completed"] == base["requests"]
+    for a, b in zip(ref["results"], got["results"]):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.multihost
+@pytest.mark.subprocess
+def test_jax_distributed_topology_and_global_staging():
+    """REAL jax.distributed over fake devices: every process derives the
+    same job topology from the runtime, and global batch assembly places
+    exactly the addressable rows on each process."""
+    n = 16
+    res = launch("jaxdist_topology", 2, {"rows": n})
+    p0, p1 = res
+    for p in res:
+        assert p["num_processes"] == 2
+        assert p["global_devices"] == 4 and p["local_devices"] == 2
+        assert not p["fully_addressable"]
+        assert p["staged_shape"] == (n,)
+    # one topology, agreed upon by every process
+    assert p0["shard_process"] == p1["shard_process"]
+    assert p0["fingerprint"] == p1["fingerprint"]
+    # the fingerprint records the process topology
+    assert p0["num_processes"] in p0["fingerprint"]
+    # row blocks partition the batch in process order
+    assert p0["row_block"] == (0, n // 2)
+    assert p1["row_block"] == (n // 2, n)
+    # each process staged exactly its own rows, per addressable shard
+    rows = np.arange(n, dtype=np.float32) * 2.0
+    for p in res:
+        for start, data in p["staged_shards"]:
+            np.testing.assert_array_equal(data, rows[start : start + len(data)])
+        # gather_addressable (the materialize="host" path's multi-host-safe
+        # readback) returns exactly this process's addressable row block of
+        # the non-fully-addressable global array
+        s, e = p["addressable_block"]
+        np.testing.assert_array_equal(p["gathered"], rows[s:e])
+
+
+# ---------------------------------------------------------------------------
+# topology arithmetic (in-process, no devices beyond the default one)
+# ---------------------------------------------------------------------------
+
+
+def test_process_mesh_row_blocks_and_fingerprints():
+    from repro.launch.mesh import ProcessMesh
+
+    pm0 = ProcessMesh.emulated(4, 0)
+    pm3 = ProcessMesh.emulated(4, 3)
+    shards = pm0.num_data_shards
+    assert pm0.shard_process == pm3.shard_process
+    assert pm0.fingerprint() == pm3.fingerprint()
+    assert pm0.local_fingerprint() != pm3.local_fingerprint()
+    # blocks partition [0, n) in process order, covering every row once
+    for n in (7, 8, 64, 129):
+        blocks = [
+            ProcessMesh.emulated(4, p).row_block(n) for p in range(4)
+        ]
+        assert blocks[0][0] == 0 and blocks[-1][1] == n
+        for (a, b), (c, d) in zip(blocks, blocks[1:]):
+            assert b == c
+    # uneven split follows array_split: leading shards one row longer
+    sizes = [b - a for a, b in pm0.shard_row_blocks(shards + 1)]
+    assert sizes[0] == 2 and set(sizes[1:]) == {1}
+
+
+def test_process_mesh_rejects_bad_topologies():
+    import jax
+
+    from repro.launch.mesh import ProcessMesh
+
+    with pytest.raises(ValueError):
+        ProcessMesh.emulated(2, 2)  # process_id out of range
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError):
+        # 1 shard cannot partition over 2 virtual hosts
+        ProcessMesh.virtual(mesh, 2)
+    with pytest.raises(ValueError):
+        ProcessMesh(
+            process_id=0,
+            num_processes=2,
+            shard_process=(0, 1, 0, 1),  # non-contiguous ownership
+            local_mesh=mesh,
+        )
+
+
+def test_runner_rejects_engine_and_process_mesh_together():
+    from repro.core import PlanRunner
+    from repro.core.engine import Engine
+    from repro.launch.mesh import ProcessMesh
+
+    class _Plan:  # never executed: the constructor must raise first
+        def jit_for(self, **kw):
+            return lambda b: b
+
+        def required_inputs(self):
+            return None
+
+    with pytest.raises(ValueError):
+        PlanRunner(_Plan(), engine=Engine(None), process_mesh=ProcessMesh.emulated(1, 0))
+    with pytest.raises(ValueError):
+        PlanRunner(_Plan(), process_mesh=ProcessMesh.emulated(1, 0), shard_mode="bogus")
+
+
+def test_registry_filters_sub_shard_buckets():
+    """A routed servable never gets a bucket smaller than its process count
+    (that would ship zero-row blocks); with no feasible bucket, registration
+    fails loudly."""
+    from repro.serve.gateway.registry import ModelRegistry
+
+    class FakeServable:
+        self_staging = True
+        num_processes = 2
+
+        def __call__(self, cols):
+            return cols
+
+        def trace_count(self):
+            return 0
+
+    reg = ModelRegistry()
+    e = reg.register(
+        "m", FakeServable(), example={"x": np.float32(0)}, buckets=(1, 2, 4), max_batch=4
+    )
+    assert e.buckets == (2, 4)
+    assert e.shards == 2 and not e.stage_inputs
+    with pytest.raises(ValueError):
+        reg.register(
+            "m2", FakeServable(), example={"x": np.float32(0)}, buckets=(1,), max_batch=1
+        )
+
+
+def test_stage_clamps_block_entirely_inside_global_padding():
+    """Global mode, tiny final batch: a process whose addressable block lies
+    wholly in the divisibility-pad region must stage exactly its block size
+    of zero rows (regression: fill went negative, corrupting pad arithmetic
+    and stats)."""
+    from repro.core import PlanRunner
+
+    class _StubPM:
+        num_data_shards = 8
+        my_shards = (5, 6)
+        global_mesh = object()
+
+        def global_batch_sharding(self):
+            return None
+
+        def addressable_row_block(self, n):
+            blocks = np.array_split(np.arange(n), 8)
+            return (int(blocks[5][0]), int(blocks[5][-1]) + 1)
+
+        def row_block(self, n):
+            return self.addressable_row_block(n)
+
+        def stage_global(self, host, n):
+            self.staged = (dict(host), n)
+            return host
+
+    class _StubPlan:
+        def jit_for(self, **kw):
+            return lambda b: b
+
+        def required_inputs(self):
+            return None
+
+    for staging in (False, True):
+        pm = _StubPM()
+        r = PlanRunner(
+            _StubPlan(), process_mesh=pm, shard_mode="global",
+            staging=staging, prefetch=0, workers=1,
+        )
+        # n=3 rows pad to n_global=8; shard 5 covers row 5 — pure padding
+        host = r._stage([{"x": np.arange(3.0, dtype=np.float32)}], 0)
+        assert pm.staged[1] == 8
+        assert host["x"].shape == (1,)
+        np.testing.assert_array_equal(np.asarray(host["x"]), [0.0])
+        assert r.stats["local_rows"] == 0
+        # partial overlap: n=6 -> shard 5 covers row 5 (real), no padding
+        host = r._stage([{"x": np.arange(6.0, dtype=np.float32)}], 1)
+        assert pm.staged[1] == 8
+        np.testing.assert_array_equal(np.asarray(host["x"]), [5.0])
+        assert r.stats["local_rows"] == 1
+
+
+def test_executor_releases_locks_after_worker_failure():
+    """A failed routed batch (worker reports an error) must not leave the
+    per-connection lock held — the next batch on the same connection has to
+    route normally (regression: error paths leaked acquired locks and every
+    later batch deadlocked)."""
+    import threading
+    from multiprocessing import Pipe
+
+    from repro.launch.mesh import ProcessMesh
+    from repro.serve import MultiHostExecutor, ShardServer, WorkerFailedError
+
+    def touchy(batch):
+        x = np.asarray(batch["x"])
+        if x.size and x[0] < 0:
+            raise RuntimeError("poisoned block")
+        return {"y": x * 2.0}
+
+    ca, cb = Pipe()
+    server = ShardServer(ProcessMesh.emulated(2, 1), {"m": touchy})
+    t = threading.Thread(target=server.serve, args=(cb,), daemon=True)
+    t.start()
+    ex = MultiHostExecutor(ProcessMesh.emulated(2, 0))
+    servable = ex.add_model("m", touchy)
+    ex.attach(1, ca)
+    with pytest.raises(ValueError):
+        ex.attach(1, ca)  # duplicate process id fails fast
+    # rows split (1, 1): row 0 runs on the coordinator, row 1 on the worker
+    with pytest.raises(WorkerFailedError):
+        servable({"x": np.asarray([1.0, -1.0], np.float32)})  # worker fails
+    with pytest.raises(RuntimeError, match="poisoned"):
+        servable({"x": np.asarray([-1.0, 1.0], np.float32)})  # local fails
+    # the connection lock must be free again: a healthy batch still routes
+    out = servable({"x": np.asarray([1.0, 2.0], np.float32)})
+    np.testing.assert_array_equal(out["y"], [2.0, 4.0])
+    ex.close()
+    t.join(timeout=5)

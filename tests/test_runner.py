@@ -252,6 +252,8 @@ def test_sharded_stream_matches_single_device():
         env={
             "PYTHONPATH": str(REPO / "src"),
             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+            # CPU-emulation child: stop jax probing for a TPU runtime
+            "JAX_PLATFORMS": "cpu",
             "PATH": "/usr/bin:/bin",
             "HOME": "/root",
         },

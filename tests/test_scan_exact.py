@@ -1,7 +1,12 @@
 """Bit-exactness of the scan-based string/hash primitives against the seed
 (unrolled-loop) reference implementations, over randomized byte tensors —
 padding, signs, fractions, multi-byte separators, every seed the pipelines
-use.  The references below are verbatim copies of the pre-scan code paths."""
+use.  The references below are verbatim copies of the pre-scan code paths.
+
+These references are jnp, so they guard the scan REWRITES; the independent
+exactness backstop — pure Python/numpy references sharing nothing with jnp,
+hundreds of generated cases per op, kernel interpret mode included — lives
+in ``tests/test_fuzz_exact.py``."""
 import numpy as np
 import jax
 import jax.numpy as jnp
