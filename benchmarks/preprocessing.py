@@ -265,11 +265,22 @@ def _streaming_body(fitted, sweep_cols, bs, nb, host_batches, rows_total) -> Non
 
 def _run_planner_comparison(fitted, smoke: bool = False) -> None:
     """Planned vs interpreted vs naive whole-pipeline jit on the transform
-    path, plus trace-time / HLO-op-count metrics for the compile story."""
-    bs = 16 if smoke else 64
-    batch = {k: v[:bs] for k, v in ltr_rows(max(bs, 2), seed=11).items()}
-    batch.pop("label_click")
+    path, plus trace-time / HLO-op-count metrics for the compile story.
+
+    The planned-vs-fused pair (``pre_planned_b*`` vs ``pre_fused_b*``) is
+    measured at BOTH b16 and b64 in every mode: ``run.py --smoke`` enforces
+    that the fused rows exist and are not slower than the staged plan, so a
+    fusion regression fails CI instead of silently shipping."""
+    bs_main = 16 if smoke else 64
     iters = 5 if smoke else 20
+
+    # staged baseline pinned to fuse=False — fitted.plan() now fuses by
+    # default, and the point of this block is the fusion delta itself
+    plan = fitted.plan(fuse=False)
+    plan_fused = fitted.plan(fuse=True)
+
+    batch_main = {k: v[:bs_main] for k, v in ltr_rows(max(bs_main, 2), seed=11).items()}
+    batch_main.pop("label_click")
 
     # per-stage interpreted: one jitted XLA call per stage, dict rebuilt on
     # the host between stages (the MLeap execution shape)
@@ -282,29 +293,53 @@ def _run_planner_comparison(fitted, smoke: bool = False) -> None:
         return out
 
     naive = jax.jit(fitted.transform)
-    plan = fitted.plan()
-
-    t_interp = time_fn(interpreted, batch, iters=iters)
-    t_naive = time_fn(naive, batch, iters=iters)
-    t_planned = time_fn(plan, batch, iters=iters)
-
-    speedup = t_interp / t_planned
-    emit(f"pre_interpreted_b{bs}", t_interp, "per-stage dispatch baseline")
-    emit(f"pre_naive_jit_b{bs}", t_naive, f"vs_interpreted={t_interp / t_naive:.2f}x")
+    t_interp = time_fn(interpreted, batch_main, iters=iters)
+    t_naive = time_fn(naive, batch_main, iters=iters)
+    emit(f"pre_interpreted_b{bs_main}", t_interp, "per-stage dispatch baseline")
     emit(
-        f"pre_planned_b{bs}",
-        t_planned,
-        f"vs_interpreted={speedup:.2f}x vs_naive_jit={t_naive / t_planned:.2f}x "
-        f"hash_shared={plan.cse_stats['hash_shared']} "
-        f"coerce_shared={plan.cse_stats['coerce_shared']}",
+        f"pre_naive_jit_b{bs_main}", t_naive, f"vs_interpreted={t_interp / t_naive:.2f}x"
     )
+
+    # fused-chain static metrics + HLO op delta (fused chains collapse stage
+    # boundaries, so the lowered program shrinks) — measured once at b64
+    hlo_batch = {k: v[:64] for k, v in ltr_rows(64, seed=11).items()}
+    hlo_batch.pop("label_click")
+    ops_planned_hlo = hlo_op_count(plan.lower(hlo_batch))
+    ops_fused_hlo = hlo_op_count(plan_fused.lower(hlo_batch))
+    fstats = plan_fused.fusion_stats
+
+    for bs in (16, 64):
+        batch = {k: v[:bs] for k, v in ltr_rows(max(bs, 2), seed=11).items()}
+        batch.pop("label_click")
+        t_planned = time_fn(plan, batch, iters=iters)
+        t_fused = time_fn(plan_fused, batch, iters=iters)
+        derived = f"vs_naive_jit={t_naive / t_planned:.2f}x " if bs == bs_main else ""
+        if bs == bs_main:
+            derived = (
+                f"vs_interpreted={t_interp / t_planned:.2f}x " + derived
+            )
+        emit(
+            f"pre_planned_b{bs}",
+            t_planned,
+            derived
+            + f"hash_shared={plan.cse_stats['hash_shared']} "
+            f"coerce_shared={plan.cse_stats['coerce_shared']}",
+        )
+        emit(
+            f"pre_fused_b{bs}",
+            t_fused,
+            f"vs_planned={t_planned / t_fused:.2f}x "
+            f"fused_chains={fstats['fused_chains']} "
+            f"fused_stages={fstats['fused_stages']} "
+            f"hlo_ops_delta={ops_planned_hlo - ops_fused_hlo}",
+        )
 
     # trace time + HLO op count: fresh wrappers so nothing is pre-traced
     t0 = time.perf_counter()
-    low_naive = jax.jit(fitted.transform).lower(batch)
+    low_naive = jax.jit(fitted.transform).lower(batch_main)
     trace_naive = (time.perf_counter() - t0) * 1e6
     t0 = time.perf_counter()
-    low_planned = plan.lower(batch)
+    low_planned = plan.lower(batch_main)
     trace_planned = (time.perf_counter() - t0) * 1e6
     ops_naive = hlo_op_count(low_naive)
     ops_planned = hlo_op_count(low_planned)

@@ -1,5 +1,9 @@
 """Render the §Dry-run / §Roofline tables of EXPERIMENTS.md from the dry-run
-artifacts.  Usage: PYTHONPATH=src python -m benchmarks.report [dir]"""
+artifacts, and the longitudinal bench table from BENCH_preprocessing.json.
+
+Usage: PYTHONPATH=src python -m benchmarks.report [dir-or-json]
+(a ``.json`` path renders the bench trajectory; a directory renders the
+dry-run roofline tables)."""
 from __future__ import annotations
 
 import json
@@ -57,5 +61,63 @@ def render(dirpath="benchmarks/artifacts/dryrun") -> str:
     return "\n".join(out)
 
 
+def render_bench(path="BENCH_preprocessing.json", flag_pct: float = 10.0) -> str:
+    """Longitudinal bench table from run.py --smoke's appended record.
+
+    Since the record became append-only (rows tagged with a ``run`` id) a
+    naive per-name table silently mixed measurements from different runs.
+    Rows are grouped by run id first; the table compares the LATEST run
+    against run 0 (the recorded baseline) per row name and flags any
+    latency regression above ``flag_pct`` percent."""
+    rows = json.loads(pathlib.Path(path).read_text())
+    by_run: dict = {}
+    for r in rows:
+        by_run.setdefault(int(r.get("run", 0)), {})[r["name"]] = r
+    if not by_run:
+        return "(no bench rows recorded)"
+    runs = sorted(by_run)
+    base_id, latest_id = runs[0], runs[-1]
+    base, latest = by_run[base_id], by_run[latest_id]
+
+    out = [
+        f"\n#### Bench trajectory: run {latest_id} ({len(runs)} runs recorded) "
+        f"vs run {base_id}\n",
+        "| name | run0 us | latest us | delta | flag | derived (latest) |",
+        "|---|---|---|---|---|---|",
+    ]
+    flagged = []
+    for name in sorted(latest):
+        cur = latest[name]
+        ref = base.get(name)
+        if ref is None or not ref["us_per_call"]:
+            delta, flag = "new", ""
+        else:
+            pct = 100.0 * (cur["us_per_call"] / ref["us_per_call"] - 1.0)
+            delta = f"{pct:+.1f}%"
+            flag = f"REGRESSION(>{flag_pct:.0f}%)" if pct > flag_pct else ""
+            if flag:
+                flagged.append(name)
+        ref_us = f"{ref['us_per_call']:.1f}" if ref is not None else "—"
+        out.append(
+            f"| {name} | {ref_us} | {cur['us_per_call']:.1f} | {delta} "
+            f"| {flag} | {cur.get('derived', '')} |"
+        )
+    only_base = sorted(set(base) - set(latest))
+    if only_base:
+        out.append(f"\n(rows present in run {base_id} but gone in run {latest_id}: "
+                   + ", ".join(only_base) + ")")
+    if flagged:
+        out.append(f"\n{len(flagged)} row(s) regressed >{flag_pct:.0f}%: "
+                   + ", ".join(flagged))
+    return "\n".join(out)
+
+
+def main(argv) -> str:
+    target = argv[1] if len(argv) > 1 else "benchmarks/artifacts/dryrun"
+    if target.endswith(".json"):
+        return render_bench(target)
+    return render(target)
+
+
 if __name__ == "__main__":
-    print(render(sys.argv[1] if len(sys.argv) > 1 else "benchmarks/artifacts/dryrun"))
+    print(main(sys.argv))

@@ -1,9 +1,13 @@
 """Roofline table: reads the dry-run artifacts (benchmarks/artifacts/dryrun)
-and prints the per-(arch x shape x mesh) terms — the §Roofline source."""
+and prints the per-(arch x shape x mesh) terms — the §Roofline source — plus
+analytic arithmetic-intensity rows for the fused preprocessing chains (bytes
+the VMEM-resident intermediates keep off HBM vs the staged plan)."""
 from __future__ import annotations
 
 import json
 import pathlib
+
+import numpy as np
 
 ARTIFACTS = pathlib.Path(__file__).resolve().parent / "artifacts" / "dryrun"
 
@@ -21,7 +25,72 @@ def rows(mesh_filter=None):
     return out
 
 
+def _chain_rows(batch_rows: int = 64) -> None:
+    """Arithmetic-intensity rows for the fused transform chains of the LTR
+    pipeline, derived analytically from each chain's op program: the staged
+    plan round-trips every stage boundary through HBM (read operands + write
+    result per op), the megakernel touches HBM only for the chain's external
+    inputs and emitted outputs — intermediates stay in VMEM.  Per-op avals
+    come from ``jax.eval_shape`` on the exact op bodies, so byte counts are
+    shape/dtype-true, not estimates."""
+    import jax
+
+    from repro.apps.ltr_pipeline import build_ltr_pipeline
+    from repro.core.plan import _FusedNode
+    from repro.data import ltr_rows
+    from repro.kernels.fused_transform import ops as fops
+
+    train = ltr_rows(96, seed=0)
+    fitted, _ = build_ltr_pipeline(train)
+    batch = {k: v[:batch_rows] for k, v in ltr_rows(batch_rows, seed=5).items()}
+    plan = fitted.plan(fuse=True)
+
+    captured = []
+    orig = fops.execute_chain
+
+    def spy(program, inputs):
+        captured.append((program, [jax.eval_shape(lambda: x) for x in inputs]))
+        return orig(program, inputs)
+
+    fops.execute_chain = spy
+    try:
+        plan.eager(batch)
+    finally:
+        fops.execute_chain = orig
+
+    if not any(isinstance(n, _FusedNode) for n in plan._nodes):
+        print("roofline_prechain,0.0,no fused chains in the LTR plan")
+        return
+    for i, (program, in_avals) in enumerate(captured):
+        env = dict(zip(program.inputs, in_avals))
+        nbytes = lambda a: int(np.prod(a.shape)) * a.dtype.itemsize  # noqa: E731
+        staged = 0
+        flops = 0
+        for op in program.ops:
+            args = [env[s] for s in op.inputs]
+            out = jax.eval_shape(
+                lambda *a, op=op: fops.apply_op(op.kind, op.params, list(a)), *args
+            )
+            env[op.output] = out
+            staged += sum(nbytes(a) for a in args) + nbytes(out)
+            flops += int(np.prod(out.shape))
+        fused = sum(nbytes(a) for a in in_avals) + sum(
+            nbytes(env[c]) for c in program.outputs
+        )
+        saved = staged - fused
+        derived = (
+            f"sig={program.signature()} ops={len(program.ops)} "
+            f"bytes_row_staged={staged // batch_rows} "
+            f"bytes_row_fused={fused // batch_rows} "
+            f"traffic_saved={saved / staged:.0%} "
+            f"ai_staged={flops / staged:.3f} ai_fused={flops / fused:.3f} "
+            f"ai_gain={(flops / fused) / (flops / staged):.2f}x"
+        )
+        print(f"roofline_prechain_{i},{saved / batch_rows:.1f},{derived}")
+
+
 def run() -> None:
+    _chain_rows()
     rs = rows()
     if not rs:
         print("roofline,0,no dry-run artifacts yet — run repro.launch.dryrun")

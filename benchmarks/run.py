@@ -108,6 +108,24 @@ def main() -> None:
             if not any(n.startswith(prefix) for n in names):
                 print(f"\nBENCHMARK FAILED: no {prefix}* row emitted", file=sys.stderr)
                 failures.append(f"missing-{prefix.rstrip('_')}")
+        # fused-chain guard: the pre_fused_* rows must exist AND must not be
+        # slower than the staged plan (10% tolerance absorbs CI timer noise;
+        # the acceptance intent is fused rows/s >= planned rows/s)
+        by_name = {r["name"]: r for r in common.RESULTS}
+        for bs in ("b16", "b64"):
+            fused = by_name.get(f"pre_fused_{bs}")
+            planned = by_name.get(f"pre_planned_{bs}")
+            if fused is None or planned is None:
+                print(f"\nBENCHMARK FAILED: pre_fused_{bs} row missing", file=sys.stderr)
+                failures.append(f"missing-pre_fused_{bs}")
+            elif fused["us_per_call"] > planned["us_per_call"] * 1.10:
+                print(
+                    f"\nBENCHMARK FAILED: pre_fused_{bs} "
+                    f"({fused['us_per_call']}us) slower than "
+                    f"pre_planned_{bs} ({planned['us_per_call']}us)",
+                    file=sys.stderr,
+                )
+                failures.append(f"pre_fused_{bs}-regression")
         _write_json(args.json)  # partial rows still recorded on failure
         if failures:
             sys.exit(f"benchmark(s) failed: {', '.join(failures)}")

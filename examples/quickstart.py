@@ -106,6 +106,62 @@ def main():
     print("Genres_indexed sample:\n", np.asarray(online["Genres_indexed"][:3]))
     print("Occupation one-hot shape:", online["Occupation_indexed"].shape)
 
+    # --- chain fusion: planned vs fused transform timings -------------------
+    # Listing 1 is string-op heavy (indexers don't fuse); numeric feature
+    # chains are where the fusion pass collapses stage boundaries.
+    import time
+
+    import jax
+
+    from repro.core import (
+        BucketizeTransformer,
+        ClipTransformer,
+        LogTransformer,
+        ScaleTransformer,
+    )
+
+    rng = np.random.default_rng(0)
+    n = 4096
+    num_batch = {
+        "price": jnp.asarray(rng.lognormal(3.0, 2.0, n), jnp.float32),
+        "nights": jnp.asarray(rng.integers(1, 30, n), jnp.int32),
+    }
+    fuse_pipe = KamaeSparkPipeline(
+        stages=[
+            LogTransformer(inputCol="price", outputCol="price_log", alpha=1.0),
+            ScaleTransformer(
+                inputCol="price_log", outputCol="price_s", multiplier=0.5, offset=-1.0
+            ),
+            BucketizeTransformer(
+                inputCol="price_s", outputCol="price_bin", splits=[0.5, 1.5, 2.5]
+            ),
+            ClipTransformer(
+                inputCol="nights", outputCol="nights_c", minValue=1, maxValue=14
+            ),
+        ]
+    ).fit(num_batch)
+    planned = fuse_pipe.plan(fuse=False)
+    fused = fuse_pipe.plan(fuse=True)
+
+    def us_per_call(plan, iters=20, reps=5):
+        jax.block_until_ready(list(plan(num_batch).values()))  # compile
+        best = float("inf")
+        for _ in range(reps):  # best-of-reps rides out scheduler noise
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                jax.block_until_ready(list(plan(num_batch).values()))
+            best = min(best, (time.perf_counter() - t0) / iters * 1e6)
+        return best
+
+    t_planned, t_fused = us_per_call(planned), us_per_call(fused)
+    out_p, out_f = planned(num_batch), fused(num_batch)
+    for k in out_p:
+        np.testing.assert_array_equal(np.asarray(out_p[k]), np.asarray(out_f[k]))
+    print(
+        f"chain fusion: planned {t_planned:.1f}us/call vs fused {t_fused:.1f}us/call "
+        f"({fused.fused_chain_count} fused chains, bit-identical outputs)"
+    )
+
 
 if __name__ == "__main__":
     main()

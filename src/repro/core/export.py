@@ -151,21 +151,22 @@ class PreprocessModel:
             b = s.transform(b)
         return b
 
-    def plan(self, outputs: Optional[Sequence[str]] = None):
+    def plan(self, outputs: Optional[Sequence[str]] = None, fuse: Optional[bool] = None):
         """Compile-once execution plan over the exported node list (see
         :mod:`repro.core.plan`): coercion/hash CSE + a persistent,
         sharding-aware jit cache.  Plans are cached per requested outputs;
         on a loaded bundle the full plan is rebuilt from the serialized
-        schedule instead of re-running analysis."""
+        schedule instead of re-running analysis.  ``fuse`` overrides the
+        ``REPRO_FUSE_CHAINS`` chain-fusion default."""
         from .plan import TransformPlan
 
-        key = tuple(outputs) if outputs is not None else None
+        key = (tuple(outputs) if outputs is not None else None, fuse)
         p = self._plans.get(key)
         if p is None:
-            if key is None and self._schedule is not None:
+            if key == (None, None) and self._schedule is not None:
                 p = TransformPlan.from_schedule(self._stages, self._schedule)
             else:
-                p = TransformPlan(self._stages, outputs=outputs)
+                p = TransformPlan(self._stages, outputs=outputs, fuse=fuse)
             self._plans[key] = p
         return p
 

@@ -1,0 +1,333 @@
+"""Chain-fusion IR: lowering fusable pipeline stages into flat op programs.
+
+The execution planner (:mod:`repro.core.plan`) schedules a fitted pipeline as
+a list of stage nodes.  Inside one jitted program XLA already fuses what it
+can, but the *plan* still dispatches stage objects one by one at trace time,
+and on accelerators each stage boundary is a fusion decision XLA may or may
+not take — the ETH tabular-preprocessing study (PAPERS.md) measures exactly
+this stage-at-a-time execution leaving most of the available bandwidth
+unused.  ``fuse_chains`` (in plan.py) collapses maximal runs of fusable
+elementwise / row-local stages into ONE :class:`ChainProgram`, which executes
+either as a single Pallas megakernel (``repro.kernels.fused_transform``, one
+grid over row blocks, intermediates VMEM-resident) or as a single XLA-jitted
+chain executor off-TPU.
+
+This module owns the IR and the per-stage lowering rules:
+
+* :class:`ChainOp` — one elementwise/row-local op: static params only, slots
+  by name.  Every op kind replays the EXACT jnp semantics of the stage it
+  was lowered from (same primitives, same dtype promotion), so a fused chain
+  is bit-identical to the staged plan by construction — asserted by
+  ``tests/test_fused_chain.py`` on the LTR and quickstart pipelines and by
+  the fuzz leg in ``tests/test_fuzz_exact.py``.
+* :class:`ChainProgram` — ordered ops + external input/output slots, fully
+  JSON-serialisable (it rides inside the plan schedule in export bundles)
+  with a stable :meth:`signature` used to key the tuned-config store.
+* :func:`lower_node` — Stage -> [ChainOp] lowering, returning None for
+  anything non-fusable (string machinery, shape-changing ops, vector
+  weights, learned tables) so the plan falls back stage-by-stage.
+
+Fusability that depends on runtime dtypes (e.g. a numeric cast applied to a
+column that turns out to hold string bytes) cannot be decided at analysis
+time; those ops raise :class:`ChainFallback` at trace time and the plan
+replays the member stages unfused — bit-identity is never at risk.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from . import types as T
+
+#: env knob: "0" disables the fusion pass (plans execute stage-by-stage).
+FUSE_ENV = "REPRO_FUSE_CHAINS"
+
+#: op kinds the Pallas megakernel implements; programs containing anything
+#: else (or hash seeds >= 2**32, whose limb encoding needs the jnp fallback)
+#: run only on the XLA chain executor.
+KERNEL_OPS = frozenset(
+    {
+        "cast",
+        "log",
+        "exp",
+        "power",
+        "abs",
+        "clip",
+        "round",
+        "scale",
+        "std_score",
+        "bucketize",
+        "binary_const",
+        "binary",
+        "cmp_const",
+        "cmp",
+        "logical",
+        "where",
+        "is_null",
+        "coalesce",
+        "impute",
+        "std_scale",
+        "minmax_scale",
+        "hash_index",
+    }
+)
+
+
+class ChainFallback(Exception):
+    """Raised at trace time when a chain op meets a runtime dtype it cannot
+    replay exactly (e.g. numeric cast of a string column); the plan then
+    executes the member stages unfused."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainOp:
+    kind: str
+    inputs: Tuple[str, ...]
+    output: str
+    params: Tuple = ()
+
+    def to_json(self):
+        return [self.kind, list(self.inputs), self.output, list(self.params)]
+
+    @classmethod
+    def from_json(cls, d):
+        kind, ins, out, params = d
+        params = tuple(tuple(p) if isinstance(p, list) else p for p in params)
+        return cls(kind, tuple(ins), out, params)
+
+
+class ChainProgram:
+    """An ordered elementwise/row-local op program over named slots.
+
+    ``inputs`` are the external env columns read (in order), ``outputs`` the
+    env columns the chain emits.  Slots written and last-read inside the
+    chain never appear in ``outputs`` — they are the VMEM-resident
+    intermediates the megakernel keeps on chip.
+    """
+
+    def __init__(self, ops: Sequence[ChainOp], inputs: Sequence[str], outputs: Sequence[str]):
+        self.ops = list(ops)
+        self.inputs = list(inputs)
+        self.outputs = list(outputs)
+
+    @property
+    def kernel_ok(self) -> bool:
+        for op in self.ops:
+            if op.kind not in KERNEL_OPS:
+                return False
+            if op.kind == "hash_index" and not 0 <= int(op.params[1]) < 2**32:
+                return False
+        return True
+
+    @property
+    def kinds(self) -> List[str]:
+        return [op.kind for op in self.ops]
+
+    def signature(self) -> str:
+        """Stable cross-process id for the tuned-config store: the op-kind
+        chain plus a content hash of the full (kinds, params, wiring)."""
+        blob = json.dumps(self.to_json(), sort_keys=True).encode()
+        digest = hashlib.md5(blob).hexdigest()[:10]
+        kinds = "-".join(self.kinds[:6])
+        if len(self.ops) > 6:
+            kinds += f"-x{len(self.ops)}"
+        return f"{kinds}@{digest}"
+
+    def to_json(self) -> dict:
+        return {
+            "ops": [op.to_json() for op in self.ops],
+            "inputs": list(self.inputs),
+            "outputs": list(self.outputs),
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ChainProgram":
+        return cls([ChainOp.from_json(o) for o in d["ops"]], d["inputs"], d["outputs"])
+
+    def __repr__(self):
+        return f"ChainProgram({self.signature()}, ops={len(self.ops)}, ins={len(self.inputs)}, outs={len(self.outputs)})"
+
+
+# ---------------------------------------------------------------------------
+# stage -> [ChainOp] lowering
+# ---------------------------------------------------------------------------
+
+
+def _py(v):
+    """JSON-safe Python scalar preserving int-vs-float (weak-type promotion
+    in ops like ``x * multiplier`` depends on the Python type)."""
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    item = getattr(v, "item", None)
+    return item() if item is not None else v
+
+
+def _scalar_weight(weights: Dict, key: str) -> Optional[float]:
+    w = weights.get(key)
+    if w is None:
+        return None
+    arr = jnp.asarray(w)
+    if arr.shape != ():
+        return None
+    return float(arr)
+
+
+def _vector_weight(weights: Dict, key: str) -> Optional[Tuple[float, ...]]:
+    w = weights.get(key)
+    if w is None:
+        return None
+    arr = jnp.asarray(w)
+    if arr.ndim != 1:
+        return None
+    return tuple(float(v) for v in arr)
+
+
+def _lower_stage(st, weights: Dict, ins: Tuple[str, ...], outs: Tuple[str, ...]):
+    """[ChainOp] replaying ``st.apply(weights, ins) -> outs``, or None."""
+    # local imports keep core.fusion free of transformer import cycles
+    from .estimators import scalers as _sc
+    from .transformers import logical as _lg
+    from .transformers import math as _m
+    from .transformers import string as _s
+
+    (out,) = outs if len(outs) == 1 else (None,)
+    if out is None:
+        return None  # all fusable stages are single-output
+
+    if isinstance(st, _m.LogTransformer):
+        return [ChainOp("log", ins, out, (_py(st.alpha), _py(st.base)))]
+    if isinstance(st, _m.ExpTransformer):
+        return [ChainOp("exp", ins, out)]
+    if isinstance(st, _m.PowerTransformer):
+        return [ChainOp("power", ins, out, (_py(st.exponent),))]
+    if isinstance(st, _m.AbsoluteValueTransformer):
+        return [ChainOp("abs", ins, out)]
+    if isinstance(st, _m.ClipTransformer):
+        return [ChainOp("clip", ins, out, (_py(st.minValue), _py(st.maxValue)))]
+    if isinstance(st, _m.RoundTransformer):
+        if st.mode not in ("round", "floor", "ceil"):
+            return None
+        return [ChainOp("round", ins, out, (st.mode,))]
+    if isinstance(st, _m.ScaleTransformer):
+        return [ChainOp("scale", ins, out, (_py(st.multiplier), _py(st.offset)))]
+    if isinstance(st, _m.StandardScoreTransformer):
+        return [ChainOp("std_score", ins, out, (_py(st.mean), _py(st.std)))]
+    if isinstance(st, _m.BucketizeTransformer):
+        return [ChainOp("bucketize", ins, out, tuple(float(s) for s in st.splits))]
+    if isinstance(st, _m.MathBinaryTransformer):
+        if st.op not in _m._BINARY:
+            return None
+        if st.constant is not None:
+            return [ChainOp("binary_const", ins, out, (st.op, _py(st.constant)))]
+        if len(ins) != 2:
+            return None
+        return [ChainOp("binary", ins, out, (st.op,))]
+    if isinstance(st, _lg.ComparisonTransformer):
+        if st.op not in _lg._CMP:
+            return None
+        if st.constant is not None:
+            return [ChainOp("cmp_const", ins, out, (st.op, _py(st.constant)))]
+        if len(ins) != 2:
+            return None
+        return [ChainOp("cmp", ins, out, (st.op,))]
+    if isinstance(st, _lg.LogicalTransformer):
+        if st.op == "not":
+            return [ChainOp("logical", ins, out, ("not",))] if len(ins) == 1 else None
+        if st.op not in ("and", "or", "xor") or len(ins) != 2:
+            return None
+        return [ChainOp("logical", ins, out, (st.op,))]
+    if isinstance(st, _lg.IfThenElseTransformer):
+        return [ChainOp("where", ins, out)] if len(ins) == 3 else None
+    if isinstance(st, _lg.IsNullTransformer):
+        sent = None if st.intSentinel is None else int(st.intSentinel)
+        return [ChainOp("is_null", ins, out, (sent,))]
+    if isinstance(st, _lg.CoalesceTransformer):
+        sent = None if st.intSentinel is None else int(st.intSentinel)
+        return [ChainOp("coalesce", ins, out, (_py(st.fillValue), sent))]
+    if isinstance(st, _s.HashIndexTransformer):
+        return [
+            ChainOp(
+                "hash_index", ins, out, (int(st.numBins), int(st.seed), int(st.indexOffset))
+            )
+        ]
+    if isinstance(st, _sc.ImputeEstimator):
+        fill = _scalar_weight(weights, "fill")
+        return None if fill is None else [ChainOp("impute", ins, out, (fill,))]
+    if isinstance(st, _sc.QuantileBinEstimator):
+        splits = _vector_weight(weights, "splits")
+        return None if splits is None else [ChainOp("bucketize", ins, out, splits)]
+    if isinstance(st, _sc.StandardScaleEstimator):
+        mean, std = _scalar_weight(weights, "mean"), _scalar_weight(weights, "std")
+        if mean is None or std is None:
+            return None  # vector (featureSize) weights stay unfused
+        return [ChainOp("std_scale", ins, out, (mean, std))]
+    if isinstance(st, _sc.MinMaxScaleEstimator):
+        lo, span = _scalar_weight(weights, "min"), _scalar_weight(weights, "span")
+        if lo is None or span is None:
+            return None
+        return [ChainOp("minmax_scale", ins, out, (lo, span))]
+    return None
+
+
+def lower_node(stage_or_fitted, in_specs, out_cols) -> Optional[List[ChainOp]]:
+    """Lower one scheduled plan node (stage + resolved coercion tokens) into
+    chain ops, or None when the node is not statically fusable.
+
+    Input coercion lowers to ``cast`` ops (numeric dtypes only — a "string"
+    coercion needs the string widening machinery and stays unfused), and
+    ``outputDtype`` lowers to a trailing ``cast`` — so the op list replays
+    coerce -> apply -> coerce_out exactly as ``TransformPlan._execute`` does.
+    """
+    st = getattr(stage_or_fitted, "stage", stage_or_fitted)
+    weights = stage_or_fitted.weights() if hasattr(stage_or_fitted, "weights") else {}
+
+    if st.outputDtype is not None and st.outputDtype == "string":
+        return None
+    ops: List[ChainOp] = []
+    slot_ins = []
+    for i, (col, _ver, token) in enumerate(in_specs):
+        if token is None:
+            slot_ins.append(col)
+            continue
+        dtype = token[0]
+        if dtype == "string":
+            return None  # needs number_to_string / byte identity — unfusable
+        tmp = f"__c{i}__{col}"
+        ops.append(ChainOp("cast", (col,), tmp, (dtype,)))
+        slot_ins.append(tmp)
+
+    if st.outputDtype is not None:
+        tmp_out = tuple(f"__o__{c}" for c in out_cols)
+    else:
+        tmp_out = tuple(out_cols)
+
+    body = _lower_stage(st, weights, tuple(slot_ins), tmp_out)
+    if body is None:
+        return None
+    ops.extend(body)
+    if st.outputDtype is not None:
+        for t, c in zip(tmp_out, out_cols):
+            ops.append(ChainOp("cast", (t,), c, (st.outputDtype,)))
+    return ops
+
+
+def build_program(op_lists: Sequence[List[ChainOp]], emit: Sequence[str]) -> ChainProgram:
+    """Assemble member op lists into one program.  ``emit`` is the ordered
+    set of env columns the chain must output (member outputs that are still
+    live outside the chain); everything else written stays internal."""
+    ops: List[ChainOp] = [op for lst in op_lists for op in lst]
+    written: set = set()
+    inputs: List[str] = []
+    for op in ops:
+        for s in op.inputs:
+            if s not in written and s not in inputs:
+                inputs.append(s)
+        written.add(op.output)
+    missing = [c for c in emit if c not in written]
+    if missing:
+        raise ValueError(f"chain emits columns it never writes: {missing}")
+    return ChainProgram(ops, inputs, list(emit))

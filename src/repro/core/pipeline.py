@@ -150,16 +150,23 @@ class FittedPipeline:
             b = s.transform(b)
         return b
 
-    def plan(self, outputs: Optional[Sequence[str]] = None, donate: bool = False):
+    def plan(
+        self,
+        outputs: Optional[Sequence[str]] = None,
+        donate: bool = False,
+        fuse: Optional[bool] = None,
+    ):
         """Compile-once execution plan (see :mod:`repro.core.plan`): dead
         columns eliminated, coercions/hashes CSE'd, executables cached
-        per (signature, shardings, donate) on the plan itself."""
+        per (signature, shardings, donate) on the plan itself.  ``fuse``
+        overrides the ``REPRO_FUSE_CHAINS`` chain-fusion default (the
+        benchmarks pin ``fuse=False`` plans to measure the staged baseline)."""
         from .plan import TransformPlan
 
-        key = (tuple(outputs) if outputs is not None else None, donate)
+        key = (tuple(outputs) if outputs is not None else None, donate, fuse)
         p = self._plans.get(key)
         if p is None:
-            p = TransformPlan(self.stages, outputs=outputs, donate=donate)
+            p = TransformPlan(self.stages, outputs=outputs, donate=donate, fuse=fuse)
             self._plans[key] = p
         return p
 

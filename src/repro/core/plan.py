@@ -56,12 +56,13 @@ staging, batch packing, donation) lives in :mod:`repro.core.runner`.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from . import hashing, strops
+from . import fusion, hashing, strops
 from . import types as T
 
 
@@ -75,6 +76,107 @@ class _Node:
     hash_seeds: Optional[List[int]]  # seeds the stage can consume, or None
     dead_after: List[str]  # columns to drop from the env after this node
     stage_index: int = -1  # position in the plan's full stage list
+
+
+@dataclasses.dataclass
+class _FusedNode:
+    """A maximal run of fusable nodes collapsed into one chain program.
+
+    Executes as ONE call into :mod:`repro.kernels.fused_transform` (a single
+    Pallas megakernel on the kernel backend, a single XLA-jitted chain
+    executor elsewhere).  ``members`` keeps the original nodes for the
+    trace-time fallback (a runtime dtype the program cannot replay exactly —
+    see :class:`repro.core.fusion.ChainFallback`) and for serialisation.
+    ``internal`` columns are produced and fully consumed inside the chain;
+    they never enter the environment (on the kernel path they stay
+    VMEM-resident)."""
+
+    program: fusion.ChainProgram
+    in_specs: List[tuple]  # (col, version, None) per external input
+    out_cols: List[str]
+    dead_after: List[str]
+    internal: List[str]
+    members: List[_Node]
+    hash_seeds = None  # duck-typing with _Node (fused nodes never hash-CSE)
+
+
+def _fuse_enabled(flag: Optional[bool]) -> bool:
+    if flag is not None:
+        return bool(flag)
+    return os.environ.get(fusion.FUSE_ENV, "1") not in ("0", "false", "")
+
+
+def _try_lower_node(node: _Node, hash_refs: Dict[tuple, int]):
+    """Chain ops for one node, or None when it must execute staged.
+
+    Hash stages are fusable only when their (col, version, seed) hash is
+    consumed by no other stage — a shared hash belongs to the plan's hash-CSE
+    memo, and fusing one consumer would recompute it."""
+    if node.hash_seeds is not None:
+        for col, ver, _tok in node.in_specs:
+            for seed in node.hash_seeds:
+                if hash_refs.get((col, ver, seed), 0) > 1:
+                    return None
+    return fusion.lower_node(node.stage, node.in_specs, node.out_cols)
+
+
+def _make_fused(run: List[Tuple[_Node, list]]) -> _FusedNode:
+    members = [n for n, _ in run]
+    produced: List[str] = []
+    for m in members:
+        for c in m.out_cols:
+            if c not in produced:
+                produced.append(c)
+    dead_union: List[str] = []
+    for m in members:
+        for c in m.dead_after:
+            if c not in dead_union:
+                dead_union.append(c)
+    # produced AND dead inside the chain -> never materialised in the env
+    internal = [c for c in produced if c in dead_union]
+    out_cols = [c for c in produced if c not in internal]
+    program = fusion.build_program([ops for _, ops in run], emit=out_cols)
+    spec_by_col: Dict[str, tuple] = {}
+    for m in members:
+        for c, v, _t in m.in_specs:
+            spec_by_col.setdefault(c, (c, v, None))
+    in_specs = [spec_by_col[c] for c in program.inputs]
+    # an internal col that was ALSO an external input (overwritten in-chain,
+    # dead in-chain) still has its pre-chain value in the env — pop it
+    dead_after = [
+        c for c in dead_union if c not in internal or c in program.inputs
+    ]
+    return _FusedNode(
+        program=program,
+        in_specs=in_specs,
+        out_cols=out_cols,
+        dead_after=dead_after,
+        internal=internal,
+        members=members,
+    )
+
+
+def _fuse_chains(nodes: List[_Node], hash_refs: Dict[tuple, int]) -> List[object]:
+    """Greedily group maximal runs (>= 2) of consecutive fusable nodes."""
+    out: List[object] = []
+    run: List[Tuple[_Node, list]] = []
+
+    def flush():
+        if len(run) >= 2:
+            out.append(_make_fused(run))
+        else:
+            out.extend(n for n, _ in run)
+        run.clear()
+
+    for node in nodes:
+        ops = _try_lower_node(node, hash_refs)
+        if ops is None:
+            flush()
+            out.append(node)
+        else:
+            run.append((node, ops))
+    flush()
+    return out
 
 
 def _stage_of(s):
@@ -117,10 +219,12 @@ class TransformPlan:
         stages: Sequence,
         outputs: Optional[Sequence[str]] = None,
         donate: bool = False,
+        fuse: Optional[bool] = None,
     ):
         self._stages = list(stages)
         self._outputs = list(outputs) if outputs is not None else None
         self._donate = donate
+        self._fuse = _fuse_enabled(fuse)
         self._trace_count = 0
         self._seen_signatures: set = set()
         # compiled-wrapper cache: (in_shardings, donate) -> jax.jit wrapper.
@@ -176,6 +280,10 @@ class TransformPlan:
                 n.dead_after = [
                     c for c, last in last_use.items() if last == i and c not in keep
                 ]
+
+        # ---- chain fusion: collapse maximal fusable runs -----------------
+        if self._fuse:
+            nodes = _fuse_chains(nodes, hash_refs)
 
         self._nodes = nodes
         # static CSE telemetry: how many recomputations the plan removed
@@ -257,7 +365,32 @@ class TransformPlan:
                 memo[key] = h
             return h
 
+        def run_fused(node: _FusedNode) -> None:
+            from repro.kernels.fused_transform import ops as fused_ops
+
+            ins = [env[c] for c, _, _ in node.in_specs]
+            try:
+                outs = fused_ops.execute_chain(node.program, ins)
+            except fusion.ChainFallback:
+                # a runtime dtype the program cannot replay exactly (e.g. a
+                # numeric cast over a string column): execute the member
+                # stages one by one — bit-identical to the unfused plan
+                for m in node.members:
+                    m_ins = tuple(coerced(m.stage, spec) for spec in m.in_specs)
+                    m_outs = m.stage.apply(m.stage.weights(), m_ins)
+                    m_outs = tuple(m.stage._coerce_out(o) for o in m_outs)
+                    env.update(zip(m.out_cols, m_outs))
+                for c in node.internal:
+                    env.pop(c, None)
+            else:
+                env.update(zip(node.out_cols, outs))
+            for c in node.dead_after:
+                env.pop(c, None)
+
         for node in self._nodes:
+            if isinstance(node, _FusedNode):
+                run_fused(node)
+                continue
             stage = node.stage
             ins = tuple(coerced(stage, spec) for spec in node.in_specs)
 
@@ -311,24 +444,35 @@ class TransformPlan:
         Stages are referenced by index into the plan's stage list, so a
         consumer holding the same stage list (e.g. a loaded PreprocessModel
         bundle) can rebuild the plan with :meth:`from_schedule` and skip
-        analysis entirely."""
+        analysis entirely.  Fused-chain nodes carry their op program plus the
+        member node schedules (for the trace-time fallback)."""
+
+        def node_json(n):
+            if isinstance(n, _FusedNode):
+                return {
+                    "fused": n.program.to_json(),
+                    "in_specs": [[c, v, None] for c, v, _ in n.in_specs],
+                    "out_cols": list(n.out_cols),
+                    "dead_after": list(n.dead_after),
+                    "internal": list(n.internal),
+                    "members": [node_json(m) for m in n.members],
+                }
+            return {
+                "stage": n.stage_index,
+                "in_specs": [
+                    [c, v, list(t) if t is not None else None]
+                    for c, v, t in n.in_specs
+                ],
+                "out_cols": list(n.out_cols),
+                "hash_seeds": list(n.hash_seeds)
+                if n.hash_seeds is not None
+                else None,
+                "dead_after": list(n.dead_after),
+            }
+
         return {
             "outputs": self._outputs,
-            "nodes": [
-                {
-                    "stage": n.stage_index,
-                    "in_specs": [
-                        [c, v, list(t) if t is not None else None]
-                        for c, v, t in n.in_specs
-                    ],
-                    "out_cols": list(n.out_cols),
-                    "hash_seeds": list(n.hash_seeds)
-                    if n.hash_seeds is not None
-                    else None,
-                    "dead_after": list(n.dead_after),
-                }
-                for n in self._nodes
-            ],
+            "nodes": [node_json(n) for n in self._nodes],
             "cse_stats": dict(self.cse_stats),
         }
 
@@ -340,11 +484,34 @@ class TransformPlan:
         outs = sched.get("outputs")
         plan._outputs = list(outs) if outs is not None else None
         plan._donate = donate
+        plan._fuse = _fuse_enabled(None)
         plan._trace_count = 0
         plan._seen_signatures = set()
         plan._jit_cache = {}
-        plan._nodes = [
-            _Node(
+
+        def node_from(d):
+            if "fused" in d:
+                members = [node_from(m) for m in d["members"]]
+                if not plan._fuse:
+                    # kill switch honoured on loaded schedules too: expand
+                    # the chain back into its member stage nodes.  Member
+                    # dead_after is a subset of the chain's bookkeeping, so
+                    # re-attach the chain-level drops to the last member.
+                    members[-1].dead_after = sorted(
+                        set(members[-1].dead_after)
+                        | set(d["dead_after"])
+                        | set(d["internal"])
+                    )
+                    return members
+                return _FusedNode(
+                    program=fusion.ChainProgram.from_json(d["fused"]),
+                    in_specs=[(c, v, None) for c, v, _ in d["in_specs"]],
+                    out_cols=list(d["out_cols"]),
+                    dead_after=list(d["dead_after"]),
+                    internal=list(d["internal"]),
+                    members=members,
+                )
+            return _Node(
                 stage=plan._stages[d["stage"]],
                 in_specs=[
                     (c, v, tuple(t) if t is not None else None)
@@ -357,8 +524,11 @@ class TransformPlan:
                 dead_after=list(d["dead_after"]),
                 stage_index=d["stage"],
             )
-            for d in sched["nodes"]
-        ]
+
+        plan._nodes = []
+        for d in sched["nodes"]:
+            n = node_from(d)
+            plan._nodes.extend(n) if isinstance(n, list) else plan._nodes.append(n)
         plan.cse_stats = dict(sched["cse_stats"])
         plan.built_from_schedule = True
         return plan
@@ -424,6 +594,36 @@ class TransformPlan:
         benchmarks for trace-time and HLO-op-count measurements."""
         return jax.jit(self._execute).lower(batch)
 
+    # ------------------------------------------------------------------
+    # chain fusion introspection / autotune warmup
+    # ------------------------------------------------------------------
+    @property
+    def fused_chain_count(self) -> int:
+        return sum(1 for n in self._nodes if isinstance(n, _FusedNode))
+
+    @property
+    def fusion_stats(self) -> dict:
+        fused = [n for n in self._nodes if isinstance(n, _FusedNode)]
+        return {
+            "fused_chains": len(fused),
+            "fused_stages": sum(len(n.members) for n in fused),
+            "fused_ops": sum(len(n.program.ops) for n in fused),
+        }
+
+    def warm_fused(self, batch: T.Batch) -> dict:
+        """Autotune every fused chain against ``batch`` (one EAGER pass with
+        tuning enabled, so chain dispatch sees concrete arrays and can time
+        candidate block configs).  Winners persist in the tuned-config store;
+        a cache hit performs zero sweeps.  No-op when the plan has no fused
+        chains or the kernel backend is not active; returns tuner stats."""
+        from repro.kernels.fused_transform import tune
+
+        if not self.fused_chain_count or not tune.kernel_route():
+            return tune.stats()
+        with tune.tuning():
+            self._execute(dict(batch))
+        return tune.stats()
+
     @property
     def stats(self) -> dict:
         return {
@@ -432,6 +632,7 @@ class TransformPlan:
             "signatures_seen": len(self._seen_signatures),
             "jit_cache_entries": len(self._jit_cache),
             **self.cse_stats,
+            **self.fusion_stats,
         }
 
     def __repr__(self) -> str:

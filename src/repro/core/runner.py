@@ -288,12 +288,14 @@ class PlanRunner:
             self._fn = plan.jit_for(engine=engine, donate=donate)
         # pinned staging slots: signature -> list of {col: np.ndarray}
         self._slots: dict = {}
+        self._fused_warmed = False
         self.stats = {
             "batches_in": 0,
             "superbatches": 0,
             "rows": 0,
             "local_rows": 0,
             "seconds": 0.0,
+            "fused_chains": getattr(plan, "fused_chain_count", 0),
         }
 
     # -- staging -----------------------------------------------------------
@@ -482,7 +484,7 @@ class PlanRunner:
         from repro.data.pipeline import prefetch as _prefetch
 
         t0 = time.perf_counter()
-        staged = self._staged(batches)
+        staged = self._staged(self._fused_warmup(batches))
         if self.prefetch > 0:
             staged = _prefetch(staged, depth=self.prefetch)
 
@@ -493,6 +495,25 @@ class PlanRunner:
                 yield from self._run_serial(staged)
         finally:
             self.stats["seconds"] += time.perf_counter() - t0
+
+    def _fused_warmup(self, batches: Iterable[T.Batch]) -> Iterator[T.Batch]:
+        """Autotune the plan's fused chains on the FIRST host batch of the
+        stream (once per runner), so the superbatch executable compiled right
+        after lowers with tuned block configs — a persisted-cache hit costs
+        one store lookup and zero sweeps.  No-op when the plan has no fused
+        nodes or the kernel route is off (then ``warm_fused`` returns the
+        tuner stats without executing anything)."""
+        it = iter(batches)
+        first = next(it, None)
+        if first is None:
+            return
+        if not self._fused_warmed:
+            self._fused_warmed = True
+            warm = getattr(self.plan, "warm_fused", None)  # stub plans lack it
+            if warm is not None:
+                self.stats["fused_tune"] = warm(first)
+        yield first
+        yield from it
 
     def _account(self, rows: List[int]) -> None:
         self.stats["superbatches"] += 1

@@ -1,0 +1,11 @@
+"""Fused transform-chain megakernel: one Pallas call per fused stage chain,
+with a block-config autotuner and a persisted tuned-config store.
+
+Public surface:
+
+* ``ops.execute_chain(program, inputs)`` — dispatch (kernel / XLA executor)
+* ``tune`` — autotuner, config store, ``REPRO_FUSED_KERNEL`` routing
+* ``ref.ref_chain`` — pure-numpy ground truth for tests
+"""
+from . import ops, ref, tune  # noqa: F401
+from .fused_transform import chain_call  # noqa: F401

@@ -1,0 +1,190 @@
+"""Pallas megakernel: one fused transform chain in one kernel launch.
+
+The staged plan pays one HBM round-trip per stage boundary; here the whole
+op program runs per row block with every intermediate living in VMEM, so a
+k-op chain moves ``inputs + outputs`` bytes instead of ``~2k`` column
+round-trips (the roofline win ``benchmarks/roofline.py`` tabulates).
+
+Two layouts, picked by whether the chain hashes string columns:
+
+* **rows mode** (byte inputs present): grid over row blocks of the flattened
+  lead axis.  Numeric columns arrive as (block_rows, 1) VMEM blocks, byte
+  columns as (block_rows, Lp) int32 blocks (uint8 widened, L padded to a
+  multiple of ``chunk``).  In-chain hashing reuses the bloom_hash 32-bit-limb
+  FNV-1a-64 (`_hash_init`/`_hash_update`/`_fmix64`) — bit-exact with
+  ``repro.core.hashing`` — looping ``chunk``-wide byte slices via
+  ``fori_loop`` so long strings don't blow up the unrolled program.
+* **flat mode** (elementwise only): every column flattened to one axis and
+  retiled (block_rows, block_cols); the grid walks row tiles.
+
+Op bodies are shared with the XLA executor (``ops.apply_op``) except:
+
+* ``bucketize`` — ``searchsorted`` doesn't map onto the VPU; the kernel
+  computes ``n_splits - sum(x < split_i)``, which equals searchsorted's
+  side="right" insertion index for every input INCLUDING NaN (all compares
+  false -> index n_splits, exactly where searchsorted puts NaN).
+* ``hash_index`` — the limb path above (program-invalid off the kernel for
+  seeds >= 2**32, enforced by ``ChainProgram.kernel_ok``).
+
+Zero row padding flows through as garbage rows and is sliced off after the
+call; zero byte padding never updates the FNV state (same invariant the
+bloom_hash kernel relies on).  int64/float64 slots are fine in interpret
+mode (how non-TPU tests run); on real TPUs Mosaic lowers them as 32-bit
+pairs, which the autotuner's timing sweep prices in per backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import fusion
+from repro.kernels.bloom_hash.bloom_hash import (
+    _fmix64,
+    _hash_init,
+    _hash_update,
+    _u32,
+)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _hash_bytes(seed: int, b: jax.Array, chunk: int):
+    """(n, Lp) int32 zero-padded bytes -> avalanched (h_hi, h_lo) limbs."""
+    n, Lp = b.shape
+    h_hi, h_lo = _hash_init(_u32(seed), n)
+    if not chunk or Lp <= chunk:
+        h_hi, h_lo = _hash_update(h_hi, h_lo, b, Lp)
+        return _fmix64(h_hi, h_lo)
+
+    def body(c, state):
+        hh, hl = state
+        blk = jax.lax.dynamic_slice(b, (0, c * chunk), (n, chunk))
+        return _hash_update(hh, hl, blk, chunk)
+
+    h_hi, h_lo = jax.lax.fori_loop(0, Lp // chunk, body, (h_hi, h_lo))
+    return _fmix64(h_hi, h_lo)
+
+
+def _kernel_op(kind: str, params: tuple, args: List[jax.Array]) -> jax.Array:
+    from . import ops as _ops
+
+    if kind == "bucketize":
+        x = args[0].astype(jnp.float64)
+        acc = jnp.zeros(x.shape, jnp.int32)
+        for s in params:
+            acc += (x < jnp.float64(s)).astype(jnp.int32)
+        return (jnp.int32(len(params)) - acc).astype(jnp.int64)
+    return _ops.apply_op(kind, params, args)
+
+
+def _chain_kernel(*refs, program: fusion.ChainProgram, byte_slots: frozenset, chunk: int):
+    n_in = len(program.inputs)
+    env = {}
+    for name, ref in zip(program.inputs, refs[:n_in]):
+        env[name] = ref[...]
+    for op in program.ops:
+        if op.kind == "hash_index":
+            nb, seed, off = op.params
+            h_hi, h_lo = _hash_bytes(seed, env[op.inputs[0]], chunk)
+            folded = h_hi ^ h_lo
+            env[op.output] = ((folded % _u32(nb)).astype(jnp.int64) + off)[:, None]
+        else:
+            env[op.output] = _kernel_op(op.kind, op.params, [env[s] for s in op.inputs])
+    for name, ref in zip(program.outputs, refs[n_in:]):
+        ref[...] = env[name]
+
+
+def _pow2ceil(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def _pad_rows(x: jax.Array, rp: int) -> jax.Array:
+    if x.shape[0] == rp:
+        return x
+    return jnp.pad(x, ((0, rp - x.shape[0]),) + ((0, 0),) * (x.ndim - 1))
+
+
+def chain_call(
+    program: fusion.ChainProgram,
+    inputs: List[jax.Array],
+    plan: dict,
+    config: dict,
+) -> List[jax.Array]:
+    """Execute ``program`` via one pallas_call, per the layout ``plan`` from
+    ``ops.kernel_plan`` and a (block_rows, block_cols, chunk) ``config``."""
+    lead, byte_slots = plan["lead"], frozenset(plan["byte_slots"])
+    rows = 1
+    for d in lead:
+        rows *= int(d)
+    if byte_slots:
+        return _call_rows(program, inputs, plan, config, rows, byte_slots)
+    return _call_flat(program, inputs, plan, config, rows)
+
+
+def _call_rows(program, inputs, plan, config, rows, byte_slots):
+    chunk = int(config["chunk"])
+    br = min(int(config["block_rows"]), _pow2ceil(rows))
+    rp = -(-rows // br) * br
+    lead = plan["lead"]
+
+    ins, in_specs = [], []
+    for name, x in zip(program.inputs, inputs):
+        if name in byte_slots:
+            L = x.shape[-1]
+            lp = -(-L // chunk) * chunk if L > chunk else L
+            b = x.astype(jnp.int32).reshape(rows, L)
+            if lp != L:
+                b = jnp.pad(b, ((0, 0), (0, lp - L)))
+            ins.append(_pad_rows(b, rp))
+            in_specs.append(pl.BlockSpec((br, lp), lambda i: (i, 0)))
+        else:
+            ins.append(_pad_rows(x.reshape(rows, 1), rp))
+            in_specs.append(pl.BlockSpec((br, 1), lambda i: (i, 0)))
+
+    out_avals = plan["out_avals"]
+    outs = pl.pallas_call(
+        functools.partial(
+            _chain_kernel, program=program, byte_slots=byte_slots, chunk=chunk
+        ),
+        grid=(rp // br,),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((br, 1), lambda i: (i, 0)) for _ in out_avals],
+        out_shape=[jax.ShapeDtypeStruct((rp, 1), a.dtype) for a in out_avals],
+        interpret=_interpret(),
+    )(*ins)
+    return [o[:rows, 0].reshape(lead) for o in outs]
+
+
+def _call_flat(program, inputs, plan, config, total):
+    bc = int(config["block_cols"])
+    br = min(int(config["block_rows"]), _pow2ceil(-(-total // bc)))
+    tile = br * bc
+    tp = -(-total // tile) * tile
+    lead = plan["lead"]
+
+    ins = []
+    for x in inputs:
+        flat = x.reshape(total)
+        if tp != total:
+            flat = jnp.pad(flat, (0, tp - total))
+        ins.append(flat.reshape(tp // bc, bc))
+
+    out_avals = plan["out_avals"]
+    spec = pl.BlockSpec((br, bc), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        functools.partial(
+            _chain_kernel, program=program, byte_slots=frozenset(), chunk=0
+        ),
+        grid=(tp // tile,),
+        in_specs=[spec for _ in ins],
+        out_specs=[spec for _ in out_avals],
+        out_shape=[jax.ShapeDtypeStruct((tp // bc, bc), a.dtype) for a in out_avals],
+        interpret=_interpret(),
+    )(*ins)
+    return [o.reshape(tp)[:total].reshape(lead) for o in outs]

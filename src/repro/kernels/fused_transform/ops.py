@@ -1,0 +1,269 @@
+"""Fused-chain execution: kernel dispatch + the XLA chain executor.
+
+:func:`execute_chain` runs one :class:`~repro.core.fusion.ChainProgram` over
+its external input columns and returns the chain's output columns.  Two
+routes, selected by ``tune.kernel_route()`` (TPU, or ``REPRO_FUSED_KERNEL=1``
+for interpret-mode testing):
+
+* **Pallas megakernel** (``fused_transform.chain_call``) — one grid over row
+  blocks, the whole op program executed per block with intermediates living
+  in VMEM, in-chain string hashing via the bloom_hash 32-bit-limb FNV.  Only
+  layout-eligible programs qualify (see :func:`kernel_plan`).
+* **XLA chain executor** (:func:`execute_chain_xla`) — the whole chain as one
+  jit-traceable jnp expression.  This is the semantic reference: every op
+  replays the EXACT primitives of the stage it was lowered from, so fused
+  output is bit-identical to the staged plan.
+
+Both routes are traced inside the plan's jitted program; only autotuning
+(:mod:`.tune`) needs concrete arrays and happens exclusively under
+``tune.tuning()`` driven by ``TransformPlan.warm_fused``.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fusion, hashing
+from repro.core import types as T
+
+from . import tune
+
+
+# ---------------------------------------------------------------------------
+# XLA chain executor — the bit-exact semantic reference for every route
+# ---------------------------------------------------------------------------
+
+
+def apply_op(kind: str, params: tuple, args: List[jax.Array]) -> jax.Array:
+    """One ChainOp with the exact jnp semantics of the source stage (same
+    primitives, same python-scalar weak-type promotion).  Shared with the
+    megakernel body for every op that Mosaic can lower directly."""
+    if kind == "cast":
+        (x,) = args
+        (d,) = params
+        if T.is_string_col(x):
+            # the staged path would run string_to_number here; not replayable
+            # as an elementwise cast -> whole chain falls back stage-by-stage
+            raise fusion.ChainFallback(f"cast({d}) on string column")
+        return x.astype(jnp.dtype(d))
+    if kind == "log":
+        (x,) = args
+        alpha, base = params
+        y = jnp.log(x + alpha)
+        if base is not None:
+            y = y / jnp.log(jnp.asarray(base, y.dtype))
+        return y
+    if kind == "exp":
+        return jnp.exp(args[0])
+    if kind == "power":
+        return jnp.power(args[0], params[0])
+    if kind == "abs":
+        return jnp.abs(args[0])
+    if kind == "clip":
+        return jnp.clip(args[0], params[0], params[1])
+    if kind == "round":
+        return {"round": jnp.round, "floor": jnp.floor, "ceil": jnp.ceil}[params[0]](args[0])
+    if kind == "scale":
+        mult, off = params
+        return args[0] * mult + off
+    if kind == "std_score":
+        mean, std = params
+        return (args[0] - mean) / std
+    if kind == "binary_const":
+        op, const = params
+        x = args[0]
+        return _binary()[op](x, jnp.asarray(const, x.dtype))
+    if kind == "binary":
+        return _binary()[params[0]](args[0], args[1])
+    if kind == "cmp_const":
+        op, const = params
+        return _cmp()[op](args[0], const)
+    if kind == "cmp":
+        return _cmp()[params[0]](args[0], args[1])
+    if kind == "logical":
+        op = params[0]
+        if op == "not":
+            return ~args[0].astype(bool)
+        x, y = (a.astype(bool) for a in args)
+        return {"and": jnp.logical_and, "or": jnp.logical_or, "xor": jnp.logical_xor}[op](x, y)
+    if kind == "where":
+        c, t, e = args
+        return jnp.where(c.astype(bool), t, e)
+    if kind == "is_null":
+        (x,) = args
+        (sent,) = params
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jnp.isnan(x)
+        if sent is None:
+            return jnp.zeros(x.shape, bool)
+        return x == sent
+    if kind == "coalesce":
+        (x,) = args
+        fill, sent = params
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jnp.where(jnp.isnan(x), jnp.asarray(fill, x.dtype), x)
+        if sent is None:
+            return x
+        return jnp.where(x == sent, jnp.asarray(int(fill), x.dtype), x)
+    if kind == "impute":
+        (x,) = args
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            return x
+        return jnp.where(jnp.isnan(x), jnp.asarray(params[0], x.dtype), x)
+    if kind in ("std_scale", "minmax_scale"):
+        (x,) = args
+        a, b = params  # (mean, std) / (min, span)
+        dt = x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float64
+        return (x.astype(dt) - jnp.asarray(a, dt)) / jnp.asarray(b, dt)
+    if kind == "bucketize":
+        x = args[0]
+        splits = jnp.asarray(list(params), jnp.float64)
+        return jnp.searchsorted(splits, x.astype(jnp.float64), side="right").astype(jnp.int64)
+    if kind == "hash_index":
+        (x,) = args
+        nb, seed, off = params
+        if T.is_string_col(x):
+            idx = hashing.hash_to_bins_routed(x, nb, seed)
+        else:
+            idx = hashing.int_to_bins(x, nb, seed)
+        return idx + off
+    raise fusion.ChainFallback(f"unknown chain op kind: {kind}")
+
+
+def _binary():
+    from repro.core.transformers.math import _BINARY
+
+    return _BINARY
+
+
+def _cmp():
+    from repro.core.transformers.logical import _CMP
+
+    return _CMP
+
+
+def execute_chain_xla(program: fusion.ChainProgram, inputs: List[jax.Array]) -> List[jax.Array]:
+    """Run the whole chain as one jnp expression (XLA fuses it into a single
+    computation when jitted — the CPU/GPU payoff of the fusion pass)."""
+    env = dict(zip(program.inputs, inputs))
+    for op in program.ops:
+        env[op.output] = apply_op(op.kind, op.params, [env[s] for s in op.inputs])
+    return [env[c] for c in program.outputs]
+
+
+# ---------------------------------------------------------------------------
+# kernel eligibility + dispatch
+# ---------------------------------------------------------------------------
+
+
+def kernel_plan(program: fusion.ChainProgram, inputs: List[jax.Array]):
+    """Partition the chain into shape-homogeneous subprograms and lay each
+    out on a row grid, or return None when the megakernel cannot host it.
+
+    A plan mixes lead shapes freely (e.g. LTR's query-level ``(B,)`` columns
+    next to item-level ``(B, K)``); elementwise ops never cross shapes, so
+    ops group by their output's lead shape and each group becomes one
+    pallas_call with its own tuned config.  Eligibility per group:
+
+    * byte (string) inputs may ONLY feed ``hash_index`` ops, and every
+      ``hash_index`` must consume an external byte input (in-kernel hashing
+      is the 32-bit-limb string path; integer hashing stays on XLA);
+    * every op's non-byte inputs share the group's lead shape exactly (no
+      cross-shape broadcasting), with at least one row.
+
+    Returns a list of ``(subprogram, layout)`` with layout carrying
+    ``byte_slots`` / ``lead`` / ``out_avals``.
+    """
+    shapes = {s: x.shape for s, x in zip(program.inputs, inputs)}
+    is_bytes = {s: T.is_string_col(x) for s, x in zip(program.inputs, inputs)}
+    groups: dict = {}
+    order: List[tuple] = []
+    for op in program.ops:
+        if op.kind == "hash_index":
+            b = op.inputs[0]
+            if not is_bytes.get(b, False) or len(shapes[b]) < 2:
+                return None
+            gshape = shapes[b][:-1]
+        else:
+            if any(is_bytes.get(s, False) for s in op.inputs):
+                return None
+            in_shapes = [shapes[s] for s in op.inputs]
+            gshape = in_shapes[0]
+            if any(sh != gshape for sh in in_shapes):
+                return None
+        if not gshape:
+            return None  # scalar columns: nothing to grid over
+        shapes[op.output] = gshape
+        is_bytes[op.output] = False
+        if gshape not in groups:
+            groups[gshape] = []
+            order.append(gshape)
+        groups[gshape].append(op)
+    if not order:
+        return None
+
+    env_in = dict(zip(program.inputs, inputs))
+    plans = []
+    for gshape in order:
+        ops_g = groups[gshape]
+        written = {op.output for op in ops_g}
+        ins: List[str] = []
+        for op in ops_g:
+            for s in op.inputs:
+                if s not in written and s not in ins:
+                    ins.append(s)
+        outs = [c for c in program.outputs if c in written]
+        sub = fusion.ChainProgram(ops_g, ins, outs)
+        try:
+            avals = jax.eval_shape(
+                lambda *xs, sub=sub: tuple(execute_chain_xla(sub, list(xs))),
+                *[env_in[s] for s in ins],
+            )
+        except fusion.ChainFallback:
+            raise
+        except Exception:
+            return None
+        if any(a.shape != gshape for a in avals):
+            return None
+        byte_slots = {s for s in ins if is_bytes.get(s, False)}
+        plans.append((sub, {"byte_slots": byte_slots, "lead": gshape, "out_avals": list(avals)}))
+    return plans
+
+
+def execute_chain(program: fusion.ChainProgram, inputs: List[jax.Array]) -> List[jax.Array]:
+    """Dispatch one fused chain: Pallas megakernel when routed + eligible,
+    XLA chain executor otherwise.  Raises ChainFallback (for the plan to
+    replay member stages) only for runtime-dtype mismatches."""
+    if tune.kernel_route() and program.kernel_ok:
+        plans = kernel_plan(program, inputs)
+        if plans is not None:
+            return _execute_kernel(program, inputs, plans)
+    return execute_chain_xla(program, inputs)
+
+
+def _execute_kernel(program, inputs, plans) -> List[jax.Array]:
+    from . import fused_transform as ft
+
+    env = dict(zip(program.inputs, inputs))
+    concrete = not any(isinstance(x, jax.core.Tracer) for x in inputs)
+    outs: dict = {}
+    for sub, layout in plans:
+        xs = [env[s] for s in sub.inputs]
+        rows = 1
+        for d in layout["lead"]:
+            rows *= int(d)
+        key = tune.key_for(sub.signature(), rows, [str(x.dtype) for x in xs])
+        if tune.is_tuning() and concrete:
+            config = tune.ensure_tuned(
+                key,
+                has_bytes=bool(layout["byte_slots"]),
+                run_fn=lambda cfg, sub=sub, xs=xs, layout=layout: jax.block_until_ready(
+                    ft.chain_call(sub, xs, layout, cfg)
+                ),
+            )
+        else:
+            config = tune.get_config(key)
+        outs.update(zip(sub.outputs, ft.chain_call(sub, xs, layout, config)))
+    return [outs[c] for c in program.outputs]

@@ -1,0 +1,103 @@
+"""Pure-numpy reference for fused chains — ground truth for the fuzz tests.
+
+Implements the same op set as ``ops.apply_op`` with numpy only (python-int
+hashing, no JAX), so both the Pallas megakernel (interpret mode) and the XLA
+chain executor can be checked bit-exact against an implementation that
+shares no code with either.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+_M64 = (1 << 64) - 1
+_FNV_OFFSET = 14695981039346656037
+_FNV_PRIME = 1099511628211
+_M1 = 0xFF51AFD7ED558CCD
+_M2 = 0xC4CEB9FE1A85EC53
+
+
+def ref_avalanche(h: int) -> int:
+    h ^= h >> 33
+    h = (h * _M1) & _M64
+    h ^= h >> 33
+    h = (h * _M2) & _M64
+    h ^= h >> 33
+    return h
+
+
+def ref_fnv1a64(row: Sequence[int], seed: int = 0) -> int:
+    """FNV-1a-64 over one row of bytes; zero bytes never update the state."""
+    h = _FNV_OFFSET ^ (seed & _M64)
+    for b in row:
+        if int(b) != 0:
+            h = ((h ^ int(b)) * _FNV_PRIME) & _M64
+    return ref_avalanche(h)
+
+
+def ref_hash_int64(v: int, seed: int = 0) -> int:
+    h = ((int(v) & _M64) + 0x9E3779B97F4A7C15 * (seed + 1)) & _M64
+    return ref_avalanche(h)
+
+
+def ref_fold32(h: int) -> int:
+    return (h ^ (h >> 32)) & 0xFFFFFFFF
+
+
+def _is_bytes(x: np.ndarray) -> bool:
+    return x.dtype == np.uint8
+
+
+def ref_op(kind: str, params: tuple, args: List[np.ndarray]) -> np.ndarray:
+    if kind == "cast":
+        return args[0].astype(np.dtype(params[0]))
+    if kind == "log":
+        alpha, base = params
+        y = np.log(args[0] + alpha)
+        if base is not None:
+            y = y / np.asarray(np.log(base), y.dtype)
+        return y
+    if kind == "exp":
+        return np.exp(args[0])
+    if kind == "power":
+        return np.power(args[0], params[0])
+    if kind == "abs":
+        return np.abs(args[0])
+    if kind == "clip":
+        lo, hi = params
+        return np.clip(args[0], lo, hi)
+    if kind == "round":
+        f = {"round": np.round, "floor": np.floor, "ceil": np.ceil}[params[0]]
+        return f(args[0])
+    if kind == "scale":
+        return args[0] * params[0] + params[1]
+    if kind == "std_score":
+        return (args[0] - params[0]) / params[1]
+    if kind == "bucketize":
+        splits = np.asarray(list(params), np.float64)
+        return np.searchsorted(splits, args[0].astype(np.float64), side="right").astype(
+            np.int64
+        )
+    if kind == "hash_index":
+        nb, seed, off = params
+        x = args[0]
+        if _is_bytes(x):
+            hashes = [ref_fnv1a64(row, seed) for row in x.reshape(-1, x.shape[-1])]
+            shape = x.shape[:-1]
+        else:
+            hashes = [ref_hash_int64(v, seed) for v in x.reshape(-1)]
+            shape = x.shape
+        bins = np.asarray([ref_fold32(h) % nb for h in hashes], np.int64)
+        return bins.reshape(shape) + off
+    raise NotImplementedError(f"no numpy reference for chain op {kind!r}")
+
+
+def ref_chain(program, inputs: List[np.ndarray]) -> List[np.ndarray]:
+    """Numpy ground truth for ``ops.execute_chain`` on a ChainProgram."""
+    env: Dict[str, np.ndarray] = dict(
+        zip(program.inputs, [np.asarray(x) for x in inputs])
+    )
+    for op in program.ops:
+        env[op.output] = ref_op(op.kind, op.params, [env[s] for s in op.inputs])
+    return [env[c] for c in program.outputs]

@@ -1,0 +1,228 @@
+"""Block-config autotuner + persisted tuned-config store for fused chains.
+
+The megakernel's throughput depends on (block_rows, block_cols, chunk) —
+rows per grid step, lane width of the elementwise tile, and the byte-loop
+width for in-chain hashing.  Good values depend on the chain, the batch
+shape, the dtypes and the backend, so (mirroring how aiter ships tuned
+fused-MoE configs as a JSON table) winners are swept once and persisted:
+
+* store file: ``~/.cache/repro/tuned_configs.json`` (override with
+  ``REPRO_TUNE_CACHE``), merged over the repo-shipped defaults in
+  ``default_configs.json`` next to this module;
+* key: ``<chain signature>|r<pow2 row bucket>|<input dtypes>|<backend>``;
+* entry: ``{"block_rows": .., "block_cols": .., "chunk": .., "us": ..,
+  "swept": ..}``.
+
+Tuning only happens inside an explicit :func:`tuning` scope driven with
+CONCRETE arrays — :meth:`repro.core.plan.TransformPlan.warm_fused` runs the
+plan eagerly under it, and ``registry.warmup`` calls that before AOT
+precompilation so serving never tunes on the request path.  At trace time
+dispatch only *reads* the store (pure Python, no sweeps).  A cache hit is
+therefore exactly zero sweeps — asserted by the tests via :func:`stats`.
+
+``REPRO_TUNE_BUDGET`` caps the number of candidate configs timed per sweep
+(default 8; 0 disables sweeping, falling back to the default config).
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+#: fallback when no tuned entry exists (also the sweep's first candidate):
+#: 512x8 elementwise tiles, 32-byte hash chunks.
+DEFAULT_CONFIG = {"block_rows": 512, "block_cols": 8, "chunk": 32}
+
+_DEFAULTS_FILE = os.path.join(os.path.dirname(__file__), "default_configs.json")
+
+_store: Optional[Dict[str, dict]] = None
+_tuning = False
+_sweeps = 0
+_hits = 0
+
+
+# ---------------------------------------------------------------------------
+# routing / env knobs
+# ---------------------------------------------------------------------------
+
+
+def kernel_route() -> bool:
+    """Whether fused chains should route to the Pallas megakernel.
+
+    ``REPRO_FUSED_KERNEL=1`` forces it (interpret mode off-TPU — how the
+    tests drive it), ``=0`` forces the XLA chain executor, unset = kernel on
+    TPU only."""
+    flag = os.environ.get("REPRO_FUSED_KERNEL")
+    if flag is not None:
+        return flag not in ("0", "false", "")
+    return jax.default_backend() == "tpu"
+
+
+def backend_tag() -> str:
+    return "tpu" if jax.default_backend() == "tpu" else "interpret"
+
+
+def budget() -> int:
+    return int(os.environ.get("REPRO_TUNE_BUDGET", "8"))
+
+
+def cache_path() -> str:
+    p = os.environ.get("REPRO_TUNE_CACHE")
+    if p:
+        return p
+    return os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "tuned_configs.json"
+    )
+
+
+# ---------------------------------------------------------------------------
+# store
+# ---------------------------------------------------------------------------
+
+
+def _read_json(path: str) -> Dict[str, dict]:
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        return dict(payload.get("configs", {}))
+    except (OSError, ValueError):
+        return {}
+
+
+def _load_store() -> Dict[str, dict]:
+    global _store
+    if _store is None:
+        merged = _read_json(_DEFAULTS_FILE)  # repo-shipped defaults first
+        merged.update(_read_json(cache_path()))  # user cache wins
+        _store = merged
+    return _store
+
+
+def _save_store() -> None:
+    path = cache_path()
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"version": 1, "configs": _load_store()}, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # read-only home: tuning still works, it just won't persist
+
+
+def reload() -> None:
+    """Drop the in-memory store so the next lookup re-reads the JSON files
+    (tests use this to prove the cache genuinely round-trips via disk)."""
+    global _store
+    _store = None
+
+
+# ---------------------------------------------------------------------------
+# keys
+# ---------------------------------------------------------------------------
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def key_for(signature: str, rows: int, dtypes: List[str]) -> str:
+    """Rows are bucketed to the next power of two: one tuned config covers a
+    range of batch sizes instead of re-sweeping per exact shape."""
+    return f"{signature}|r{_pow2(rows)}|{'+'.join(dtypes)}|{backend_tag()}"
+
+
+def get_config(key: str) -> dict:
+    cfg = _load_store().get(key)
+    if cfg is None:
+        return dict(DEFAULT_CONFIG)
+    return {**DEFAULT_CONFIG, **cfg}
+
+
+# ---------------------------------------------------------------------------
+# tuning scope + sweep
+# ---------------------------------------------------------------------------
+
+
+def is_tuning() -> bool:
+    return _tuning
+
+
+@contextlib.contextmanager
+def tuning():
+    global _tuning
+    prev = _tuning
+    _tuning = True
+    try:
+        yield
+    finally:
+        _tuning = prev
+
+
+def candidates(has_bytes: bool) -> List[dict]:
+    """Deterministic sweep order, best-guess first.  Hash chains sweep the
+    byte-loop chunk too; elementwise chains only the tile geometry."""
+    out = [dict(DEFAULT_CONFIG)]
+    rows_opts = (512, 256, 1024, 2048, 128)
+    cols_opts = (8, 1, 4, 16)
+    chunk_opts = (32, 16, 64) if has_bytes else (32,)
+    for chunk in chunk_opts:
+        for br in rows_opts:
+            for bc in cols_opts:
+                cfg = {"block_rows": br, "block_cols": bc, "chunk": chunk}
+                if cfg not in out:
+                    out.append(cfg)
+    return out
+
+
+def ensure_tuned(
+    key: str, has_bytes: bool, run_fn: Callable[[dict], None]
+) -> dict:
+    """Sweep ``run_fn`` over candidate configs for ``key`` unless the store
+    already holds a winner (zero sweeps on a hit).  ``run_fn`` executes the
+    chain once with the given config; each candidate is timed over a warmup
+    call plus 2 measured calls."""
+    global _sweeps, _hits
+    store = _load_store()
+    if key in store:
+        _hits += 1
+        return get_config(key)
+    cap = budget()
+    if cap <= 0:
+        return dict(DEFAULT_CONFIG)
+    best_cfg, best_us, swept = dict(DEFAULT_CONFIG), float("inf"), 0
+    for cfg in candidates(has_bytes)[:cap]:
+        try:
+            run_fn(cfg)  # warmup: pays compile/lowering cost
+            t0 = time.perf_counter()
+            run_fn(cfg)
+            run_fn(cfg)
+            us = (time.perf_counter() - t0) / 2 * 1e6
+        except Exception:
+            continue  # config invalid for this shape (e.g. tile > rows)
+        _sweeps += 1
+        swept += 1
+        if us < best_us:
+            best_cfg, best_us = cfg, us
+    store[key] = {**best_cfg, "us": round(best_us, 2), "swept": swept}
+    _save_store()
+    return best_cfg
+
+
+def stats() -> dict:
+    return {
+        "sweeps": _sweeps,
+        "hits": _hits,
+        "entries": len(_load_store()),
+        "path": cache_path(),
+    }
+
+
+def reset_stats() -> None:
+    global _sweeps, _hits
+    _sweeps = 0
+    _hits = 0

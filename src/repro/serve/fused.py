@@ -113,6 +113,14 @@ class FusedModel:
             self._jit_cache[key] = fn
         return fn
 
+    def warm_fused(self, raw: T.Batch) -> dict:
+        """Autotune the plan's fused transform chains on a representative raw
+        batch (see :meth:`repro.core.plan.TransformPlan.warm_fused`).  Called
+        by ``registry.warmup`` BEFORE the AOT precompile sweep so tuned block
+        configs are on disk by the time the fused executable lowers; a tuned-
+        config cache hit performs zero sweeps.  Returns the tuner stats."""
+        return self._plan.warm_fused(raw)
+
     @property
     def trace_count(self) -> int:
         """How many times the fused function has been traced — the serving

@@ -1,0 +1,294 @@
+"""Chain fusion: fused plans are bit-identical to staged plans (LTR +
+quickstart pipelines, export round-trip, kill switch), the Pallas megakernel
+route matches too (interpret mode), and the tuned-config cache round-trips
+through disk with zero sweeps on a warm start."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    HashIndexTransformer,
+    KamaeSparkPipeline,
+    LogTransformer,
+    StringIndexEstimator,
+    StringToStringListTransformer,
+)
+from repro.core import types as T
+from repro.core.plan import TransformPlan, _FusedNode
+
+
+def _assert_bitwise(a, b):
+    assert set(a.keys()) == set(b.keys())
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]), err_msg=k)
+
+
+@pytest.fixture(scope="module")
+def ltr():
+    from repro.apps.ltr_pipeline import build_ltr_pipeline
+    from repro.data import ltr_rows
+
+    train = ltr_rows(96, seed=0)
+    fitted, cols = build_ltr_pipeline(train)
+    batch = {k: v[:48] for k, v in ltr_rows(48, seed=5).items()}
+    return fitted, cols, batch
+
+
+@pytest.fixture(scope="module")
+def quickstart():
+    rng = np.random.default_rng(1)
+    n = 128
+    batch = {
+        "UserID": jnp.asarray(rng.integers(1, 5000, n), jnp.int32),
+        "Genres": jnp.asarray(
+            T.encode_strings(rng.choice(["Action|Comedy", "Drama"], n), 32)
+        ),
+        "Price": jnp.asarray(rng.lognormal(3, 2, n), jnp.float32),
+    }
+    pipe = KamaeSparkPipeline(
+        stages=[
+            HashIndexTransformer(
+                inputCol="UserID", outputCol="UserID_indexed",
+                inputDtype="string", numBins=10000,
+            ),
+            StringToStringListTransformer(
+                inputCol="Genres", outputCol="Genres_split", separator="|",
+                listLength=4, defaultValue="PADDED",
+            ),
+            StringIndexEstimator(
+                inputCol="Genres_split", outputCol="Genres_indexed",
+                numOOVIndices=1, maskToken="PADDED",
+            ),
+            LogTransformer(inputCol="Price", outputCol="Price_log", alpha=1.0),
+        ]
+    )
+    return pipe.fit(batch), batch
+
+
+@pytest.fixture()
+def hash_chain():
+    """Synthetic pipeline whose whole body fuses into one hash-bearing chain
+    (string hash -> scale -> bucketize -> clip), exercising the rows-mode
+    kernel layout."""
+    from repro.core.transformers.math import (
+        BucketizeTransformer,
+        ClipTransformer,
+        ScaleTransformer,
+    )
+
+    n = 96
+    batch = {
+        "city": jnp.asarray(
+            T.encode_strings([f"city_{i % 37}" for i in range(n)], 32)
+        )
+    }
+    pipe = KamaeSparkPipeline(
+        stages=[
+            HashIndexTransformer(inputCol="city", outputCol="h", numBins=97, seed=3),
+            ScaleTransformer(inputCol="h", outputCol="s", multiplier=0.25, offset=1.0),
+            BucketizeTransformer(inputCol="s", outputCol="b", splits=[2.0, 5.0, 11.0]),
+            ClipTransformer(inputCol="b", outputCol="c", minValue=1, maxValue=2),
+        ]
+    )
+    return pipe.fit(batch), batch
+
+
+def test_ltr_fused_plan_bitwise_equal(ltr):
+    fitted, _, batch = ltr
+    plan_fused = TransformPlan(fitted.stages, fuse=True)
+    plan_staged = TransformPlan(fitted.stages, fuse=False)
+    assert plan_fused.fused_chain_count >= 3
+    assert plan_fused.fusion_stats["fused_stages"] >= 10
+    assert plan_staged.fused_chain_count == 0
+    _assert_bitwise(plan_staged(batch), plan_fused(batch))
+
+
+def test_ltr_fused_eager_and_pruned(ltr):
+    fitted, cols, batch = ltr
+    plan = TransformPlan(fitted.stages, outputs=cols, fuse=True)
+    out = plan.eager(batch)  # eager path drives run_fused + liveness drops
+    assert set(out.keys()) == set(cols)
+    # compare eager-vs-eager: jit and eager already differ by one ulp on a
+    # few float32 columns with fusion OFF (XLA kernel fusion), so the jitted
+    # staged plan is not a bitwise reference for an eager run
+    ref = TransformPlan(fitted.stages, outputs=cols, fuse=False).eager(batch)
+    _assert_bitwise(ref, out)
+
+
+def test_quickstart_fused_plan_bitwise_equal(quickstart):
+    fitted, batch = quickstart
+    plan_fused = TransformPlan(fitted.stages, fuse=True)
+    plan_staged = TransformPlan(fitted.stages, fuse=False)
+    _assert_bitwise(plan_staged(batch), plan_fused(batch))
+    _assert_bitwise(fitted.transform(batch), plan_fused(batch))
+
+
+def test_fuse_kill_switch_env(monkeypatch, ltr):
+    fitted, _, batch = ltr
+    monkeypatch.setenv("REPRO_FUSE_CHAINS", "0")
+    plan = TransformPlan(fitted.stages)
+    assert plan.fused_chain_count == 0
+    monkeypatch.delenv("REPRO_FUSE_CHAINS")
+    plan_on = TransformPlan(fitted.stages)
+    assert plan_on.fused_chain_count >= 3  # fusion is the default
+    _assert_bitwise(plan(batch), plan_on(batch))
+
+
+def test_schedule_round_trip_preserves_fused_nodes(ltr):
+    fitted, _, batch = ltr
+    plan = TransformPlan(fitted.stages, fuse=True)
+    rebuilt = TransformPlan.from_schedule(fitted.stages, plan.schedule())
+    assert rebuilt.fused_chain_count == plan.fused_chain_count
+    _assert_bitwise(plan(batch), rebuilt(batch))
+
+
+def test_loaded_schedule_respects_kill_switch(monkeypatch, ltr):
+    fitted, _, batch = ltr
+    plan = TransformPlan(fitted.stages, fuse=True)
+    sched = plan.schedule()
+    monkeypatch.setenv("REPRO_FUSE_CHAINS", "0")
+    expanded = TransformPlan.from_schedule(fitted.stages, sched)
+    assert expanded.fused_chain_count == 0  # fused nodes expanded to members
+    _assert_bitwise(plan(batch), expanded(batch))
+
+
+def test_export_round_trip_with_fused_schedule(ltr):
+    from repro.core.export import PreprocessModel
+
+    fitted, cols, batch = ltr
+    model = fitted.export(outputs=cols)
+    model2 = PreprocessModel.load_bytes(model.save_bytes())
+    assert model2.plan().fused_chain_count == model.plan().fused_chain_count
+    assert model2.plan().fused_chain_count > 0
+    _assert_bitwise(model.plan()(batch), model2.plan()(batch))
+    _assert_bitwise(model2.plan(fuse=False)(batch), model2.plan()(batch))
+
+
+def test_hash_chain_fuses_and_matches(hash_chain):
+    fitted, batch = hash_chain
+    plan = fitted.plan(fuse=True)
+    assert plan.fused_chain_count == 1
+    (node,) = [n for n in plan._nodes if isinstance(n, _FusedNode)]
+    assert "hash_index" in node.program.kinds
+    assert node.program.kernel_ok
+    _assert_bitwise(fitted.plan(fuse=False)(batch), plan(batch))
+
+
+def test_runner_stream_with_fused_plan(ltr):
+    from repro.core.runner import PlanRunner
+
+    fitted, cols, batch = ltr
+    host_batches = [
+        {k: np.asarray(v) for k, v in batch.items()} for _ in range(3)
+    ]
+    plan = TransformPlan(fitted.stages, outputs=cols, fuse=True)
+    runner = PlanRunner(plan, donate=False, pack=2, prefetch=0, workers=1)
+    outs = list(runner.run(iter(host_batches)))
+    assert len(outs) == 3
+    assert runner.stats["fused_chains"] == plan.fused_chain_count > 0
+    ref = TransformPlan(fitted.stages, outputs=cols, fuse=False)(batch)
+    for out in outs:
+        _assert_bitwise(ref, out)
+
+
+# ---------------------------------------------------------------------------
+# megakernel route (interpret mode) + autotuner cache
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.kernel
+def test_kernel_route_bitwise_equal_ltr(monkeypatch, tmp_path, ltr):
+    from repro.kernels.fused_transform import tune
+
+    fitted, _, batch = ltr
+    monkeypatch.setenv("REPRO_FUSED_KERNEL", "1")
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tc.json"))
+    monkeypatch.setenv("REPRO_TUNE_BUDGET", "2")
+    tune.reload()
+    try:
+        plan = TransformPlan(fitted.stages, fuse=True)
+        plan.warm_fused(batch)
+        out_k = plan(batch)
+    finally:
+        tune.reload()  # drop tmp-cache entries from the in-memory store
+    _assert_bitwise(TransformPlan(fitted.stages, fuse=False)(batch), out_k)
+
+
+@pytest.mark.kernel
+def test_kernel_route_bitwise_equal_hash_chain(monkeypatch, tmp_path, hash_chain):
+    from repro.kernels.fused_transform import tune
+
+    fitted, batch = hash_chain
+    monkeypatch.setenv("REPRO_FUSED_KERNEL", "1")
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tc.json"))
+    monkeypatch.setenv("REPRO_TUNE_BUDGET", "2")
+    tune.reload()
+    try:
+        out_k = fitted.plan(fuse=True)(batch)
+    finally:
+        tune.reload()
+    _assert_bitwise(fitted.plan(fuse=False)(batch), out_k)
+
+
+@pytest.mark.kernel
+def test_tuned_config_cache_round_trip(monkeypatch, tmp_path, hash_chain):
+    """Second warmup performs ZERO tuning sweeps: winners persisted to the
+    JSON store by the first warmup are re-read from disk (the in-memory store
+    is dropped in between, so the hit is genuinely a disk round-trip)."""
+    from repro.kernels.fused_transform import tune
+
+    fitted, batch = hash_chain
+    cache = tmp_path / "tuned.json"
+    monkeypatch.setenv("REPRO_FUSED_KERNEL", "1")
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(cache))
+    monkeypatch.setenv("REPRO_TUNE_BUDGET", "2")
+    tune.reload()
+    tune.reset_stats()
+    try:
+        plan = fitted.plan(fuse=True)
+        st1 = plan.warm_fused(batch)
+        assert st1["sweeps"] > 0
+        assert cache.exists()
+
+        tune.reload()
+        tune.reset_stats()
+        st2 = plan.warm_fused(batch)
+        assert st2["sweeps"] == 0
+        assert st2["hits"] >= 1
+    finally:
+        tune.reload()
+        tune.reset_stats()
+
+
+@pytest.mark.kernel
+def test_registry_warmup_tunes_before_precompile(monkeypatch, tmp_path, hash_chain):
+    """registry.warmup loads/persists tuned configs before the AOT bucket
+    sweep; a second registry warming the same servable hits the persisted
+    store with zero sweeps."""
+    from repro.kernels.fused_transform import tune
+    from repro.serve.gateway.registry import ModelRegistry
+
+    fitted, batch = hash_chain
+    monkeypatch.setenv("REPRO_FUSED_KERNEL", "1")
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tuned.json"))
+    monkeypatch.setenv("REPRO_TUNE_BUDGET", "2")
+    tune.reload()
+    tune.reset_stats()
+    try:
+        example = {k: np.asarray(v[0]) for k, v in batch.items()}
+        model = fitted.export()
+
+        reg = ModelRegistry()
+        entry = reg.register("pre", model, example, buckets=(4, 8), max_batch=8)
+        reg.warmup()
+        assert entry.tuned is not None and entry.tuned["sweeps"] > 0
+
+        tune.reload()
+        tune.reset_stats()
+        reg2 = ModelRegistry()
+        entry2 = reg2.register("pre", model, example, buckets=(4, 8), max_batch=8)
+        reg2.warmup()
+        assert entry2.tuned is not None and entry2.tuned["sweeps"] == 0
+    finally:
+        tune.reload()
+        tune.reset_stats()

@@ -296,3 +296,141 @@ def test_fuzz_split_single_byte_fast_path():
     want = ref_split(words, "|", 7, "P", 6)
     for row, w in zip(out, want):
         assert list(row) == w
+
+# ---------------------------------------------------------------------------
+# fused transform chains
+# ---------------------------------------------------------------------------
+
+
+def _gen_chain_case(rng, with_hash):
+    """One random fused chain over exact ops only (hash/bucketize/affine/
+    clip/abs/round/std_score — no transcendentals, so numpy IS bit-exact
+    ground truth) plus its input column."""
+    from repro.core.fusion import ChainOp, ChainProgram
+
+    n = int(rng.integers(5, 70))
+    slot = [0]
+
+    def new_slot():
+        slot[0] += 1
+        return f"v{slot[0]}"
+
+    ops = []
+    if with_hash:
+        max_len = int(rng.choice([8, 16]))
+        x = gen_strings(n, max_len, "bytes", rng=rng)
+        params = (
+            int(rng.integers(2, 5000)),
+            int(rng.integers(0, 2**32)),
+            int(rng.integers(0, 3)),
+        )
+        cur = new_slot()
+        ops.append(ChainOp("hash_index", ("s",), cur, params))
+        inputs, state = ["s"], "int"
+    else:
+        shape = (n,) if rng.random() < 0.5 else (n, int(rng.integers(2, 9)))
+        x = rng.standard_normal(shape) * 10.0
+        hole = rng.random(shape) < 0.1  # NaN/inf exercise bucketize + clip
+        x[hole] = rng.choice([np.nan, np.inf, -np.inf], int(hole.sum()))
+        cur, inputs, state = "x", ["x"], "float"
+
+    prev_float_affine = False  # XLA folds ADJACENT constant affines into
+    for _ in range(int(rng.integers(1, 5))):  # one (different rounding), so
+        kinds = ["clip", "abs", "bucketize"]  # never stack two in a row
+        if state == "int" or not prev_float_affine:
+            kinds.append("scale")
+        if state == "float":
+            kinds.append("round")
+            if not prev_float_affine:
+                kinds.append("std_score")
+        kind = str(rng.choice(kinds))
+        prev_float_affine = kind in ("scale", "std_score") and state == "float"
+        if kind == "scale":
+            # float multipliers are powers of two: XLA may contract the
+            # mul+add into an FMA inside a fused computation, which only
+            # matches numpy's two-step rounding when the multiply is exact
+            params = (
+                (int(rng.integers(-3, 4)), int(rng.integers(-5, 6)))
+                if state == "int"
+                else (
+                    float(rng.choice([-2.0, -0.5, 0.25, 0.5, 1.0, 2.0, 4.0])),
+                    float(rng.integers(-8, 9)) / 2,
+                )
+            )
+        elif kind == "clip":
+            lo, hi = int(rng.integers(-20, 0)), int(rng.integers(0, 20))
+            params = (lo, hi) if state == "int" else (float(lo), float(hi))
+        elif kind == "round":
+            params = (str(rng.choice(["round", "floor", "ceil"])),)
+        elif kind == "std_score":
+            # power-of-two stds only: XLA rewrites division by a constant
+            # into multiply-by-reciprocal inside fused computations, which
+            # is inexact (one ulp) for non-power-of-two divisors
+            params = (
+                float(rng.integers(-4, 5)) / 2,
+                float(rng.choice([0.5, 2.0, 4.0])),
+            )
+        elif kind == "bucketize":
+            edges = np.unique(rng.standard_normal(int(rng.integers(1, 5))) * 5.0)
+            params = tuple(float(e) for e in edges)
+            state = "int"
+        else:
+            params = ()
+        out = new_slot()
+        ops.append(ChainOp(kind, (cur,), out, params))
+        cur = out
+
+    outputs = [cur]
+    if len(ops) > 1 and rng.random() < 0.3:
+        outputs = [ops[0].output, cur]  # also emit an early intermediate
+    return ChainProgram(ops, inputs, outputs), [x]
+
+
+@pytest.mark.parametrize("with_hash", [False, True])
+def test_fuzz_chain_xla_executor_vs_numpy(with_hash):
+    """The XLA chain executor (the fused plan's default route) bit-exact
+    against the numpy chain reference on random op programs."""
+    from repro.kernels.fused_transform import ops as fused_ops
+    from repro.kernels.fused_transform import ref as fused_ref
+
+    rng = np.random.default_rng(0xC5A1 + with_hash)
+    for _ in range(30):
+        program, np_inputs = _gen_chain_case(rng, with_hash)
+        got = fused_ops.execute_chain_xla(
+            program, [jnp.asarray(v) for v in np_inputs]
+        )
+        want = fused_ref.ref_chain(program, np_inputs)
+        assert len(got) == len(want)
+        for g, w, name in zip(got, want, program.outputs):
+            np.testing.assert_array_equal(
+                np.asarray(g), w, err_msg=f"{program.signature()}:{name}"
+            )
+
+
+@pytest.mark.kernel
+@pytest.mark.parametrize("with_hash", [False, True])
+def test_fuzz_chain_megakernel_interpret_vs_numpy(monkeypatch, with_hash):
+    """The Pallas megakernel (interpret mode) bit-exact against the numpy
+    chain reference — covers both layouts: rows mode (string hash feeding
+    the chain) and flat mode (numeric columns tiled over a 2D grid)."""
+    monkeypatch.setenv("REPRO_FUSED_KERNEL", "1")
+    from repro.kernels.fused_transform import ops as fused_ops
+    from repro.kernels.fused_transform import ref as fused_ref
+    from repro.kernels.fused_transform import tune as fused_tune
+
+    fused_tune.reload()
+    rng = np.random.default_rng(0xFE17 + with_hash)
+    try:
+        for _ in range(10):
+            program, np_inputs = _gen_chain_case(rng, with_hash)
+            jx = [jnp.asarray(v) for v in np_inputs]
+            assert program.kernel_ok
+            assert fused_ops.kernel_plan(program, jx) is not None  # kernel ran
+            got = fused_ops.execute_chain(program, jx)
+            want = fused_ref.ref_chain(program, np_inputs)
+            for g, w, name in zip(got, want, program.outputs):
+                np.testing.assert_array_equal(
+                    np.asarray(g), w, err_msg=f"{program.signature()}:{name}"
+                )
+    finally:
+        fused_tune.reload()
