@@ -12,9 +12,15 @@ works and what it costs on the CPU harness, every PR:
                       per-shard round-trip p50s in `derived`
   serve_mh_shed_2p    completed/offered accounting of the routed replay
                       (everything must complete; sheds here are a failure)
+  serve_ft_hitrate_faulty   deadline hit rate under an injected straggler,
+                      hedging ON (value) vs OFF (in derived); ON must be
+                      STRICTLY higher or the row itself raises
+  serve_ft_kill_recover_ms  detection -> first degraded-mesh answer latency
+                      after a worker kill -9, with zero failed requests
 
 ``benchmarks/run.py --smoke`` fails loudly when these rows are missing —
-a refactor that silently stops exercising multi-host must fail CI.
+a refactor that silently stops exercising multi-host (or its fault
+tolerance) must fail CI.
 """
 from __future__ import annotations
 
@@ -42,6 +48,7 @@ def run(smoke: bool = False) -> None:
     mh = _launcher()
     _stream(mh, smoke)
     _serve(mh, smoke)
+    _serve_ft(mh, smoke)
 
 
 def _stream(mh, smoke: bool) -> None:
@@ -110,4 +117,81 @@ def _serve(mh, smoke: bool) -> None:
         f"completed={coord['stats']['completed']}/{n} "
         f"worker_batches={worker['batches']} shards={coord['shards']} "
         f"traces_since_warmup={coord['traces_since_warmup']}",
+    )
+
+
+def _serve_ft(mh, smoke: bool) -> None:
+    """Fault-tolerance rows, measured under injected faults (chaos entry).
+
+    Both rows carry their own acceptance gates: hedging ON must beat OFF
+    STRICTLY on deadline hit rate under the same straggler, and the kill
+    schedule must answer every request (zero surfaced failures) — a bench
+    row is never recorded for a wrong or degraded-into-failure answer."""
+    base = {
+        "seed": 23,
+        "requests": 32 if smoke else 96,
+        "buckets": (2, 4, 8),
+        "max_batch": 8,
+        "heartbeat_s": 0.5,
+        "cost_model": False,
+        "traffic": "stream",
+        "clients": 4,
+    }
+    straggle = dict(
+        base,
+        deadline_ms=400.0,
+        faults=[
+            {"process": 1, "type": "delay", "delay_s": 0.5, "batches": (0, 1 << 30)}
+        ],
+    )
+    off = mh.launch(
+        "gateway_chaos", 2, dict(straggle, hedge=False), devices_per_proc=1
+    )[0]
+    on = mh.launch(
+        "gateway_chaos", 2, dict(straggle, hedge=True), devices_per_proc=1
+    )[0]
+    if on["worker_failed"] or off["worker_failed"]:
+        raise RuntimeError(
+            f"straggler schedule surfaced worker failures: on={on['errors']} "
+            f"off={off['errors']}"
+        )
+    if not on["hit_rate"] > off["hit_rate"]:
+        raise RuntimeError(
+            f"regression-shaped hedging: hit rate on={on['hit_rate']:.3f} "
+            f"not strictly above off={off['hit_rate']:.3f}"
+        )
+    emit(
+        "serve_ft_hitrate_faulty",
+        100.0 * on["hit_rate"],
+        f"hedge_off={100.0 * off['hit_rate']:.1f}% "
+        f"hedges={on['ft'].get('hedges', 0)} "
+        f"busy_skips={on['ft'].get('busy_skips', 0)} "
+        f"deadline_ms={straggle['deadline_ms']:.0f}",
+    )
+
+    kill = dict(
+        base,
+        # past the warmup batches: the kill must land in client traffic
+        faults=[{"process": 1, "type": "kill", "after_batches": 4}],
+    )
+    coord = mh.launch(
+        "gateway_chaos", 2, kill, devices_per_proc=1, expendable=[1]
+    )[0]
+    n = kill["requests"]
+    if coord["completed"] != n or coord["worker_failed"]:
+        raise RuntimeError(
+            f"regression-shaped kill recovery: completed={coord['completed']}/{n} "
+            f"errors={coord['errors']}"
+        )
+    recover_ms = coord["ft"].get("kill_recover_ms", 0.0)
+    if not recover_ms > 0:
+        raise RuntimeError(
+            f"kill schedule recorded no recovery latency: ft={coord['ft']}"
+        )
+    emit(
+        "serve_ft_kill_recover_ms",
+        recover_ms * 1e3,  # emit() values are microseconds repo-wide
+        f"recover_ms={recover_ms:.1f} deaths={coord['ft']['worker_deaths']} "
+        f"reshards={coord['ft']['reshards']} completed={coord['completed']}/{n} "
+        f"failed=0",
     )

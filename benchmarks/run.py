@@ -104,6 +104,7 @@ def main() -> None:
             "serve_cost_shedprec",
             "stream_mh_",
             "serve_mh_",
+            "serve_ft_",
         ):
             if not any(n.startswith(prefix) for n in names):
                 print(f"\nBENCHMARK FAILED: no {prefix}* row emitted", file=sys.stderr)

@@ -1,0 +1,102 @@
+"""Fault-tolerant serving demo: kill a shard worker mid-traffic, lose nothing.
+
+Runs the SAME seeded gateway traffic twice — one process (the reference),
+then a 2-process routed gateway whose shard worker is SIGKILLed mid-stream
+(after its 4th batch, past warmup) — and shows the fault-tolerant executor's
+contract:
+
+* the coordinator detects the death (EOF on the reply socket), rebuilds the
+  row-block table over the survivors via ``ProcessMesh.degraded``, and
+  re-executes the lost in-flight block locally;
+* every request still completes — zero client-surfaced failures — and the
+  results are BIT-IDENTICAL to the 1-process run (recovery re-executes the
+  same row blocks through the same bit-stable program);
+* the ``ft`` snapshot records what happened: deaths, reshards, recovered
+  blocks, and the detection-to-first-degraded-answer latency.
+
+A second schedule delays every reply from the worker instead of killing it:
+the straggler monitor flags it and the coordinator hedges its blocks with a
+local re-execution — first answer wins, nobody dies.
+
+Run:  PYTHONPATH=src python examples/serve_faults.py
+"""
+import os
+import sys
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tests"))
+
+from multihost import launch  # noqa: E402  (the fake-device launcher)
+
+
+def main() -> None:
+    base = {
+        "seed": 13,
+        "requests": 40,
+        "buckets": (2, 4, 8),
+        "max_batch": 8,
+        "heartbeat_s": 0.5,
+        "cost_model": False,
+        "traffic": "stream",
+        "clients": 3,
+    }
+    ref = launch("gateway_chaos", 1, base, devices_per_proc=1)[0]
+
+    print("== kill -9 mid-stream: degraded-mesh resharding ==")
+    kill = dict(
+        base, faults=[{"process": 1, "type": "kill", "after_batches": 4}]
+    )
+    coord = launch(
+        "gateway_chaos", 2, kill, devices_per_proc=1, expendable=[1]
+    )[0]
+    ft = coord["ft"]
+    same = all(
+        np.array_equal(a, b) for a, b in zip(coord["results"], ref["results"])
+    )
+    print(
+        f"  completed {coord['completed']}/{base['requests']} requests, "
+        f"client-surfaced failures: {coord['worker_failed']}"
+    )
+    print(
+        f"  worker deaths={ft['worker_deaths']} reshards={ft['reshards']} "
+        f"recovered_blocks={ft.get('recovered_blocks', 0)} "
+        f"(cause: {ft['death_reasons'].get('process1', '?')})"
+    )
+    print(
+        f"  batches served through the degraded mesh: "
+        f"{coord['stage_counts']['execute_reshard']}; detection-to-answer "
+        f"{ft.get('kill_recover_ms', 0):.1f}ms"
+    )
+    print(f"  bit-identical to the 1-process gateway: {same}")
+
+    print("== straggling worker: flagged and hedged around ==")
+    slow = dict(
+        base,
+        hedge=True,
+        faults=[
+            {"process": 1, "type": "delay", "delay_s": 0.35, "batches": (0, 1 << 30)}
+        ],
+    )
+    coord = launch("gateway_chaos", 2, slow, devices_per_proc=1)[0]
+    ft = coord["ft"]
+    same = all(
+        np.array_equal(a, b) for a, b in zip(coord["results"], ref["results"])
+    )
+    print(
+        f"  completed {coord['completed']}/{base['requests']} requests; "
+        f"flagged={ft['flagged']} hedges={ft.get('hedges', 0)} "
+        f"hedge_wins={ft.get('hedge_wins', 0)} "
+        f"busy_skips={ft.get('busy_skips', 0)}"
+    )
+    print(
+        f"  hedged batches: {coord['stage_counts']['execute_hedge']}; "
+        f"deaths: {ft['worker_deaths'] if 'worker_deaths' in ft else 0} "
+        f"(a slow worker is routed around, never killed)"
+    )
+    print(f"  bit-identical to the 1-process gateway: {same}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,5 @@
 """Fault tolerance: heartbeats, supervised restart, straggler detection."""
-from .supervisor import Heartbeat, Supervisor
+from .supervisor import Heartbeat, Liveness, Supervisor
 from .straggler import StragglerMonitor
 
-__all__ = ["Heartbeat", "Supervisor", "StragglerMonitor"]
+__all__ = ["Heartbeat", "Liveness", "Supervisor", "StragglerMonitor"]

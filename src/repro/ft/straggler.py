@@ -47,9 +47,39 @@ class StragglerMonitor:
         self.count[rank] = self.count.get(rank, 0) + 1
         self._check(rank)
 
+    def clear(self, rank: str) -> None:
+        """Un-flag ``rank`` (it caught up, or its hedge lost the race).  Its
+        EWMA keeps accumulating; a still-slow rank re-flags on its next
+        report."""
+        if rank in self.flagged:
+            self.flagged.remove(rank)
+
+    def forget(self, rank: str) -> None:
+        """Drop ``rank`` entirely (a restarted worker is a NEW population:
+        its old EWMA must not seed the fresh process's statistics, and a
+        stale flag must not hedge against a healthy restart)."""
+        self.ewma.pop(rank, None)
+        self.count.pop(rank, None)
+        self.clear(rank)
+
+    def _warm_ranks(self) -> List[str]:
+        return [r for r in self.ewma if self.count.get(r, 0) >= self.warmup]
+
     def _median(self) -> float:
-        vals = sorted(self.ewma.values())
-        return vals[len(vals) // 2] if vals else 0.0
+        """Fleet median over WARM ranks only.  Warmup is counted per rank, so
+        in a heterogeneous fleet a late joiner's first (cold, typically slow:
+        compile + cache fill) EWMA must not enter the reference statistic —
+        mixing it in skewed the median and could false-flag healthy peers.
+        Even counts take the true median (mean of the middle two): the old
+        upper-middle shortcut made a 2-rank fleet's median equal to its
+        slowest member, so a 2-rank fleet could never flag anything."""
+        vals = sorted(self.ewma[r] for r in self._warm_ranks())
+        if not vals:
+            return 0.0
+        mid = len(vals) // 2
+        if len(vals) % 2:
+            return vals[mid]
+        return 0.5 * (vals[mid - 1] + vals[mid])
 
     def _check(self, rank: str) -> None:
         if self.count[rank] < self.warmup or len(self.ewma) == 0:
@@ -64,5 +94,6 @@ class StragglerMonitor:
         return {
             "ewma": dict(self.ewma),
             "median": self._median(),
+            "warm": self._warm_ranks(),
             "flagged": list(self.flagged),
         }

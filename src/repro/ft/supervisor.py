@@ -39,6 +39,40 @@ class Heartbeat:
             return None
 
 
+class Liveness:
+    """In-memory heartbeat staleness tracker — the socket-tier analogue of
+    :class:`Heartbeat`'s file stamps, with the same semantics the supervisor
+    applies to them: a beat refreshes liveness, and staleness beyond the
+    timeout means the peer is presumed down.
+
+    The serving coordinator keeps one per shard worker: every shard reply
+    (and every answered idle ping) calls :meth:`beat`; :meth:`state` derives
+    ``healthy`` (age <= timeout), ``suspect`` (one missed window — the peer
+    may merely be slow) or ``dead`` (two missed windows) so callers can
+    distinguish "hedge against it" from "reshard around it".  Clock is
+    injectable for fake-clock tests.
+    """
+
+    def __init__(self, timeout_s: float, clock=time.monotonic):
+        self.timeout_s = float(timeout_s)
+        self._clock = clock
+        self.last = clock()
+
+    def beat(self) -> None:
+        self.last = self._clock()
+
+    def age(self) -> float:
+        return self._clock() - self.last
+
+    def state(self) -> str:
+        age = self.age()
+        if age <= self.timeout_s:
+            return "healthy"
+        if age <= 2 * self.timeout_s:
+            return "suspect"
+        return "dead"
+
+
 class Supervisor:
     """Run a trainer command under failure supervision.
 

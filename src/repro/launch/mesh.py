@@ -232,6 +232,39 @@ class ProcessMesh:
         )
         return cls(process_id, num_processes, shard_process, local_mesh, None, data_axes)
 
+    def degraded(self, dead) -> "ProcessMesh":
+        """Topology with the data shards of ``dead`` processes reassigned to
+        survivors — the mesh the serving coordinator reshards over when a
+        worker dies.
+
+        Each orphan shard goes to the owner of the nearest PRECEDING live
+        shard, which keeps ``shard_process`` non-decreasing (the contiguity
+        contract every consumer relies on); when no live process precedes,
+        the first live owner absorbs — in the gateway topology process 0 is
+        the coordinator and always live, so the coordinator absorbs orphan
+        rows as the fallback.  Process ids keep their original numbering: a
+        degraded mesh is the SAME job minus capacity, so routing tables and
+        per-process telemetry stay keyed consistently, and a rejoining
+        worker simply reverts to the undegraded topology."""
+        dead = frozenset(int(d) for d in dead)
+        if not dead:
+            return self
+        if self.process_id in dead:
+            raise ValueError(
+                f"process {self.process_id} cannot derive a mesh degraded by "
+                "its own death"
+            )
+        live = [p for p in self.shard_process if p not in dead]
+        if not live:
+            raise ValueError(f"no live process left in {self.shard_process}")
+        new = []
+        last_live: Optional[int] = None
+        for p in self.shard_process:
+            if p not in dead:
+                last_live = p
+            new.append(last_live if last_live is not None else live[0])
+        return dataclasses.replace(self, shard_process=tuple(new))
+
     # -- shard / row arithmetic -------------------------------------------
 
     @property

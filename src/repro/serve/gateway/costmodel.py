@@ -185,6 +185,20 @@ class ExecuteCostModel:
                 return self._estimate_locked(rec)
         return self.prior_s if self.prior_s > 0 else None
 
+    def feasible(
+        self, model: str, bucket: int, now: float, deadline: Optional[float]
+    ) -> Tuple[bool, Optional[float]]:
+        """Can an execution started ``now`` finish by ``deadline``?  Returns
+        ``(verdict, estimate_seconds)``.  No deadline, or no estimate and no
+        prior, is feasible — never shed on ignorance.  The gateway's
+        failure-path re-admissions (batch-retry sweeps, resharded
+        re-executions) route through this so the judgement is the same one
+        applied at the door and at formation."""
+        est = self.estimate(model, int(bucket))
+        if deadline is None or est is None:
+            return True, est
+        return now + est <= deadline, est
+
     # -- introspection -----------------------------------------------------
 
     def snapshot(self) -> Dict[str, Dict[str, dict]]:

@@ -44,10 +44,13 @@ from .registry import ModelEntry, ModelRegistry
 from .scheduler import BatchScheduler, Request
 from .telemetry import LatencySketch
 
-# execute_retry: durations of per-request reruns after a batch failure.  They
-# are kept OUT of "execute" (and out of the cost model) so one poisoned batch
-# cannot distort the latency record or the scheduling estimates.
-_STAGES = ("queue", "execute", "execute_retry", "e2e")
+# execute_retry: durations of per-request reruns after a batch failure.
+# execute_hedge / execute_reshard: durations of batches whose multi-host
+# routing hit a straggler hedge or a degraded-mesh re-execution (tagged by
+# the servable via take_batch_events).  All three are kept OUT of "execute"
+# (and out of the cost model) so failure-path timings cannot distort the
+# latency record or the scheduling estimates healthy batches live by.
+_STAGES = ("queue", "execute", "execute_retry", "execute_hedge", "execute_reshard", "e2e")
 
 
 class ServingGateway:
@@ -262,11 +265,21 @@ class ServingGateway:
                 stage=entry.stage_inputs,
             )
             t1 = self._clock()
-            # retried executes are tagged apart and kept out of the cost
-            # model: a poisoned batch's rerun sweep must not distort the
-            # healthy execute record it schedules by
-            self.sketches[(entry.name, "execute_retry" if retry else "execute")].record(t1 - t0)
-            if not retry and self.cost is not None:
+            # retried / hedged / resharded executes are tagged apart and kept
+            # out of the cost model: failure-path durations must not distort
+            # the healthy execute record the gateway schedules by
+            take = getattr(entry.fn, "take_batch_events", None)
+            events = take() if take is not None else None
+            stage = "execute"
+            if retry:
+                stage = "execute_retry"
+            elif events:
+                if events.get("resharded"):
+                    stage = "execute_reshard"
+                elif events.get("hedged"):
+                    stage = "execute_hedge"
+            self.sketches[(entry.name, stage)].record(t1 - t0)
+            if stage == "execute" and self.cost is not None:
                 self.cost.observe(entry.name, bs, t1 - t0)
             e2e = self.sketches[(entry.name, "e2e")]
             for r, result in zip(reqs, results):
@@ -297,13 +310,14 @@ class ServingGateway:
                 # re-executed into a late answer.
                 with self._stats_lock:
                     self.stats["batches"] += 1
-                est_solo = (
-                    self.cost.estimate(entry.name, entry.bucket(1))
-                    if self.cost is not None
-                    else None
-                )
+                solo_bucket = entry.bucket(1)
                 for r in reqs:
                     now = self._clock()
+                    ok, est_solo = (
+                        self.cost.feasible(entry.name, solo_bucket, now, r.deadline)
+                        if self.cost is not None
+                        else (True, None)
+                    )
                     if r.deadline is not None and r.deadline < now:
                         self._finish_error(
                             r,
@@ -312,11 +326,7 @@ class ServingGateway:
                             ),
                             counter="shed_queued",
                         )
-                    elif (
-                        r.deadline is not None
-                        and est_solo is not None
-                        and now + est_solo > r.deadline
-                    ):
+                    elif not ok:
                         self._finish_error(
                             r,
                             InfeasibleDeadlineError(
@@ -356,6 +366,11 @@ class ServingGateway:
                 # multi-host routing: coordinator-measured per-process
                 # round-trip quantiles
                 models[name]["shard_us"] = shard_snap()
+            ft_snap = getattr(entry.fn, "ft_snapshot", None)
+            if ft_snap is not None:
+                # fault tolerance: per-worker health states plus
+                # hedge/reshard/rejoin counters
+                models[name]["ft"] = ft_snap()
         return {"stats": stats, "models": models}
 
     def close(self, timeout: float = 5.0) -> None:

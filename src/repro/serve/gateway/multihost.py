@@ -1,4 +1,4 @@
-"""Cross-process batch routing for the serving gateway.
+"""Cross-process batch routing for the serving gateway, fault-tolerant.
 
 One COORDINATOR process runs the full gateway — admission control, the
 continuous batch scheduler, telemetry, the cost model — and routes each
@@ -18,16 +18,52 @@ batch at a time (guarded by a per-connection lock); batches for different
 models serialise on the wire but their device execution still overlaps with
 the coordinator's own shard.
 
+**Fault tolerance.**  The executor wires the seed's ``repro.ft`` substrate
+into this tier, so the SAME preprocessing artifact keeps answering — with
+bit-identical features — while workers die, stall and come back:
+
+* *Health* — every shard reply (and every answered idle ping) beats a
+  per-worker :class:`~repro.ft.Liveness` tracker (the socket-tier analogue
+  of the supervisor's file heartbeats); a background sweep pings workers
+  that have been silent past ``REPRO_FT_HEARTBEAT_S`` and walks them
+  ``healthy → suspect → dead`` on staleness.
+* *Hedged dispatch* — per-shard round-trip times feed a
+  :class:`~repro.ft.StragglerMonitor`; once a worker is flagged, the
+  coordinator races each of its row blocks with a local re-execution
+  (first answer wins; the duplicate is discarded deterministically — the
+  original wins ties — and drained off the socket before its next use).
+* *Degraded-mesh resharding* — on worker death the row-block table is
+  rebuilt over the survivors via :meth:`ProcessMesh.degraded` (orphan
+  shards fall to the nearest preceding survivor, the coordinator as the
+  fallback), the dead worker's block of any in-flight batch is re-executed
+  locally instead of failing the batch, and the gateway re-admits retried
+  requests against their remaining deadline budget through
+  :meth:`ExecuteCostModel.feasible`.  ``REPRO_FT_MAX_RESHARDS`` bounds how
+  much death the mesh absorbs before batches fail loudly.
+* *Rejoin* — :func:`accept_workers` keeps a live accept loop: a
+  supervisor-restarted ShardServer dials back in, re-answers the trace
+  probe, is warmed with its row block of the registered example, and only
+  then re-enters rotation (the straggler statistics of its previous life
+  are forgotten — a restart is a new population).
+
+A batch that experienced a hedge or a reshard is flagged to the gateway
+(:meth:`MultiHostServable.take_batch_events`), which records its duration
+into the separate ``execute_hedge`` / ``execute_reshard`` telemetry stages
+and keeps it out of the cost model — failure-path timings must never
+pollute the estimates healthy batches are scheduled by.
+
 Fidelity note: each worker executes through the SAME servable normalisation
 as a single-process gateway (``registry._normalize``), i.e. a FusedModel
 worker runs ``FusedModel.jit_for`` — on a real multi-host TPU runtime the
 identical code path lowers against the global mesh; on the fake-device CPU
 harness it lowers on the worker's local devices, which is exact for the
 row-wise programs this repo serves (asserted bit-identical by
-``tests/test_multihost.py``).
+``tests/test_multihost.py`` and, under fault schedules, ``tests/
+test_chaos.py``).
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
@@ -36,8 +72,33 @@ import jax
 import numpy as np
 
 from repro.core.runner import stage_batch
+from repro.ft import Liveness, StragglerMonitor
 
-from .telemetry import LatencySketch
+from .telemetry import CounterSet, LatencySketch
+
+
+def _env_float(name: str, default: float) -> float:
+    try:
+        return float(os.environ.get(name, default))
+    except ValueError:
+        return default
+
+
+def _env_flag(name: str, default: bool) -> bool:
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    return raw not in ("0", "false", "")
+
+
+def _ft_debug(msg: str) -> None:
+    """Fault-path tracing (``REPRO_FT_DEBUG=1``): failure handling here is
+    deliberately silent toward clients, so debugging a schedule that did NOT
+    recover needs a side channel."""
+    if _env_flag("REPRO_FT_DEBUG", False):
+        import sys
+
+        print(f"[repro.ft] {msg}", file=sys.stderr, flush=True)
 
 
 def _concat_outputs(parts: List[Any]):
@@ -49,7 +110,25 @@ def _concat_outputs(parts: List[Any]):
 
 
 class WorkerFailedError(RuntimeError):
-    """A shard worker reported an exception while executing its block."""
+    """A shard worker reported an exception while executing its block, or
+    the mesh has degraded past ``REPRO_FT_MAX_RESHARDS``."""
+
+
+class _Worker:
+    """Coordinator-side state of one shard worker connection."""
+
+    __slots__ = ("conn", "lock", "liveness", "alive", "batches", "pending")
+
+    def __init__(self, conn, liveness: Liveness):
+        self.conn = conn
+        self.lock = threading.Lock()
+        self.liveness = liveness
+        self.alive = True
+        self.batches = 0
+        # (t_send, model) of requests SENT whose replies were not consumed
+        # (a hedge won the race); strict request/reply order means they are
+        # drained FIFO before the connection carries anything else
+        self.pending: List[Tuple[float, str]] = []
 
 
 class MultiHostServable:
@@ -80,36 +159,100 @@ class MultiHostServable:
     def __call__(self, host_cols: Dict[str, np.ndarray]):
         return self._ex.execute(self.name, host_cols)
 
+    def register_example(self, example: Dict[str, np.ndarray], buckets) -> None:
+        """Registry hook: remember the request-row template and bucket set,
+        so a rejoining worker can be warmed with ITS row block of the
+        largest bucket before re-entering rotation."""
+        self._ex.set_example(self.name, example, buckets)
+
+    def take_batch_events(self) -> Optional[dict]:
+        """Pop this thread's last-batch fault events (``hedged`` /
+        ``resharded`` counts) — the gateway tags the batch's telemetry
+        stage with these and keeps failure-path timings out of the cost
+        model."""
+        return self._ex.take_batch_events()
+
     def trace_count(self) -> int:
-        """Job-wide compile probe: coordinator + every worker (the gateway's
-        zero-trace-after-warmup assertion covers all processes)."""
+        """Job-wide compile probe: coordinator + every live worker (the
+        gateway's zero-trace-after-warmup assertion covers all processes)."""
         return self._ex.trace_count(self.name)
 
     def shard_snapshot(self) -> Dict[str, dict]:
         """Per-process round-trip latency quantiles (coordinator-measured)."""
         return self._ex.shard_snapshot(self.name)
 
+    def ft_snapshot(self) -> dict:
+        """Per-worker health plus hedge/reshard/rejoin counters."""
+        return self._ex.ft_snapshot()
+
 
 class MultiHostExecutor:
     """Coordinator-side router: splits a batch into per-process row blocks,
-    executes the local block in-process, the rest over worker connections.
+    executes the local block in-process, the rest over worker connections;
+    absorbs worker loss, stalls and rejoins (see module docstring).
 
     Args:
       process_mesh: topology (this process must be process 0).
       sharding: optional sharding for the coordinator's local staging.
+      hedge: race flagged stragglers' blocks with a local re-execute
+        (``REPRO_FT_HEDGE``, default on).
+      heartbeat_s: liveness window — suspect after one silent window, dead
+        after two (``REPRO_FT_HEARTBEAT_S``, default 5.0).
+      max_reshards: worker deaths absorbed before batches fail loudly
+        (``REPRO_FT_MAX_RESHARDS``, default = every worker may die and the
+        coordinator serves alone).
+      monitor: straggler statistics (default: EWMA alpha 0.3, flag at 1.5x
+        the warm-fleet median after 3 warm steps).
+      clock: time source for liveness/timing bookkeeping (injectable).
     """
 
-    def __init__(self, process_mesh, sharding=None):
+    def __init__(
+        self,
+        process_mesh,
+        sharding=None,
+        hedge: Optional[bool] = None,
+        heartbeat_s: Optional[float] = None,
+        max_reshards: Optional[int] = None,
+        monitor: Optional[StragglerMonitor] = None,
+        clock=time.perf_counter,
+    ):
         if process_mesh.process_id != 0:
             raise ValueError("the gateway coordinator must be process 0")
         self.pm = process_mesh
         self.num_processes = process_mesh.num_processes
+        self.hedge = hedge if hedge is not None else _env_flag("REPRO_FT_HEDGE", True)
+        self.heartbeat_s = (
+            heartbeat_s
+            if heartbeat_s is not None
+            else _env_float("REPRO_FT_HEARTBEAT_S", 5.0)
+        )
+        self.max_reshards = int(
+            max_reshards
+            if max_reshards is not None
+            else _env_float("REPRO_FT_MAX_RESHARDS", self.num_processes - 1)
+        )
+        self.monitor = monitor or StragglerMonitor(
+            alpha=0.3, threshold=1.5, warmup_steps=3
+        )
+        self._clock = clock
         self._local: Dict[str, Tuple[Any, Any]] = {}
+        self._examples: Dict[str, Tuple[Dict[str, np.ndarray], Tuple[int, ...]]] = {}
         self._sharding = sharding
-        self._conns: Dict[int, Any] = {}  # process id -> connection
-        self._conn_locks: Dict[int, threading.Lock] = {}
+        self._workers: Dict[int, _Worker] = {}
+        self._dead: set = set()
+        self._death_reasons: Dict[int, str] = {}  # pid -> last cause of death
+        self._degraded_pm = None  # cache, invalidated on membership change
+        self._mlock = threading.Lock()  # membership: _workers/_dead/_degraded_pm
         self._shard_lat: Dict[Tuple[str, int], LatencySketch] = {}
         self._lock = threading.Lock()
+        self._events = threading.local()
+        self._ft = CounterSet()
+        self._started = False  # full initial attach done (rejoin vs duplicate)
+        self._closed = False
+        self._sweeper = threading.Thread(
+            target=self._sweep_loop, daemon=True, name="mh-ft-sweep"
+        )
+        self._sweeper.start()
 
     # -- wiring ------------------------------------------------------------
 
@@ -129,99 +272,408 @@ class MultiHostExecutor:
             raise KeyError(f"no local shard executor for {name!r}")
         return MultiHostServable(self, name)
 
+    def set_example(self, name: str, example: Dict[str, Any], buckets) -> None:
+        self._examples[name] = (
+            {k: np.asarray(v) for k, v in example.items()},
+            tuple(int(b) for b in buckets),
+        )
+
     def attach(self, process_id: int, conn) -> None:
-        """Adopt an accepted worker connection (see :func:`accept_workers`)."""
-        if not 0 < process_id < self.num_processes:
-            raise ValueError(f"worker process id {process_id} out of range")
-        if process_id in self._conns:
-            # a silent overwrite would strand the displaced worker forever
-            # and keep `connected` false until timeout — fail with the real
-            # misconfiguration instead
-            raise ValueError(f"worker process {process_id} already attached")
-        self._conns[process_id] = conn
-        self._conn_locks[process_id] = threading.Lock()
+        """Adopt an accepted worker connection.  Before the initial roster is
+        complete a duplicate process id is a hard misconfiguration (a silent
+        overwrite would strand the displaced worker forever); afterwards a
+        second hello for an attached id is a REJOIN — the old connection is
+        probed, and a worker that really went away is replaced, warmed and
+        returned to rotation."""
+        pid = int(process_id)
+        if not 0 < pid < self.num_processes:
+            raise ValueError(f"worker process id {pid} out of range")
+        with self._mlock:
+            existing = self._workers.get(pid)
+            if existing is None:
+                self._workers[pid] = _Worker(
+                    conn, Liveness(self.heartbeat_s, self._clock)
+                )
+                if len(self._workers) == self.num_processes - 1:
+                    self._started = True
+                return
+            if not self._started:
+                raise ValueError(f"worker process {pid} already attached")
+        self._maybe_rejoin(pid, conn)
+
+    def _maybe_rejoin(self, pid: int, conn) -> None:
+        w = self._workers[pid]
+        if w.alive:
+            # the old socket may be silently dead (dropped connection the
+            # coordinator has not touched since) — probe it before deciding
+            if w.lock.acquire(blocking=False):
+                try:
+                    if self._drain_stale(pid, w) and w.alive:
+                        try:
+                            w.conn.send(("ping",))
+                            if w.conn.poll(self.heartbeat_s):
+                                w.conn.recv()
+                                w.liveness.beat()
+                            else:
+                                self._mark_dead(pid, "silent under rejoin probe")
+                        except (OSError, EOFError, BrokenPipeError, ValueError):
+                            self._mark_dead(pid, "probe failed")
+                finally:
+                    w.lock.release()
+            if w.alive:
+                raise ValueError(
+                    f"worker process {pid} already attached and responsive"
+                )
+        self._rejoin(pid, conn)
+
+    def _rejoin(self, pid: int, conn) -> None:
+        """Re-adopt a returned worker: swap the connection, re-answer the
+        trace probe, warm it with its block of each registered example, and
+        only then mark it live (never route to a cold restart)."""
+        w = self._workers[pid]
+        with w.lock:
+            try:
+                w.conn.close()
+            except (OSError, ValueError):
+                pass
+            w.conn = conn
+            w.pending.clear()
+            try:
+                for name in sorted(self._local):
+                    conn.send(("traces", name))
+                    if not conn.poll(max(self.heartbeat_s, 5.0)):
+                        raise OSError("no trace-probe reply from rejoined worker")
+                    conn.recv()
+                    warm = self._warm_block(name, pid)
+                    if warm is not None:
+                        conn.send(("execute", name, warm))
+                        if not conn.poll(max(4 * self.heartbeat_s, 30.0)):
+                            raise OSError("no warmup reply from rejoined worker")
+                        status, payload = conn.recv()
+                        if status != "ok":
+                            raise OSError(f"rejoin warmup failed: {payload}")
+            except (OSError, EOFError, BrokenPipeError, ValueError) as e:
+                _ft_debug(f"rejoin of process {pid} failed: {type(e).__name__}: {e}")
+                try:
+                    conn.close()
+                except (OSError, ValueError):
+                    pass
+                return  # stays dead; a later dial-in may try again
+            w.alive = True
+            w.batches = 0
+            w.liveness = Liveness(self.heartbeat_s, self._clock)
+        with self._mlock:
+            self._dead.discard(pid)
+            self._death_reasons.pop(pid, None)
+            self._degraded_pm = None
+        # a restarted worker is a new population: forget the old statistics
+        self.monitor.forget(f"process{pid}")
+        self._ft.inc("worker_rejoins")
+
+    def _warm_block(self, name: str, pid: int) -> Optional[Dict[str, np.ndarray]]:
+        """This worker's row block of the largest registered bucket, built
+        from the example row — the shape rotation will actually route to it
+        under the healthy mesh."""
+        ex = self._examples.get(name)
+        if ex is None:
+            return None
+        example, buckets = ex
+        blocks = self._blocks_for(self.pm, max(buckets))
+        s, e = blocks[pid]
+        if e <= s:
+            return None
+        return {k: np.repeat(v[None], e - s, axis=0) for k, v in example.items()}
 
     @property
     def connected(self) -> bool:
-        return len(self._conns) == self.num_processes - 1
+        return len(self._workers) == self.num_processes - 1
+
+    @property
+    def live_workers(self) -> List[int]:
+        with self._mlock:
+            return sorted(p for p, w in self._workers.items() if w.alive)
 
     # -- execution ---------------------------------------------------------
 
-    def _process_blocks(self, n: int) -> List[Tuple[int, int]]:
+    def _current_pm(self):
+        """The mesh batches are carved over right now: the full topology, or
+        the degraded derivation over survivors after worker death."""
+        with self._mlock:
+            if not self._dead:
+                return self.pm
+            if self._degraded_pm is None:
+                self._degraded_pm = self.pm.degraded(frozenset(self._dead))
+            return self._degraded_pm
+
+    @staticmethod
+    def _blocks_for(pm, n: int) -> List[Tuple[int, int]]:
         """Contiguous (start, stop) row block per process for an n-row
-        padded batch (shard blocks merged by owning process)."""
-        shard_blocks = self.pm.shard_row_blocks(n)
+        padded batch (shard blocks merged by owning process; dead processes
+        own nothing and get an empty block)."""
+        shard_blocks = pm.shard_row_blocks(n)
         out: List[Tuple[int, int]] = []
-        for p in range(self.num_processes):
+        for p in range(pm.num_processes):
             mine = [
                 shard_blocks[i]
-                for i, owner in enumerate(self.pm.shard_process)
+                for i, owner in enumerate(pm.shard_process)
                 if owner == p
             ]
-            out.append((mine[0][0], mine[-1][1]))
+            out.append((mine[0][0], mine[-1][1]) if mine else (0, 0))
+        return out
+
+    def _process_blocks(self, n: int) -> List[Tuple[int, int]]:
+        return self._blocks_for(self._current_pm(), n)
+
+    def _run_local(self, name: str, block: Dict[str, np.ndarray], rank=None):
+        fn, _ = self._local[name]
+        t0 = self._clock()
+        out = jax.device_get(fn(stage_batch(block, self._sharding)))
+        if rank is not None:
+            # the coordinator's own shard time anchors the fleet median the
+            # straggler monitor flags against
+            self.monitor.report(rank, self._clock() - t0)
         return out
 
     def execute(self, name: str, host_cols: Dict[str, np.ndarray]):
         """One routed batch: scatter row blocks, run the local shard while
-        workers run theirs, gather and reassemble in process order."""
+        workers run theirs, gather and reassemble in row order.  Worker
+        loss and stalls are absorbed (hedge / reshard); only worker-REPORTED
+        execution errors — a poisoned block fails everywhere — surface as
+        :class:`WorkerFailedError`."""
         if not self.connected:
             raise RuntimeError(
-                f"executor has {len(self._conns)}/{self.num_processes - 1} workers"
+                f"executor has {len(self._workers)}/{self.num_processes - 1} workers"
             )
+        ev = {"hedged": 0, "resharded": 0}
+        self._events.last = ev
         n = int(next(iter(host_cols.values())).shape[0])
         blocks = self._process_blocks(n)
-        t_send = {}
-        # every acquired per-connection lock is released in the one finally
-        # below: a failure anywhere (send to a dead worker, the local shard
-        # raising, a broken recv) must not leave a lock held — that would
-        # deadlock every later batch on that connection forever.  A request
-        # that was SENT but whose reply was not consumed is drained first:
-        # a stale reply left in the pipe would answer the NEXT batch.
-        acquired: List[int] = []
-        sent: set = set()
-        replied: set = set()
+        host_blocks = {
+            p: {k: v[s:e] for k, v in host_cols.items()}
+            for p, (s, e) in enumerate(blocks)
+            if e > s
+        }
+        parts: Dict[int, Any] = {}
+        routed: List[int] = []
+        absorbed: List[int] = []
+        held: List[int] = []
+        t_send: Dict[int, float] = {}
+        err: Optional[BaseException] = None
         try:
-            for p, (s, e) in enumerate(blocks):
+            for p in sorted(host_blocks):
                 if p == 0:
                     continue
-                block = {k: v[s:e] for k, v in host_cols.items()}
-                self._conn_locks[p].acquire()
-                acquired.append(p)
-                t_send[p] = time.perf_counter()
-                self._conns[p].send(("execute", name, block))
-                sent.add(p)
+                w = self._workers.get(p)
+                if w is None or not w.alive:
+                    absorbed.append(p)  # died since blocks were carved
+                    ev["resharded"] += 1
+                    continue
+                w.lock.acquire()
+                held.append(p)
+                if not w.alive:
+                    held.remove(p)
+                    w.lock.release()
+                    absorbed.append(p)
+                    ev["resharded"] += 1
+                    continue
+                if not self._drain_stale(p, w):
+                    # a hedged reply is still outstanding (or the drain found
+                    # the socket dead): don't queue behind a straggler —
+                    # absorb its block locally this batch
+                    held.remove(p)
+                    w.lock.release()
+                    absorbed.append(p)
+                    if w.alive:
+                        ev["hedged"] += 1
+                        self._ft.inc("busy_skips")
+                    else:
+                        ev["resharded"] += 1
+                    continue
+                try:
+                    t_send[p] = self._clock()
+                    w.conn.send(("execute", name, host_blocks[p]))
+                    w.pending.append((t_send[p], name))
+                    routed.append(p)
+                except (OSError, BrokenPipeError, ValueError):
+                    held.remove(p)
+                    w.lock.release()
+                    self._mark_dead(p, "send failed")
+                    absorbed.append(p)
+                    ev["resharded"] += 1
             # the coordinator's own shard overlaps with the workers'
-            s0, e0 = blocks[0]
-            fn, _ = self._local[name]
-            local_out = jax.device_get(
-                fn(stage_batch({k: v[s0:e0] for k, v in host_cols.items()}, self._sharding))
-            )
-            parts = [local_out]
-            err: Optional[BaseException] = None
-            for p in range(1, self.num_processes):
-                status, payload = self._conns[p].recv()
-                replied.add(p)
-                self._shard_sketch(name, p).record(time.perf_counter() - t_send[p])
-                if status != "ok":
-                    err = err or WorkerFailedError(
-                        f"worker process {p} failed on model {name!r}: {payload}"
-                    )
-                    parts.append(None)
-                else:
-                    parts.append(payload)
+            if 0 in host_blocks:
+                parts[0] = self._run_local(name, host_blocks[0], rank="process0")
+            for p in absorbed:
+                parts[p] = self._run_local(name, host_blocks[p])
+                self._ft.inc("recovered_blocks")
+            for p in routed:
+                w = self._workers[p]
+                out, werr = self._gather(p, w, name, host_blocks[p], t_send[p], ev)
+                parts[p] = out
+                err = err or werr
+                held.remove(p)
+                w.lock.release()
         finally:
-            for p in acquired:
-                if p in sent and p not in replied:
-                    try:
-                        self._conns[p].recv()
-                    except (EOFError, OSError):
-                        pass  # worker gone: the connection is dead anyway
-                self._conn_locks[p].release()
+            for p in held:
+                self._workers[p].lock.release()
         if err is not None:
             raise err
-        return _concat_outputs(parts)
+        if ev["resharded"]:
+            over = len(self._dead) - self.max_reshards
+            if over > 0:
+                raise WorkerFailedError(
+                    f"mesh degraded beyond budget: {len(self._dead)} dead "
+                    f"workers > REPRO_FT_MAX_RESHARDS={self.max_reshards}"
+                )
+        last_death = self._ft.get("last_death_t", 0.0)
+        if last_death and not self._ft.get("kill_recover_ms", 0.0):
+            # first completed batch under the degraded mesh: the recovery
+            # latency the benchmarks record
+            self._ft.set(
+                "kill_recover_ms", round((self._clock() - last_death) * 1e3, 3)
+            )
+        ordered = [parts[p] for p in sorted(parts, key=lambda q: blocks[q][0])]
+        return _concat_outputs(ordered)
+
+    def _gather(self, p, w, name, block, t0, ev):
+        """Consume worker ``p``'s reply for the in-flight block — hedging a
+        flagged straggler, declaring death on staleness/EOF and recovering
+        the block locally.  Returns ``(output_or_None, error_or_None)``."""
+        rank = f"process{p}"
+        flagged = rank in self.monitor.flagged
+        try:
+            if self.hedge and flagged and not w.conn.poll(0):
+                # race: local re-execute vs the straggler's in-flight reply
+                self._ft.inc("hedges")
+                ev["hedged"] += 1
+                hedge_out = self._run_local(name, block)
+                if not w.conn.poll(0):
+                    # hedge won; the reply stays outstanding and is drained
+                    # before this connection's next use
+                    self._ft.inc("hedge_wins")
+                    return hedge_out, None
+                # both finished: the ORIGINAL wins ties (deterministic
+                # discard; outputs are bit-identical either way) and the
+                # socket stays clean
+                self._ft.inc("hedge_losses")
+                return self._consume_reply(p, w, name, t0)
+            # a slow reply is NOT death: first batches compile, stragglers
+            # straggle — both are correct, just late (hedging's job, not
+            # resharding's).  Death mid-wait surfaces instantly as EOF when
+            # the peer closes; this bound only catches a truly hung process
+            # that keeps its socket open without ever answering.
+            deadline = t0 + max(8 * self.heartbeat_s, 5.0)
+            while not w.conn.poll(0.05):
+                if self._clock() > deadline:
+                    raise OSError(
+                        f"no reply within {max(8 * self.heartbeat_s, 5.0):.1f}s"
+                    )
+            return self._consume_reply(p, w, name, t0)
+        except (OSError, EOFError, BrokenPipeError) as e:
+            self._mark_dead(p, f"{type(e).__name__}: {e}")
+            ev["resharded"] += 1
+            self._ft.inc("recovered_blocks")
+            return self._run_local(name, block), None
+
+    def _consume_reply(self, p, w, name, t0):
+        status, payload = w.conn.recv()
+        if w.pending:
+            w.pending.pop(0)
+        dt = self._clock() - t0
+        self._shard_sketch(name, p).record(dt)
+        self.monitor.report(f"process{p}", dt)
+        w.liveness.beat()
+        if status != "ok":
+            return None, WorkerFailedError(
+                f"worker process {p} failed on model {name!r}: {payload}"
+            )
+        w.batches += 1
+        return payload, None
+
+    def _drain_stale(self, p, w) -> bool:
+        """Consume replies left over from won hedges (FIFO, timed from their
+        original send).  True when the connection is idle and usable."""
+        while w.pending:
+            try:
+                if not w.conn.poll(0):
+                    return False
+                t0, name = w.pending[0]
+                status, payload = w.conn.recv()
+            except (OSError, EOFError, BrokenPipeError):
+                self._mark_dead(p, "connection lost draining stale replies")
+                return False
+            w.pending.pop(0)
+            dt = self._clock() - t0
+            self._shard_sketch(name, p).record(dt)
+            self.monitor.report(f"process{p}", dt)
+            w.liveness.beat()
+        return True
+
+    def _mark_dead(self, p: int, why: str = "") -> None:
+        with self._mlock:
+            w = self._workers.get(p)
+            if w is None or not w.alive:
+                return
+            w.alive = False
+            w.pending.clear()
+            self._dead.add(p)
+            self._death_reasons[p] = why
+            self._degraded_pm = None
+            try:
+                w.conn.close()
+            except (OSError, ValueError):
+                pass
+        self._ft.inc("worker_deaths")
+        self._ft.inc("reshards")
+        self._ft.set("last_death_t", self._clock())
+        self._ft.set("kill_recover_ms", 0.0)  # re-arm the recovery gauge
+        self.monitor.forget(f"process{p}")
+
+    # -- health sweep ------------------------------------------------------
+
+    def _sweep_loop(self) -> None:
+        interval = max(0.05, self.heartbeat_s / 4)
+        while not self._closed:
+            time.sleep(interval)
+            try:
+                self._sweep_once()
+            except Exception:  # the sweeper must outlive any single fault
+                pass
+
+    def _sweep_once(self) -> None:
+        for p in self.live_workers:
+            w = self._workers.get(p)
+            if w is None or not w.alive or w.liveness.age() <= self.heartbeat_s:
+                continue
+            if not w.lock.acquire(blocking=False):
+                continue  # mid-batch: its reply is the heartbeat
+            try:
+                if not self._drain_stale(p, w):
+                    # outstanding hedged reply: judge by staleness alone
+                    if w.alive and w.liveness.state() == "dead":
+                        self._mark_dead(p, "stale with outstanding reply")
+                    continue
+                if not w.alive:
+                    continue
+                self._ft.inc("pings")
+                try:
+                    w.conn.send(("ping",))
+                    if w.conn.poll(min(self.heartbeat_s, 1.0)):
+                        w.conn.recv()
+                        w.liveness.beat()
+                    elif w.liveness.state() == "dead":
+                        self._mark_dead(p, "unanswered ping")
+                except (OSError, EOFError, BrokenPipeError, ValueError):
+                    self._mark_dead(p, "ping failed")
+            finally:
+                w.lock.release()
 
     # -- introspection -----------------------------------------------------
+
+    def take_batch_events(self) -> Optional[dict]:
+        ev = getattr(self._events, "last", None)
+        self._events.last = None
+        return ev
 
     def _shard_sketch(self, name: str, p: int) -> LatencySketch:
         key = (name, p)
@@ -238,39 +690,106 @@ class MultiHostExecutor:
             if n == name
         }
 
+    def ft_snapshot(self) -> dict:
+        """Per-worker health states plus the executor's fault counters —
+        surfaced by ``gateway.snapshot()`` under ``models[name]["ft"]``."""
+        with self._mlock:
+            workers = {
+                f"process{p}": {
+                    "state": w.liveness.state() if w.alive else "dead",
+                    "age_ms": round(w.liveness.age() * 1e3, 1),
+                    "batches": w.batches,
+                    "outstanding": len(w.pending),
+                }
+                for p, w in sorted(self._workers.items())
+            }
+            dead = sorted(self._dead)
+            reasons = {f"process{p}": r for p, r in sorted(self._death_reasons.items())}
+        out = {
+            "workers": workers,
+            "dead": dead,
+            "death_reasons": reasons,
+            "flagged": list(self.monitor.flagged),
+        }
+        out.update(self._ft.snapshot())
+        return out
+
     def trace_count(self, name: str) -> int:
         _, traces = self._local[name]
         total = traces() if traces is not None else 0
-        for p in sorted(self._conns):
-            with self._conn_locks[p]:
-                self._conns[p].send(("traces", name))
-                status, payload = self._conns[p].recv()
+        for p in self.live_workers:
+            w = self._workers[p]
+            with w.lock:
+                if not w.alive or not self._drain_stale(p, w):
+                    continue
+                try:
+                    w.conn.send(("traces", name))
+                    if not w.conn.poll(max(self.heartbeat_s, 5.0)):
+                        continue
+                    status, payload = w.conn.recv()
+                except (OSError, EOFError, BrokenPipeError, ValueError):
+                    self._mark_dead(p, "trace probe failed")
+                    continue
             if status == "ok" and payload >= 0:
                 total += payload
         return total
 
-    def close(self) -> None:
-        """Tell every worker to exit its serve loop and drop connections."""
-        for p, conn in sorted(self._conns.items()):
+    def close(self, timeout_s: float = 5.0) -> None:
+        """Orderly shutdown: stop the sweep/accept loops, then per worker —
+        drain any outstanding hedged replies, send an explicit ``shutdown``
+        frame and consume its ack — so a reply in flight is drained, never
+        raised into (closing the coordinator mid-reply used to error the
+        worker's serve loop instead of draining it)."""
+        self._closed = True
+        for p, w in sorted(self._workers.items()):
+            if not w.alive:
+                continue
+            got = w.lock.acquire(timeout=timeout_s)
             try:
-                with self._conn_locks[p]:
-                    conn.send(("close",))
-                    conn.close()
-            except (OSError, EOFError, BrokenPipeError):
+                deadline = self._clock() + timeout_s
+                while w.pending and self._clock() < deadline:
+                    try:
+                        if w.conn.poll(0.05):
+                            w.conn.recv()
+                            w.pending.pop(0)
+                    except (OSError, EOFError, BrokenPipeError):
+                        w.pending.clear()
+                        break
+                w.conn.send(("shutdown",))
+                if w.conn.poll(timeout_s):
+                    w.conn.recv()  # ("ok", {"batches": n}) ack — drained
+                w.conn.close()
+            except (OSError, EOFError, BrokenPipeError, ValueError):
                 pass
-        self._conns.clear()
+            finally:
+                if got:
+                    w.lock.release()
+        with self._mlock:
+            self._workers.clear()
+            self._dead.clear()
+            self._degraded_pm = None
+        if self._sweeper.is_alive():
+            self._sweeper.join(timeout=1.0)
 
 
-def accept_workers(listener, executor: MultiHostExecutor, timeout_s: float = 60.0):
+def accept_workers(
+    listener, executor: MultiHostExecutor, timeout_s: float = 60.0, live: bool = True
+):
     """Accept worker dial-ins on ``listener`` (a ``multiprocessing.
     connection.Listener``) until the executor has every process attached.
     Each worker announces ``("hello", process_id)`` on connect.
 
-    The deadline bounds the whole wait, including the blocking accept: a
-    worker that never dials in (crashed during startup) raises TimeoutError
-    instead of hanging the coordinator, and a connection that never
-    completes its hello (stray client, worker killed mid-handshake) is
-    dropped rather than wedging the loop."""
+    The deadline bounds the whole initial wait, including the blocking
+    accept: a worker that never dials in (crashed during startup) raises
+    TimeoutError instead of hanging the coordinator, and a connection that
+    never completes its hello (stray client, worker killed mid-handshake) is
+    dropped rather than wedging the loop.
+
+    With ``live=True`` (default) the loop then continues in a daemon thread
+    until ``executor.close()``: a supervisor-restarted ShardServer that
+    dials the same listener is re-attached, re-probed, warmed and returned
+    to rotation (see :meth:`MultiHostExecutor.attach`).  Keep the listener
+    open for the executor's lifetime when using rejoin."""
     import multiprocessing.connection as mpc
     import select
 
@@ -282,7 +801,7 @@ def accept_workers(listener, executor: MultiHostExecutor, timeout_s: float = 60.
         remaining = deadline - time.monotonic()
         if remaining <= 0:
             raise TimeoutError(
-                f"workers missing: have {len(executor._conns)} of "
+                f"workers missing: have {len(executor._workers)} of "
                 f"{executor.num_processes - 1}"
             )
         if sock is not None:
@@ -305,7 +824,61 @@ def accept_workers(listener, executor: MultiHostExecutor, timeout_s: float = 60.
             conn.close()
             raise RuntimeError(f"unexpected first message {tag!r} from a worker")
         executor.attach(int(pid), conn)
+    executor._started = True
+    if live:
+        t = threading.Thread(
+            target=_accept_loop, args=(listener, executor), daemon=True,
+            name="mh-accept",
+        )
+        t.start()
+        executor._accept_thread = t
     return executor
+
+
+def _accept_loop(listener, executor: MultiHostExecutor) -> None:
+    """Live rejoin service: keep accepting hellos until the executor closes.
+    Every fault here is contained — a stray dial-in, a half-handshake or a
+    failed rejoin must never take down the coordinator."""
+    import multiprocessing.connection as mpc
+    import select
+
+    sock = getattr(getattr(listener, "_listener", None), "_socket", None)
+    while not executor._closed:
+        try:
+            if sock is not None:
+                ready, _, _ = select.select([sock], [], [], 0.25)
+                if not ready:
+                    continue
+            conn = listener.accept()
+        except (OSError, ValueError, mpc.AuthenticationError, EOFError):
+            if sock is None or executor._closed:
+                return
+            # a closed listener raises on select/accept forever: stop
+            try:
+                select.select([sock], [], [], 0)
+            except (OSError, ValueError):
+                return
+            continue
+        try:
+            if not conn.poll(5.0):
+                conn.close()
+                continue
+            tag, pid = conn.recv()
+            if tag != "hello":
+                conn.close()
+                continue
+            executor.attach(int(pid), conn)
+        except (OSError, EOFError, ValueError, RuntimeError) as e:
+            _ft_debug(f"live accept rejected a dial-in: {type(e).__name__}: {e}")
+            try:
+                conn.close()
+            except (OSError, ValueError):
+                pass
+
+
+class _DropConnection(Exception):
+    """Fault-injection signal: sever this worker's connection mid-stream
+    (the chaos harness's stand-in for a network partition)."""
 
 
 class ShardServer:
@@ -316,12 +889,21 @@ class ShardServer:
     code path a single-process gateway serves through — so a FusedModel
     worker executes via ``jit_for`` with its compile probe intact.
 
+    The serve loop answers ``ping`` (idle health probes) and ``shutdown``
+    (acked drain) frames alongside ``execute``/``traces``, and treats a
+    coordinator that vanished mid-reply as a drain, not an error — the
+    reply has no reader, so the loop returns instead of raising into the
+    supervisor.  ``fault_hook`` is the chaos harness's injection point (it
+    runs after the block executes, before the reply is sent).
+
     Args:
       process_mesh: this worker's topology (process id >= 1).
       models: ``{name: model}`` — FusedModel / PreprocessModel / callable,
         under the same names the coordinator registers.
       sharding: optional staging sharding for the worker's block.
     """
+
+    Drop = _DropConnection
 
     def __init__(self, process_mesh, models: Dict[str, Any], sharding=None):
         from .registry import _normalize
@@ -331,6 +913,7 @@ class ShardServer:
         self.pm = process_mesh
         self._sharding = sharding
         self._fns: Dict[str, Tuple[Any, Any]] = {}
+        self.shutdown_received = False
         for name, model in models.items():
             fn, traces = _normalize(name, model, sharding, donate=None)
             self._fns[name] = (fn, traces)
@@ -358,6 +941,24 @@ class ShardServer:
         finally:
             conn.close()
 
+    def fault_hook(self, name: str, batches_done: int) -> None:
+        """Chaos-harness injection point: runs after a block executes and
+        before its reply is sent.  May sleep (straggler), raise
+        :class:`ShardServer.Drop` (severed connection) or kill the process
+        outright.  No-op in production."""
+
+    @staticmethod
+    def _safe_send(conn, msg) -> bool:
+        """Reply, tolerating a coordinator that went away mid-flight: a dead
+        socket means nobody is waiting for this reply, so the serve loop
+        drains out instead of raising (the old behaviour crashed a worker
+        whose coordinator closed while a reply was in flight)."""
+        try:
+            conn.send(msg)
+            return True
+        except (OSError, EOFError, BrokenPipeError, ValueError):
+            return False
+
     def serve(self, conn) -> int:
         batches = 0
         while True:
@@ -365,20 +966,38 @@ class ShardServer:
                 msg = conn.recv()
             except (EOFError, OSError):
                 return batches
-            if msg[0] == "close":
+            if msg[0] in ("close", "shutdown"):
+                self.shutdown_received = True
+                if msg[0] == "shutdown":
+                    # acked drain: the coordinator consumes this before
+                    # closing, so no reply is ever abandoned on the wire
+                    self._safe_send(conn, ("ok", {"batches": batches}))
                 return batches
+            if msg[0] == "ping":
+                if not self._safe_send(conn, ("ok", "pong")):
+                    return batches
+                continue
             if msg[0] == "traces":
                 _, traces = self._fns.get(msg[1], (None, None))
-                conn.send(("ok", traces() if traces is not None else -1))
+                if not self._safe_send(
+                    conn, ("ok", traces() if traces is not None else -1)
+                ):
+                    return batches
                 continue
             if msg[0] != "execute":
-                conn.send(("error", f"unknown message {msg[0]!r}"))
+                if not self._safe_send(conn, ("error", f"unknown message {msg[0]!r}")):
+                    return batches
                 continue
             _, name, block = msg
             try:
                 fn, _ = self._fns[name]
                 out = jax.device_get(fn(stage_batch(block, self._sharding)))
-                conn.send(("ok", out))
+                self.fault_hook(name, batches)
+                if not self._safe_send(conn, ("ok", out)):
+                    return batches
                 batches += 1
+            except _DropConnection:
+                return batches
             except BaseException as e:  # the reply slot must always be filled
-                conn.send(("error", f"{type(e).__name__}: {e}"))
+                if not self._safe_send(conn, ("error", f"{type(e).__name__}: {e}")):
+                    return batches

@@ -115,6 +115,12 @@ class ModelRegistry:
                     f"(one per data shard)"
                 )
         fn, traces = _normalize(name, model, sharding, donate)
+        hook = getattr(model, "register_example", None)
+        if hook is not None:
+            # fault-tolerant multi-host servables keep the row template and
+            # bucket set: a rejoining worker is warmed with ITS row block of
+            # the largest bucket before re-entering rotation
+            hook({k: np.asarray(v) for k, v in example.items()}, bl)
         entry = ModelEntry(
             name=name,
             fn=fn,

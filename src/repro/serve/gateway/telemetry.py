@@ -64,6 +64,36 @@ class LatencySketch:
         return out
 
 
+class CounterSet:
+    """Thread-safe named event counters with a consistent snapshot.
+
+    The fault-tolerant executor mutates these from gateway worker threads,
+    the ping sweeper and the accept loop concurrently; ``snapshot()`` returns
+    one coherent dict (taken under the lock) so a poller never observes, say,
+    a death without its reshard.  ``set()`` records gauges (last-write-wins
+    values like recovery latency) alongside the monotone counters."""
+
+    def __init__(self, **initial):
+        self._lock = threading.Lock()
+        self._counts: Dict[str, float] = dict(initial)
+
+    def inc(self, name: str, by: float = 1) -> None:
+        with self._lock:
+            self._counts[name] = self._counts.get(name, 0) + by
+
+    def set(self, name: str, value: float) -> None:
+        with self._lock:
+            self._counts[name] = value
+
+    def get(self, name: str, default: float = 0):
+        with self._lock:
+            return self._counts.get(name, default)
+
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            return dict(self._counts)
+
+
 def quantile_label(q: float) -> str:
     """``0.5 -> 'p50_us'``, ``0.99 -> 'p99_us'``, ``0.999 -> 'p99_9_us'``.
 

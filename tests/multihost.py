@@ -115,10 +115,16 @@ def launch(
     devices_per_proc: int = 2,
     timeout_s: float = 480.0,
     extra_env=None,
+    expendable=(),
 ):
     """Run ``entry`` in ``nproc`` fresh fake-device processes; returns the
     per-process results in process order.  Any child failure raises with
-    that child's traceback and stderr tail."""
+    that child's traceback and stderr tail.
+
+    ``expendable`` lists process ids that are ALLOWED to die without
+    reporting (chaos schedules kill -9 workers mid-stream): their slot in
+    the returned list is ``None`` (or their result, if they reported before
+    dying) and their exit code is not an error."""
     from multiprocessing.connection import Listener
 
     coord_port, jaxdist_port, result_port = free_port(), free_port(), free_port()
@@ -160,10 +166,12 @@ def launch(
             )
         import select
 
+        expendable = set(expendable)
+        needed = set(range(nproc)) - expendable
         results = {}
         deadline = time.monotonic() + timeout_s
         sock = listener._listener._socket  # select-able accept (stdlib impl)
-        while len(results) < nproc:
+        while not needed <= set(results):
             if time.monotonic() > deadline:
                 raise TimeoutError(
                     f"{entry}: {len(results)}/{nproc} results before timeout"
@@ -171,9 +179,14 @@ def launch(
             ready, _, _ = select.select([sock], [], [], 1.0)
             if not ready:
                 # a child that crashed before dialing in would block accept
-                # forever; fail fast with its stderr instead
+                # forever; fail fast with its stderr instead (an EXPENDABLE
+                # child dying is part of the schedule, not a failure)
                 for i, p in enumerate(procs):
-                    if i not in results and p.poll() not in (None, 0):
+                    if (
+                        i not in results
+                        and i not in expendable
+                        and p.poll() not in (None, 0)
+                    ):
                         err = p.stderr.read() if p.stderr else ""
                         raise RuntimeError(
                             f"{entry}: process {i} exited rc={p.returncode} "
@@ -186,16 +199,18 @@ def launch(
             if status != "ok":
                 raise RuntimeError(f"{entry}: process {pid} failed:\n{value}")
             results[pid] = value
-        for p in procs:
+        for i, p in enumerate(procs):
+            if i in expendable and i not in results:
+                p.kill()  # an expendable child may be wedged on a dead peer
             p.wait(timeout=30)
-        return [results[i] for i in range(nproc)]
+        return [results.get(i) for i in range(nproc)]
     finally:
         for p in procs:
             if p.poll() is None:
                 p.kill()
         # surface child stderr on failure paths (pytest shows it on raise)
         for i, p in enumerate(procs):
-            if p.returncode not in (0, None):
+            if p.returncode not in (0, None) and i not in expendable:
                 err = p.stderr.read() if p.stderr else ""
                 sys.stderr.write(f"--- {entry} process {i} stderr ---\n{err[-3000:]}\n")
         listener.close()
@@ -387,6 +402,256 @@ def gateway_replay(ctx: MHContext, payload):
     if ex is not None:
         ex.close()
     gw.close()
+    return out
+
+
+class ChaosShardServer:
+    """A ShardServer with an injectable fault schedule (built lazily so the
+    module stays importable without jax).
+
+    Faults are dicts selected per worker by ``process``; kinds:
+
+    * ``{"type": "delay", "delay_s": s, "batches": (lo, hi)}`` — sleep
+      before replying to batches ``lo <= n < hi`` (a straggling worker);
+    * ``{"type": "kill", "after_batches": k}`` — SIGKILL this process after
+      computing batch ``k``, before its reply is sent (kill -9 mid-stream);
+    * ``{"type": "drop", "after_batches": k, "rejoin": bool}`` — sever the
+      connection after batch ``k``; with ``rejoin`` the worker entry dials
+      back in with a FRESH (fault-free) server, modelling a supervisor
+      restart.
+    """
+
+    def __new__(cls, pm, models, faults=(), **kw):
+        import os as _os
+        import signal as _signal
+        import time as _time
+
+        from repro.serve import ShardServer
+
+        class _Chaos(ShardServer):
+            def fault_hook(self, name, batches_done):
+                for f in self._faults:
+                    kind = f["type"]
+                    if kind == "delay":
+                        lo, hi = f.get("batches", (0, 1 << 30))
+                        if lo <= batches_done < hi:
+                            _time.sleep(f["delay_s"])
+                    elif kind == "kill" and batches_done == f["after_batches"]:
+                        _os.kill(_os.getpid(), _signal.SIGKILL)
+                    elif kind == "drop" and batches_done == f["after_batches"]:
+                        raise ShardServer.Drop("injected connection drop")
+
+        server = _Chaos(pm, models, **kw)
+        server._faults = list(faults)
+        return server
+
+
+def gateway_chaos(ctx: MHContext, payload):
+    """Differential gateway traffic under an injected fault schedule.
+
+    Like :func:`gateway_replay`, but the coordinator runs the FAULT-TOLERANT
+    executor configuration (fast heartbeat, straggler monitor, optional
+    hedging, live rejoin accept loop) and the workers run
+    :class:`ChaosShardServer` with the payload's fault schedule.  At nproc=1
+    the same traffic runs single-process — the bit-identity reference.
+
+    Payload knobs beyond gateway_replay's: ``faults`` (see ChaosShardServer),
+    ``hedge``, ``heartbeat_s``, ``deadline_ms`` (per-request finish bound;
+    completion within it is a "hit"), ``traffic`` ("replay" = one concurrent
+    burst, "stream" = a few paced clients with one request in flight each —
+    the trickle shape of a streaming feed), ``straggler_threshold`` /
+    ``straggler_warmup``.
+
+    Satellite note: "{stream, gateway} traffic" means these two TRAFFIC
+    SHAPES through the gateway — a PlanRunner stream proper has no
+    per-request recovery channel (a lost block fails the whole stream), so
+    fault schedules are meaningful only behind the gateway's request/reply
+    contract.
+    """
+    import threading
+    import time as _time
+
+    import numpy as np
+
+    from repro.serve import MultiHostExecutor, ServingGateway, accept_workers
+
+    seed = payload.get("seed", 0)
+    pm = ctx.process_mesh()
+    if not ctx.is_coordinator:
+        my_faults = [
+            f
+            for f in payload.get("faults", [])
+            if int(f.get("process", 1)) == ctx.process_id
+        ]
+        rejoins_left = sum(1 for f in my_faults if f.get("rejoin"))
+        total, serves, dial_error = 0, 0, None
+        times = []
+        # built ONCE: rebuilding (re-fitting) the model per life costs ~1s,
+        # which would lose the rejoin race against short test traffic.  The
+        # reused model keeps its jit cache warm — acceptable here, since the
+        # cold-restart compile path is exercised by the coordinator-side
+        # rejoin warmup regardless of worker-side cache state.
+        fm = _fused_model(seed)
+        while True:
+            server = ChaosShardServer(
+                pm,
+                {"ranker": fm},
+                faults=my_faults if serves == 0 else (),
+            )
+            times.append(("dial", _time.perf_counter()))
+            try:
+                total += server.connect_and_serve(
+                    ctx.coord_address, ctx.authkey, timeout_s=20.0
+                )
+            except OSError as e:
+                # coordinator already gone: nothing to rejoin to (recorded so
+                # a rejoin test that LOST the race can say why)
+                dial_error = f"{type(e).__name__}: {e}"
+                break
+            times.append(("served", _time.perf_counter()))
+            serves += 1
+            if server.shutdown_received or rejoins_left <= 0:
+                break
+            rejoins_left -= 1
+            _time.sleep(payload.get("rejoin_delay_s", 0.2))
+        return {
+            "batches": total,
+            "serves": serves,
+            "dial_error": dial_error,
+            "times": times,
+        }
+
+    listener = ctx.listen() if ctx.num_processes > 1 else None
+    fm = _fused_model(seed)
+    gw = ServingGateway(
+        max_pending=512,
+        max_wait_ms=payload.get("max_wait_ms", 1.0),
+        workers=2,
+        cost_model=payload.get("cost_model", False),
+    )
+    ex = None
+    if ctx.num_processes > 1:
+        from repro.ft import StragglerMonitor
+
+        ex = MultiHostExecutor(
+            pm,
+            hedge=bool(payload.get("hedge", True)),
+            heartbeat_s=payload.get("heartbeat_s", 0.5),
+            # threshold must sit BELOW 2 for a 2-rank fleet: as the straggler
+            # slows, the true median tends to half its EWMA, so the
+            # EWMA/median ratio is bounded by 2
+            monitor=StragglerMonitor(
+                alpha=0.5,
+                threshold=payload.get("straggler_threshold", 1.5),
+                warmup_steps=payload.get("straggler_warmup", 2),
+            ),
+        )
+        servable = ex.add_model("ranker", fm)
+        # the listener stays OPEN: accept_workers keeps a live accept loop
+        # so dropped/restarted workers can rejoin mid-traffic
+        accept_workers(listener, ex)
+        gw.register(
+            "ranker",
+            servable,
+            example=_replay_rows(payload)[0],
+            buckets=tuple(payload.get("buckets", (2, 4, 8))),
+            max_batch=payload.get("max_batch", 8),
+        )
+    else:
+        gw.register(
+            "ranker",
+            fm,
+            example=_replay_rows(payload)[0],
+            buckets=tuple(payload.get("buckets", (2, 4, 8))),
+            max_batch=payload.get("max_batch", 8),
+        )
+    gw.warmup()
+    rows = _replay_rows(payload)
+    deadline_ms = payload.get("deadline_ms")
+    results = [None] * len(rows)
+    errors = [None] * len(rows)
+    lat = [None] * len(rows)
+
+    def one(i):
+        t0 = _time.perf_counter()
+        try:
+            results[i] = np.asarray(
+                gw.submit("ranker", rows[i], deadline_ms=deadline_ms, timeout=120.0)
+            )
+        except BaseException as e:
+            errors[i] = type(e).__name__
+        lat[i] = _time.perf_counter() - t0
+
+    t_run0 = _time.perf_counter()
+    if payload.get("traffic", "replay") == "replay":
+        import concurrent.futures as cf
+
+        # "waves" splits the burst: a rejoin schedule needs traffic LEFT
+        # after the worker's second life attaches, which a single
+        # instantaneous burst never leaves
+        waves = max(1, int(payload.get("waves", 1)))
+        per = -(-len(rows) // waves)
+        with cf.ThreadPoolExecutor(max_workers=8) as pool:
+            for wv in range(waves):
+                list(pool.map(one, range(wv * per, min((wv + 1) * per, len(rows)))))
+                if wv < waves - 1:
+                    _time.sleep(payload.get("wave_gap_s", 0.5))
+    else:
+        import queue as _queue
+
+        q = _queue.Queue()
+        for i in range(len(rows)):
+            q.put(i)
+        gap = payload.get("gap_s", 0.0)
+
+        def client():
+            while True:
+                try:
+                    i = q.get_nowait()
+                except _queue.Empty:
+                    return
+                one(i)
+                if gap:
+                    _time.sleep(gap)
+
+        threads = [
+            threading.Thread(target=client)
+            for _ in range(payload.get("clients", 3))
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    wall_s = _time.perf_counter() - t_run0
+    snap = gw.snapshot()
+    completed = [i for i in range(len(rows)) if results[i] is not None]
+    err_counts = {}
+    for e in errors:
+        if e is not None:
+            err_counts[e] = err_counts.get(e, 0) + 1
+    hit_rate = None
+    if deadline_ms is not None:
+        hits = sum(1 for i in completed if lat[i] * 1e3 <= deadline_ms)
+        hit_rate = hits / len(rows)
+    out = {
+        "results": results,
+        "errors": err_counts,
+        "completed": len(completed),
+        "worker_failed": err_counts.get("WorkerFailedError", 0),
+        "hit_rate": hit_rate,
+        "ft": snap["models"]["ranker"].get("ft", {}),
+        "stats": snap["stats"],
+        "stage_counts": {
+            s: snap["models"]["ranker"][s]["count"]
+            for s in ("execute", "execute_retry", "execute_hedge", "execute_reshard")
+        },
+        "wall_s": wall_s,
+    }
+    gw.close()
+    if ex is not None:
+        ex.close()
+    if listener is not None:
+        listener.close()
     return out
 
 

@@ -1,0 +1,202 @@
+"""Chaos harness: the fault-tolerant serving tier under injected failures.
+
+Every test replays the SAME seeded gateway traffic twice — once through a
+1-process gateway (the reference) and once through an N-process routed
+gateway with a fault schedule injected into its shard workers — and asserts
+the contract of the fault-tolerant executor:
+
+* every request completes (no fault schedule may surface a
+  ``WorkerFailedError`` to a client — worker loss is the executor's problem,
+  not the caller's);
+* completed results are BIT-IDENTICAL to the 1-process run (recovery paths
+  re-execute the same row blocks through the same bit-stable program — see
+  tests/test_multihost.py for why only hash/index/affine stages qualify);
+* no admission slot leaks (``pending == 0`` once traffic drains).
+
+Fault kinds cover kill -9 mid-stream, delayed replies (straggler), dropped
+connections, and drop + rejoin (a supervisor-restarted worker re-attaching
+through the live accept loop).  Schedules run under both traffic shapes —
+"replay" (one concurrent burst) and "stream" (paced clients, the trickle
+shape of a streaming feed).
+
+Marked ``chaos`` (plus ``multihost``/``subprocess``): slow and
+timing-sensitive by nature; deselect with ``-m "not chaos"``.
+"""
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+from multihost import launch  # noqa: E402
+
+pytestmark = [pytest.mark.chaos, pytest.mark.multihost, pytest.mark.subprocess]
+
+
+def _base_payload(**over):
+    payload = {
+        "seed": 11,
+        "requests": 40,
+        "buckets": (2, 4, 8),
+        "max_batch": 8,
+        "heartbeat_s": 0.5,
+        "cost_model": False,
+        "traffic": "stream",
+        "clients": 3,
+    }
+    payload.update(over)
+    return payload
+
+
+def _reference(payload):
+    """The 1-process run of the same traffic: no faults, no routing."""
+    ref_payload = dict(payload)
+    ref_payload.pop("faults", None)
+    ref_payload.pop("deadline_ms", None)
+    return launch("gateway_chaos", 1, ref_payload, devices_per_proc=1)[0]
+
+
+def _assert_contract(coord, ref, n_requests):
+    """The failure-semantics contract every schedule must honour."""
+    assert coord["worker_failed"] == 0, coord["errors"]
+    assert coord["errors"] == {}, coord["errors"]
+    assert coord["completed"] == n_requests
+    assert coord["stats"]["pending"] == 0  # no leaked admission slots
+    for i, (got, want) in enumerate(zip(coord["results"], ref["results"])):
+        np.testing.assert_array_equal(got, want, err_msg=f"request {i}")
+
+
+@pytest.mark.parametrize("nproc", [2, 3])
+@pytest.mark.parametrize("traffic", ["stream", "replay"])
+def test_kill_mid_stream_bit_identical(nproc, traffic):
+    """kill -9 of the LAST worker mid-stream: the coordinator reshards the
+    orphan row blocks onto survivors, re-executes the in-flight block, and
+    every request still answers bit-identically to the 1-process run."""
+    victim = nproc - 1
+    # after_batches=4 lands the kill in TRAFFIC, past the 2-3 warmup batches
+    # (warmup deaths recover too, but the reshard tag below asserts a
+    # client-visible batch crossed the degraded mesh)
+    payload = _base_payload(
+        traffic=traffic,
+        faults=[{"process": victim, "type": "kill", "after_batches": 4}],
+    )
+    ref = _reference(payload)
+    parts = launch(
+        "gateway_chaos", nproc, payload, devices_per_proc=1, expendable=[victim]
+    )
+    coord = parts[0]
+    _assert_contract(coord, ref, payload["requests"])
+    ft = coord["ft"]
+    assert ft["worker_deaths"] >= 1
+    assert ft["reshards"] >= 1
+    assert victim in ft["dead"]
+    assert ft["workers"][f"process{victim}"]["state"] == "dead"
+    assert ft.get("recovered_blocks", 0) >= 1
+    assert ft.get("kill_recover_ms", 0) > 0
+    # at least one batch completed through the degraded mesh
+    assert coord["stage_counts"]["execute_reshard"] >= 1
+    if nproc == 3:
+        # the surviving worker (process 1) kept serving after the death
+        assert parts[1] is not None and parts[1]["batches"] > 0
+
+
+@pytest.mark.parametrize("traffic", ["stream", "replay"])
+def test_straggler_delay_hedged_bit_identical(traffic):
+    """A worker delaying every reply gets flagged and hedged around; results
+    stay bit-identical (the hedge re-executes the same block through the
+    same program) and no request fails."""
+    payload = _base_payload(
+        traffic=traffic,
+        hedge=True,
+        faults=[
+            {"process": 1, "type": "delay", "delay_s": 0.35, "batches": (0, 1 << 30)}
+        ],
+    )
+    ref = _reference(payload)
+    coord = launch("gateway_chaos", 2, payload, devices_per_proc=1)[0]
+    _assert_contract(coord, ref, payload["requests"])
+    ft = coord["ft"]
+    assert ft.get("hedges", 0) + ft.get("busy_skips", 0) >= 1
+    assert coord["stage_counts"]["execute_hedge"] >= 1
+    # hedging routes AROUND the straggler, never through failure: the worker
+    # was flagged (or its block absorbed), not killed
+    assert ft["dead"] == []
+
+
+def test_straggler_hedging_improves_deadline_hit_rate():
+    """The acceptance gate: with an injected straggler and per-request
+    deadlines, hedging ON yields a strictly higher deadline hit rate than
+    hedging OFF at equal load."""
+    base = _base_payload(
+        requests=36,
+        deadline_ms=400.0,
+        clients=4,
+        faults=[
+            {"process": 1, "type": "delay", "delay_s": 0.5, "batches": (0, 1 << 30)}
+        ],
+    )
+    off = launch(
+        "gateway_chaos", 2, dict(base, hedge=False), devices_per_proc=1
+    )[0]
+    on = launch(
+        "gateway_chaos", 2, dict(base, hedge=True), devices_per_proc=1
+    )[0]
+    assert on["worker_failed"] == 0 and off["worker_failed"] == 0
+    assert on["hit_rate"] > off["hit_rate"], (
+        f"hedging on hit rate {on['hit_rate']:.3f} not strictly above "
+        f"off {off['hit_rate']:.3f}"
+    )
+    # completed requests still answer bit-identically to the reference
+    ref = _reference(base)
+    for i, got in enumerate(on["results"]):
+        if got is not None:
+            np.testing.assert_array_equal(got, ref["results"][i], err_msg=f"request {i}")
+
+
+@pytest.mark.parametrize("nproc", [2, 3])
+def test_drop_connection_bit_identical(nproc):
+    """A severed connection (no rejoin): the executor reshards around the
+    vanished worker exactly as for a kill, and the worker's serve loop
+    drains out instead of erroring (its child exits cleanly, rc=0)."""
+    payload = _base_payload(
+        faults=[{"process": 1, "type": "drop", "after_batches": 4}],
+    )
+    ref = _reference(payload)
+    parts = launch("gateway_chaos", nproc, payload, devices_per_proc=1)
+    coord = parts[0]
+    _assert_contract(coord, ref, payload["requests"])
+    assert coord["ft"]["worker_deaths"] >= 1
+    assert 1 in coord["ft"]["dead"]
+    # the dropped worker reported normally (clean drain, not a crash)
+    assert parts[1] is not None and parts[1]["serves"] == 1
+
+
+@pytest.mark.parametrize("traffic", ["stream", "replay"])
+def test_restart_and_rejoin_reenters_rotation(traffic):
+    """Drop + rejoin (supervisor restart): the worker dials the live accept
+    loop back, is re-probed and warmed, and re-enters rotation — its second
+    life serves real batches — with results still bit-identical."""
+    payload = _base_payload(
+        requests=64,
+        traffic=traffic,
+        clients=2,
+        gap_s=0.02,
+        # replay is one instantaneous burst — split it so traffic remains
+        # for the rejoined worker's second life to actually serve
+        waves=2,
+        wave_gap_s=0.8,
+        rejoin_delay_s=0.2,
+        faults=[{"process": 1, "type": "drop", "after_batches": 4, "rejoin": True}],
+    )
+    ref = _reference(payload)
+    parts = launch("gateway_chaos", 2, payload, devices_per_proc=1)
+    coord, worker = parts[0], parts[1]
+    _assert_contract(coord, ref, payload["requests"])
+    ft = coord["ft"]
+    assert ft.get("worker_rejoins", 0) >= 1
+    assert ft["dead"] == []  # back in rotation at shutdown
+    assert worker["serves"] == 2  # first life dropped, second life served
+    # the second life did real work: beyond the four pre-drop batches and
+    # the rejoin warmup execute, at least one ROUTED batch ran through it
+    assert worker["batches"] > 5

@@ -1,0 +1,421 @@
+"""Unit tests for the fault-tolerance substrate and its serving-tier wiring.
+
+Everything here runs IN-PROCESS (fake clocks, Pipe-backed worker threads) —
+the subprocess chaos schedules live in tests/test_chaos.py.  Covered:
+
+* StragglerMonitor fleet statistics: warm-rank-only median (a cold joiner's
+  compile-skewed EWMA must not enter the reference), the true even-count
+  median (the old upper-middle shortcut made a 2-rank fleet unable to flag
+  anything), clear/forget semantics;
+* Liveness staleness (healthy/suspect/dead) under a fake clock;
+* ProcessMesh.degraded: orphan shards to the nearest preceding live owner,
+  contiguity preserved, coordinator as fallback;
+* ExecuteCostModel.feasible — the single feasibility judgement the gateway
+  applies at the door, at formation and on failure-path re-admission;
+* gateway telemetry: hedged/resharded batches land in execute_hedge /
+  execute_reshard and stay OUT of the cost model;
+* MultiHostExecutor over Pipes: hedged dispatch (winner + stale-reply
+  drain), death recovery, the reshard budget, rejoin, and the shutdown
+  drain handshake.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.ft import Liveness, StragglerMonitor
+from repro.launch.mesh import ProcessMesh
+
+
+# ---------------------------------------------------------------------------
+# straggler statistics
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_two_rank_fleet_flags_slow_member():
+    """With the true median, a 2-rank fleet CAN flag its slow member (the
+    old upper-middle median equalled the slow rank's own EWMA, so the
+    threshold test could never trip)."""
+    mon = StragglerMonitor(alpha=0.5, threshold=1.5, warmup_steps=3)
+    for _ in range(4):
+        mon.report("fast", 0.01)
+        mon.report("slow", 0.10)
+    assert "slow" in mon.flagged
+    assert "fast" not in mon.flagged
+    # median is the mean of the two EWMAs, not the slow one itself
+    assert 0.01 < mon.summary()["median"] < 0.10
+
+
+def test_straggler_cold_rank_excluded_from_median():
+    """A late joiner still in warmup (cold: compile + cache fill) must not
+    enter the fleet median — mixing it in skewed the reference and could
+    false-flag healthy peers."""
+    mon = StragglerMonitor(alpha=0.5, threshold=1.5, warmup_steps=3)
+    for _ in range(4):
+        mon.report("a", 0.01)
+        mon.report("b", 0.012)
+    med_before = mon.summary()["median"]
+    mon.report("late", 5.0)  # first (cold) report: below warmup
+    summary = mon.summary()
+    assert "late" not in summary["warm"]
+    assert summary["median"] == med_before
+    # healthy peers stay unflagged with the cold EWMA around
+    mon.report("a", 0.01)
+    mon.report("b", 0.012)
+    assert mon.flagged == []
+
+
+def test_straggler_clear_and_forget():
+    mon = StragglerMonitor(alpha=0.5, threshold=1.5, warmup_steps=2)
+    for _ in range(3):
+        mon.report("ok", 0.01)
+        mon.report("bad", 0.2)
+    assert "bad" in mon.flagged
+    mon.clear("bad")
+    assert "bad" not in mon.flagged
+    # still slow: the next report re-flags (EWMA was kept)
+    mon.report("ok", 0.01)
+    mon.report("bad", 0.2)
+    assert "bad" in mon.flagged
+    # forget drops the rank entirely — a restart is a new population
+    mon.forget("bad")
+    assert "bad" not in mon.flagged
+    assert "bad" not in mon.ewma and "bad" not in mon.count
+    mon.report("bad", 0.01)  # fresh history: one report, far below warmup
+    assert mon.count["bad"] == 1 and mon.flagged == []
+
+
+def test_liveness_states_under_fake_clock():
+    t = [100.0]
+    lv = Liveness(timeout_s=2.0, clock=lambda: t[0])
+    assert lv.state() == "healthy"
+    t[0] = 101.9
+    assert lv.state() == "healthy"
+    t[0] = 103.0  # one missed window: maybe merely slow
+    assert lv.state() == "suspect"
+    t[0] = 104.5  # two missed windows: presumed down
+    assert lv.state() == "dead"
+    lv.beat()
+    assert lv.age() == 0.0 and lv.state() == "healthy"
+
+
+# ---------------------------------------------------------------------------
+# degraded-mesh derivation (pure shard arithmetic: no devices touched)
+# ---------------------------------------------------------------------------
+
+
+def _mesh(shard_process, process_id=0):
+    return ProcessMesh(
+        process_id=process_id,
+        num_processes=max(shard_process) + 1,
+        shard_process=tuple(shard_process),
+        local_mesh=None,
+    )
+
+
+def test_degraded_reassigns_to_nearest_preceding_live_owner():
+    pm = _mesh((0, 1, 2))
+    assert pm.degraded(frozenset()).shard_process == (0, 1, 2)
+    assert pm.degraded({1}).shard_process == (0, 0, 2)
+    assert pm.degraded({2}).shard_process == (0, 1, 1)  # predecessor, not 0
+    assert pm.degraded({1, 2}).shard_process == (0, 0, 0)
+
+
+def test_degraded_multi_shard_processes_stay_contiguous():
+    pm = _mesh((0, 0, 1, 1, 2, 2))
+    deg = pm.degraded({1})
+    assert deg.shard_process == (0, 0, 0, 0, 2, 2)
+    # the contiguity contract (post_init would reject otherwise) and the
+    # row partition are preserved: same shard blocks, new owners
+    assert deg.shard_row_blocks(12) == pm.shard_row_blocks(12)
+    assert deg.row_block(12) == (0, 8)
+
+
+def test_degraded_leading_orphan_falls_to_first_live_owner():
+    # seen from a non-coordinator survivor: shards before any live process
+    # fall forward to the first live owner
+    pm = _mesh((0, 1, 2), process_id=1)
+    assert pm.degraded({0}).shard_process == (1, 1, 2)
+
+
+def test_degraded_rejects_own_death_and_empty_fleet():
+    pm = _mesh((0, 1))
+    with pytest.raises(ValueError):
+        pm.degraded({0})  # a process cannot outlive its own death
+    with pytest.raises(ValueError):
+        _mesh((0, 1), process_id=0).degraded({0, 1})
+
+
+# ---------------------------------------------------------------------------
+# cost-model feasibility
+# ---------------------------------------------------------------------------
+
+
+def test_cost_model_feasible_judgement():
+    from repro.serve.gateway.costmodel import ExecuteCostModel
+
+    cm = ExecuteCostModel(quantile=0.5, safety=1.0)
+    for _ in range(8):
+        cm.observe("m", 4, 0.010)
+    ok, est = cm.feasible("m", 4, now=100.0, deadline=100.5)
+    assert ok and est == pytest.approx(0.010, rel=0.1)
+    ok, _ = cm.feasible("m", 4, now=100.0, deadline=100.001)
+    assert not ok
+    # no deadline, or no data (never shed on ignorance): feasible
+    assert cm.feasible("m", 4, now=0.0, deadline=None) == (True, est)
+    assert cm.feasible("unknown", 4, now=0.0, deadline=0.001) == (True, None)
+
+
+# ---------------------------------------------------------------------------
+# gateway stage tagging: failure-path durations land apart
+# ---------------------------------------------------------------------------
+
+
+def test_gateway_tags_hedged_and_resharded_batches(monkeypatch):
+    """Batches whose routing hit a hedge or a reshard are recorded into
+    execute_hedge / execute_reshard (not "execute") and are NOT fed to the
+    cost model — failure-path wall time must not pollute the estimates
+    healthy batches are scheduled by."""
+    import itertools
+
+    from repro.serve.gateway.costmodel import ExecuteCostModel
+    from repro.serve.gateway.gateway import ServingGateway
+
+    class TaggingServable:
+        self_staging = True  # host columns straight through
+
+        def __init__(self):
+            self.next_events = None
+
+        def __call__(self, cols):
+            return {"y": np.asarray(cols["x"]) * 2.0}
+
+        def take_batch_events(self):
+            ev, self.next_events = self.next_events, None
+            return ev
+
+    ticks = itertools.count()
+    fake_clock = lambda: next(ticks) * 1e-3  # noqa: E731 — deterministic durations
+    sv = TaggingServable()
+    cm = ExecuteCostModel()
+    gw = ServingGateway(max_wait_ms=0.5, workers=1, clock=fake_clock, cost_model=cm)
+    gw.register("m", sv, example={"x": np.float32(1.0)}, buckets=(1, 2), max_batch=2)
+
+    def run_one(events):
+        sv.next_events = events
+        return gw.submit("m", {"x": np.float32(3.0)}, timeout=10.0)
+
+    np.testing.assert_array_equal(run_one(None)["y"], 6.0)
+    np.testing.assert_array_equal(run_one({"hedged": 1, "resharded": 0})["y"], 6.0)
+    np.testing.assert_array_equal(run_one({"hedged": 1, "resharded": 2})["y"], 6.0)
+    snap = gw.snapshot()["models"]["m"]
+    assert snap["execute"]["count"] == 1
+    assert snap["execute_hedge"]["count"] == 1
+    assert snap["execute_reshard"]["count"] == 1  # reshard outranks hedge
+    assert cm.observed["live"] == 1  # only the healthy batch fed the model
+    gw.close()
+
+
+def test_registry_passes_example_to_servable_hook():
+    """register() hands self-staging servables the example row and the
+    final (floored) bucket list — the warm template for rejoining workers."""
+    from repro.serve.gateway.registry import ModelRegistry
+
+    seen = {}
+
+    class FakeServable:
+        self_staging = True
+        num_processes = 2
+
+        def __call__(self, cols):
+            return cols
+
+        def register_example(self, example, buckets):
+            seen["example"] = example
+            seen["buckets"] = tuple(buckets)
+
+    reg = ModelRegistry()
+    reg.register(
+        "m",
+        FakeServable(),
+        example={"x": np.float32(7.0)},
+        buckets=(1, 2, 4),
+        max_batch=4,
+    )
+    assert seen["buckets"] == (2, 4)  # sub-shard bucket already floored away
+    np.testing.assert_array_equal(seen["example"]["x"], np.float32(7.0))
+
+
+# ---------------------------------------------------------------------------
+# executor fault paths over Pipes (one in-process worker thread)
+# ---------------------------------------------------------------------------
+
+
+def _double(batch):
+    return {"y": np.asarray(batch["x"]) * 2.0}
+
+
+def _start_worker(model, pm=None):
+    """A real ShardServer serving one Pipe end on a thread; returns
+    (coordinator_conn, thread, result_box)."""
+    from multiprocessing import Pipe
+
+    from repro.serve import ShardServer
+
+    ca, cb = Pipe()
+    server = ShardServer(pm or ProcessMesh.emulated(2, 1), {"m": model})
+    box = {}
+
+    def run():
+        box["batches"] = server.serve(cb)
+        box["shutdown"] = server.shutdown_received
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    return ca, t, box
+
+
+def test_executor_hedges_flagged_straggler_and_drains_stale_reply():
+    from repro.serve import MultiHostExecutor
+
+    def slow_double(batch):
+        time.sleep(0.25)
+        return _double(batch)
+
+    ca, t, box = _start_worker(slow_double)
+    ex = MultiHostExecutor(ProcessMesh.emulated(2, 0), heartbeat_s=5.0)
+    servable = ex.add_model("m", _double)
+    ex.attach(1, ca)
+    # pre-warm the monitor so the worker is flagged before the first batch
+    for _ in range(3):
+        ex.monitor.report("process0", 0.001)
+        ex.monitor.report("process1", 1.0)
+    assert "process1" in ex.monitor.flagged
+
+    t0 = time.perf_counter()
+    out = servable({"x": np.asarray([1.0, 2.0], np.float32)})
+    hedge_latency = time.perf_counter() - t0
+    np.testing.assert_array_equal(out["y"], [2.0, 4.0])
+    ev = servable.take_batch_events()  # simulating what the gateway pops
+    assert ev["hedged"] >= 1 and ev["resharded"] == 0
+    ft = ex.ft_snapshot()
+    assert ft["hedges"] >= 1 and ft["hedge_wins"] >= 1
+    assert ft["workers"]["process1"]["outstanding"] == 1  # reply still owed
+    assert hedge_latency < 0.25  # the hedge won the race, not the sleep
+
+    # the stale reply is drained before the connection's next use — either
+    # the next batch routes over a clean socket or the block is absorbed
+    time.sleep(0.3)  # let the straggler's reply land
+    out = servable({"x": np.asarray([3.0, 4.0], np.float32)})
+    np.testing.assert_array_equal(out["y"], [6.0, 8.0])
+    assert ex._workers[1].pending == [] or len(ex._workers[1].pending) == 1
+    ex.close()
+    t.join(timeout=5)
+    assert box.get("shutdown") in (True, None) or box.get("batches") is not None
+
+
+def test_executor_recovers_dead_worker_and_reshards():
+    from multiprocessing import Pipe
+
+    from repro.serve import MultiHostExecutor
+
+    ca, cb = Pipe()
+    cb.close()  # the "worker" died before ever serving (kill -9 analogue)
+    ex = MultiHostExecutor(ProcessMesh.emulated(2, 0), heartbeat_s=5.0)
+    servable = ex.add_model("m", _double)
+    ex.attach(1, ca)
+    out = servable({"x": np.asarray([1.0, 2.0, 3.0], np.float32)})
+    np.testing.assert_array_equal(out["y"], [2.0, 4.0, 6.0])
+    ev = servable.take_batch_events()
+    assert ev["resharded"] >= 1
+    ft = ex.ft_snapshot()
+    assert ft["worker_deaths"] == 1 and ft["dead"] == [1]
+    assert ft["recovered_blocks"] >= 1
+    assert ft["kill_recover_ms"] > 0
+    # subsequent batches are carved over the degraded mesh: all-local, and
+    # still correct
+    out = servable({"x": np.asarray([5.0], np.float32)})
+    np.testing.assert_array_equal(out["y"], [10.0])
+    assert servable.take_batch_events()["resharded"] == 0
+    ex.close()
+
+
+def test_executor_enforces_reshard_budget():
+    from multiprocessing import Pipe
+
+    from repro.serve import MultiHostExecutor, WorkerFailedError
+
+    ca, cb = Pipe()
+    cb.close()
+    ex = MultiHostExecutor(
+        ProcessMesh.emulated(2, 0), heartbeat_s=5.0, max_reshards=0
+    )
+    servable = ex.add_model("m", _double)
+    ex.attach(1, ca)
+    with pytest.raises(WorkerFailedError, match="REPRO_FT_MAX_RESHARDS"):
+        servable({"x": np.asarray([1.0, 2.0], np.float32)})
+    ex.close()
+
+
+def test_executor_rejoin_returns_worker_to_rotation():
+    from multiprocessing import Pipe
+
+    from repro.serve import MultiHostExecutor
+
+    ca, cb = Pipe()
+    cb.close()
+    ex = MultiHostExecutor(ProcessMesh.emulated(2, 0), heartbeat_s=5.0)
+    servable = ex.add_model("m", _double)
+    ex.attach(1, ca)
+    servable({"x": np.asarray([1.0, 2.0], np.float32)})  # detects the death
+    assert ex.ft_snapshot()["dead"] == [1]
+
+    # a restarted worker dials back in: trace re-probe + warm, then rotation
+    ca2, t, box = _start_worker(_double)
+    ex.attach(1, ca2)
+    ft = ex.ft_snapshot()
+    assert ft["worker_rejoins"] == 1 and ft["dead"] == []
+    assert ft["workers"]["process1"]["state"] == "healthy"
+    out = servable({"x": np.asarray([3.0, 4.0], np.float32)})
+    np.testing.assert_array_equal(out["y"], [6.0, 8.0])
+    assert servable.take_batch_events() == {"hedged": 0, "resharded": 0}
+    assert ex._workers[1].batches >= 1  # genuinely routed, not absorbed
+    ex.close()
+    t.join(timeout=5)
+    assert box["shutdown"] is True  # acked shutdown frame, clean drain
+
+
+def test_executor_close_drains_with_shutdown_handshake():
+    from repro.serve import MultiHostExecutor
+
+    ca, t, box = _start_worker(_double)
+    ex = MultiHostExecutor(ProcessMesh.emulated(2, 0), heartbeat_s=5.0)
+    servable = ex.add_model("m", _double)
+    ex.attach(1, ca)
+    out = servable({"x": np.asarray([1.0, 2.0], np.float32)})
+    np.testing.assert_array_equal(out["y"], [2.0, 4.0])
+    ex.close()
+    t.join(timeout=5)
+    assert box["shutdown"] is True  # explicit frame, not an EOF race
+    assert box["batches"] == 1
+    assert ex._workers == {}
+
+
+def test_executor_idle_death_detected_by_ping_sweep():
+    """A worker that dies while NO batch is in flight is still detected:
+    the idle sweep pings past the heartbeat window and walks it to dead."""
+    from multiprocessing import Pipe
+
+    from repro.serve import MultiHostExecutor
+
+    ca, cb = Pipe()
+    ex = MultiHostExecutor(ProcessMesh.emulated(2, 0), heartbeat_s=0.05)
+    ex.add_model("m", _double)
+    ex.attach(1, ca)
+    cb.close()  # dies silently; nothing in flight, nothing to EOF against
+    deadline = time.monotonic() + 5.0
+    while ex.ft_snapshot()["dead"] != [1] and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert ex.ft_snapshot()["dead"] == [1]
+    ex.close()
