@@ -26,7 +26,12 @@ bit-identical features — while workers die, stall and come back:
   per-worker :class:`~repro.ft.Liveness` tracker (the socket-tier analogue
   of the supervisor's file heartbeats); a background sweep pings workers
   that have been silent past ``REPRO_FT_HEARTBEAT_S`` and walks them
-  ``healthy → suspect → dead`` on staleness.
+  ``healthy → suspect → dead`` on staleness.  A ping (or trace probe)
+  whose reply misses its poll window on a still-live socket is recorded as
+  an outstanding reply and drained before the connection carries another
+  batch — the strict request/reply protocol means an untracked late pong
+  would be consumed as the NEXT batch's reply and desync every reply after
+  it.
 * *Hedged dispatch* — per-shard round-trip times feed a
   :class:`~repro.ft.StragglerMonitor`; once a worker is flagged, the
   coordinator races each of its row blocks with a local re-execution
@@ -88,7 +93,7 @@ def _env_flag(name: str, default: bool) -> bool:
     raw = os.environ.get(name)
     if raw is None:
         return default
-    return raw not in ("0", "false", "")
+    return raw.strip().lower() not in ("0", "false", "no", "off", "")
 
 
 def _ft_debug(msg: str) -> None:
@@ -125,10 +130,12 @@ class _Worker:
         self.liveness = liveness
         self.alive = True
         self.batches = 0
-        # (t_send, model) of requests SENT whose replies were not consumed
-        # (a hedge won the race); strict request/reply order means they are
-        # drained FIFO before the connection carries anything else
-        self.pending: List[Tuple[float, str]] = []
+        # (t_send, model_or_None) of requests SENT whose replies were not
+        # consumed — a hedge won the race, or a ping/trace probe missed its
+        # poll window (name None); strict request/reply order means they are
+        # drained FIFO before the connection carries anything else, or the
+        # next execute's recv would consume a stale reply as its own
+        self.pending: List[Tuple[float, Optional[str]]] = []
 
 
 class MultiHostServable:
@@ -231,6 +238,8 @@ class MultiHostExecutor:
             if max_reshards is not None
             else _env_float("REPRO_FT_MAX_RESHARDS", self.num_processes - 1)
         )
+        # generous window for trace/rejoin probes (workers may be compiling)
+        self.probe_poll_s = max(self.heartbeat_s, 5.0)
         self.monitor = monitor or StragglerMonitor(
             alpha=0.3, threshold=1.5, warmup_steps=3
         )
@@ -341,7 +350,7 @@ class MultiHostExecutor:
             try:
                 for name in sorted(self._local):
                     conn.send(("traces", name))
-                    if not conn.poll(max(self.heartbeat_s, 5.0)):
+                    if not conn.poll(self.probe_poll_s):
                         raise OSError("no trace-probe reply from rejoined worker")
                     conn.recv()
                     warm = self._warm_block(name, pid)
@@ -444,6 +453,7 @@ class MultiHostExecutor:
             raise RuntimeError(
                 f"executor has {len(self._workers)}/{self.num_processes - 1} workers"
             )
+        self._check_reshard_budget()
         ev = {"hedged": 0, "resharded": 0}
         self._events.last = ev
         n = int(next(iter(host_cols.values())).shape[0])
@@ -518,13 +528,7 @@ class MultiHostExecutor:
                 self._workers[p].lock.release()
         if err is not None:
             raise err
-        if ev["resharded"]:
-            over = len(self._dead) - self.max_reshards
-            if over > 0:
-                raise WorkerFailedError(
-                    f"mesh degraded beyond budget: {len(self._dead)} dead "
-                    f"workers > REPRO_FT_MAX_RESHARDS={self.max_reshards}"
-                )
+        self._check_reshard_budget()
         last_death = self._ft.get("last_death_t", 0.0)
         if last_death and not self._ft.get("kill_recover_ms", 0.0):
             # first completed batch under the degraded mesh: the recovery
@@ -556,7 +560,14 @@ class MultiHostExecutor:
                 # discard; outputs are bit-identical either way) and the
                 # socket stays clean
                 self._ft.inc("hedge_losses")
-                return self._consume_reply(p, w, name, t0)
+                out, werr = self._consume_reply(p, w, name, t0)
+                # the original beat the hedge: the worker caught up — un-flag
+                # it (after the reply's own report, so this batch's verdict
+                # stands), or one transient slowdown would duplicate-execute
+                # its rows on every later batch; a still-slow worker re-flags
+                # on its next report
+                self.monitor.clear(rank)
+                return out, werr
             # a slow reply is NOT death: first batches compile, stragglers
             # straggle — both are correct, just late (hedging's job, not
             # resharding's).  Death mid-wait surfaces instantly as EOF when
@@ -591,7 +602,8 @@ class MultiHostExecutor:
         return payload, None
 
     def _drain_stale(self, p, w) -> bool:
-        """Consume replies left over from won hedges (FIFO, timed from their
+        """Consume replies left over from won hedges and from ping/trace
+        probes that missed their poll window (FIFO, timed from their
         original send).  True when the connection is idle and usable."""
         while w.pending:
             try:
@@ -603,11 +615,28 @@ class MultiHostExecutor:
                 self._mark_dead(p, "connection lost draining stale replies")
                 return False
             w.pending.pop(0)
+            w.liveness.beat()
+            if name is None:
+                continue  # late probe reply: consume only, no shard stats
             dt = self._clock() - t0
             self._shard_sketch(name, p).record(dt)
             self.monitor.report(f"process{p}", dt)
-            w.liveness.beat()
         return True
+
+    def _check_reshard_budget(self) -> None:
+        """Fail LOUDLY once the mesh has degraded past budget.  Checked on
+        every batch, entering AND leaving :meth:`execute` — once the
+        degraded mesh is in place, later batches carve around the dead
+        workers without recording any reshard event, and the gateway's
+        per-request retry re-executes on the degraded mesh; an event-gated
+        check would let over-budget serving succeed silently forever."""
+        with self._mlock:
+            dead = len(self._dead)
+        if dead > self.max_reshards:
+            raise WorkerFailedError(
+                f"mesh degraded beyond budget: {dead} dead workers > "
+                f"REPRO_FT_MAX_RESHARDS={self.max_reshards}"
+            )
 
     def _mark_dead(self, p: int, why: str = "") -> None:
         with self._mlock:
@@ -657,12 +686,20 @@ class MultiHostExecutor:
                     continue
                 self._ft.inc("pings")
                 try:
+                    t_ping = self._clock()
                     w.conn.send(("ping",))
                     if w.conn.poll(min(self.heartbeat_s, 1.0)):
                         w.conn.recv()
                         w.liveness.beat()
-                    elif w.liveness.state() == "dead":
-                        self._mark_dead(p, "unanswered ping")
+                    else:
+                        # the pong may still arrive: it MUST be drained
+                        # before this socket carries a batch, or every
+                        # later reply on it is off-by-one — track it so
+                        # _drain_stale consumes it first (a suspect worker
+                        # keeps its socket; _mark_dead clears pending)
+                        w.pending.append((t_ping, None))
+                        if w.liveness.state() == "dead":
+                            self._mark_dead(p, "unanswered ping")
                 except (OSError, EOFError, BrokenPipeError, ValueError):
                     self._mark_dead(p, "ping failed")
             finally:
@@ -723,8 +760,14 @@ class MultiHostExecutor:
                 if not w.alive or not self._drain_stale(p, w):
                     continue
                 try:
+                    t_probe = self._clock()
                     w.conn.send(("traces", name))
-                    if not w.conn.poll(max(self.heartbeat_s, 5.0)):
+                    if not w.conn.poll(self.probe_poll_s):
+                        # reply still owed on a live socket: track it so
+                        # _drain_stale consumes it before the next batch
+                        # (untracked, it would be read as that batch's
+                        # reply and desync the connection)
+                        w.pending.append((t_probe, None))
                         continue
                     status, payload = w.conn.recv()
                 except (OSError, EOFError, BrokenPipeError, ValueError):

@@ -419,3 +419,181 @@ def test_executor_idle_death_detected_by_ping_sweep():
         time.sleep(0.02)
     assert ex.ft_snapshot()["dead"] == [1]
     ex.close()
+
+
+def test_sweep_ping_timeout_keeps_late_pong_off_the_batch_path():
+    """A ping whose pong misses the poll window while the worker is merely
+    SUSPECT must be tracked in ``pending``: untracked, the late pong would
+    be consumed as the next batch's reply and desync every reply after it
+    (off-by-one rows — a silent bit-identity break)."""
+    from multiprocessing import Pipe
+
+    from repro.serve import MultiHostExecutor, ShardServer
+
+    tk = [100.0]
+    ca, cb = Pipe()
+    ex = MultiHostExecutor(
+        ProcessMesh.emulated(2, 0), heartbeat_s=0.4, clock=lambda: tk[0]
+    )
+    servable = ex.add_model("m", _double)
+    ex.attach(1, ca)
+    # drive the sweep by hand: stop the background thread so exactly one
+    # ping is in play
+    ex._closed = True
+    ex._sweeper.join(timeout=3.0)
+    ex._closed = False  # close() below still runs its full drain
+
+    tk[0] += 0.5  # one silent window: suspect, NOT dead
+    ex._sweep_once()  # worker side never answers within the poll window
+    w = ex._workers[1]
+    assert w.alive  # suspect is not death
+    assert len(w.pending) == 1 and w.pending[0][1] is None  # pong tracked
+
+    # the pong lands LATE, then the worker serves normally
+    assert cb.recv() == ("ping",)
+    cb.send(("ok", "pong"))
+    server = ShardServer(ProcessMesh.emulated(2, 1), {"m": _double})
+    t = threading.Thread(target=server.serve, args=(cb,), daemon=True)
+    t.start()
+
+    # the next batch drains the stale pong first and gets ITS OWN rows back
+    out = servable({"x": np.asarray([1.0, 2.0], np.float32)})
+    np.testing.assert_array_equal(out["y"], [2.0, 4.0])
+    assert w.pending == []
+    assert w.batches == 1  # genuinely routed over the cleaned socket
+    out = servable({"x": np.asarray([3.0, 4.0], np.float32)})
+    np.testing.assert_array_equal(out["y"], [6.0, 8.0])
+    ex.close()
+    t.join(timeout=5)
+
+
+def test_trace_probe_timeout_tracks_outstanding_reply():
+    """A trace probe that misses its poll window on a live socket leaves a
+    reply owed — it must enter ``pending`` so the next batch drains it
+    instead of reading the stale int as its own output."""
+    from multiprocessing import Pipe
+
+    from repro.serve import MultiHostExecutor, ShardServer
+
+    ca, cb = Pipe()
+    ex = MultiHostExecutor(ProcessMesh.emulated(2, 0), heartbeat_s=5.0)
+    servable = ex.add_model("m", _double)
+    ex.attach(1, ca)
+    ex.probe_poll_s = 0.1  # don't wait the full production window in a test
+
+    total = servable.trace_count()  # worker silent: probe gives up
+    assert isinstance(total, int)
+    w = ex._workers[1]
+    assert w.alive
+    assert len(w.pending) == 1 and w.pending[0][1] is None  # reply owed
+
+    assert cb.recv() == ("traces", "m")
+    cb.send(("ok", 0))  # the stale payload a batch must never consume
+    server = ShardServer(ProcessMesh.emulated(2, 1), {"m": _double})
+    t = threading.Thread(target=server.serve, args=(cb,), daemon=True)
+    t.start()
+
+    out = servable({"x": np.asarray([1.0, 2.0], np.float32)})
+    np.testing.assert_array_equal(out["y"], [2.0, 4.0])
+    assert w.pending == []
+    ex.close()
+    t.join(timeout=5)
+
+
+def test_reshard_budget_exhaustion_is_persistent():
+    """Past-budget degradation must fail EVERY batch, not just the one that
+    recorded the reshard event: later batches carve around the dead worker
+    with no events, and the gateway's per-request retry re-enters execute()
+    — both used to succeed silently on the degraded mesh."""
+    from multiprocessing import Pipe
+
+    from repro.serve import MultiHostExecutor, WorkerFailedError
+
+    ca, cb = Pipe()
+    cb.close()
+    ex = MultiHostExecutor(
+        ProcessMesh.emulated(2, 0), heartbeat_s=5.0, max_reshards=0
+    )
+    servable = ex.add_model("m", _double)
+    ex.attach(1, ca)
+    with pytest.raises(WorkerFailedError, match="REPRO_FT_MAX_RESHARDS"):
+        servable({"x": np.asarray([1.0, 2.0], np.float32)})
+    # the degraded mesh is in place now: no reshard events on later batches,
+    # but serving over budget must STAY loud (this is also what the
+    # gateway's solo retry hits, so the failure reaches the client)
+    with pytest.raises(WorkerFailedError, match="REPRO_FT_MAX_RESHARDS"):
+        servable({"x": np.asarray([3.0], np.float32)})
+    ex.close()
+
+
+def test_hedge_loss_unflags_recovered_straggler():
+    """When the original beats the hedge, the straggler flag is lifted —
+    a single transient slowdown must not duplicate-execute that worker's
+    rows on every later batch forever."""
+    from multiprocessing import Pipe
+
+    from repro.serve import MultiHostExecutor
+
+    ca, cb = Pipe()
+    go = threading.Event()
+    calls = [0]
+
+    def local_model(batch):
+        calls[0] += 1
+        if calls[0] == 2:
+            # this is the hedge re-execute: release the worker's reply and
+            # linger so the original deterministically lands mid-race
+            go.set()
+            time.sleep(0.2)
+        return _double(batch)
+
+    def worker():
+        while True:
+            try:
+                msg = cb.recv()
+            except (EOFError, OSError):
+                return
+            if msg[0] == "execute":
+                go.wait(5.0)
+                cb.send(("ok", _double(msg[2])))
+            elif msg[0] == "shutdown":
+                cb.send(("ok", {"batches": 1}))
+                return
+            elif msg[0] == "ping":
+                cb.send(("ok", "pong"))
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    ex = MultiHostExecutor(ProcessMesh.emulated(2, 0), heartbeat_s=5.0)
+    servable = ex.add_model("m", local_model)
+    ex.attach(1, ca)
+    for _ in range(3):
+        ex.monitor.report("process0", 0.05)
+        ex.monitor.report("process1", 0.2)
+    assert "process1" in ex.monitor.flagged
+
+    out = servable({"x": np.asarray([1.0, 2.0], np.float32)})
+    np.testing.assert_array_equal(out["y"], [2.0, 4.0])
+    ft = ex.ft_snapshot()
+    assert ft["hedges"] == 1 and ft["hedge_losses"] == 1
+    # the worker caught up: un-flagged (it used to stay flagged forever)
+    assert "process1" not in ex.monitor.flagged
+    assert ex._workers[1].pending == []
+    ex.close()
+    t.join(timeout=5)
+
+
+def test_env_flag_falsy_spellings(monkeypatch):
+    """REPRO_FT_HEDGE=False / no / off must DISABLE hedging — any-string-
+    is-true parsing silently enabled it."""
+    from repro.serve.gateway.multihost import _env_flag
+
+    for v in ("0", "false", "False", "FALSE", "no", "No", "off", "OFF", "", " no "):
+        monkeypatch.setenv("REPRO_FT_HEDGE", v)
+        assert _env_flag("REPRO_FT_HEDGE", True) is False, v
+    for v in ("1", "true", "True", "yes", "on"):
+        monkeypatch.setenv("REPRO_FT_HEDGE", v)
+        assert _env_flag("REPRO_FT_HEDGE", False) is True, v
+    monkeypatch.delenv("REPRO_FT_HEDGE")
+    assert _env_flag("REPRO_FT_HEDGE", True) is True
+    assert _env_flag("REPRO_FT_HEDGE", False) is False
