@@ -127,6 +127,24 @@ def main() -> None:
                     file=sys.stderr,
                 )
                 failures.append(f"pre_fused_{bs}-regression")
+        # observability must stay cheap enough to be on by default: the
+        # serving benchmark measures tracing on vs off at equal load and
+        # this guard fails the run if the row is missing or the overhead
+        # exceeds 5% (the obs acceptance bound)
+        obs_row = by_name.get("serve_obs_overhead_pct")
+        if obs_row is None:
+            print(
+                "\nBENCHMARK FAILED: serve_obs_overhead_pct row missing",
+                file=sys.stderr,
+            )
+            failures.append("missing-serve_obs_overhead_pct")
+        elif obs_row["us_per_call"] > 5.0:
+            print(
+                f"\nBENCHMARK FAILED: tracing overhead "
+                f"{obs_row['us_per_call']}% > 5% ({obs_row['derived']})",
+                file=sys.stderr,
+            )
+            failures.append("obs-overhead-regression")
         _write_json(args.json)  # partial rows still recorded on failure
         if failures:
             sys.exit(f"benchmark(s) failed: {', '.join(failures)}")

@@ -1,0 +1,100 @@
+"""Observability demo: a traced gateway request end-to-end, then every obs
+surface on the one run — the stitched span tree in the terminal, the
+flattened metrics snapshot, a forced flight dump, and a Chrome/Perfetto
+trace export you can drop straight into https://ui.perfetto.dev (or
+``chrome://tracing``).
+
+Run:  PYTHONPATH=src python examples/observe_gateway.py
+Then: python -m repro.obs.report /tmp/observe_gateway_trace.json
+"""
+import concurrent.futures as cf
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import KamaeSparkPipeline, LogTransformer, StandardScaleEstimator
+from repro.obs import export as obs_export
+from repro.obs import flight as obs_flight
+from repro.obs import metrics as obs_metrics
+from repro.obs import report as obs_report
+from repro.obs import snapshot as obs_snapshot
+from repro.obs import trace as obs_trace
+from repro.serve import FusedModel, ServingGateway
+
+TRACE_PATH = "/tmp/observe_gateway_trace.json"
+
+
+def build_model() -> FusedModel:
+    rng = np.random.default_rng(0)
+    lake = {"price": jnp.asarray(rng.lognormal(3, 1, 512), jnp.float32)}
+    pipe = KamaeSparkPipeline(
+        stages=[
+            LogTransformer(inputCol="price", outputCol="pl", alpha=1.0),
+            StandardScaleEstimator(inputCol="pl", outputCol="ps"),
+        ]
+    )
+    export = pipe.fit(lake).export(outputs=["ps"])
+
+    def fwd(params, feats):
+        return feats["ps"] * params["w"]
+
+    return FusedModel(export, fwd, {"w": jnp.float32(0.5)})
+
+
+def main() -> None:
+    # a fresh, always-sampling recorder so the demo is self-contained
+    rec = obs_trace.TraceRecorder(capacity=4096, enabled=True, sample=1.0)
+    obs_trace.set_recorder(rec)
+
+    gw = ServingGateway(max_pending=64, max_wait_ms=2.0, workers=2)
+    gw.register(
+        "ranker", build_model(), example={"price": np.float32(25.0)},
+        buckets=(1, 2, 4, 8), max_batch=8,
+    )
+    gw.warmup()
+
+    rng = np.random.default_rng(7)
+    with cf.ThreadPoolExecutor(8) as pool:
+        futs = [
+            pool.submit(
+                gw.submit, "ranker",
+                {"price": np.float32(rng.lognormal(3, 1))}, timeout=30.0,
+            )
+            for _ in range(16)
+        ]
+        for f in futs:
+            f.result()
+
+    # 1. the span trees, straight from the ring
+    tuples = [s.as_tuple() for s in rec.spans()]
+    requests = [t for t in tuples if t[3] == "request"]
+    print(f"== {len(requests)} traced requests, {rec.recorded} spans ==")
+    one = [t for t in tuples if t[0] == requests[-1][0]]
+    print(obs_report.format_trace_tree(one))
+
+    # 2. the one top-level snapshot (instruments + gateway source + trace/env)
+    snap = obs_snapshot()
+    gws = snap["sources"]["gateway"]["stats"]
+    print("\n== obs.snapshot() ==")
+    print(f"completed={gws['completed']} batches={gws['batches']} "
+          f"rows={gws['rows']} ring={snap['trace']['in_ring']} spans")
+
+    # 3. a flight dump, forced (normally a fault triggers this)
+    dump = obs_flight.get_flight().trigger(
+        "demo", component="example", attrs={"note": "forced for the demo"},
+        force=True,
+    )
+    print(f"\n== flight dump: {len(dump['spans'])} spans frozen ==")
+
+    # 4. Perfetto/Chrome export
+    obs_export.write_chrome_trace(TRACE_PATH, tuples)
+    print(f"\nwrote {TRACE_PATH} — load it at https://ui.perfetto.dev,")
+    print(f"or render it here: python -m repro.obs.report {TRACE_PATH}")
+
+    gw.close()
+    print("\n-- metrics (flattened) --")
+    print(obs_metrics.render_text(snap))
+
+
+if __name__ == "__main__":
+    main()

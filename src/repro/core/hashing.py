@@ -12,9 +12,9 @@ assert bit-exactness against these functions.
 """
 from __future__ import annotations
 
-import os
-
 import jax
+
+from repro.obs import envknobs
 
 from . import types as _types  # noqa: F401  (enables x64 before uint64 constants)
 
@@ -102,9 +102,9 @@ def int_to_bins(values: jax.Array, num_bins: int, seed: int = 0) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def kernel_active() -> bool:
-    flag = os.environ.get("REPRO_HASH_KERNEL")
+    flag = envknobs.env_tristate("REPRO_HASH_KERNEL")
     if flag is not None:
-        return flag not in ("0", "false", "")
+        return flag
     return jax.default_backend() == "tpu"
 
 

@@ -56,11 +56,13 @@ staging, batch packing, donation) lives in :mod:`repro.core.runner`.
 from __future__ import annotations
 
 import dataclasses
-import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.obs import envknobs
+from repro.obs import trace as obs_trace
 
 from . import fusion, hashing, strops
 from . import types as T
@@ -103,7 +105,7 @@ class _FusedNode:
 def _fuse_enabled(flag: Optional[bool]) -> bool:
     if flag is not None:
         return bool(flag)
-    return os.environ.get(fusion.FUSE_ENV, "1") not in ("0", "false", "")
+    return envknobs.env_flag(fusion.FUSE_ENV, True)
 
 
 def _try_lower_node(node: _Node, hash_refs: Dict[tuple, int]):
@@ -301,6 +303,12 @@ class TransformPlan:
     # ------------------------------------------------------------------
     def _execute(self, batch: T.Batch) -> T.Batch:
         self._trace_count += 1
+        # instant marker in whatever trace is current: a re-trace during a
+        # served request is exactly the latency cliff worth seeing
+        obs_trace.get_recorder().event(
+            "plan.trace", component="plan",
+            attrs={"trace_count": self._trace_count, "stages": len(self._nodes)},
+        )
         env = dict(batch)
         memo: Dict[tuple, jax.Array] = {}
 
@@ -574,6 +582,10 @@ class TransformPlan:
         key = (in_shardings, donate)
         fn = self._jit_cache.get(key)
         if fn is None:
+            obs_trace.get_recorder().event(
+                "plan.jit_cache_miss", component="plan",
+                attrs={"donate": bool(donate), "sharded": in_shardings is not None},
+            )
             kwargs = {}
             if in_shardings is not None:
                 kwargs["in_shardings"] = in_shardings

@@ -65,13 +65,16 @@ and ``materialize="host"`` yields this process's rows as numpy views.
 from __future__ import annotations
 
 import collections
-import os
 import threading
 import time
 from typing import Callable, Iterable, Iterator, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.obs import envknobs
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 from . import types as T
 
@@ -103,7 +106,7 @@ def stage_batch(batch, sharding=None):
 
 
 def _autopack_default() -> bool:
-    return os.environ.get("REPRO_RUNNER_AUTOPACK", "0") not in ("0", "", "false")
+    return envknobs.env_flag("REPRO_RUNNER_AUTOPACK", False)
 
 
 class _AutoPack:
@@ -269,8 +272,8 @@ class PlanRunner:
         if autopack is None:
             autopack = _autopack_default()
         if autopack_target_ms is None:
-            autopack_target_ms = float(
-                os.environ.get("REPRO_RUNNER_PACK_TARGET_MS", "50")
+            autopack_target_ms = envknobs.env_float(
+                "REPRO_RUNNER_PACK_TARGET_MS", 50.0
             )
         self._autopack = (
             _AutoPack(autopack_target_ms / 1e3, hi=max(64, pack))
@@ -297,6 +300,16 @@ class PlanRunner:
             "seconds": 0.0,
             "fused_chains": getattr(plan, "fused_chain_count", 0),
         }
+        # per-run sweep root span: staging runs in the prefetch background
+        # thread, so children parent to this explicitly (the thread-local
+        # parent stack cannot cross that boundary)
+        self._obs_root = None
+        obs_metrics.get_registry().register_source("runner", self.obs_snapshot)
+
+    def obs_snapshot(self) -> dict:
+        """Throughput counters for the metrics registry (weakly held — a
+        collected runner drops out of ``obs.snapshot()`` on its own)."""
+        return dict(self.stats)
 
     # -- staging -----------------------------------------------------------
 
@@ -444,7 +457,13 @@ class PlanRunner:
         def flush():
             nonlocal group, slot_idx
             rows = [int(next(iter(b.values())).shape[0]) for b in group]
-            staged = self._stage(group, slot_idx % n_slots)
+            root = self._obs_root
+            with obs_trace.get_recorder().span(
+                "runner.stage", component="runner",
+                parent=root if root is not None else obs_trace.NULL,
+                attrs={"batches": len(group), "rows": sum(rows)},
+            ):
+                staged = self._stage(group, slot_idx % n_slots)
             slot_idx += 1
             group = []
             # multihost emission spans: in local shard mode outputs cover
@@ -484,6 +503,11 @@ class PlanRunner:
         from repro.data.pipeline import prefetch as _prefetch
 
         t0 = time.perf_counter()
+        self._obs_root = obs_trace.get_recorder().root_span(
+            "runner.sweep", component="runner",
+            attrs={"pack": self.pack, "workers": self.workers,
+                   "shard_mode": self.shard_mode or "none"},
+        )
         staged = self._staged(self._fused_warmup(batches))
         if self.prefetch > 0:
             staged = _prefetch(staged, depth=self.prefetch)
@@ -495,6 +519,10 @@ class PlanRunner:
                 yield from self._run_serial(staged)
         finally:
             self.stats["seconds"] += time.perf_counter() - t0
+            root, self._obs_root = self._obs_root, None
+            root.set("rows", self.stats["rows"])
+            root.set("superbatches", self.stats["superbatches"])
+            root.end()
 
     def _fused_warmup(self, batches: Iterable[T.Batch]) -> Iterator[T.Batch]:
         """Autotune the plan's fused chains on the FIRST host batch of the
@@ -527,15 +555,23 @@ class PlanRunner:
         superbatches formed after this one.  Once settled (or with autopack
         off) dispatch is fully asynchronous again."""
         ap = self._autopack
+        root = self._obs_root
+        sp = obs_trace.get_recorder().span(
+            "runner.dispatch", component="runner",
+            parent=root if root is not None else obs_trace.NULL,
+            attrs={"batches": len(rows), "rows": sum(rows)},
+        )
         if ap is None or ap.settled:
-            return self._fn(dev)
+            with sp:
+                return self._fn(dev)
         with self._inflight_lock:
             self._inflight += 1
             solo = self._inflight == 1
         try:
             t0 = self._clock()
-            out = self._fn(dev)
-            jax.block_until_ready(out)
+            with sp:
+                out = self._fn(dev)
+                jax.block_until_ready(out)
             dt = self._clock() - t0
         finally:
             with self._inflight_lock:

@@ -6,10 +6,10 @@ uint8 -> int32 widening, interpret-mode selection off-TPU.
 bytes)."""
 from __future__ import annotations
 
-import os
-
 import jax
 import jax.numpy as jnp
+
+from repro.obs import envknobs
 
 from .bloom_hash import bloom_hash_kernel, bloom_hash_kernel_raw
 
@@ -19,7 +19,8 @@ def _interpret() -> bool:
 
 
 def _chunk_override():
-    v = os.environ.get("REPRO_HASH_CHUNK")
+    # env_str keeps "" (unset) distinct from "0" (force the full unroll)
+    v = envknobs.env_str("REPRO_HASH_CHUNK")
     return int(v) if v else None
 
 

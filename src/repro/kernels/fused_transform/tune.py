@@ -33,6 +33,8 @@ from typing import Callable, Dict, List, Optional
 
 import jax
 
+from repro.obs import envknobs
+
 #: fallback when no tuned entry exists (also the sweep's first candidate):
 #: 512x8 elementwise tiles, 32-byte hash chunks.
 DEFAULT_CONFIG = {"block_rows": 512, "block_cols": 8, "chunk": 32}
@@ -56,9 +58,9 @@ def kernel_route() -> bool:
     ``REPRO_FUSED_KERNEL=1`` forces it (interpret mode off-TPU — how the
     tests drive it), ``=0`` forces the XLA chain executor, unset = kernel on
     TPU only."""
-    flag = os.environ.get("REPRO_FUSED_KERNEL")
+    flag = envknobs.env_tristate("REPRO_FUSED_KERNEL")
     if flag is not None:
-        return flag not in ("0", "false", "")
+        return flag
     return jax.default_backend() == "tpu"
 
 
@@ -67,11 +69,11 @@ def backend_tag() -> str:
 
 
 def budget() -> int:
-    return int(os.environ.get("REPRO_TUNE_BUDGET", "8"))
+    return envknobs.env_int("REPRO_TUNE_BUDGET", 8)
 
 
 def cache_path() -> str:
-    p = os.environ.get("REPRO_TUNE_CACHE")
+    p = envknobs.env_str("REPRO_TUNE_CACHE")
     if p:
         return p
     return os.path.join(

@@ -1,0 +1,51 @@
+"""Unified observability layer: tracing, metrics, flight recorder, export.
+
+Import-light by design (stdlib + numpy via ``repro.core.sketches``; no jax),
+so both sides of the multi-host socket — and test harness subprocesses —
+can load it before any backend initialises.
+
+* :mod:`.trace` — ring-buffer span recorder (``REPRO_OBS_TRACE`` /
+  ``REPRO_OBS_SAMPLE`` / ``REPRO_OBS_RING``).
+* :mod:`.metrics` — typed counters/gauges/DDSketch histograms plus weakly
+  registered snapshot sources; ``obs.snapshot()`` is the one poll.
+* :mod:`.flight` — last-N span freeze on faults (``REPRO_OBS_FLIGHT*``).
+* :mod:`.export` / :mod:`.report` — Chrome/Perfetto JSON and a terminal
+  viewer (``python -m repro.obs.report``).
+* :mod:`.log` — structured stderr lines (``REPRO_OBS_LOG``;
+  ``REPRO_FT_DEBUG`` keeps gating the ft component's debug output).
+* :mod:`.envknobs` — every ``REPRO_*`` knob: parsers + registry + docs.
+"""
+from . import envknobs, export, flight, log, metrics, trace
+from .flight import FlightRecorder, get_flight, set_flight
+from .metrics import MetricsRegistry, get_registry, render_json, render_text, set_registry
+from .trace import NULL, Span, TraceRecorder, current, event, get_recorder, set_recorder, span
+
+
+def snapshot() -> dict:
+    """One top-level operational snapshot: registered instruments, every
+    registered source's snapshot (gateway / ft / runner / cost model), the
+    trace recorder's state and the env-knob configuration."""
+    rec = get_recorder()
+    out = get_registry().snapshot()
+    out["trace"] = {
+        "enabled": rec.enabled,
+        "sample": rec.sample,
+        "capacity": rec.capacity,
+        "recorded": rec.recorded,
+        "in_ring": len(rec.spans()),
+        "process": rec.process,
+    }
+    out["flight"] = {"dumps": get_flight().dumps}
+    out["env"] = {
+        k: v["value"] for k, v in envknobs.snapshot().items() if v["value"] is not None
+    }
+    return out
+
+
+__all__ = [
+    "envknobs", "export", "flight", "log", "metrics", "trace",
+    "FlightRecorder", "get_flight", "set_flight",
+    "MetricsRegistry", "get_registry", "set_registry", "render_json", "render_text",
+    "NULL", "Span", "TraceRecorder", "current", "event", "get_recorder",
+    "set_recorder", "span", "snapshot",
+]

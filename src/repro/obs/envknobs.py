@@ -1,0 +1,153 @@
+"""Central registry and parsers for every ``REPRO_*`` environment knob.
+
+Every knob the codebase reads is declared here — name, type, default and a
+one-line doc — and a static-check test (``tests/test_obs.py``) fails the
+suite when a ``REPRO_*`` reference lands in ``src/`` without a registration
+here and a mention in README.md.  The parsers are the single source of
+truthiness: ``env_flag`` accepts the full falsy set (``0/false/no/off`` and
+the empty string — the PR-7 fix that stopped ``REPRO_FT_HEDGE=off`` from
+reading as *on*), and numeric parsers fall back to the caller's default on
+garbage instead of raising mid-request.
+
+Defaults recorded in :data:`KNOBS` are documentation; call sites keep
+passing their own default so a knob whose default is *derived* (e.g.
+``REPRO_FT_MAX_RESHARDS`` = workers - 1) stays honest.  ``default=None``
+in a registration means "derived / see doc".
+
+This module is import-light on purpose (stdlib only): it is imported by
+``repro.core``/``repro.serve`` modules on both sides of the multi-host
+socket, before jax is touched.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, NamedTuple, Optional
+
+
+class Knob(NamedTuple):
+    name: str
+    kind: str  # "flag" | "tristate" | "float" | "int" | "str"
+    default: object  # documentation only; call sites pass their own
+    doc: str
+
+
+KNOBS: Dict[str, Knob] = {}
+
+
+def register(name: str, kind: str, default, doc: str) -> None:
+    KNOBS[name] = Knob(name, kind, default, doc)
+
+
+_FALSY = ("0", "false", "no", "off", "")
+
+
+def env_flag(name: str, default: bool) -> bool:
+    """Boolean knob: unset -> default; set -> anything outside the falsy
+    set (``0/false/no/off`` and empty, case-insensitive) is true."""
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    return raw.strip().lower() not in _FALSY
+
+
+def env_tristate(name: str) -> Optional[bool]:
+    """Three-state knob: unset -> None (caller decides, e.g. "TPU only"),
+    set -> truthiness as :func:`env_flag`."""
+    raw = os.environ.get(name)
+    if raw is None:
+        return None
+    return raw.strip().lower() not in _FALSY
+
+
+def env_float(name: str, default: float) -> float:
+    try:
+        return float(os.environ.get(name, default))
+    except (TypeError, ValueError):
+        return default
+
+
+def env_int(name: str, default: int) -> int:
+    try:
+        return int(os.environ.get(name, default))
+    except (TypeError, ValueError):
+        return default
+
+
+def env_str(name: str, default: str = "") -> str:
+    return os.environ.get(name) or default
+
+
+def snapshot() -> Dict[str, dict]:
+    """Registered knobs with their current environment values (None when
+    unset) — surfaced by ``obs.snapshot()`` so a trace dump records the
+    configuration it ran under."""
+    return {
+        k.name: {
+            "kind": k.kind,
+            "default": k.default,
+            "value": os.environ.get(k.name),
+            "doc": k.doc,
+        }
+        for k in sorted(KNOBS.values())
+    }
+
+
+# -- registry ---------------------------------------------------------------
+# Execution / planning
+register("REPRO_FUSE_CHAINS", "flag", True,
+         "Collapse elementwise/row-local stage runs into FusedChain nodes.")
+register("REPRO_FUSED_KERNEL", "tristate", None,
+         "Force (1) / forbid (0) the fused-transform Pallas megakernel; unset = TPU only.")
+register("REPRO_HASH_KERNEL", "tristate", None,
+         "Force (1) / forbid (0) the bloom_hash Pallas kernel; unset = TPU only.")
+register("REPRO_HASH_CHUNK", "int", None,
+         "Override the byte-chunk width of the long-string bloom_hash grid.")
+register("REPRO_TUNE_BUDGET", "int", 8,
+         "Max candidate block configs timed per autotune sweep.")
+register("REPRO_TUNE_CACHE", "str", "~/.cache/repro/tuned_configs.json",
+         "Path of the persisted tuned-config store.")
+register("REPRO_RUNNER_AUTOPACK", "flag", False,
+         "Adaptive superbatch pack sizing in PlanRunner.")
+register("REPRO_RUNNER_PACK_TARGET_MS", "float", 50.0,
+         "Autopack's target superbatch execute time.")
+# Serving
+register("REPRO_SERVE_DONATE", "flag", True,
+         "Donate staged input buffers to fused executables.")
+register("REPRO_GW_COST_MODEL", "flag", True,
+         "Build the gateway's finish-time ExecuteCostModel.")
+register("REPRO_GW_COST_Q", "float", 0.9,
+         "Quantile of observed execute time the cost model estimates with.")
+register("REPRO_GW_COST_SAFETY", "float", 1.0,
+         "Safety multiplier on the cost-model quantile.")
+register("REPRO_GW_COST_PRIOR_MS", "float", 0.0,
+         "Estimate used before any data exists (0 = never shed on ignorance).")
+register("REPRO_GW_COST_MIN_SAMPLES", "int", 1,
+         "Observations a bucket needs before its own histogram is trusted.")
+register("REPRO_GW_COST_FIT", "flag", True,
+         "Linear rows->time fallback for unseen buckets.")
+# Fault tolerance
+register("REPRO_FT_HEARTBEAT_S", "float", 5.0,
+         "Liveness window: suspect after one silent window, dead after two.")
+register("REPRO_FT_HEDGE", "flag", True,
+         "Race flagged stragglers' blocks with a local re-execute.")
+register("REPRO_FT_MAX_RESHARDS", "int", None,
+         "Worker deaths absorbed before batches fail loudly (default: workers - 1).")
+register("REPRO_FT_DEBUG", "flag", False,
+         "Debug-level obs.log output for the ft component (fault-path tracing).")
+# Observability
+register("REPRO_OBS_TRACE", "flag", True,
+         "Master gate for the span recorder; off = every span is a no-op.")
+register("REPRO_OBS_SAMPLE", "float", 1.0,
+         "Head-sampling probability, decided once per trace at root creation.")
+register("REPRO_OBS_RING", "int", 4096,
+         "Capacity (spans) of the in-memory trace ring buffer.")
+register("REPRO_OBS_FLIGHT", "flag", True,
+         "Flight recorder: freeze the last-N ring spans on fault triggers.")
+register("REPRO_OBS_FLIGHT_N", "int", 256,
+         "Spans captured per flight-recorder dump.")
+register("REPRO_OBS_FLIGHT_DIR", "str", "",
+         "Directory for flight-dump JSON files (empty = in-memory only).")
+register("REPRO_OBS_SHED_SPIKE", "int", 32,
+         "Gateway sheds within one second that trigger a flight dump.")
+register("REPRO_OBS_LOG", "str", "info",
+         "Minimum obs.log level (debug/info/warn/error).")

@@ -1,0 +1,81 @@
+"""Chrome trace-event / Perfetto export for recorded spans.
+
+``to_chrome`` renders spans as complete-duration (``ph:"X"``) trace events —
+the JSON object format both ``chrome://tracing`` and https://ui.perfetto.dev
+load directly.  Track layout: ``pid`` is the span's process (coordinator 0,
+shard workers by mesh process id), ``tid`` is derived from the trace id so
+each request renders as its own row and spans nest by time within it.
+Instant events (zero-duration) render as ``ph:"i"``.
+
+The span identity (trace/span/parent ids) rides in ``args`` along with the
+exact monotonic timestamps, so ``from_chrome`` round-trips a document back
+into the recorder's tuple form — the stitched-trace acceptance test pushes
+an N=2 trace through ``to_chrome`` → ``from_chrome`` and compares.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Iterable, List
+
+
+def _tuples(spans: Iterable) -> List[tuple]:
+    return [s if isinstance(s, tuple) else s.as_tuple() for s in spans]
+
+
+def to_chrome(spans: Iterable) -> Dict[str, Any]:
+    events = []
+    for t in _tuples(spans):
+        trace_id, span_id, parent_id, name, component, t0, t1, proc, attrs = t
+        ev: Dict[str, Any] = {
+            "name": name,
+            "cat": component or "app",
+            "ts": t0 * 1e6,  # microseconds, Chrome's unit
+            "pid": int(proc),
+            "tid": int(trace_id % 1_000_000),
+            "args": {
+                "trace_id": f"{trace_id:x}",
+                "span_id": int(span_id),
+                "parent_id": int(parent_id),
+                "t_start": float(t0),
+                "t_end": float(t1),
+                **{k: str(v) for k, v in dict(attrs).items()},
+            },
+        }
+        if t1 > t0:
+            ev["ph"] = "X"
+            ev["dur"] = (t1 - t0) * 1e6
+        else:
+            ev["ph"] = "i"
+            ev["s"] = "t"
+        events.append(ev)
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def from_chrome(doc: Dict[str, Any]) -> List[tuple]:
+    """Inverse of :func:`to_chrome` (for events it produced): recorder-form
+    span tuples.  Extra attrs come back stringified — identity, structure
+    and timing are exact."""
+    out = []
+    for ev in doc.get("traceEvents", []):
+        args = dict(ev.get("args", {}))
+        trace_id = int(args.pop("trace_id", "0"), 16)
+        span_id = int(args.pop("span_id", 0))
+        parent_id = int(args.pop("parent_id", 0))
+        t0 = float(args.pop("t_start", ev.get("ts", 0.0) / 1e6))
+        t1 = float(args.pop("t_end", t0 + ev.get("dur", 0.0) / 1e6))
+        out.append(
+            (trace_id, span_id, parent_id, ev.get("name", ""),
+             ev.get("cat", "app"), t0, t1, int(ev.get("pid", 0)), args)
+        )
+    return out
+
+
+def write_chrome_trace(path: str, spans: Iterable) -> str:
+    with open(path, "w") as f:
+        json.dump(to_chrome(spans), f, default=str)
+    return path
+
+
+def load_chrome_trace(path: str) -> List[tuple]:
+    with open(path) as f:
+        return from_chrome(json.load(f))

@@ -1,0 +1,140 @@
+"""Flight recorder: freeze the recent past when something goes wrong.
+
+The trace ring always holds the last ``REPRO_OBS_RING`` spans; when a fault
+fires — a worker death/reshard, a :class:`WorkerFailedError`, reshard-budget
+exhaustion, a shed spike at the gateway door — :meth:`FlightRecorder.trigger`
+freezes the last ``REPRO_OBS_FLIGHT_N`` of them plus a metrics snapshot into
+one JSON document: the black box of the seconds *leading up to* the fault,
+exactly what a post-mortem needs and what live polling can never reconstruct.
+
+Dumps are kept in memory (``last`` / ``dumps``) and, when
+``REPRO_OBS_FLIGHT_DIR`` is set, written to
+``<dir>/flight-<process>-<seq>.json`` (loadable by ``python -m
+repro.obs.report``).  A per-reason cooldown (default 1 s) stops a fault
+storm from dumping in a loop; ``REPRO_OBS_FLIGHT=0`` disables triggering
+entirely.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Optional
+
+from . import envknobs
+from . import log as obs_log
+from . import metrics as obs_metrics
+from . import trace as obs_trace
+
+
+class FlightRecorder:
+    def __init__(
+        self,
+        recorder: Optional[obs_trace.TraceRecorder] = None,
+        registry: Optional[obs_metrics.MetricsRegistry] = None,
+        last_n: Optional[int] = None,
+        out_dir: Optional[str] = None,
+        enabled: Optional[bool] = None,
+        cooldown_s: float = 1.0,
+        clock=time.perf_counter,
+    ):
+        self._recorder = recorder
+        self._registry = registry
+        self.last_n = int(
+            last_n if last_n is not None else envknobs.env_int("REPRO_OBS_FLIGHT_N", 256)
+        )
+        self.out_dir = (
+            out_dir if out_dir is not None else envknobs.env_str("REPRO_OBS_FLIGHT_DIR", "")
+        )
+        self.enabled = (
+            enabled if enabled is not None else envknobs.env_flag("REPRO_OBS_FLIGHT", True)
+        )
+        self.cooldown_s = cooldown_s
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._last_fire: dict = {}  # reason -> t of last dump
+        self._seq = 0
+        self.last: Optional[dict] = None
+        self.dumps = 0
+        self.history: list = []  # most recent dumps (bounded)
+
+    def _rec(self) -> obs_trace.TraceRecorder:
+        return self._recorder if self._recorder is not None else obs_trace.get_recorder()
+
+    def trigger(self, reason: str, component: str = "obs", attrs: Optional[dict] = None,
+                force: bool = False) -> Optional[dict]:
+        """Freeze a dump.  Returns it (also stored on ``last``), or None
+        when disabled or within the reason's cooldown window."""
+        if not self.enabled:
+            return None
+        now = self._clock()
+        with self._lock:
+            if not force and now - self._last_fire.get(reason, float("-inf")) < self.cooldown_s:
+                return None
+            self._last_fire[reason] = now
+            self._seq += 1
+            seq = self._seq
+        rec = self._rec()
+        spans = rec.spans()[-self.last_n:]
+        registry = self._registry if self._registry is not None else obs_metrics.get_registry()
+        try:
+            metrics = registry.snapshot()
+        except Exception as e:  # the dump must land even if a source is sick
+            metrics = {"error": f"{type(e).__name__}: {e}"}
+        dump = {
+            "kind": "flight",
+            "reason": reason,
+            "component": component,
+            "t": now,
+            "process": rec.process,
+            "seq": seq,
+            "attrs": attrs or {},
+            "spans": [s.as_tuple() for s in spans],
+            "metrics": metrics,
+        }
+        with self._lock:
+            self.last = dump
+            self.dumps += 1
+            self.history.append(dump)
+            if len(self.history) > 16:
+                self.history.pop(0)
+        path = self._write(dump, seq)
+        obs_log.warn(
+            component, f"flight dump triggered: {reason}",
+            spans=len(spans), seq=seq, **({"path": path} if path else {}),
+        )
+        return dump
+
+    def _write(self, dump: dict, seq: int) -> Optional[str]:
+        if not self.out_dir:
+            return None
+        try:
+            os.makedirs(self.out_dir, exist_ok=True)
+            path = os.path.join(
+                self.out_dir, f"flight-{dump['process']}-{seq:04d}.json"
+            )
+            with open(path, "w") as f:
+                json.dump(dump, f, default=str)
+            return path
+        except OSError:
+            return None  # a full/readonly disk must not take down serving
+
+
+_default: Optional[FlightRecorder] = None
+_dlock = threading.Lock()
+
+
+def get_flight() -> FlightRecorder:
+    global _default
+    if _default is None:
+        with _dlock:
+            if _default is None:
+                _default = FlightRecorder()
+    return _default
+
+
+def set_flight(fr: Optional[FlightRecorder]) -> None:
+    global _default
+    with _dlock:
+        _default = fr

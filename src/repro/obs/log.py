@@ -1,0 +1,63 @@
+"""Structured stderr logging for the serving stack.
+
+One line per record: monotonic timestamp, level, component, message, then
+``key=value`` fields — written with a single ``print(..., flush=True)`` so
+records from N subprocesses interleave per-line, never mid-line (the bare
+``[repro.ft]`` prints this replaces could tear under concurrent workers).
+
+Level policy: ``REPRO_OBS_LOG`` sets the global minimum (default ``info``).
+A component may additionally be opted into debug via its own historical
+flag — ``REPRO_FT_DEBUG`` keeps gating the ``ft`` component's debug output,
+so existing workflows keep working — registered in
+:data:`COMPONENT_DEBUG_FLAGS`.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict
+
+from . import envknobs
+
+LEVELS = {"debug": 10, "info": 20, "warn": 30, "error": 40}
+
+# component -> env flag that force-enables its debug records
+COMPONENT_DEBUG_FLAGS: Dict[str, str] = {"ft": "REPRO_FT_DEBUG"}
+
+_clock = time.perf_counter
+
+
+def enabled_for(level: str, component: str) -> bool:
+    lvl = LEVELS.get(level, 20)
+    floor = LEVELS.get(envknobs.env_str("REPRO_OBS_LOG", "info").lower(), 20)
+    if lvl >= floor:
+        return True
+    flag = COMPONENT_DEBUG_FLAGS.get(component)
+    return flag is not None and envknobs.env_flag(flag, False)
+
+
+def log(level: str, component: str, msg: str, **fields) -> None:
+    if not enabled_for(level, component):
+        return
+    extra = "".join(f" {k}={v}" for k, v in fields.items())
+    print(
+        f"[{_clock():.6f}] {level.upper():<5} {component}: {msg}{extra}",
+        file=sys.stderr,
+        flush=True,
+    )
+
+
+def debug(component: str, msg: str, **fields) -> None:
+    log("debug", component, msg, **fields)
+
+
+def info(component: str, msg: str, **fields) -> None:
+    log("info", component, msg, **fields)
+
+
+def warn(component: str, msg: str, **fields) -> None:
+    log("warn", component, msg, **fields)
+
+
+def error(component: str, msg: str, **fields) -> None:
+    log("error", component, msg, **fields)

@@ -1,0 +1,256 @@
+"""Typed metrics registry with one top-level snapshot.
+
+Two kinds of state feed ``obs.snapshot()``:
+
+* **Instruments** — :class:`Counter` / :class:`Gauge` / :class:`Histogram`
+  created through the registry.  Histograms are backed by the same
+  mergeable DDSketch layout as the fitting engine and the gateway's
+  latency telemetry (``repro.core.sketches``), so their quantile error
+  bound and merge algebra are the ones already asserted by
+  tests/test_sketches.py.
+* **Sources** — existing snapshot callables (``gateway.snapshot``,
+  ``executor.ft_snapshot``, ``runner.stats``, the cost model inside the
+  gateway's snapshot) *re-registered* here instead of being re-invented:
+  each registration holds only a weak reference to its owner, so a closed
+  gateway or collected runner silently drops out of the snapshot rather
+  than keeping the object alive or raising at poll time.  Registering the
+  same name again replaces the previous owner (sequential gateways in a
+  test suite: last one wins).
+
+Exposition: ``render_text`` flattens the snapshot into sorted
+``dotted.path value`` lines (one metric per line, machine-parseable);
+``render_json`` is the same tree as JSON.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import weakref
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+
+from repro.core import sketches
+
+
+class Counter:
+    __slots__ = ("_lock", "_v")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._v = 0.0
+
+    def inc(self, by: float = 1.0) -> None:
+        with self._lock:
+            self._v += by
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._v
+
+    def snapshot(self):
+        return self.value
+
+
+class Gauge:
+    """Last-write-wins value, or a live callable (``bind``)."""
+
+    __slots__ = ("_lock", "_v", "_fn")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._v: float = 0.0
+        self._fn: Optional[Callable[[], float]] = None
+
+    def set(self, value: float) -> None:
+        with self._lock:
+            self._v = value
+
+    def bind(self, fn: Callable[[], float]) -> None:
+        with self._lock:
+            self._fn = fn
+
+    def snapshot(self):
+        with self._lock:
+            fn = self._fn
+            if fn is None:
+                return self._v
+        try:
+            return fn()
+        except Exception as e:  # a dead provider must not poison the poll
+            return f"error: {type(e).__name__}"
+
+
+class Histogram:
+    """DDSketch-backed distribution; records floats, exposes quantiles."""
+
+    __slots__ = ("_lock", "_hist", "_count")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._hist = sketches.dd_init_np()
+        self._count = 0
+
+    def record(self, value: float) -> None:
+        if not (value >= 0.0):  # NaN / negative: sketch domain is positive
+            return
+        with self._lock:
+            sketches.dd_update_np(self._hist, value)
+            self._count += 1
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._count
+
+    def quantiles(self, qs: Iterable[float] = (0.5, 0.99)) -> Dict[float, float]:
+        qs = list(qs)
+        with self._lock:
+            vals = sketches.dd_quantile_np(self._hist, qs)
+        return {q: float(v) for q, v in zip(qs, vals)}
+
+    def snapshot(self):
+        quants = self.quantiles()
+        return {
+            "count": self.count,
+            **{f"p{round(q * 100):g}": round(v, 9) for q, v in quants.items()},
+        }
+
+
+class MetricsRegistry:
+    """Instruments plus weakly-held snapshot sources, one coherent poll."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._instruments: Dict[str, Any] = {}
+        # name -> (weakref-to-owner or None, callable)
+        self._sources: Dict[str, Tuple[Optional[weakref.ref], Callable[[], Any]]] = {}
+
+    def _get(self, name: str, cls):
+        with self._lock:
+            inst = self._instruments.get(name)
+            if inst is None:
+                inst = self._instruments[name] = cls()
+            elif not isinstance(inst, cls):
+                raise TypeError(
+                    f"metric {name!r} is {type(inst).__name__}, not {cls.__name__}"
+                )
+            return inst
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    # -- sources ------------------------------------------------------------
+
+    def register_source(self, name: str, fn: Callable[[], Any], obj=None) -> None:
+        """Fold ``fn()``'s dict into every snapshot under ``sources[name]``.
+        ``obj`` (default: ``fn.__self__`` for bound methods) is held weakly —
+        when it is collected the source unregisters itself."""
+        if obj is None:
+            obj = getattr(fn, "__self__", None)
+        ref = None
+        if obj is not None:
+            if getattr(fn, "__self__", None) is obj:
+                fn = weakref.WeakMethod(fn)  # don't let the callable pin obj
+                ref = fn
+            else:
+                ref = weakref.ref(obj)
+        with self._lock:
+            self._sources[name] = (ref, fn)
+
+    def unregister_source(self, name: str, obj=None) -> None:
+        """Remove a source; with ``obj``, only when it still owns the name
+        (a later registration under the same name survives)."""
+        with self._lock:
+            cur = self._sources.get(name)
+            if cur is None:
+                return
+            if obj is not None and cur[0] is not None:
+                owner = cur[0]()
+                if isinstance(cur[0], weakref.WeakMethod) and owner is not None:
+                    owner = owner.__self__  # WeakMethod derefs to the method
+                if owner is not obj:
+                    return
+            self._sources.pop(name, None)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            instruments = dict(self._instruments)
+            sources = dict(self._sources)
+        out: Dict[str, Any] = {
+            "metrics": {k: v.snapshot() for k, v in sorted(instruments.items())},
+            "sources": {},
+        }
+        dead = []
+        for name, (ref, fn) in sorted(sources.items()):
+            call = fn
+            if isinstance(fn, weakref.WeakMethod):
+                call = fn()
+                if call is None:
+                    dead.append(name)
+                    continue
+            elif ref is not None and ref() is None:
+                dead.append(name)
+                continue
+            try:
+                out["sources"][name] = call()
+            except Exception as e:  # a failing source must not fail the poll
+                out["sources"][name] = {"error": f"{type(e).__name__}: {e}"}
+        if dead:
+            with self._lock:
+                for name in dead:
+                    if self._sources.get(name, (None, None))[1] is sources[name][1]:
+                        self._sources.pop(name, None)
+        return out
+
+
+def flatten(tree: Any, prefix: str = "") -> Dict[str, Any]:
+    """``{"a": {"b": 1}} -> {"a.b": 1}`` (lists index numerically)."""
+    out: Dict[str, Any] = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree, key=str):
+            out.update(flatten(tree[k], f"{prefix}{k}."))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(flatten(v, f"{prefix}{i}."))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def render_text(snap: Optional[dict] = None) -> str:
+    """One ``dotted.path value`` line per leaf, sorted."""
+    if snap is None:
+        snap = get_registry().snapshot()
+    lines = [f"{k} {v}" for k, v in sorted(flatten(snap).items())]
+    return "\n".join(lines)
+
+
+def render_json(snap: Optional[dict] = None) -> str:
+    if snap is None:
+        snap = get_registry().snapshot()
+    return json.dumps(snap, default=str, sort_keys=True)
+
+
+_default: Optional[MetricsRegistry] = None
+_dlock = threading.Lock()
+
+
+def get_registry() -> MetricsRegistry:
+    global _default
+    if _default is None:
+        with _dlock:
+            if _default is None:
+                _default = MetricsRegistry()
+    return _default
+
+
+def set_registry(reg: Optional[MetricsRegistry]) -> None:
+    global _default
+    with _dlock:
+        _default = reg

@@ -1,0 +1,99 @@
+"""Terminal trace/metrics viewer: ``python -m repro.obs.report <file>``.
+
+Accepts any JSON the obs layer writes — a Chrome trace-event export, a
+flight-recorder dump, or a bare metrics snapshot — and renders span trees
+(indented, with millisecond durations and per-process labels) plus a
+flattened metrics listing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+from typing import Dict, List
+
+from . import export as obs_export
+from . import metrics as obs_metrics
+
+
+def format_trace_tree(tuples: List[tuple]) -> str:
+    """Indented per-trace span trees, ordered by start time."""
+    by_trace: Dict[int, List[tuple]] = defaultdict(list)
+    for t in tuples:
+        by_trace[t[0]].append(t)
+    lines: List[str] = []
+    for trace_id in sorted(by_trace):
+        spans = sorted(by_trace[trace_id], key=lambda t: (t[5], t[1]))
+        lines.append(f"trace {trace_id:x} ({len(spans)} spans)")
+        ids = {t[1] for t in spans}
+        children: Dict[int, List[tuple]] = defaultdict(list)
+        roots: List[tuple] = []
+        for t in spans:
+            if t[2] in ids:
+                children[t[2]].append(t)
+            else:
+                roots.append(t)  # parent 0, or parent outside this dump
+
+        def emit(t: tuple, depth: int) -> None:
+            _, span_id, _, name, component, t0, t1, proc, attrs = t
+            dur = (t1 - t0) * 1e3
+            extra = "".join(
+                f" {k}={v}" for k, v in sorted(attrs.items()) if k != "error"
+            )
+            err = f"  ERROR: {attrs['error']}" if "error" in attrs else ""
+            lines.append(
+                f"  {'  ' * depth}{name:<20} {dur:9.3f}ms  "
+                f"[{component}/p{proc}]{extra}{err}"
+            )
+            for c in children.get(span_id, []):
+                emit(c, depth + 1)
+
+        for r in roots:
+            emit(r, 0)
+    return "\n".join(lines)
+
+
+def format_metrics(snap: dict) -> str:
+    return obs_metrics.render_text(snap)
+
+
+def render_file(path: str) -> str:
+    with open(path) as f:
+        doc = json.load(f)
+    parts: List[str] = []
+    if isinstance(doc, dict) and "traceEvents" in doc:
+        parts.append(format_trace_tree(obs_export.from_chrome(doc)))
+    elif isinstance(doc, dict) and doc.get("kind") == "flight":
+        parts.append(
+            f"flight dump: reason={doc.get('reason')} "
+            f"component={doc.get('component')} process={doc.get('process')} "
+            f"t={doc.get('t'):.6f}"
+        )
+        if doc.get("attrs"):
+            parts.append(f"attrs: {json.dumps(doc['attrs'], default=str)}")
+        spans = [tuple(s) if not isinstance(s, tuple) else s for s in doc.get("spans", [])]
+        spans = [(s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7], dict(s[8])) for s in spans]
+        parts.append(format_trace_tree(spans))
+        if doc.get("metrics"):
+            parts.append("-- metrics --")
+            parts.append(format_metrics(doc["metrics"]))
+    else:
+        parts.append(format_metrics(doc))
+    return "\n".join(p for p in parts if p)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Render an obs JSON artifact (Chrome trace export, "
+        "flight dump, or metrics snapshot) as text.",
+    )
+    ap.add_argument("path", help="JSON file to render")
+    args = ap.parse_args(argv)
+    print(render_file(args.path))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,378 @@
+"""Lock-cheap ring-buffer span recorder for distributed request tracing.
+
+A *span* is one timed operation: ``(trace_id, span_id, parent_id, name,
+component, t_start, t_end, process, attrs)``.  Timestamps come from one
+monotonic clock per process (injectable — the fake-clock tests drive it);
+cross-process stitching re-bases worker timestamps onto the coordinator's
+clock via the offset estimated at attach time (see
+``serve.gateway.multihost``), so a request renders as ONE tree spanning N
+processes.
+
+Cost model: finished spans land in a fixed-capacity ring (one short lock
+per append, ``REPRO_OBS_RING`` spans, oldest overwritten) — recording never
+allocates unboundedly and never blocks on I/O.  ``REPRO_OBS_TRACE=0``
+makes every span a shared no-op object; ``REPRO_OBS_SAMPLE`` head-samples:
+the keep/drop decision is made ONCE per trace at root creation and
+inherited by every descendant (children of an unsampled root cost a single
+attribute check), so a trace is always complete or absent, never partial.
+
+Parenting: a ``with recorder.span(...)`` block pushes the span on a
+thread-local stack; spans started inside inherit it implicitly.  Crossing
+threads or processes, pass ``parent=`` explicitly or ``ctx=(trace_id,
+span_id)`` — the tuple that rides multi-host shard frames.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import random
+import threading
+import time
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from . import envknobs
+
+_UNSET = object()
+
+
+class Span:
+    """A started (possibly finished) span.  Usable as a context manager:
+    entering pushes it on the recorder's thread-local parent stack."""
+
+    __slots__ = (
+        "trace_id", "span_id", "parent_id", "name", "component",
+        "t_start", "t_end", "process", "attrs", "_rec",
+    )
+    sampled = True
+
+    def __init__(self, rec, trace_id, span_id, parent_id, name, component,
+                 t_start, process, attrs):
+        self._rec = rec
+        self.trace_id = trace_id
+        self.span_id = span_id
+        self.parent_id = parent_id
+        self.name = name
+        self.component = component
+        self.t_start = t_start
+        self.t_end: Optional[float] = None
+        self.process = process
+        self.attrs: Dict[str, Any] = attrs if attrs is not None else {}
+
+    @property
+    def duration(self) -> float:
+        end = self.t_end if self.t_end is not None else self._rec.clock()
+        return end - self.t_start
+
+    def set(self, key: str, value) -> None:
+        self.attrs[key] = value
+
+    def end(self, t: Optional[float] = None, error: Optional[str] = None) -> None:
+        if self.t_end is not None:
+            return  # already finished (with-block plus manual end)
+        if error is not None:
+            self.attrs["error"] = error
+        self.t_end = t if t is not None else self._rec.clock()
+        if self.t_end < self.t_start:
+            self.t_end = self.t_start
+        self._rec._record(self)
+
+    def as_tuple(self) -> tuple:
+        return (
+            self.trace_id, self.span_id, self.parent_id, self.name,
+            self.component, self.t_start,
+            self.t_end if self.t_end is not None else self.t_start,
+            self.process, dict(self.attrs),
+        )
+
+    def __enter__(self) -> "Span":
+        self._rec._push(self)
+        return self
+
+    def __exit__(self, etype, exc, tb) -> None:
+        self._rec._pop(self)
+        self.end(error=f"{etype.__name__}: {exc}" if etype is not None else None)
+
+    def __repr__(self) -> str:
+        return (
+            f"Span({self.name!r}, trace={self.trace_id:x}, id={self.span_id}, "
+            f"parent={self.parent_id}, proc={self.process})"
+        )
+
+
+class _NullSpan:
+    """Shared no-op span: what every recording call returns when tracing is
+    off or the trace was not sampled.  All mutators are no-ops."""
+
+    __slots__ = ()
+    sampled = False
+    trace_id = 0
+    span_id = 0
+    parent_id = 0
+    name = component = ""
+    t_start = t_end = 0.0
+    process = 0
+    duration = 0.0
+
+    @property
+    def attrs(self) -> dict:
+        return {}  # fresh dict: stray writes cannot leak between call sites
+
+    def set(self, key, value) -> None:
+        pass
+
+    def end(self, t=None, error=None) -> None:
+        pass
+
+    def as_tuple(self) -> tuple:
+        return (0, 0, 0, "", "", 0.0, 0.0, 0, {})
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        pass
+
+
+NULL = _NullSpan()
+
+
+class TraceRecorder:
+    """Per-process span recorder (ring buffer + id allocation + sampling).
+
+    Args (each falls back to its env knob):
+      capacity: ring size in spans (``REPRO_OBS_RING``, 4096).
+      clock: monotonic time source (injectable for fake-clock tests).
+      enabled: master gate (``REPRO_OBS_TRACE``, on).
+      sample: head-sampling probability (``REPRO_OBS_SAMPLE``, 1.0).
+      process: process label stamped on every span (multi-host workers set
+        their mesh process id; 0 = coordinator/single process).
+    """
+
+    def __init__(
+        self,
+        capacity: Optional[int] = None,
+        clock=time.perf_counter,
+        enabled: Optional[bool] = None,
+        sample: Optional[float] = None,
+        process: int = 0,
+    ):
+        self.capacity = int(
+            capacity if capacity is not None else envknobs.env_int("REPRO_OBS_RING", 4096)
+        )
+        if self.capacity < 1:
+            raise ValueError("ring capacity must be >= 1")
+        self.clock = clock
+        self.enabled = (
+            enabled if enabled is not None else envknobs.env_flag("REPRO_OBS_TRACE", True)
+        )
+        self.sample = (
+            sample if sample is not None else envknobs.env_float("REPRO_OBS_SAMPLE", 1.0)
+        )
+        self.process = int(process)
+        self._ring: List[Optional[Span]] = [None] * self.capacity
+        self._n = 0  # total spans ever recorded
+        self._rlock = threading.Lock()
+        # span ids are salted by process so coordinator and worker spans
+        # stitched into one trace can never collide on span_id (which would
+        # corrupt parent links in the rendered tree)
+        self._ids = itertools.count((int(process) << 40) + 1)
+        self._rng = random.Random((os.getpid() << 16) ^ int(time.time() * 1e3))
+        self._tls = threading.local()
+
+    # -- id/sampling --------------------------------------------------------
+
+    def new_trace_id(self) -> int:
+        return self._rng.getrandbits(63) or 1
+
+    def _sampled(self) -> bool:
+        if self.sample >= 1.0:
+            return True
+        if self.sample <= 0.0:
+            return False
+        return self._rng.random() < self.sample
+
+    # -- span creation ------------------------------------------------------
+
+    def span(
+        self,
+        name: str,
+        component: str = "app",
+        parent=_UNSET,
+        ctx: Optional[Tuple[int, int]] = None,
+        attrs: Optional[dict] = None,
+        t_start: Optional[float] = None,
+    ):
+        """Start a span.  Parent resolution order: explicit ``ctx`` (a
+        ``(trace_id, span_id)`` tuple off the wire — always sampled, the
+        sender only propagates sampled traces), explicit ``parent`` span,
+        the thread-local current span, else a NEW trace (head-sampling
+        decision applies).  Returns :data:`NULL` when recording is off or
+        the trace is unsampled."""
+        if not self.enabled:
+            return NULL
+        if ctx is not None:
+            trace_id, parent_id = int(ctx[0]), int(ctx[1])
+        else:
+            if parent is _UNSET:
+                # inlined current(): this is the hot path, one attribute
+                # lookup instead of two method calls
+                st = getattr(self._tls, "stack", None)
+                parent = st[-1] if st else None
+            if parent is None:
+                if self.sample < 1.0 and not self._sampled():
+                    return NULL
+                trace_id, parent_id = self._rng.getrandbits(63) or 1, 0
+            elif not parent.sampled:
+                return NULL
+            else:
+                trace_id, parent_id = parent.trace_id, parent.span_id
+        return Span(
+            self, trace_id, next(self._ids), parent_id, name, component,
+            t_start if t_start is not None else self.clock(),
+            self.process, attrs,
+        )
+
+    def root_span(self, name: str, component: str = "app", attrs=None,
+                  t_start: Optional[float] = None):
+        """Start a new trace unconditionally of any ambient span."""
+        return self.span(name, component, parent=None, attrs=attrs, t_start=t_start)
+
+    def event(self, name: str, component: str = "app", attrs=None, parent=_UNSET):
+        """Instant (zero-duration) event, recorded immediately."""
+        sp = self.span(name, component, parent=parent, attrs=attrs)
+        sp.end(t=sp.t_start)
+        return sp
+
+    # -- thread-local parent stack ------------------------------------------
+
+    def _stack(self) -> list:
+        st = getattr(self._tls, "stack", None)
+        if st is None:
+            st = self._tls.stack = []
+        return st
+
+    def _push(self, span: Span) -> None:
+        self._stack().append(span)
+
+    def _pop(self, span: Span) -> None:
+        st = self._stack()
+        if st and st[-1] is span:
+            st.pop()
+        elif span in st:  # exited out of order: drop it wherever it sits
+            st.remove(span)
+
+    def current(self) -> Optional[Span]:
+        st = getattr(self._tls, "stack", None)
+        return st[-1] if st else None
+
+    # -- recording ----------------------------------------------------------
+
+    def _record(self, span: Span) -> None:
+        lock = self._rlock
+        lock.acquire()
+        try:
+            self._ring[self._n % self.capacity] = span
+            self._n += 1
+        finally:
+            lock.release()
+        cap = getattr(self._tls, "capture", None)
+        if cap is not None:
+            cap.append(span)
+
+    def capture(self):
+        """Context manager collecting every span FINISHED by this thread
+        during the block (on top of normal ring recording) — how a shard
+        worker gathers the spans of one batch to piggyback on its reply."""
+        return _Capture(self)
+
+    def ingest(self, tuples: Iterable[tuple], offset: float = 0.0) -> List[Span]:
+        """Adopt foreign (worker-side) finished spans, shifting their
+        timestamps by ``offset`` onto this process's clock.  Durations are
+        offset-invariant, so they stay non-negative."""
+        out = []
+        for t in tuples:
+            trace_id, span_id, parent_id, name, component, t0, t1, proc, attrs = t
+            sp = Span(self, trace_id, span_id, parent_id, name, component,
+                      t0 + offset, proc, dict(attrs))
+            sp.t_end = t1 + offset
+            with self._rlock:
+                self._ring[self._n % self.capacity] = sp
+                self._n += 1
+            out.append(sp)
+        return out
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def recorded(self) -> int:
+        """Total spans ever recorded (including ones the ring dropped)."""
+        return self._n
+
+    def spans(self) -> List[Span]:
+        """Finished spans still in the ring, oldest first."""
+        with self._rlock:
+            n, cap = self._n, self.capacity
+            if n <= cap:
+                return [s for s in self._ring[:n]]
+            i = n % cap
+            return [s for s in self._ring[i:] + self._ring[:i]]
+
+    def trace(self, trace_id: int) -> List[Span]:
+        return [s for s in self.spans() if s.trace_id == trace_id]
+
+    def reset(self) -> None:
+        with self._rlock:
+            self._ring = [None] * self.capacity
+            self._n = 0
+
+
+class _Capture:
+    __slots__ = ("_rec", "_prev", "spans")
+
+    def __init__(self, rec: TraceRecorder):
+        self._rec = rec
+        self.spans: List[Span] = []
+
+    def __enter__(self) -> "_Capture":
+        self._prev = getattr(self._rec._tls, "capture", None)
+        self._rec._tls.capture = self.spans
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._rec._tls.capture = self._prev
+
+    def __iter__(self):
+        return iter(self.spans)
+
+
+# -- module-level default recorder ------------------------------------------
+
+_default: Optional[TraceRecorder] = None
+_dlock = threading.Lock()
+
+
+def get_recorder() -> TraceRecorder:
+    global _default
+    if _default is None:
+        with _dlock:
+            if _default is None:
+                _default = TraceRecorder()
+    return _default
+
+
+def set_recorder(rec: Optional[TraceRecorder]) -> None:
+    global _default
+    with _dlock:
+        _default = rec
+
+
+def span(name: str, component: str = "app", **kw):
+    return get_recorder().span(name, component, **kw)
+
+
+def event(name: str, component: str = "app", **kw):
+    return get_recorder().event(name, component, **kw)
+
+
+def current() -> Optional[Span]:
+    return get_recorder().current()

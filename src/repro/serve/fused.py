@@ -24,7 +24,6 @@ globally with ``REPRO_SERVE_DONATE=0``.
 """
 from __future__ import annotations
 
-import os
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -32,10 +31,12 @@ import jax
 from repro.core import types as T
 from repro.core.export import PreprocessModel
 from repro.launch.mesh import sharding_fingerprint
+from repro.obs import envknobs
+from repro.obs import trace as obs_trace
 
 
 def _donate_default() -> bool:
-    return os.environ.get("REPRO_SERVE_DONATE", "1") not in ("0", "false", "")
+    return envknobs.env_flag("REPRO_SERVE_DONATE", True)
 
 
 class FusedModel:
@@ -74,6 +75,10 @@ class FusedModel:
 
     def _call(self, params, raw: T.Batch):
         self._trace_count += 1  # python side effect: runs at trace time only
+        obs_trace.get_recorder().event(
+            "fused.trace", component="plan",
+            attrs={"trace_count": self._trace_count},
+        )
         feats = self._plan.fn(raw)
         feats = {self.feature_map.get(k, k): v for k, v in feats.items()}
         return self.model_fn(params, feats)

@@ -38,18 +38,12 @@ lookup, not a quantile scan or a regression.
 """
 from __future__ import annotations
 
-import os
 import threading
 from typing import Dict, Optional, Tuple
 
 from repro.core import sketches
-
-
-def _env_float(name: str, default: float) -> float:
-    try:
-        return float(os.environ.get(name, default))
-    except ValueError:
-        return default
+from repro.obs.envknobs import env_flag as _env_flag
+from repro.obs.envknobs import env_float as _env_float
 
 
 class _BucketStats:
@@ -93,7 +87,7 @@ class ExecuteCostModel:
             min_samples if min_samples is not None else _env_float("REPRO_GW_COST_MIN_SAMPLES", 1)
         )
         if fit is None:
-            fit = os.environ.get("REPRO_GW_COST_FIT", "1") not in ("0", "false", "")
+            fit = _env_flag("REPRO_GW_COST_FIT", True)
         self.fit = bool(fit)
         self._lock = threading.Lock()
         self._stats: Dict[Tuple[str, int], _BucketStats] = {}

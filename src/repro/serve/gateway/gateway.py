@@ -23,13 +23,16 @@ overload-safe tier on top of the same staging + bucketing machinery.
 """
 from __future__ import annotations
 
-import os
 import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import envknobs
+from repro.obs import flight as obs_flight
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.batcher import run_padded_batch
 
 from .admission import (
@@ -78,7 +81,7 @@ class ServingGateway:
         cost_model=None,
     ):
         if cost_model is None:
-            enabled = os.environ.get("REPRO_GW_COST_MODEL", "1") != "0"
+            enabled = envknobs.env_flag("REPRO_GW_COST_MODEL", True)
             cost_model = ExecuteCostModel() if enabled else None
         elif cost_model is False:
             cost_model = None
@@ -108,6 +111,16 @@ class ServingGateway:
             "rows": 0,
             "padded_rows": 0,
         }
+        # shed-spike flight trigger: sheds within the current 1 s window
+        # (guarded by _stats_lock); past the threshold the flight recorder
+        # freezes the ring — overload post-mortems need the lead-up, not
+        # the steady state a later poll would show
+        self._shed_spike = int(envknobs.env_int("REPRO_OBS_SHED_SPIKE", 32))
+        self._shed_win = [0.0, 0]  # window start, sheds in window
+        # the gateway's operational snapshot re-registers into the one
+        # top-level obs.snapshot() (weakly: a dropped gateway disappears;
+        # a second gateway under the same name replaces this one)
+        obs_metrics.get_registry().register_source("gateway", self.snapshot)
         self._stop = False
         self._threads = [
             threading.Thread(target=self._worker, daemon=True)
@@ -181,16 +194,31 @@ class ServingGateway:
         self.registry.get(model)  # unknown model: reject before admission
         now = self._clock()
         deadline = now + deadline_ms / 1e3 if deadline_ms is not None else None
-        self.admission.admit(deadline, model=model, priority=int(priority))
+        # one trace per request, rooted here; the head-sampling decision is
+        # made once at this root and inherited by every child span
+        root = obs_trace.get_recorder().root_span(
+            "request", component="gw", t_start=now,
+            attrs={"model": model, "priority": int(priority)},
+        )
+        try:
+            with obs_trace.get_recorder().span("admission", component="gw", parent=root):
+                self.admission.admit(deadline, model=model, priority=int(priority))
+        except BaseException as e:
+            root.end(error=f"{type(e).__name__}: {e}")
+            raise
         try:
             feats = {k: np.asarray(v) for k, v in features.items()}
             with self._seq_lock:
                 self._seq += 1
                 seq = self._seq
-            req = Request(model, feats, int(priority), deadline, now, seq)
+            req = Request(
+                model, feats, int(priority), deadline, now, seq,
+                obs_span=root if root.sampled else None,
+            )
             self.scheduler.put(req)
-        except BaseException:
+        except BaseException as e:
             self.admission.release()
+            root.end(error=f"{type(e).__name__}: {e}")
             raise
         return req
 
@@ -233,8 +261,15 @@ class ServingGateway:
                     entry = self.registry.get(key[0])
                     now = self._clock()
                     qsk = self.sketches[(entry.name, "queue")]
+                    rec = obs_trace.get_recorder()
                     for r in batch:
                         qsk.record(now - r.t_submit)
+                        if r.obs_span is not None:
+                            # queue wait as a span: submit -> formation
+                            rec.span(
+                                "queue", component="gw", parent=r.obs_span,
+                                t_start=r.t_submit,
+                            ).end(t=now)
                     self._run_batch(entry, batch)
             except BaseException as e:  # the worker must outlive any batch:
                 # a popped request that never reaches event.set() would leave
@@ -245,26 +280,60 @@ class ServingGateway:
 
     def _finish_error(self, req: Request, err: BaseException, counter: str) -> None:
         req.error = err
+        if req.obs_span is not None:
+            req.obs_span.end(error=f"{type(err).__name__}: {err}")
         req.event.set()
         self.admission.release()
+        spike = False
         with self._stats_lock:
             self.stats[counter] += 1
+            if counter.startswith("shed") and self._shed_spike > 0:
+                now = self._clock()
+                if now - self._shed_win[0] > 1.0:
+                    self._shed_win[0] = now
+                    self._shed_win[1] = 0
+                self._shed_win[1] += 1
+                if self._shed_win[1] >= self._shed_spike:
+                    self._shed_win[1] = 0  # re-arm; flight cooldown also guards
+                    spike = True
+        if spike:
+            # outside _stats_lock: the flight dump snapshots the metrics
+            # registry, which calls back into this gateway's snapshot()
+            obs_flight.get_flight().trigger(
+                "shed_spike",
+                component="gw",
+                attrs={"model": req.model, "threshold": self._shed_spike},
+            )
 
     def _run_batch(self, entry: ModelEntry, reqs: List[Request], retry: bool = False) -> None:
         try:
             n = len(reqs)
             bs = entry.bucket(n)
             # "execute" covers stack+stage+run+readback: the device-facing
-            # cost of the batch, as a request experiences it
-            t0 = self._clock()
-            results = run_padded_batch(
-                [r.features for r in reqs],
-                bs,
-                entry.fn,
-                entry.sharding,
-                stage=entry.stage_inputs,
+            # cost of the batch, as a request experiences it.  The span is
+            # parented to the most urgent member's trace and made the
+            # thread's current span, so multi-host shard/hedge/reshard spans
+            # nest under it
+            xsp = obs_trace.get_recorder().span(
+                "execute_retry" if retry else "execute",
+                component="gw",
+                parent=reqs[0].obs_span,
+                attrs={"model": entry.name, "rows": n, "bucket": bs},
             )
-            t1 = self._clock()
+            with xsp:
+                t0 = self._clock()
+                results = run_padded_batch(
+                    [r.features for r in reqs],
+                    bs,
+                    entry.fn,
+                    entry.sharding,
+                    stage=entry.stage_inputs,
+                )
+                t1 = self._clock()
+                # end at t1 so the request root (also ended at t1) strictly
+                # contains it; the with-block exit is then a no-op on
+                # success but still error-stamps the span on a raise
+                xsp.end(t=t1)
             # retried / hedged / resharded executes are tagged apart and kept
             # out of the cost model: failure-path durations must not distort
             # the healthy execute record the gateway schedules by
@@ -285,6 +354,11 @@ class ServingGateway:
             for r, result in zip(reqs, results):
                 r.result = result
                 e2e.record(t1 - r.t_submit)
+                if r.obs_span is not None:
+                    # the request's trace ends when its answer exists; t1 so
+                    # the root's duration matches the e2e sketch, not the
+                    # scatter loop's position within the batch
+                    r.obs_span.end(t=t1)
                 r.event.set()
                 self.admission.release()
             with self._stats_lock:
@@ -380,6 +454,7 @@ class ServingGateway:
         self._stop = True
         for t in self._threads:
             t.join(timeout)
+        obs_metrics.get_registry().unregister_source("gateway", obj=self)
         for r in drained:
             self._finish_error(
                 r, GatewayClosedError("gateway closed before the request ran"),

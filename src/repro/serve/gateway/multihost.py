@@ -68,7 +68,6 @@ test_chaos.py``).
 """
 from __future__ import annotations
 
-import os
 import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
@@ -78,32 +77,37 @@ import numpy as np
 
 from repro.core.runner import stage_batch
 from repro.ft import Liveness, StragglerMonitor
+from repro.obs import flight as obs_flight
+from repro.obs import log as obs_log
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.envknobs import env_flag as _env_flag, env_float as _env_float
 
 from .telemetry import CounterSet, LatencySketch
-
-
-def _env_float(name: str, default: float) -> float:
-    try:
-        return float(os.environ.get(name, default))
-    except ValueError:
-        return default
-
-
-def _env_flag(name: str, default: bool) -> bool:
-    raw = os.environ.get(name)
-    if raw is None:
-        return default
-    return raw.strip().lower() not in ("0", "false", "no", "off", "")
 
 
 def _ft_debug(msg: str) -> None:
     """Fault-path tracing (``REPRO_FT_DEBUG=1``): failure handling here is
     deliberately silent toward clients, so debugging a schedule that did NOT
-    recover needs a side channel."""
-    if _env_flag("REPRO_FT_DEBUG", False):
-        import sys
+    recover needs a side channel — structured obs.log lines (level +
+    component + monotonic timestamp, one atomic line per record) instead of
+    bare prints that interleave mid-line from N subprocesses."""
+    obs_log.debug("ft", msg)
 
-        print(f"[repro.ft] {msg}", file=sys.stderr, flush=True)
+
+class _WireSpans:
+    """Execute-reply payload wrapper piggybacking worker-side obs spans on
+    the reply frame: ``out`` is the block's output pytree, ``spans`` the
+    finished span tuples recorded while executing it (worker clock).  The
+    coordinator unwraps in ``_consume_reply``, re-bases the timestamps by
+    the worker's estimated clock offset and ingests them — one stitched
+    trace.  Only sent when the coordinator propagated a trace context."""
+
+    __slots__ = ("out", "spans")
+
+    def __init__(self, out, spans):
+        self.out = out
+        self.spans = spans
 
 
 def _concat_outputs(parts: List[Any]):
@@ -122,7 +126,9 @@ class WorkerFailedError(RuntimeError):
 class _Worker:
     """Coordinator-side state of one shard worker connection."""
 
-    __slots__ = ("conn", "lock", "liveness", "alive", "batches", "pending")
+    __slots__ = (
+        "conn", "lock", "liveness", "alive", "batches", "pending", "clock_offset",
+    )
 
     def __init__(self, conn, liveness: Liveness):
         self.conn = conn
@@ -130,6 +136,10 @@ class _Worker:
         self.liveness = liveness
         self.alive = True
         self.batches = 0
+        # coordinator_clock - worker_clock, estimated at attach/rejoin from a
+        # clock probe (RTT-midpoint): worker span timestamps are shifted by
+        # this before ingestion so a stitched trace has one time base
+        self.clock_offset = 0.0
         # (t_send, model_or_None) of requests SENT whose replies were not
         # consumed — a hedge won the race, or a ping/trace probe missed its
         # poll window (name None); strict request/reply order means they are
@@ -258,6 +268,9 @@ class MultiHostExecutor:
         self._ft = CounterSet()
         self._started = False  # full initial attach done (rejoin vs duplicate)
         self._closed = False
+        # ft counters/health re-register into the one obs snapshot (weakly:
+        # a collected executor drops out of the poll)
+        obs_metrics.get_registry().register_source("multihost.ft", self.ft_snapshot)
         self._sweeper = threading.Thread(
             target=self._sweep_loop, daemon=True, name="mh-ft-sweep"
         )
@@ -300,15 +313,43 @@ class MultiHostExecutor:
         with self._mlock:
             existing = self._workers.get(pid)
             if existing is None:
-                self._workers[pid] = _Worker(
-                    conn, Liveness(self.heartbeat_s, self._clock)
-                )
+                w = _Worker(conn, Liveness(self.heartbeat_s, self._clock))
+                self._workers[pid] = w
                 if len(self._workers) == self.num_processes - 1:
                     self._started = True
-                return
-            if not self._started:
+            elif not self._started:
                 raise ValueError(f"worker process {pid} already attached")
+        if existing is None:
+            with w.lock:
+                self._probe_clock_locked(w)
+            return
         self._maybe_rejoin(pid, conn)
+
+    def _probe_clock_locked(self, w: _Worker) -> None:
+        """Estimate the worker's monotonic-clock offset (coordinator minus
+        worker) from one round trip, taking the RTT midpoint as the exchange
+        instant — worker-side span timestamps are shifted by this before
+        ingestion, so a stitched trace renders on ONE time base with
+        non-negative durations.  Caller holds ``w.lock``.  A reply that
+        misses the poll window is tracked as pending (an untracked late
+        reply would desync the strict request/reply socket); a worker that
+        answers ``("error", ...)`` leaves the offset at 0."""
+        try:
+            t0 = self._clock()
+            w.conn.send(("clock",))
+            # short window, like the ping sweep: the worker just said hello
+            # so it is serving; on a miss the offset stays 0 (spans merely
+            # unaligned) rather than stalling attach for the probe window
+            if not w.conn.poll(min(self.heartbeat_s, 1.0)):
+                w.pending.append((t0, None))
+                return
+            status, payload = w.conn.recv()
+            t1 = self._clock()
+        except (OSError, EOFError, BrokenPipeError, ValueError):
+            return  # the liveness machinery will judge this socket
+        w.liveness.beat()
+        if status == "ok":
+            w.clock_offset = (t0 + t1) / 2.0 - float(payload)
 
     def _maybe_rejoin(self, pid: int, conn) -> None:
         w = self._workers[pid]
@@ -368,6 +409,7 @@ class MultiHostExecutor:
                 except (OSError, ValueError):
                     pass
                 return  # stays dead; a later dial-in may try again
+            self._probe_clock_locked(w)  # a restarted process is a new clock
             w.alive = True
             w.batches = 0
             w.liveness = Liveness(self.heartbeat_s, self._clock)
@@ -469,6 +511,8 @@ class MultiHostExecutor:
         held: List[int] = []
         t_send: Dict[int, float] = {}
         err: Optional[BaseException] = None
+        rec = obs_trace.get_recorder()
+        shard_spans: Dict[int, Any] = {}
         try:
             for p in sorted(host_blocks):
                 if p == 0:
@@ -499,12 +543,25 @@ class MultiHostExecutor:
                     else:
                         ev["resharded"] += 1
                     continue
+                # the per-worker span starts at send and ends when the reply
+                # is consumed; its (trace_id, span_id) rides the frame so the
+                # worker's own spans stitch under it
+                sp = rec.span(
+                    "mh.shard",
+                    component="mh",
+                    attrs={"process": p, "rows": blocks[p][1] - blocks[p][0]},
+                )
                 try:
                     t_send[p] = self._clock()
-                    w.conn.send(("execute", name, host_blocks[p]))
+                    frame = ("execute", name, host_blocks[p])
+                    if sp.sampled:
+                        frame = frame + ((sp.trace_id, sp.span_id),)
+                    w.conn.send(frame)
                     w.pending.append((t_send[p], name))
+                    shard_spans[p] = sp
                     routed.append(p)
                 except (OSError, BrokenPipeError, ValueError):
+                    sp.end(error="send failed")
                     held.remove(p)
                     w.lock.release()
                     self._mark_dead(p, "send failed")
@@ -512,13 +569,24 @@ class MultiHostExecutor:
                     ev["resharded"] += 1
             # the coordinator's own shard overlaps with the workers'
             if 0 in host_blocks:
-                parts[0] = self._run_local(name, host_blocks[0], rank="process0")
+                with rec.span(
+                    "mh.local", component="mh",
+                    attrs={"rows": blocks[0][1] - blocks[0][0]},
+                ):
+                    parts[0] = self._run_local(name, host_blocks[0], rank="process0")
             for p in absorbed:
-                parts[p] = self._run_local(name, host_blocks[p])
+                with rec.span("mh.reshard", component="mh", attrs={"process": p}):
+                    parts[p] = self._run_local(name, host_blocks[p])
                 self._ft.inc("recovered_blocks")
             for p in routed:
                 w = self._workers[p]
-                out, werr = self._gather(p, w, name, host_blocks[p], t_send[p], ev)
+                out, werr = self._gather(
+                    p, w, name, host_blocks[p], t_send[p], ev,
+                    sp=shard_spans.get(p, obs_trace.NULL),
+                )
+                shard_spans.pop(p, obs_trace.NULL).end(
+                    error=str(werr) if werr is not None else None
+                )
                 parts[p] = out
                 err = err or werr
                 held.remove(p)
@@ -526,8 +594,21 @@ class MultiHostExecutor:
         finally:
             for p in held:
                 self._workers[p].lock.release()
+            for sp in shard_spans.values():
+                sp.end(error="batch aborted" if err is None else str(err))
         if err is not None:
+            obs_flight.get_flight().trigger(
+                "worker_failed", component="mh",
+                attrs={"model": name, "error": str(err)},
+            )
             raise err
+        if ev["resharded"]:
+            with self._mlock:
+                dead = sorted(self._dead)
+            obs_flight.get_flight().trigger(
+                "reshard", component="mh",
+                attrs={"model": name, "events": dict(ev), "dead": dead},
+            )
         self._check_reshard_budget()
         last_death = self._ft.get("last_death_t", 0.0)
         if last_death and not self._ft.get("kill_recover_ms", 0.0):
@@ -539,10 +620,13 @@ class MultiHostExecutor:
         ordered = [parts[p] for p in sorted(parts, key=lambda q: blocks[q][0])]
         return _concat_outputs(ordered)
 
-    def _gather(self, p, w, name, block, t0, ev):
+    def _gather(self, p, w, name, block, t0, ev, sp=obs_trace.NULL):
         """Consume worker ``p``'s reply for the in-flight block — hedging a
         flagged straggler, declaring death on staleness/EOF and recovering
-        the block locally.  Returns ``(output_or_None, error_or_None)``."""
+        the block locally.  Returns ``(output_or_None, error_or_None)``.
+        ``sp`` is the dispatch span opened at send time: the hedge /
+        reshard-recovery spans nest under it."""
+        rec = obs_trace.get_recorder()
         rank = f"process{p}"
         flagged = rank in self.monitor.flagged
         try:
@@ -550,7 +634,9 @@ class MultiHostExecutor:
                 # race: local re-execute vs the straggler's in-flight reply
                 self._ft.inc("hedges")
                 ev["hedged"] += 1
-                hedge_out = self._run_local(name, block)
+                with rec.span("mh.hedge", component="mh", parent=sp,
+                              attrs={"process": p}):
+                    hedge_out = self._run_local(name, block)
                 if not w.conn.poll(0):
                     # hedge won; the reply stays outstanding and is drained
                     # before this connection's next use
@@ -584,7 +670,10 @@ class MultiHostExecutor:
             self._mark_dead(p, f"{type(e).__name__}: {e}")
             ev["resharded"] += 1
             self._ft.inc("recovered_blocks")
-            return self._run_local(name, block), None
+            with rec.span("mh.reshard", component="mh", parent=sp,
+                          attrs={"process": p, "cause": type(e).__name__}):
+                out = self._run_local(name, block)
+            return out, None
 
     def _consume_reply(self, p, w, name, t0):
         status, payload = w.conn.recv()
@@ -599,6 +688,11 @@ class MultiHostExecutor:
                 f"worker process {p} failed on model {name!r}: {payload}"
             )
         w.batches += 1
+        if isinstance(payload, _WireSpans):
+            # worker-side spans, re-based onto the coordinator's clock by
+            # the offset estimated at attach — the stitched half of the tree
+            obs_trace.get_recorder().ingest(payload.spans, offset=w.clock_offset)
+            payload = payload.out
         return payload, None
 
     def _drain_stale(self, p, w) -> bool:
@@ -633,6 +727,10 @@ class MultiHostExecutor:
         with self._mlock:
             dead = len(self._dead)
         if dead > self.max_reshards:
+            obs_flight.get_flight().trigger(
+                "reshard_budget_exhausted", component="mh",
+                attrs={"dead": dead, "budget": self.max_reshards},
+            )
             raise WorkerFailedError(
                 f"mesh degraded beyond budget: {dead} dead workers > "
                 f"REPRO_FT_MAX_RESHARDS={self.max_reshards}"
@@ -657,6 +755,22 @@ class MultiHostExecutor:
         self._ft.set("last_death_t", self._clock())
         self._ft.set("kill_recover_ms", 0.0)  # re-arm the recovery gauge
         self.monitor.forget(f"process{p}")
+        _ft_debug(f"worker process {p} marked dead: {why}")
+        obs_trace.get_recorder().event(
+            "mh.worker_death", component="mh", parent=None,
+            attrs={"process": p, "why": why},
+        )
+        # dump asynchronously: callers may hold a worker's connection lock,
+        # and the flight snapshot polls sources (gateway.snapshot -> trace
+        # probes) that contend on those locks — the recovery path must not
+        # wait on a post-mortem
+        threading.Thread(
+            target=obs_flight.get_flight().trigger,
+            args=("worker_death", "mh"),
+            kwargs={"attrs": {"process": p, "why": why}},
+            daemon=True,
+            name="obs-flight",
+        ).start()
 
     # -- health sweep ------------------------------------------------------
 
@@ -957,6 +1071,9 @@ class ShardServer:
         self._sharding = sharding
         self._fns: Dict[str, Tuple[Any, Any]] = {}
         self.shutdown_received = False
+        # spans this worker records carry its mesh process id, so the
+        # coordinator's stitched tree attributes work to the right process
+        obs_trace.get_recorder().process = process_mesh.process_id
         for name, model in models.items():
             fn, traces = _normalize(name, model, sharding, donate=None)
             self._fns[name] = (fn, traces)
@@ -1020,6 +1137,15 @@ class ShardServer:
                 if not self._safe_send(conn, ("ok", "pong")):
                     return batches
                 continue
+            if msg[0] == "clock":
+                # clock-offset probe: answer with this process's monotonic
+                # now (the recorder's clock — the same source that stamps
+                # this worker's spans, which is what the offset aligns)
+                if not self._safe_send(
+                    conn, ("ok", float(obs_trace.get_recorder().clock()))
+                ):
+                    return batches
+                continue
             if msg[0] == "traces":
                 _, traces = self._fns.get(msg[1], (None, None))
                 if not self._safe_send(
@@ -1031,11 +1157,28 @@ class ShardServer:
                 if not self._safe_send(conn, ("error", f"unknown message {msg[0]!r}")):
                     return batches
                 continue
-            _, name, block = msg
+            name, block = msg[1], msg[2]
+            # optional 4th element: the coordinator's (trace_id, span_id) —
+            # absent when tracing is off/unsampled (and from old coordinators)
+            ctx = msg[3] if len(msg) > 3 else None
             try:
                 fn, _ = self._fns[name]
-                out = jax.device_get(fn(stage_batch(block, self._sharding)))
-                self.fault_hook(name, batches)
+                rec = obs_trace.get_recorder()
+                if ctx is not None and rec.enabled:
+                    with rec.capture() as cap:
+                        with rec.span(
+                            "shard.execute", component="shard", ctx=ctx,
+                            attrs={"process": self.pm.process_id},
+                        ):
+                            out = jax.device_get(
+                                fn(stage_batch(block, self._sharding))
+                            )
+                    self.fault_hook(name, batches)
+                    # piggyback this batch's worker spans on the reply
+                    out = _WireSpans(out, [s.as_tuple() for s in cap])
+                else:
+                    out = jax.device_get(fn(stage_batch(block, self._sharding)))
+                    self.fault_hook(name, batches)
                 if not self._safe_send(conn, ("ok", out)):
                     return batches
                 batches += 1

@@ -44,6 +44,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
 from repro.serve.batcher import _bucket
 
 from .admission import (
@@ -67,9 +68,11 @@ class Request:
         "result",
         "error",
         "shape_sig",
+        "obs_span",
     )
 
-    def __init__(self, model, features, priority, deadline, t_submit, seq):
+    def __init__(self, model, features, priority, deadline, t_submit, seq,
+                 obs_span=None):
         self.model = model
         self.features = features
         self.priority = priority
@@ -80,6 +83,10 @@ class Request:
         self.result = None
         self.error: Optional[BaseException] = None
         self.shape_sig = shape_signature(features)
+        # the request's root trace span (None when the gateway is untraced);
+        # children — queue wait, formation, execute, shard dispatch — hang
+        # off it, and completion/shedding ends it
+        self.obs_span = obs_span
 
     def urgency(self) -> tuple:
         """Sort key: smaller is more urgent."""
@@ -256,6 +263,20 @@ class BatchScheduler:
         if batch:
             self._stats["sched_formed_batches"] += 1
             self._stats["sched_formed_rows"] += len(batch)
+            root = batch[0].obs_span
+            if root is not None:
+                # formation span on the most urgent member's trace: when the
+                # batch launched relative to its members' waits, and what the
+                # formation decided (shed/trim counts)
+                obs_trace.get_recorder().span(
+                    "sched.form", component="sched", parent=root, t_start=now,
+                    attrs={
+                        "model": model,
+                        "formed": len(batch),
+                        "shed": len(shed),
+                        "requeued": len(rest),
+                    },
+                ).end()
         self._stats["sched_requeued"] += len(rest)
         for _, err in shed:
             if isinstance(err, InfeasibleDeadlineError):

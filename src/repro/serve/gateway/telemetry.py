@@ -21,11 +21,22 @@ from repro.core import sketches
 
 
 class LatencySketch:
-    """Thread-sharded DDSketch recorder: seconds in, quantiles out."""
+    """Thread-sharded DDSketch recorder: seconds in, quantiles out.
+
+    Snapshots are memoized by update count: each recording thread bumps its
+    own counter (single-writer, no lock on the hot path), their sum is the
+    sketch's *version*, and the merged histogram + quantile dict are cached
+    per ``(version, qs)`` — a concurrent poller hammering ``snapshot_us``
+    pays one version sum per poll instead of a full merge + quantile scan
+    when nothing was recorded in between (``recomputes`` counts the cache
+    misses; the memoization test pins it)."""
 
     def __init__(self):
         self._lock = threading.Lock()
         self._hists: Dict[int, np.ndarray] = {}  # thread ident -> histogram
+        self._counts: Dict[int, int] = {}  # thread ident -> records so far
+        self._cache: Tuple = (-1, None, None, None)  # version, qs, merged, snap
+        self.recomputes = 0
 
     def record(self, seconds: float) -> None:
         tid = threading.get_ident()
@@ -33,7 +44,15 @@ class LatencySketch:
         if h is None:
             with self._lock:
                 h = self._hists.setdefault(tid, sketches.dd_init_np())
+                self._counts.setdefault(tid, 0)
         h[int(sketches.dd_bin_np(seconds))] += 1
+        # single-writer per tid: a plain increment is safe; pollers reading a
+        # torn-by-one version merely recompute (or serve) one poll early
+        self._counts[tid] += 1
+
+    def _version(self) -> int:
+        with self._lock:
+            return sum(self._counts.values())
 
     def merged(self) -> np.ndarray:
         """One histogram folding every recording thread's observations."""
@@ -57,10 +76,23 @@ class LatencySketch:
 
     def snapshot_us(self, qs: Tuple[float, ...] = (0.5, 0.99)) -> Dict[str, float]:
         """Quantiles in microseconds plus the observation count — the shape
-        the gateway surfaces per (model, stage)."""
-        quants = self.quantiles(qs)
-        out = {quantile_label(q): round(v * 1e6, 1) for q, v in quants.items()}
-        out["count"] = self.count
+        the gateway surfaces per (model, stage).  Memoized by update count
+        (returns a copy; callers may mutate their snapshot dicts)."""
+        qs = tuple(qs)
+        version = self._version()
+        with self._lock:
+            c_version, c_qs, _, c_snap = self._cache
+            if c_version == version and c_qs == qs:
+                return dict(c_snap)
+        merged = self.merged()
+        vals = sketches.dd_quantile_np(merged, list(qs))
+        out = {
+            quantile_label(q): round(float(v) * 1e6, 1) for q, v in zip(qs, vals)
+        }
+        out["count"] = int(merged.sum())
+        with self._lock:
+            self.recomputes += 1
+            self._cache = (version, qs, merged, dict(out))
         return out
 
 

@@ -405,6 +405,81 @@ def gateway_replay(ctx: MHContext, payload):
     return out
 
 
+def gateway_obs(ctx: MHContext, payload):
+    """Distributed-trace stitching probe: gateway_replay's topology with a
+    fresh always-sampling trace recorder in every process.  Worker spans ride
+    the shard replies back (clock-aligned via the attach-time offset probe),
+    so the coordinator ring holds the WHOLE stitched story — process 0
+    returns it as span tuples; workers return only their batch counts."""
+    import numpy as np
+
+    from repro.obs import trace as obs_trace
+    from repro.serve import (
+        MultiHostExecutor,
+        ServingGateway,
+        ShardServer,
+        accept_workers,
+    )
+
+    seed = payload.get("seed", 0)
+    pm = ctx.process_mesh()
+    rec = obs_trace.TraceRecorder(capacity=8192, enabled=True, sample=1.0)
+    obs_trace.set_recorder(rec)
+    if not ctx.is_coordinator:
+        server = ShardServer(pm, {"ranker": _fused_model(seed)})
+        batches = server.connect_and_serve(ctx.coord_address, ctx.authkey)
+        return {"batches": batches, "recorded": rec.recorded}
+
+    listener = ctx.listen() if ctx.num_processes > 1 else None
+    fm = _fused_model(seed)
+    gw = ServingGateway(
+        max_pending=256,
+        max_wait_ms=payload.get("max_wait_ms", 1.0),
+        workers=2,
+        cost_model=False,
+    )
+    ex = None
+    if ctx.num_processes > 1:
+        ex = MultiHostExecutor(pm)
+        servable = ex.add_model("ranker", fm)
+        accept_workers(listener, ex)
+        listener.close()
+        gw.register(
+            "ranker", servable, example=_replay_rows(payload)[0],
+            buckets=(2, 4, 8), max_batch=8,
+        )
+    else:
+        gw.register(
+            "ranker", fm, example=_replay_rows(payload)[0],
+            buckets=(2, 4, 8), max_batch=8,
+        )
+    gw.warmup()
+    rows = _replay_rows({"requests": payload.get("requests", 8), "seed": seed})
+    import concurrent.futures as cf
+
+    results = [None] * len(rows)
+
+    def client(i):
+        results[i] = np.asarray(gw.submit("ranker", rows[i], timeout=60.0))
+
+    with cf.ThreadPoolExecutor(max_workers=8) as pool:
+        list(pool.map(client, range(len(rows))))
+    out = {
+        "spans": [s.as_tuple() for s in rec.spans()],
+        "recorded": rec.recorded,
+        "completed": sum(1 for r in results if r is not None),
+        "clock_offsets": (
+            {p: w.clock_offset for p, w in ex._workers.items()}
+            if ex is not None
+            else {}
+        ),
+    }
+    if ex is not None:
+        ex.close()
+    gw.close()
+    return out
+
+
 class ChaosShardServer:
     """A ShardServer with an injectable fault schedule (built lazily so the
     module stays importable without jax).
@@ -623,6 +698,12 @@ def gateway_chaos(ctx: MHContext, payload):
         for t in threads:
             t.join()
     wall_s = _time.perf_counter() - t_run0
+    from repro.obs import flight as obs_flight
+
+    flights = [
+        {"reason": d["reason"], "span_names": sorted({s[3] for s in d["spans"]})}
+        for d in obs_flight.get_flight().history
+    ]
     snap = gw.snapshot()
     completed = [i for i in range(len(rows)) if results[i] is not None]
     err_counts = {}
@@ -646,6 +727,7 @@ def gateway_chaos(ctx: MHContext, payload):
             for s in ("execute", "execute_retry", "execute_hedge", "execute_reshard")
         },
         "wall_s": wall_s,
+        "flights": flights,
     }
     gw.close()
     if ex is not None:

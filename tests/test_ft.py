@@ -436,7 +436,9 @@ def test_sweep_ping_timeout_keeps_late_pong_off_the_batch_path():
         ProcessMesh.emulated(2, 0), heartbeat_s=0.4, clock=lambda: tk[0]
     )
     servable = ex.add_model("m", _double)
+    cb.send(("ok", 100.0))  # pre-loaded answer for the attach clock probe
     ex.attach(1, ca)
+    assert cb.recv() == ("clock",)  # consume the probe frame
     # drive the sweep by hand: stop the background thread so exactly one
     # ping is in play
     ex._closed = True
@@ -478,7 +480,9 @@ def test_trace_probe_timeout_tracks_outstanding_reply():
     ca, cb = Pipe()
     ex = MultiHostExecutor(ProcessMesh.emulated(2, 0), heartbeat_s=5.0)
     servable = ex.add_model("m", _double)
+    cb.send(("ok", time.perf_counter()))  # answer for the attach clock probe
     ex.attach(1, ca)
+    assert cb.recv() == ("clock",)  # consume the probe frame
     ex.probe_poll_s = 0.1  # don't wait the full production window in a test
 
     total = servable.trace_count()  # worker silent: probe gives up
@@ -561,6 +565,8 @@ def test_hedge_loss_unflags_recovered_straggler():
                 return
             elif msg[0] == "ping":
                 cb.send(("ok", "pong"))
+            elif msg[0] == "clock":
+                cb.send(("ok", time.perf_counter()))
 
     t = threading.Thread(target=worker, daemon=True)
     t.start()

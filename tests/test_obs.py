@@ -1,0 +1,643 @@
+"""Unified observability layer: span recorder, metrics registry, flight
+recorder, exporters, env-knob registry, and the distributed stitching path.
+
+Unit tests drive the recorder with a FAKE clock (deterministic ring
+wraparound / sampling / flight-trigger assertions — no sleeps); the
+``multihost``-marked test replays gateway traffic at N=2 and asserts the
+coordinator ring holds ONE stitched tree per request (coordinator + worker
+spans, clock-aligned, surviving a Chrome-export round trip); the ``chaos``
+test kills a worker mid-stream and asserts the flight recorder froze the
+reshard into a dump.  The static check at the bottom fails the suite when a
+``REPRO_*`` knob lands in src/ without an ``envknobs`` registration and a
+README mention.
+"""
+import gc
+import json
+import pathlib
+import re
+import sys
+
+import pytest
+
+from repro.obs import envknobs, export, flight, metrics, report
+from repro.obs import log as obs_log
+from repro.obs import trace as obs_trace
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+pytestmark = pytest.mark.obs
+
+
+class FakeClock:
+    def __init__(self, t=100.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+    def tick(self, dt=1.0):
+        self.t += dt
+        return self.t
+
+
+def _rec(**kw):
+    kw.setdefault("capacity", 64)
+    kw.setdefault("enabled", True)
+    kw.setdefault("sample", 1.0)
+    kw.setdefault("clock", FakeClock())
+    return obs_trace.TraceRecorder(**kw)
+
+
+# ---------------------------------------------------------------------------
+# trace recorder
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_and_parenting():
+    rec = _rec()
+    with rec.span("root", component="gw") as root:
+        with rec.span("child") as child:
+            assert rec.current() is child
+            grand = rec.span("grand")
+            grand.end()
+    assert rec.current() is None
+    assert child.trace_id == root.trace_id == grand.trace_id
+    assert child.parent_id == root.span_id
+    assert grand.parent_id == child.span_id
+    assert root.parent_id == 0
+    names = [s.name for s in rec.spans()]
+    assert names == ["grand", "child", "root"]  # recorded at END time
+
+
+def test_ring_wraparound_keeps_newest():
+    clock = FakeClock()
+    rec = _rec(capacity=4, clock=clock)
+    for i in range(7):
+        clock.tick()
+        rec.span(f"s{i}").end()
+    assert rec.recorded == 7
+    assert [s.name for s in rec.spans()] == ["s3", "s4", "s5", "s6"]
+    clock.tick()
+    rec.span("s7").end()
+    assert [s.name for s in rec.spans()] == ["s4", "s5", "s6", "s7"]
+
+
+def test_disabled_and_unsampled_spans_are_null():
+    off = _rec(enabled=False)
+    assert off.span("x") is obs_trace.NULL
+    assert off.recorded == 0
+
+    never = _rec(sample=0.0)
+    root = never.span("root")
+    assert root is obs_trace.NULL
+    # children of an unsampled root are null too (whole-trace decision)
+    assert never.span("child", parent=root) is obs_trace.NULL
+
+    always = _rec(sample=1.0)
+    assert always.span("root").sampled
+    # NULL is inert: mutators are no-ops and attrs never leak
+    obs_trace.NULL.set("k", "v")
+    assert obs_trace.NULL.attrs == {}
+    obs_trace.NULL.end()
+
+
+def test_head_sampling_is_per_trace():
+    rec = _rec(sample=0.5)
+    kept = dropped = 0
+    for _ in range(200):
+        root = rec.span("r", parent=None)
+        child = rec.span("c", parent=root)
+        # a trace is complete or absent, never partial
+        assert child.sampled == root.sampled
+        if root.sampled:
+            kept += 1
+            child.end()
+            root.end()
+        else:
+            dropped += 1
+    assert kept > 0 and dropped > 0
+
+
+def test_end_is_idempotent_and_clamps_negative_durations():
+    clock = FakeClock()
+    rec = _rec(clock=clock)
+    sp = rec.span("x")
+    clock.tick(-5.0)  # clock anomaly: end before start
+    sp.end()
+    assert sp.t_end == sp.t_start  # clamped, duration 0
+    t_end = sp.t_end
+    clock.tick(50.0)
+    sp.end()  # second end: no-op
+    assert sp.t_end == t_end
+    assert rec.recorded == 1
+
+
+def test_error_capture_via_context_manager():
+    rec = _rec()
+    with pytest.raises(ValueError):
+        with rec.span("boom"):
+            raise ValueError("bad input")
+    (sp,) = rec.spans()
+    assert sp.attrs["error"] == "ValueError: bad input"
+
+
+def test_ctx_parenting_and_ingest_offset():
+    """The cross-host path: a (trace_id, span_id) ctx rides the wire, the
+    worker records against it, and ingest() re-bases worker clocks."""
+    coord = _rec(clock=FakeClock(100.0))
+    worker = _rec(clock=FakeClock(5.0), process=1)
+
+    shard = coord.span("mh.shard", component="mh")
+    ctx = (shard.trace_id, shard.span_id)
+
+    wsp = worker.span("shard.execute", component="shard", ctx=ctx)
+    worker.clock.t += 0.25
+    wsp.end()
+    shard.end()
+
+    offset = 100.0 - 5.0  # what the RTT-midpoint probe would estimate
+    ingested = coord.ingest([wsp.as_tuple()], offset=offset)
+    (w,) = ingested
+    assert w.trace_id == shard.trace_id
+    assert w.parent_id == shard.span_id
+    assert w.process == 1
+    assert w.t_start == pytest.approx(100.0)
+    assert w.t_end - w.t_start == pytest.approx(0.25)  # offset-invariant
+    tids = {s.trace_id for s in coord.spans()}
+    assert tids == {shard.trace_id}  # one stitched trace
+
+
+def test_capture_collects_this_threads_finished_spans():
+    rec = _rec()
+    rec.span("before").end()
+    with rec.capture() as cap:
+        with rec.span("a"):
+            rec.span("b").end()
+    assert [s.name for s in cap.spans] == ["b", "a"]
+
+
+def test_event_is_instant():
+    rec = _rec()
+    ev = rec.event("mh.worker_death", component="mh", attrs={"process": 2})
+    assert ev.t_end == ev.t_start
+    assert rec.spans()[0].attrs["process"] == 2
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_instruments_typed_get_or_create():
+    reg = metrics.MetricsRegistry()
+    c = reg.counter("requests")
+    c.inc()
+    c.inc(2)
+    assert reg.counter("requests") is c
+    with pytest.raises(TypeError):
+        reg.gauge("requests")
+    g = reg.gauge("depth")
+    g.set(7)
+    h = reg.histogram("lat")
+    for v in (0.001, 0.002, 0.004):
+        h.record(v)
+    h.record(float("nan"))  # dropped, not raised
+    snap = reg.snapshot()
+    assert snap["metrics"]["requests"] == 3
+    assert snap["metrics"]["depth"] == 7
+    assert snap["metrics"]["lat"]["count"] == 3
+    # DDSketch quantile error bound (~4% relative) on p50
+    assert snap["metrics"]["lat"]["p50"] == pytest.approx(0.002, rel=0.05)
+
+
+def test_metrics_sources_are_weakly_held():
+    reg = metrics.MetricsRegistry()
+
+    class Owner:
+        def snap(self):
+            return {"alive": 1}
+
+    o = Owner()
+    reg.register_source("owner", o.snap)
+    assert reg.snapshot()["sources"]["owner"] == {"alive": 1}
+    del o
+    gc.collect()
+    assert "owner" not in reg.snapshot()["sources"]
+
+
+def test_metrics_source_last_registration_wins_and_owner_checked_unregister():
+    reg = metrics.MetricsRegistry()
+
+    class Owner:
+        def __init__(self, tag):
+            self.tag = tag
+
+        def snap(self):
+            return {"tag": self.tag}
+
+    a, b = Owner("a"), Owner("b")
+    reg.register_source("gw", a.snap)
+    reg.register_source("gw", b.snap)  # replaces a
+    assert reg.snapshot()["sources"]["gw"] == {"tag": "b"}
+    reg.unregister_source("gw", obj=a)  # a no longer owns the name: no-op
+    assert reg.snapshot()["sources"]["gw"] == {"tag": "b"}
+    reg.unregister_source("gw", obj=b)
+    assert "gw" not in reg.snapshot()["sources"]
+
+
+def test_metrics_failing_source_does_not_poison_the_poll():
+    reg = metrics.MetricsRegistry()
+    reg.register_source("sick", lambda: 1 / 0)
+    reg.counter("ok").inc()
+    snap = reg.snapshot()
+    assert snap["metrics"]["ok"] == 1
+    assert "ZeroDivisionError" in snap["sources"]["sick"]["error"]
+
+
+def test_render_text_flattens_sorted_lines():
+    reg = metrics.MetricsRegistry()
+    reg.counter("b").inc(2)
+    reg.counter("a").inc()
+    text = metrics.render_text(reg.snapshot())
+    lines = text.splitlines()
+    assert "metrics.a 1.0" in lines
+    assert "metrics.b 2.0" in lines
+    assert lines == sorted(lines)
+    json.loads(metrics.render_json(reg.snapshot()))  # valid JSON
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+
+def test_flight_trigger_freezes_last_n_and_cooldown(tmp_path):
+    clock = FakeClock()
+    rec = _rec(clock=clock)
+    reg = metrics.MetricsRegistry()
+    reg.counter("deaths").inc()
+    fl = flight.FlightRecorder(
+        recorder=rec, registry=reg, last_n=3, out_dir=str(tmp_path),
+        enabled=True, cooldown_s=1.0, clock=clock,
+    )
+    for i in range(5):
+        rec.span(f"s{i}").end()
+    dump = fl.trigger("worker_failed", component="mh", attrs={"process": 2})
+    assert dump is not None
+    assert [s[3] for s in dump["spans"]] == ["s2", "s3", "s4"]  # last 3
+    assert dump["metrics"]["metrics"]["deaths"] == 1
+    assert dump["attrs"] == {"process": 2}
+    # within the cooldown window: suppressed (per reason)
+    assert fl.trigger("worker_failed") is None
+    assert fl.trigger("reshard") is not None  # different reason fires
+    clock.tick(2.0)
+    assert fl.trigger("worker_failed") is not None
+    assert fl.dumps == 3
+    assert [d["reason"] for d in fl.history] == [
+        "worker_failed", "reshard", "worker_failed",
+    ]
+    # dumps landed on disk and render through the terminal viewer
+    files = sorted(tmp_path.glob("flight-*.json"))
+    assert len(files) == 3
+    text = report.render_file(str(files[0]))
+    assert "worker_failed" in text and "s4" in text
+
+
+def test_flight_disabled_never_dumps():
+    fl = flight.FlightRecorder(recorder=_rec(), enabled=False)
+    assert fl.trigger("worker_failed") is None
+    assert fl.dumps == 0
+
+
+# ---------------------------------------------------------------------------
+# export / report
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_export_round_trips():
+    rec = _rec()
+    with rec.span("request", component="gw", attrs={"model": "m"}) as root:
+        rec.span("queue").end()
+        rec.event("plan.trace")
+    tuples = [s.as_tuple() for s in rec.spans()]
+    doc = export.to_chrome(tuples)
+    assert all(ev["ph"] in ("X", "i") for ev in doc["traceEvents"])
+    back = export.from_chrome(doc)
+    # identity, structure and timing are exact; attrs come back stringified
+    assert [(b[0], b[1], b[2], b[3], b[4], b[7]) for b in back] == [
+        (t[0], t[1], t[2], t[3], t[4], t[7]) for t in tuples
+    ]
+    for b, t in zip(back, tuples):
+        assert b[5] == pytest.approx(t[5], abs=0)
+        assert b[6] == pytest.approx(t[6], abs=0)
+    assert back[2][3] == "request"
+    assert back[2][8]["model"] == "m"
+    assert root.trace_id == back[0][0]
+
+
+def test_chrome_export_file_round_trip(tmp_path):
+    rec = _rec()
+    rec.span("a").end()
+    path = export.write_chrome_trace(str(tmp_path / "t.json"), rec.spans())
+    assert export.load_chrome_trace(path)[0][3] == "a"
+    text = report.render_file(path)
+    assert "a" in text
+
+
+def test_report_tree_indents_children():
+    rec = _rec()
+    with rec.span("request", component="gw"):
+        rec.span("queue").end()
+    text = report.format_trace_tree([s.as_tuple() for s in rec.spans()])
+    lines = text.splitlines()
+    assert lines[0].startswith("trace ")
+    req = next(line for line in lines if "request" in line)
+    q = next(line for line in lines if "queue" in line)
+    assert len(q) - len(q.lstrip()) > len(req) - len(req.lstrip())
+
+
+# ---------------------------------------------------------------------------
+# structured log
+# ---------------------------------------------------------------------------
+
+
+def test_log_level_floor_and_component_debug_flag(monkeypatch, capsys):
+    monkeypatch.delenv("REPRO_OBS_LOG", raising=False)
+    monkeypatch.delenv("REPRO_FT_DEBUG", raising=False)
+    assert not obs_log.enabled_for("debug", "ft")
+    assert obs_log.enabled_for("info", "ft")
+    monkeypatch.setenv("REPRO_FT_DEBUG", "1")
+    assert obs_log.enabled_for("debug", "ft")  # historical flag still works
+    assert not obs_log.enabled_for("debug", "gw")  # only the ft component
+    monkeypatch.setenv("REPRO_OBS_LOG", "error")
+    monkeypatch.setenv("REPRO_FT_DEBUG", "off")  # PR-7 truthiness: off = off
+    assert not obs_log.enabled_for("warn", "gw")
+    obs_log.warn("gw", "suppressed")
+    obs_log.error("gw", "shown", code=7)
+    err = capsys.readouterr().err
+    assert "suppressed" not in err
+    assert "ERROR gw: shown code=7" in err
+
+
+# ---------------------------------------------------------------------------
+# env knob registry: the static check
+# ---------------------------------------------------------------------------
+
+
+def _knob_refs_in_src():
+    refs = {}
+    for path in sorted((REPO / "src").rglob("*.py")):
+        text = path.read_text()
+        for m in re.finditer(r"REPRO_[A-Z0-9_]+", text):
+            if m.end() < len(text) and text[m.end()] == "*":
+                continue  # wildcard doc reference (REPRO_OBS_*)
+            refs.setdefault(m.group(0).rstrip("_"), set()).add(
+                str(path.relative_to(REPO))
+            )
+    return refs
+
+
+def test_every_src_knob_is_registered_and_documented():
+    refs = _knob_refs_in_src()
+    assert refs, "no REPRO_* references found under src/ — scanner broken?"
+    unregistered = {
+        k: sorted(v) for k, v in refs.items() if k not in envknobs.KNOBS
+    }
+    assert not unregistered, (
+        f"REPRO_* knobs referenced in src/ but not registered in "
+        f"repro.obs.envknobs: {unregistered}"
+    )
+    readme = (REPO / "README.md").read_text()
+    undocumented = sorted(k for k in refs if k not in readme)
+    assert not undocumented, (
+        f"knobs referenced in src/ but missing from README.md: {undocumented}"
+    )
+
+
+def test_every_registered_knob_is_documented_in_readme():
+    readme = (REPO / "README.md").read_text()
+    missing = sorted(k for k in envknobs.KNOBS if k not in readme)
+    assert not missing, f"registered knobs missing from README.md: {missing}"
+
+
+def test_env_parsers_truthiness_and_fallbacks(monkeypatch):
+    for falsy in ("0", "false", "No", " OFF ", ""):
+        monkeypatch.setenv("REPRO_X", falsy)
+        assert envknobs.env_flag("REPRO_X", True) is False
+        assert envknobs.env_tristate("REPRO_X") is False
+    monkeypatch.setenv("REPRO_X", "1")
+    assert envknobs.env_flag("REPRO_X", False) is True
+    monkeypatch.delenv("REPRO_X")
+    assert envknobs.env_flag("REPRO_X", True) is True
+    assert envknobs.env_tristate("REPRO_X") is None
+    monkeypatch.setenv("REPRO_Y", "not-a-number")
+    assert envknobs.env_float("REPRO_Y", 2.5) == 2.5
+    assert envknobs.env_int("REPRO_Y", 3) == 3
+    monkeypatch.setenv("REPRO_Y", "7")
+    assert envknobs.env_int("REPRO_Y", 3) == 7
+
+
+# ---------------------------------------------------------------------------
+# LatencySketch snapshot memoization (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_latency_sketch_snapshot_memoized_by_update_count():
+    from repro.serve.gateway.telemetry import LatencySketch
+
+    sk = LatencySketch()
+    for v in (0.001, 0.002, 0.003):
+        sk.record(v)
+    first = sk.snapshot_us()
+    assert sk.recomputes == 1
+    # nothing recorded since: cached, no recompute, equal content
+    again = sk.snapshot_us()
+    assert sk.recomputes == 1
+    assert again == first
+    # the cached snapshot is a COPY: caller mutation cannot poison the cache
+    again["count"] = 999
+    assert sk.snapshot_us()["count"] == 3
+    # different quantile tuple = different cache key
+    sk.snapshot_us(qs=(0.5,))
+    assert sk.recomputes == 2
+    sk.record(0.004)
+    fresh = sk.snapshot_us()
+    assert sk.recomputes == 3
+    assert fresh["count"] == 4
+
+
+# ---------------------------------------------------------------------------
+# obs.snapshot integration
+# ---------------------------------------------------------------------------
+
+
+def test_obs_snapshot_folds_sources_trace_flight_and_env(monkeypatch):
+    import repro.obs as obs
+
+    reg = metrics.MetricsRegistry()
+    rec = _rec()
+    monkeypatch.setattr(metrics, "_default", reg)
+    monkeypatch.setattr(obs_trace, "_default", rec)
+    reg.register_source("gateway", lambda: {"stats": {"completed": 5}})
+    rec.span("request").end()
+    monkeypatch.setenv("REPRO_OBS_SAMPLE", "0.25")
+    snap = obs.snapshot()
+    assert snap["sources"]["gateway"]["stats"]["completed"] == 5
+    assert snap["trace"]["recorded"] == 1
+    assert snap["trace"]["in_ring"] == 1
+    assert "dumps" in snap["flight"]
+    assert snap["env"]["REPRO_OBS_SAMPLE"] == "0.25"
+
+
+# ---------------------------------------------------------------------------
+# gateway trace integration (single process, real jax)
+# ---------------------------------------------------------------------------
+
+
+def test_gateway_request_emits_one_spanned_trace(monkeypatch):
+    from repro.serve import ServingGateway
+    import numpy as np
+
+    # real clock: the gateway stamps span times with its own perf_counter
+    rec = obs_trace.TraceRecorder(capacity=1024, enabled=True, sample=1.0)
+    monkeypatch.setattr(obs_trace, "_default", rec)
+
+    gw = ServingGateway(max_pending=32, max_wait_ms=1.0, workers=1,
+                        cost_model=False)
+    gw.register(
+        "double",
+        lambda b: {"y": np.asarray(b["x"]) * 2.0},
+        example={"x": np.float32(1.0)},
+        buckets=(1, 2),
+        max_batch=2,
+    )
+    gw.warmup()
+    out = gw.submit("double", {"x": np.float32(3.0)}, timeout=30.0)
+    assert float(np.asarray(out["y"])) == 6.0
+    gw.close()
+
+    roots = [s for s in rec.spans() if s.name == "request"]
+    assert roots, "no request root span recorded"
+    root = roots[-1]
+    tree = rec.trace(root.trace_id)
+    names = {s.name for s in tree}
+    assert {"request", "admission", "queue", "sched.form", "execute"} <= names
+    by_id = {s.span_id: s for s in tree}
+    for s in tree:
+        assert s.t_end >= s.t_start
+        if s.parent_id:
+            assert s.parent_id in by_id, f"{s.name} parent missing from trace"
+    # the root's duration covers the whole request
+    exe = next(s for s in tree if s.name == "execute")
+    assert root.t_start <= exe.t_start and exe.t_end <= root.t_end + 1e-6
+
+
+def test_gateway_shed_requests_end_their_root_span_with_error(monkeypatch):
+    import time
+
+    from repro.serve import QueueFullError, ServingGateway
+    import numpy as np
+
+    rec = obs_trace.TraceRecorder(capacity=1024, enabled=True, sample=1.0)
+    monkeypatch.setattr(obs_trace, "_default", rec)
+
+    def slow(batch):
+        time.sleep(0.1)
+        return {"y": np.asarray(batch["x"]) * 2.0}
+
+    gw = ServingGateway(max_pending=2, max_wait_ms=1.0, workers=1,
+                        cost_model=False)
+    gw.register("slow", slow, example={"x": np.float32(0.0)},
+                buckets=(1,), max_batch=1)
+    gw.warmup()
+    admitted, rejected = [], 0
+    for i in range(8):
+        try:
+            admitted.append(gw.submit_async("slow", {"x": np.float32(i)}))
+        except QueueFullError:
+            rejected += 1
+    assert rejected >= 1
+    for r in admitted:
+        r.event.wait(5)
+    gw.close()
+    errored = [
+        s for s in rec.spans()
+        if s.name == "request" and "QueueFullError" in s.attrs.get("error", "")
+    ]
+    assert len(errored) == rejected, (
+        "each door-shed request must end its root span with the error"
+    )
+
+
+# ---------------------------------------------------------------------------
+# distributed stitching + chaos flight (subprocess tiers)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.multihost
+@pytest.mark.subprocess
+def test_multihost_trace_stitches_one_tree_across_processes():
+    from multihost import launch
+
+    coord = launch("gateway_obs", 2, {"requests": 8}, devices_per_proc=1)[0]
+    assert coord["completed"] == 8
+    spans = coord["spans"]
+    assert spans, "coordinator ring is empty"
+    by_trace = {}
+    for s in spans:
+        by_trace.setdefault(s[0], []).append(s)
+    stitched = [
+        tid for tid, ss in by_trace.items()
+        if any(x[3] == "request" for x in ss) and any(x[7] != 0 for x in ss)
+    ]
+    assert stitched, "no request trace contains worker-process spans"
+    ss = by_trace[stitched[0]]
+    names = {x[3] for x in ss}
+    assert {"request", "execute", "mh.shard", "shard.execute"} <= names
+    ids = {x[1] for x in ss}
+    for x in ss:
+        assert x[6] - x[5] >= 0, f"negative duration after clock alignment: {x}"
+        if x[2]:
+            assert x[2] in ids, f"span {x[3]} parent missing from its trace"
+    # worker spans hang off coordinator mh.shard spans
+    shard_ids = {x[1] for x in ss if x[3] == "mh.shard"}
+    wspans = [x for x in ss if x[7] != 0]
+    assert wspans and any(x[2] in shard_ids for x in wspans)
+    # N=2 stitched trace survives the Chrome exporter round trip
+    back = export.from_chrome(export.to_chrome(ss))
+    assert {(b[0], b[1], b[2], b[3], b[7]) for b in back} == {
+        (s[0], s[1], s[2], s[3], s[7]) for s in ss
+    }
+
+
+@pytest.mark.chaos
+@pytest.mark.multihost
+@pytest.mark.subprocess
+def test_chaos_worker_kill_freezes_reshard_into_flight_dump():
+    from multihost import launch
+
+    payload = {
+        "seed": 11,
+        "requests": 40,
+        "buckets": (2, 4, 8),
+        "max_batch": 8,
+        "heartbeat_s": 0.5,
+        "cost_model": False,
+        "traffic": "stream",
+        "clients": 3,
+        "faults": [{"process": 1, "type": "kill", "after_batches": 4}],
+    }
+    coord = launch("gateway_chaos", 2, payload, devices_per_proc=1,
+                   expendable=[1])[0]
+    assert coord["completed"] == payload["requests"]
+    flights = coord["flights"]
+    assert flights, "worker kill produced no flight dumps"
+    reasons = {f["reason"] for f in flights}
+    assert "reshard" in reasons or "worker_failed" in reasons
+    reshard_dumps = [f for f in flights if f["reason"] == "reshard"]
+    assert reshard_dumps, f"no reshard flight dump (got {sorted(reasons)})"
+    assert any(
+        "mh.reshard" in f["span_names"] for f in reshard_dumps
+    ), "reshard flight dump does not contain the mh.reshard span"
