@@ -60,6 +60,54 @@ def _loud(name: str, fn, failures: list, **kwargs) -> None:
         failures.append(name)
 
 
+def _run_analyze(failures: list) -> None:
+    """``python -m repro.analyze --strict`` as a CI gate: the smoke run
+    fails loudly on any error-severity finding (plan skew, fusion
+    illegality, lock misuse, unregistered knob), and the finding counts are
+    recorded as the ``analyze_repo_clean`` row — wall time as us_per_call,
+    counts in ``derived`` — so the analyzer's own cost and the suppressed-
+    site inventory trend in BENCH_preprocessing.json alongside the perf
+    rows."""
+    import os
+    import subprocess
+    import tempfile
+
+    from . import common
+
+    root = pathlib.Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tf:
+        report_path = tf.name
+    try:
+        t0 = time.perf_counter()
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analyze", "--strict", "--json", report_path],
+            env=env, cwd=str(root), capture_output=True, text=True, timeout=600,
+        )
+        wall_us = (time.perf_counter() - t0) * 1e6
+        try:
+            rep = json.loads(pathlib.Path(report_path).read_text())
+        except (OSError, json.JSONDecodeError):
+            rep = {"errors": -1, "warnings": -1, "suppressed": -1}
+        common.emit(
+            "analyze_repo_clean",
+            wall_us,
+            f"errors={rep['errors']} warnings={rep['warnings']} "
+            f"suppressed={rep['suppressed']} exit={proc.returncode}",
+        )
+        if proc.returncode != 0:
+            print("\nBENCHMARK FAILED: analyze --strict found errors:", file=sys.stderr)
+            print(proc.stdout, file=sys.stderr)
+            print(proc.stderr, file=sys.stderr)
+            failures.append("analyze-strict")
+    finally:
+        try:
+            pathlib.Path(report_path).unlink()
+        except OSError:
+            pass
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument(
@@ -91,6 +139,9 @@ def main() -> None:
         from . import multihost
 
         _loud("multihost", multihost.run, failures, smoke=True)
+        # static analysis is part of the smoke gate: a skewed plan or a new
+        # lock misuse fails CI exactly like a perf regression
+        _run_analyze(failures)
         # the cost-aware and multi-host rows are the record of the
         # finish-time-feasibility and cross-process guarantees; a refactor
         # that silently stops emitting them must fail CI, mirroring the
@@ -105,6 +156,7 @@ def main() -> None:
             "stream_mh_",
             "serve_mh_",
             "serve_ft_",
+            "analyze_repo_clean",
         ):
             if not any(n.startswith(prefix) for n in names):
                 print(f"\nBENCHMARK FAILED: no {prefix}* row emitted", file=sys.stderr)

@@ -1,0 +1,64 @@
+"""Static analysis over the preprocessing stack.
+
+Two passes plus the env-knob rule, one findings pipeline:
+
+* :mod:`repro.analyze.plan_check` — abstract interpretation over
+  :class:`~repro.core.plan.TransformPlan` schedules and the fusion IR:
+  dtype/shape inference per column without executing a row, fusion
+  legality, schema skew, dead columns, use-after-free of liveness-freed
+  buffers.  Also the cheap structural gate inside export bundle
+  save/load and ``registry.register``.
+* :mod:`repro.analyze.lockcheck` — AST lock-discipline lint for the
+  threaded tiers: lock-order inversions, blocking calls under a lock,
+  unguarded mutation of elsewhere-guarded fields.
+* :mod:`repro.analyze.knobcheck` — every ``REPRO_*`` env knob referenced
+  in ``src/`` must be registered and README-documented.
+
+Run all of it with ``python -m repro.analyze [--strict] [--json out]``.
+"""
+from .findings import (  # noqa: F401
+    BAD_SUPPRESSION,
+    Finding,
+    PlanSchemaError,
+    Report,
+    parse_suppressions,
+)
+from .plan_check import (  # noqa: F401
+    DEAD_COLUMN,
+    EVAL_ERROR,
+    FUSION_LEGALITY,
+    MISSING_INPUT,
+    MISSING_OUTPUT,
+    SCHEMA_SKEW,
+    USE_AFTER_FREE,
+    VERSION_SKEW,
+    check_schema,
+    gate_enabled,
+    plan_required_inputs,
+    schema_of_batch,
+    verify_plan,
+    verify_schedule_structure,
+)
+from .lockcheck import (  # noqa: F401
+    BLOCKING_CALL,
+    ORDER_INVERSION,
+    UNGUARDED_MUTATION,
+)
+from .knobcheck import KNOB_UNDOCUMENTED, KNOB_UNREGISTERED  # noqa: F401
+from . import knobcheck, lockcheck, plan_check  # noqa: F401
+
+__all__ = [
+    "Finding",
+    "Report",
+    "PlanSchemaError",
+    "parse_suppressions",
+    "verify_plan",
+    "verify_schedule_structure",
+    "check_schema",
+    "schema_of_batch",
+    "plan_required_inputs",
+    "gate_enabled",
+    "plan_check",
+    "lockcheck",
+    "knobcheck",
+]

@@ -1,0 +1,148 @@
+"""``python -m repro.analyze`` — run every analyzer pass over this repo.
+
+Passes, in order:
+
+1. Concurrency lint over the threaded tiers (``serve/gateway``, ``ft``,
+   ``obs``).
+2. Env-knob registration/documentation check over all of ``src/``.
+3. Plan verification: fit the quickstart and LTR pipelines on synthetic
+   data, verify the staged and fused plans by abstract interpretation
+   (fusion legality included), and round-trip an export bundle through
+   the structural gate.  Skip with ``--skip-plans`` for a fast lint-only
+   run.
+
+Exit code is 1 when ``--strict`` and any active error-severity finding
+remains, else 0.  ``--json PATH`` additionally writes the machine-
+readable report.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from .findings import PlanSchemaError, Report
+from . import knobcheck, lockcheck, plan_check
+
+
+def _repo_root() -> pathlib.Path:
+    # src/repro/analyze/__main__.py -> repo root is three levels up from src/
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+def _quickstart_pipeline():
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core import (
+        HashIndexTransformer,
+        KamaeSparkPipeline,
+        LogTransformer,
+        StringIndexEstimator,
+        StringToStringListTransformer,
+    )
+    from repro.core import types as T
+
+    rng = np.random.default_rng(1)
+    n = 64
+    batch = {
+        "UserID": jnp.asarray(rng.integers(1, 5000, n), jnp.int32),
+        "Genres": jnp.asarray(
+            T.encode_strings(rng.choice(["Action|Comedy", "Drama"], n), 32)
+        ),
+        "Price": jnp.asarray(rng.lognormal(3, 2, n), jnp.float32),
+    }
+    pipe = KamaeSparkPipeline(
+        stages=[
+            HashIndexTransformer(
+                inputCol="UserID", outputCol="UserID_indexed",
+                inputDtype="string", numBins=10000,
+            ),
+            StringToStringListTransformer(
+                inputCol="Genres", outputCol="Genres_split", separator="|",
+                listLength=4, defaultValue="PADDED",
+            ),
+            StringIndexEstimator(
+                inputCol="Genres_split", outputCol="Genres_indexed",
+                numOOVIndices=1, maskToken="PADDED",
+            ),
+            LogTransformer(inputCol="Price", outputCol="Price_log", alpha=1.0),
+        ]
+    )
+    return pipe.fit(batch), batch, None
+
+
+def _ltr_pipeline():
+    from repro.apps.ltr_pipeline import build_ltr_pipeline
+    from repro.data import ltr_rows
+
+    train = ltr_rows(96, seed=0)
+    fitted, cols = build_ltr_pipeline(train)
+    batch = {k: v[:48] for k, v in ltr_rows(48, seed=5).items()}
+    return fitted, batch, cols
+
+
+def check_plans(report: Report) -> None:
+    """Verify the repo's own shipped pipelines: staged + fused plans via
+    abstract interpretation, plus an export-bundle structural round-trip."""
+    from repro.core.export import PreprocessModel
+    from repro.core.plan import TransformPlan
+
+    for name, build in (("quickstart", _quickstart_pipeline), ("ltr", _ltr_pipeline)):
+        fitted, batch, cols = build()
+        for fuse in (False, True):
+            plan = TransformPlan(fitted.stages, outputs=cols, fuse=fuse)
+            mode = "fused" if fuse else "staged"
+            # feed only the columns the pruned plan reads — extra provided
+            # columns are a (correct) skew warning, not a repo defect
+            req = set(plan_check.plan_required_inputs(plan))
+            ex = {k: v for k, v in batch.items() if k in req}
+            report.extend(
+                plan_check.verify_plan(plan, example=ex, where=f"{name}/{mode}")
+            )
+        # export round-trip through the structural gate
+        model = PreprocessModel.from_fitted(fitted, outputs=cols)
+        try:
+            PreprocessModel.load_bytes(model.save_bytes())
+        except PlanSchemaError as e:
+            report.extend(Report(e.findings))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analyze", description=__doc__
+    )
+    ap.add_argument(
+        "--strict", action="store_true",
+        help="exit 1 on any active error-severity finding",
+    )
+    ap.add_argument("--json", metavar="PATH", help="write JSON report here")
+    ap.add_argument(
+        "--skip-plans", action="store_true",
+        help="lint only: skip fitting/verifying the repo pipelines",
+    )
+    ap.add_argument(
+        "--root", metavar="DIR", default=None,
+        help="repo root (default: inferred from this file's location)",
+    )
+    args = ap.parse_args(argv)
+
+    root = pathlib.Path(args.root) if args.root else _repo_root()
+    src = root / "src"
+    report = Report()
+
+    report.extend(lockcheck.check(lockcheck.default_paths(src)))
+    report.extend(knobcheck.check(src, root / "README.md"))
+    if not args.skip_plans:
+        check_plans(report)
+
+    print(report.format_text())
+    if args.json:
+        report.dump_json(args.json)
+    if args.strict and report.errors():
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,192 @@
+"""Findings pipeline shared by every analyzer pass.
+
+One :class:`Finding` per detected problem, one :class:`Report` per run —
+the plan verifier, the concurrency lint and the env-knob check all emit
+into the same structures, so the CLI, the export/registry gates and the
+tests consume a single format (``file:line severity rule: message`` text
+or machine-readable JSON).
+
+Inline suppressions: a source line (or the ``def`` line of the enclosing
+function, for function-scoped rules) may carry
+
+    # analyze: allow(<rule>[,<rule>...]) <reason>
+
+A suppression REQUIRES a reason; an allow without one does not suppress
+and instead raises an ``analyze-bad-suppression`` finding — silent
+waivers are exactly the bug class this subsystem exists to kill.
+Suppressed findings stay in the report (marked, with the reason) so the
+JSON record shows every waived site.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional
+
+#: severity levels, in gate order: --strict fails on any active "error".
+SEVERITIES = ("error", "warning")
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*analyze:\s*allow\(([a-zA-Z0-9_,\s-]+)\)\s*(.*?)\s*$"
+)
+
+BAD_SUPPRESSION = "analyze-bad-suppression"
+
+
+class PlanSchemaError(ValueError):
+    """A fitted artifact failed the static plan/schema verifier gate —
+    raised by export-bundle save/load and ``registry.register`` instead of
+    accepting a schema-mismatched artifact that would only fail (or worse,
+    silently corrupt) at first execute.  Carries the findings that tripped
+    the gate."""
+
+    def __init__(self, message: str, findings: Optional[List["Finding"]] = None):
+        super().__init__(message)
+        self.findings = list(findings or [])
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    severity: str  # "error" | "warning"
+    message: str
+    file: Optional[str] = None
+    line: Optional[int] = None
+    suppressed: bool = False
+    suppress_reason: Optional[str] = None
+
+    def format(self) -> str:
+        loc = f"{self.file}:{self.line}: " if self.file else ""
+        tail = (
+            f"  [suppressed: {self.suppress_reason}]" if self.suppressed else ""
+        )
+        return f"{loc}{self.severity} {self.rule}: {self.message}{tail}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def parse_suppressions(text: str):
+    """``{line -> {rule -> reason}}`` for every valid allow comment, plus a
+    list of (line, raw rules) for allows missing their reason."""
+    allowed: Dict[int, Dict[str, str]] = {}
+    bad: List[tuple] = []
+    for i, line in enumerate(text.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(line)
+        if m is None:
+            continue
+        rules = [r.strip() for r in m.group(1).split(",") if r.strip()]
+        reason = m.group(2).strip()
+        if not reason:
+            bad.append((i, rules))
+            continue
+        allowed.setdefault(i, {}).update({r: reason for r in rules})
+    return allowed, bad
+
+
+class Report:
+    """An ordered collection of findings with the gate/format helpers."""
+
+    def __init__(self, findings: Optional[List[Finding]] = None):
+        self.findings: List[Finding] = list(findings or [])
+
+    def add(
+        self,
+        rule: str,
+        severity: str,
+        message: str,
+        file: Optional[str] = None,
+        line: Optional[int] = None,
+    ) -> Finding:
+        f = Finding(rule, severity, message, file, line)
+        self.findings.append(f)
+        return f
+
+    def extend(self, other: "Report") -> "Report":
+        self.findings.extend(other.findings)
+        return self
+
+    # -- suppression ----------------------------------------------------
+    def apply_suppressions(self, path: str, text: str, def_lines=None) -> None:
+        """Mark findings in ``path`` suppressed when an allow comment for
+        their rule sits on the finding line or on the enclosing ``def``
+        line (``def_lines`` maps finding line -> def line).  Allows with a
+        missing reason become findings themselves."""
+        allowed, bad = parse_suppressions(text)
+        for line, rules in bad:
+            self.add(
+                BAD_SUPPRESSION,
+                "error",
+                f"allow({','.join(rules)}) without a reason — suppressions "
+                f"must justify themselves",
+                file=path,
+                line=line,
+            )
+        def_lines = def_lines or {}
+        for f in self.findings:
+            if f.file != path or f.line is None or f.suppressed:
+                continue
+            for at in (f.line, def_lines.get(f.line)):
+                reason = allowed.get(at, {}).get(f.rule) if at else None
+                if reason is not None:
+                    f.suppressed = True
+                    f.suppress_reason = reason
+                    break
+
+    # -- views ----------------------------------------------------------
+    @property
+    def active(self) -> List[Finding]:
+        return [f for f in self.findings if not f.suppressed]
+
+    def errors(self) -> List[Finding]:
+        return [f for f in self.active if f.severity == "error"]
+
+    def warnings(self) -> List[Finding]:
+        return [f for f in self.active if f.severity == "warning"]
+
+    def by_rule(self, rule: str) -> List[Finding]:
+        return [f for f in self.findings if f.rule == rule]
+
+    def ok(self) -> bool:
+        return not self.errors()
+
+    # -- output ---------------------------------------------------------
+    def format_text(self) -> str:
+        lines = [f.format() for f in self.findings]
+        lines.append(
+            f"{len(self.errors())} error(s), {len(self.warnings())} "
+            f"warning(s), {len(self.findings) - len(self.active)} suppressed"
+        )
+        return "\n".join(lines)
+
+    def to_json(self) -> dict:
+        return {
+            "findings": [f.to_json() for f in self.findings],
+            "errors": len(self.errors()),
+            "warnings": len(self.warnings()),
+            "suppressed": len(self.findings) - len(self.active),
+        }
+
+    def dump_json(self, path: str) -> None:
+        with open(path, "w") as fh:
+            json.dump(self.to_json(), fh, indent=2)
+            fh.write("\n")
+
+    def raise_if_errors(self, where: str) -> None:
+        """The export/registry gate: typed error instead of silent accept."""
+        errs = self.errors()
+        if errs:
+            detail = "; ".join(f.format() for f in errs[:8])
+            raise PlanSchemaError(
+                f"{where}: {len(errs)} schema/plan error(s): {detail}", errs
+            )
+
+    def __len__(self) -> int:
+        return len(self.findings)
+
+    def __repr__(self) -> str:
+        return (
+            f"Report(errors={len(self.errors())}, "
+            f"warnings={len(self.warnings())}, total={len(self.findings)})"
+        )

@@ -1,0 +1,88 @@
+"""Env-knob rule: every ``REPRO_*`` variable referenced under ``src/``
+must be registered in :mod:`repro.obs.envknobs` and documented in the
+README.
+
+This is the former ``tests/test_obs.py`` static scan promoted to an
+analyzer rule so there is exactly one implementation and one findings
+pipeline; the test now asserts through this API.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+from typing import Dict, List, Optional, Tuple
+
+from .findings import Report
+
+KNOB_UNREGISTERED = "env-knob-unregistered"
+KNOB_UNDOCUMENTED = "env-knob-undocumented"
+
+_KNOB_RE = re.compile(r"REPRO_[A-Z0-9_]+")
+
+
+def knob_refs(src_root) -> Dict[str, List[Tuple[str, int]]]:
+    """Every ``REPRO_*`` name referenced under ``src_root`` mapped to its
+    reference sites (file, line).  A reference immediately followed by
+    ``*`` is a wildcard doc mention (``REPRO_OBS_*``), not a knob."""
+    refs: Dict[str, List[Tuple[str, int]]] = {}
+    for path in sorted(pathlib.Path(src_root).rglob("*.py")):
+        for lineno, line in enumerate(path.read_text().splitlines(), start=1):
+            for m in _KNOB_RE.finditer(line):
+                if m.end() < len(line) and line[m.end()] == "*":
+                    continue
+                refs.setdefault(m.group(0).rstrip("_"), []).append(
+                    (str(path), lineno)
+                )
+    return refs
+
+
+def check(src_root, readme_path, knobs: Optional[dict] = None) -> Report:
+    """Report unregistered/undocumented knobs.  ``knobs`` defaults to the
+    live :data:`repro.obs.envknobs.KNOBS` registry."""
+    if knobs is None:
+        from repro.obs import envknobs
+
+        knobs = envknobs.KNOBS
+    rep = Report()
+    refs = knob_refs(src_root)
+    try:
+        readme = pathlib.Path(readme_path).read_text()
+    except OSError:
+        readme = ""
+        rep.add(
+            KNOB_UNDOCUMENTED,
+            "error",
+            f"README not found at {readme_path}",
+            str(readme_path),
+        )
+    for name in sorted(refs):
+        file, line = refs[name][0]
+        if name not in knobs:
+            rep.add(
+                KNOB_UNREGISTERED,
+                "error",
+                f"{name} is read from the environment but never registered "
+                f"in repro.obs.envknobs — undiscoverable, undocumented "
+                f"default",
+                file,
+                line,
+            )
+        if readme and name not in readme:
+            rep.add(
+                KNOB_UNDOCUMENTED,
+                "error",
+                f"{name} is referenced in src/ but not documented in "
+                f"README.md",
+                file,
+                line,
+            )
+    # registered but silently absent from the README (registry drift)
+    for name in sorted(knobs):
+        if readme and name not in readme:
+            rep.add(
+                KNOB_UNDOCUMENTED,
+                "error",
+                f"{name} is registered in envknobs but missing from "
+                f"README.md",
+            )
+    return rep

@@ -1,0 +1,392 @@
+"""Concurrency lint: AST lock-discipline analysis over the threaded tiers.
+
+Scans Python sources (by default ``serve/gateway/``, ``ft/`` and ``obs/``
+— the threaded tiers of the serving stack) and builds, per file, the set
+of known lock objects (any ``threading.Lock/RLock/Condition/Semaphore``
+assignment discovers the attribute or variable name) plus a linear
+intra-procedural model of which locks are held at every statement.  Three
+rules:
+
+* ``lock-order-inversion`` (error) — the global acquisition graph (lock A
+  held while acquiring lock B) contains a cycle: two call paths take the
+  same pair of locks in opposite orders, the classic ABBA deadlock.
+* ``lock-blocking-call`` (error) — a blocking call executed while holding
+  a lock: ``time.sleep``, ``Connection.recv/send``, unbounded or >100ms
+  ``poll``, socket ``accept/connect``, ``select.select``, ``Thread.join``,
+  ``Event.wait`` (waiting on the HELD condition itself is exempt — that
+  atomically releases it), and ``close()`` of connection-like objects.
+  Every request queued behind that lock stalls for the call's duration —
+  the liveness-sweeper-vs-dispatch bug class.
+* ``lock-unguarded-mutation`` (warning) — a field mutated under a lock
+  somewhere in the file is also mutated with no lock held (constructors
+  exempt): either the lock is unnecessary or the unguarded site is a race.
+
+The model is deliberately intra-procedural and name-granular (locks are
+identified by attribute/variable name): simple enough to stay exact about
+what it claims, with ``# analyze: allow(<rule>) <reason>`` suppressions —
+on the finding line or the enclosing ``def`` line — for the sites where
+blocking under a lock IS the design (e.g. a per-connection lock that
+exists to serialize a request/reply socket protocol)."""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .findings import Report
+
+ORDER_INVERSION = "lock-order-inversion"
+BLOCKING_CALL = "lock-blocking-call"
+UNGUARDED_MUTATION = "lock-unguarded-mutation"
+
+#: default scan roots, relative to the package source root
+DEFAULT_SUBDIRS = ("serve/gateway", "ft", "obs")
+
+_LOCK_CTORS = {"Lock", "RLock", "Condition", "Semaphore", "BoundedSemaphore"}
+
+#: attribute calls that block the calling thread
+_BLOCKING_ATTRS = {
+    "recv": "Connection.recv blocks until a frame arrives",
+    "recv_bytes": "Connection.recv_bytes blocks until a frame arrives",
+    "send": "Connection.send blocks on a full socket buffer",
+    "send_bytes": "Connection.send_bytes blocks on a full socket buffer",
+    "accept": "accept blocks until a client dials in",
+    "connect": "connect blocks for the TCP handshake",
+    "sleep": "sleep stalls every thread queued on the held lock",
+    "select": "select blocks up to its timeout",
+    "join": "join blocks until the thread exits",
+    "wait": "wait blocks until notified",
+}
+_MUTATORS = {
+    "append", "appendleft", "extend", "insert", "pop", "popleft", "clear",
+    "add", "discard", "remove", "update", "setdefault",
+}
+_CONN_HINTS = ("conn", "sock", "listener", "client")
+_POLL_BOUND = 0.1  # poll(<=100ms) is a bounded micro-poll, not a block
+
+
+def _base_name(expr) -> Optional[str]:
+    """The identifying name of a lock-ish expression: ``w.lock`` -> "lock",
+    ``self._mlock`` -> "_mlock", bare ``lk`` -> "lk"."""
+    if isinstance(expr, ast.Attribute):
+        return expr.attr
+    if isinstance(expr, ast.Name):
+        return expr.id
+    return None
+
+
+def _expr_text(expr) -> str:
+    try:
+        return ast.unparse(expr)
+    except Exception:  # pragma: no cover
+        return "<expr>"
+
+
+def _is_lock_ctor(call) -> bool:
+    if not isinstance(call, ast.Call):
+        return False
+    fn = call.func
+    name = fn.attr if isinstance(fn, ast.Attribute) else getattr(fn, "id", None)
+    return name in _LOCK_CTORS
+
+
+def discover_lock_names(trees: Sequence[ast.AST]) -> Set[str]:
+    """Every attribute/variable name ever assigned a threading primitive,
+    across all scanned files (locks cross module boundaries: the executor
+    holds a ``_Worker.lock`` defined elsewhere)."""
+    names: Set[str] = set()
+    for tree in trees:
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                value = node.value
+                if value is None or not _is_lock_ctor(value):
+                    continue
+                targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+                for t in targets:
+                    n = _base_name(t)
+                    if n:
+                        names.add(n)
+    return names
+
+
+class _Mutation:
+    __slots__ = ("attr", "locked", "file", "line", "func", "def_line", "is_init")
+
+    def __init__(self, attr, locked, file, line, func, def_line, is_init):
+        self.attr = attr
+        self.locked = locked
+        self.file = file
+        self.line = line
+        self.func = func
+        self.def_line = def_line
+        self.is_init = is_init
+
+
+class _FileScan:
+    """One file's linear lock-state walk."""
+
+    def __init__(self, path: str, tree: ast.AST, lock_names: Set[str]):
+        self.path = path
+        self.lock_names = lock_names
+        self.held: Dict[str, int] = {}  # lock name -> hold count
+        self.hold_order: List[str] = []
+        self.edges: List[Tuple[str, str, str, int, Optional[int]]] = []
+        self.blocking: List[Tuple[str, int, str, Optional[int]]] = []
+        self.mutations: List[_Mutation] = []
+        self.def_lines: Dict[int, int] = {}  # finding line -> enclosing def line
+        self._func: Optional[str] = None
+        self._def_line: Optional[int] = None
+        for node in tree.body if isinstance(tree, ast.Module) else []:
+            self._stmt(node)
+
+    # -- lock state -----------------------------------------------------
+    def _acquire(self, name: str, line: int) -> None:
+        for h in self.hold_order:
+            if h != name and self.held.get(h, 0) > 0:
+                self.edges.append((h, name, self.path, line, self._def_line))
+        self.held[name] = self.held.get(name, 0) + 1
+        if name not in self.hold_order:
+            self.hold_order.append(name)
+
+    def _release(self, name: str) -> None:
+        if self.held.get(name, 0) > 0:
+            self.held[name] -= 1
+
+    def _any_held(self) -> List[str]:
+        return [h for h in self.hold_order if self.held.get(h, 0) > 0]
+
+    # -- statements -----------------------------------------------------
+    def _stmt(self, st) -> None:
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            outer = (self._func, self._def_line, self.held, self.hold_order)
+            self._func, self._def_line = st.name, st.lineno
+            self.held, self.hold_order = {}, []  # a new frame runs later
+            for sub in st.body:
+                self._stmt(sub)
+            self._func, self._def_line, self.held, self.hold_order = outer
+        elif isinstance(st, ast.ClassDef):
+            for sub in st.body:
+                self._stmt(sub)
+        elif isinstance(st, (ast.With, ast.AsyncWith)):
+            acquired = []
+            for item in st.items:
+                self._expr(item.context_expr)
+                name = _base_name(item.context_expr)
+                if name in self.lock_names:
+                    self._acquire(name, st.lineno)
+                    acquired.append(name)
+            for sub in st.body:
+                self._stmt(sub)
+            for name in reversed(acquired):
+                self._release(name)
+        elif isinstance(st, ast.If):
+            self._expr(st.test)
+            for sub in st.body:
+                self._stmt(sub)
+            for sub in st.orelse:
+                self._stmt(sub)
+        elif isinstance(st, (ast.For, ast.AsyncFor)):
+            self._expr(st.iter)
+            for sub in st.body + st.orelse:
+                self._stmt(sub)
+        elif isinstance(st, ast.While):
+            self._expr(st.test)
+            for sub in st.body + st.orelse:
+                self._stmt(sub)
+        elif isinstance(st, ast.Try):
+            for sub in st.body:
+                self._stmt(sub)
+            for h in st.handlers:
+                for sub in h.body:
+                    self._stmt(sub)
+            for sub in st.orelse + st.finalbody:
+                self._stmt(sub)
+        else:
+            if isinstance(st, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = (
+                    st.targets if isinstance(st, ast.Assign) else [st.target]
+                )
+                for t in targets:
+                    self._mutation_target(t)
+            for child in ast.iter_child_nodes(st):
+                if isinstance(child, ast.expr):
+                    self._expr(child)
+
+    def _mutation_target(self, t) -> None:
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for el in t.elts:
+                self._mutation_target(el)
+            return
+        if isinstance(t, ast.Subscript):
+            t = t.value
+        if isinstance(t, ast.Attribute):
+            self._record_mutation(t.attr, t.lineno)
+
+    def _record_mutation(self, attr: str, line: int) -> None:
+        self.mutations.append(
+            _Mutation(
+                attr,
+                bool(self._any_held()),
+                self.path,
+                line,
+                self._func,
+                self._def_line,
+                self._func in (None, "__init__", "__new__", "__post_init__"),
+            )
+        )
+
+    # -- expressions ----------------------------------------------------
+    def _expr(self, e) -> None:
+        for node in ast.walk(e):
+            if isinstance(node, ast.Call):
+                self._call(node)
+
+    def _call(self, call: ast.Call) -> None:
+        fn = call.func
+        if not isinstance(fn, ast.Attribute):
+            return
+        attr = fn.attr
+        recv_name = _base_name(fn.value)
+        if attr == "acquire" and recv_name in self.lock_names:
+            self._acquire(recv_name, call.lineno)
+            return
+        if attr == "release" and recv_name in self.lock_names:
+            self._release(recv_name)
+            return
+        if attr in _MUTATORS and isinstance(fn.value, ast.Attribute):
+            self._record_mutation(fn.value.attr, call.lineno)
+        held = self._any_held()
+        if not held:
+            return
+        if attr in _BLOCKING_ATTRS:
+            if isinstance(fn.value, (ast.Constant, ast.JoinedStr)):
+                return  # "sep".join(...) and friends
+            if attr == "wait" and recv_name in held:
+                return  # Condition.wait on the held condition releases it
+            self._blocking(call, attr, _BLOCKING_ATTRS[attr], held)
+        elif attr == "poll" and self._poll_blocks(call):
+            self._blocking(
+                call, "poll", "unbounded or >100ms poll stalls the lock", held
+            )
+        elif attr == "close" and recv_name and any(
+            h in recv_name.lower() for h in _CONN_HINTS
+        ):
+            self._blocking(
+                call, "close", "socket close can block on linger/flush", held
+            )
+
+    @staticmethod
+    def _poll_blocks(call: ast.Call) -> bool:
+        args = list(call.args) + [
+            kw.value for kw in call.keywords if kw.arg == "timeout"
+        ]
+        if not args:
+            return True  # poll() blocks until data arrives
+        a = args[0]
+        if isinstance(a, ast.Constant) and isinstance(a.value, (int, float)):
+            return a.value > _POLL_BOUND
+        return True  # a computed timeout cannot be proven small
+
+    def _blocking(self, call, what, why, held) -> None:
+        self.blocking.append(
+            (
+                f"{_expr_text(call.func)}() [{what}] while holding "
+                f"{'+'.join(held)}: {why}",
+                call.lineno,
+                what,
+                self._def_line,
+            )
+        )
+
+
+def check(
+    paths: Sequence[str],
+) -> Report:
+    """Run the three lock rules over ``paths`` (files or directories) and
+    return the report with inline suppressions already applied."""
+    files: List[pathlib.Path] = []
+    for p in paths:
+        p = pathlib.Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    sources: Dict[str, str] = {}
+    trees: Dict[str, ast.AST] = {}
+    rep = Report()
+    for f in files:
+        text = f.read_text()
+        try:
+            trees[str(f)] = ast.parse(text)
+        except SyntaxError as e:  # pragma: no cover - scanned code is valid
+            rep.add(
+                BLOCKING_CALL, "error", f"cannot parse: {e}", str(f), e.lineno
+            )
+            continue
+        sources[str(f)] = text
+
+    lock_names = discover_lock_names(list(trees.values()))
+    scans = [_FileScan(path, tree, lock_names) for path, tree in trees.items()]
+
+    def_lines: Dict[str, Dict[int, int]] = {}
+
+    def note_def(path, line, dline):
+        if dline is not None:
+            def_lines.setdefault(path, {})[line] = dline
+
+    # blocking calls
+    for s in scans:
+        for msg, line, _what, dline in s.blocking:
+            rep.add(BLOCKING_CALL, "error", msg, s.path, line)
+            note_def(s.path, line, dline)
+
+    # lock-order inversions: cycle = both directions of a pair observed
+    edges: Dict[Tuple[str, str], Tuple[str, int, Optional[int]]] = {}
+    for s in scans:
+        for a, b, path, line, dline in s.edges:
+            edges.setdefault((a, b), (path, line, dline))
+    for (a, b), (path, line, dline) in sorted(edges.items()):
+        if a < b and (b, a) in edges:
+            rpath, rline, _ = edges[(b, a)]
+            rep.add(
+                ORDER_INVERSION,
+                "error",
+                f"lock {b!r} is acquired while holding {a!r} here, but "
+                f"{rpath}:{rline} acquires them in the opposite order — "
+                f"ABBA deadlock",
+                path,
+                line,
+            )
+            note_def(path, line, dline)
+
+    # unguarded mutations of elsewhere-guarded fields (per file)
+    for s in scans:
+        guarded = {
+            m.attr for m in s.mutations if m.locked and not m.is_init
+        }
+        seen: Set[Tuple[str, int]] = set()
+        for m in s.mutations:
+            if m.locked or m.is_init or m.attr not in guarded:
+                continue
+            if (m.attr, m.line) in seen:
+                continue
+            seen.add((m.attr, m.line))
+            rep.add(
+                UNGUARDED_MUTATION,
+                "warning",
+                f"field {m.attr!r} is mutated here with no lock held but is "
+                f"lock-guarded elsewhere in this file"
+                + (f" (in {m.func})" if m.func else ""),
+                m.file,
+                m.line,
+            )
+            note_def(m.file, m.line, m.def_line)
+
+    for path, text in sources.items():
+        rep.apply_suppressions(path, text, def_lines.get(path))
+    return rep
+
+
+def default_paths(src_root) -> List[str]:
+    root = pathlib.Path(src_root)
+    return [str(root / "repro" / sub) for sub in DEFAULT_SUBDIRS]

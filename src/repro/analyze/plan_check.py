@@ -1,0 +1,567 @@
+"""Static plan verifier: abstract interpretation over TransformPlan schedules.
+
+The verifier replays a plan's scheduled nodes over an ABSTRACT environment
+of ``jax.ShapeDtypeStruct`` columns — ``jax.eval_shape`` traces each
+stage's ``coerce -> apply -> coerce_out`` exactly as ``TransformPlan.
+_execute`` would, but nothing executes and no buffer is allocated — and
+checks, per node:
+
+* ``plan-missing-input``    a column read that no prior node produced and
+                            the input schema does not provide (skew: the
+                            artifact will KeyError, or worse, silently bind
+                            a wrong same-named column at first execute);
+* ``plan-use-after-free``   a column read after an earlier node's
+                            ``dead_after`` dropped it from the environment —
+                            the liveness analogue of referencing a donated
+                            buffer after donation;
+* ``plan-version-skew``     an ``in_spec`` whose recorded column version
+                            disagrees with the abstract write counter (a
+                            mutated / re-ordered / truncated schedule: the
+                            plan's CSE keys would silently alias stale
+                            values);
+* ``plan-fusion-legality``  a ``_FusedNode`` whose lowered ChainProgram is
+                            not dtype/shape-equivalent to replaying its
+                            staged member stages (a ``ChainFallback`` trace
+                            is legal — the runtime falls back to the staged
+                            members, bit-identity preserved);
+* ``plan-eval-error``       a stage whose abstract replay raises — the plan
+                            cannot execute on inputs of this schema;
+* ``plan-missing-output``   a requested output absent from the final
+                            environment;
+* ``plan-dead-column``      (warning) a produced column that nothing reads,
+                            that is not an output and that liveness never
+                            frees — the planner missed a dead column and
+                            every batch pays its memory;
+* ``plan-schema-skew``      declared/provided schema disagreement: missing
+                            or dtype-kind-mismatched columns are errors
+                            (string-vs-numeric skew silently corrupts),
+                            extra provided columns and width-only dtype
+                            differences are warnings.
+
+A structural subset of these checks (no jax, no tracing) runs as the cheap
+gate inside export-bundle save/load and ``registry.register`` — see
+:func:`verify_schedule_structure` and :func:`check_schema`.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .findings import Report
+
+# rule ids (importable so tests/gates never typo a string)
+MISSING_INPUT = "plan-missing-input"
+USE_AFTER_FREE = "plan-use-after-free"
+VERSION_SKEW = "plan-version-skew"
+FUSION_LEGALITY = "plan-fusion-legality"
+EVAL_ERROR = "plan-eval-error"
+MISSING_OUTPUT = "plan-missing-output"
+DEAD_COLUMN = "plan-dead-column"
+SCHEMA_SKEW = "plan-schema-skew"
+
+
+# ---------------------------------------------------------------------------
+# schemas: {col: {"dtype": str, "shape": [trailing dims...]}}
+# ---------------------------------------------------------------------------
+
+
+def schema_of_batch(batch) -> Dict[str, dict]:
+    """Column schema of a concrete batch; shape excludes the leading batch
+    axis so the schema is batch-size-agnostic."""
+    out = {}
+    for k, v in batch.items():
+        a = np.asarray(v)
+        out[k] = {"dtype": str(a.dtype), "shape": [int(d) for d in a.shape[1:]]}
+    return out
+
+
+def _structs_from_schema(schema: Dict[str, dict], batch: int = 2):
+    import jax
+
+    return {
+        c: jax.ShapeDtypeStruct((batch, *s["shape"]), np.dtype(s["dtype"]))
+        for c, s in schema.items()
+    }
+
+
+def _structs_from_batch(batch):
+    import jax
+
+    return {
+        c: jax.ShapeDtypeStruct(np.asarray(v).shape, np.asarray(v).dtype)
+        for c, v in batch.items()
+    }
+
+
+def _dtype_kind(dtype: str) -> str:
+    """Coarse dtype class for skew severity: uint8 is the string-bytes
+    marker (see ``repro.core.types.is_string_col``), so string-vs-numeric
+    is a kind mismatch while float32-vs-float64 is only a width note."""
+    d = np.dtype(dtype)
+    if d == np.uint8:
+        return "string"
+    if d.kind in ("i", "u", "b"):
+        return "int"
+    if d.kind == "f":
+        return "float"
+    return d.kind
+
+
+def check_schema(
+    required: Dict[str, Optional[dict]],
+    provided: Dict[str, dict],
+    where: str = "schema",
+    allow_extra: bool = True,
+) -> Report:
+    """Skew between a plan's required inputs and a provided schema (an
+    export bundle's recorded fit schema, or a registry example row).
+
+    ``required`` maps column -> schema dict or None (name known, dtype
+    unknown).  Missing columns and dtype-KIND mismatches (string vs
+    numeric, float vs int) are errors; width-only differences and trailing
+    shape differences are warnings; extra provided columns are warnings
+    unless ``allow_extra``."""
+    rep = Report()
+    for col, spec in sorted(required.items()):
+        got = provided.get(col)
+        if got is None:
+            rep.add(
+                SCHEMA_SKEW,
+                "error",
+                f"{where}: required input column {col!r} missing",
+            )
+            continue
+        if spec is None:
+            continue
+        want_dt, got_dt = str(spec["dtype"]), str(got["dtype"])
+        if want_dt != got_dt:
+            if _dtype_kind(want_dt) != _dtype_kind(got_dt):
+                rep.add(
+                    SCHEMA_SKEW,
+                    "error",
+                    f"{where}: column {col!r} dtype skew: pipeline was fit "
+                    f"on {want_dt}, provided {got_dt}",
+                )
+            else:
+                rep.add(
+                    SCHEMA_SKEW,
+                    "warning",
+                    f"{where}: column {col!r} dtype width differs "
+                    f"({want_dt} vs {got_dt})",
+                )
+        elif list(spec.get("shape", [])) != list(got.get("shape", [])):
+            rep.add(
+                SCHEMA_SKEW,
+                "warning",
+                f"{where}: column {col!r} trailing shape differs "
+                f"({spec.get('shape')} vs {got.get('shape')})",
+            )
+    if not allow_extra:
+        for col in sorted(set(provided) - set(required)):
+            rep.add(
+                SCHEMA_SKEW,
+                "warning",
+                f"{where}: column {col!r} provided but never read",
+            )
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# node replay (abstract: everything below runs only under jax.eval_shape)
+# ---------------------------------------------------------------------------
+
+
+def _coerce_abstract(stage, spec, arr):
+    from repro.core import types as T
+
+    _col, _ver, token = spec
+    if token is None:
+        return arr
+    if token[0] == "string" and T.is_string_col(arr):
+        return arr  # "string" coercion is identity on byte columns
+    return stage._coerce(arr)
+
+
+def _replay_node(node):
+    def run(*arrs):
+        stage = node.stage
+        ins = tuple(
+            _coerce_abstract(stage, spec, a)
+            for spec, a in zip(node.in_specs, arrs)
+        )
+        outs = stage.apply(stage.weights(), ins)
+        return tuple(stage._coerce_out(o) for o in outs)
+
+    return run
+
+
+def _replay_members(node):
+    """Replay a fused node's member stages one by one (the semantics the
+    runtime falls back to) over a chain-local environment; returns the
+    chain's external outputs in ``out_cols`` order."""
+
+    def run(*arrs):
+        sub = {spec[0]: a for spec, a in zip(node.in_specs, arrs)}
+        for m in node.members:
+            stage = m.stage
+            ins = tuple(
+                _coerce_abstract(stage, spec, sub[spec[0]])
+                for spec in m.in_specs
+            )
+            outs = stage.apply(stage.weights(), ins)
+            outs = tuple(stage._coerce_out(o) for o in outs)
+            sub.update(zip(m.out_cols, outs))
+        return tuple(sub[c] for c in node.out_cols)
+
+    return run
+
+
+def _replay_program(program):
+    from repro.kernels.fused_transform import ops as fused_ops
+
+    def run(*arrs):
+        return tuple(fused_ops.execute_chain_xla(program, list(arrs)))
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# the abstract-interpretation walk
+# ---------------------------------------------------------------------------
+
+
+def verify_plan(
+    plan,
+    example=None,
+    schema: Optional[Dict[str, dict]] = None,
+    check_fusion: bool = True,
+    where: str = "plan",
+) -> Report:
+    """Verify a built :class:`~repro.core.plan.TransformPlan` against an
+    input schema (or a concrete example batch) WITHOUT executing it.
+
+    Walks the scheduled nodes over an abstract environment, tracing each
+    node with ``jax.eval_shape`` and checking every rule in the module
+    docstring.  Returns the findings report; empty = the plan is provably
+    executable on inputs of this schema and every fused chain is dtype/
+    shape-equivalent to its staged members."""
+    import jax
+
+    from repro.core.plan import _FusedNode
+    from repro.core import fusion
+
+    rep = Report()
+    if example is not None:
+        env = _structs_from_batch(example)
+    elif schema is not None:
+        env = _structs_from_schema(schema)
+    else:
+        raise ValueError("verify_plan needs an example batch or a schema")
+    provided = set(env)
+
+    version: Dict[str, int] = {}
+    freed: Dict[str, int] = {}  # col -> index of the node whose dead_after dropped it
+    produced_at: Dict[str, int] = {}
+    read_cols: set = set()
+    poisoned: set = set()  # cols whose structs are unknown after an earlier error
+
+    def check_reads(specs, i) -> bool:
+        """Validate one node's reads; False when any input is unusable."""
+        usable = True
+        for col, ver, _tok in specs:
+            read_cols.add(col)
+            if col not in env:
+                if col in poisoned:
+                    usable = False
+                elif col in freed:
+                    rep.add(
+                        USE_AFTER_FREE,
+                        "error",
+                        f"{where}: node {i} reads column {col!r} after node "
+                        f"{freed[col]} freed it (dead_after) — the donated/"
+                        f"dropped buffer no longer exists",
+                    )
+                    usable = False
+                else:
+                    rep.add(
+                        MISSING_INPUT,
+                        "error",
+                        f"{where}: node {i} reads column {col!r} which no "
+                        f"prior node produces and the input schema does not "
+                        f"provide",
+                    )
+                    usable = False
+                continue
+            if ver != version.get(col, 0):
+                rep.add(
+                    VERSION_SKEW,
+                    "error",
+                    f"{where}: node {i} expects version {ver} of column "
+                    f"{col!r} but the schedule produces version "
+                    f"{version.get(col, 0)} at this point (mutated or "
+                    f"re-ordered schedule)",
+                )
+        return usable
+
+    def bump(cols, i):
+        for c in cols:
+            version[c] = version.get(c, 0) + 1
+            produced_at[c] = i
+            freed.pop(c, None)
+
+    for i, node in enumerate(plan._nodes):
+        if isinstance(node, _FusedNode):
+            usable = check_reads(node.in_specs, i)
+            ins = [env[c] for c, _, _ in node.in_specs if c in env]
+            member_structs = None
+            if usable:
+                try:
+                    member_structs = jax.eval_shape(_replay_members(node), *ins)
+                except Exception as e:  # pragma: no cover - defensive
+                    rep.add(
+                        EVAL_ERROR,
+                        "error",
+                        f"{where}: fused node {i} member replay failed: "
+                        f"{type(e).__name__}: {e}",
+                    )
+            if usable and check_fusion:
+                try:
+                    prog_structs = jax.eval_shape(
+                        _replay_program(node.program), *ins
+                    )
+                except fusion.ChainFallback:
+                    prog_structs = None  # legal: runtime falls back to members
+                except Exception as e:
+                    prog_structs = None
+                    rep.add(
+                        FUSION_LEGALITY,
+                        "error",
+                        f"{where}: fused node {i} program "
+                        f"{node.program.signature()} does not trace: "
+                        f"{type(e).__name__}: {e}",
+                    )
+                if prog_structs is not None and member_structs is not None:
+                    for col, ps, ms in zip(
+                        node.out_cols, prog_structs, member_structs
+                    ):
+                        if ps.dtype != ms.dtype or ps.shape != ms.shape:
+                            rep.add(
+                                FUSION_LEGALITY,
+                                "error",
+                                f"{where}: fused node {i} column {col!r}: "
+                                f"program yields {ps.dtype}{list(ps.shape)} "
+                                f"but staged members yield "
+                                f"{ms.dtype}{list(ms.shape)} — fusion is not "
+                                f"semantics-preserving",
+                            )
+            # member-level version bookkeeping (internal cols included)
+            for m in node.members:
+                bump(m.out_cols, i)
+            if member_structs is not None:
+                env.update(zip(node.out_cols, member_structs))
+                poisoned.difference_update(node.out_cols)
+            else:
+                poisoned.update(node.out_cols)
+                for c in node.out_cols:
+                    env.pop(c, None)
+        else:
+            usable = check_reads(node.in_specs, i)
+            out_structs = None
+            if usable:
+                try:
+                    out_structs = jax.eval_shape(
+                        _replay_node(node), *[env[c] for c, _, _ in node.in_specs]
+                    )
+                except Exception as e:
+                    stage_name = type(getattr(node.stage, "stage", node.stage)).__name__
+                    rep.add(
+                        EVAL_ERROR,
+                        "error",
+                        f"{where}: node {i} ({stage_name} -> "
+                        f"{node.out_cols}) cannot execute on this input "
+                        f"schema: {type(e).__name__}: {e}",
+                    )
+            bump(node.out_cols, i)
+            if out_structs is not None:
+                env.update(zip(node.out_cols, out_structs))
+                poisoned.difference_update(node.out_cols)
+            else:
+                poisoned.update(node.out_cols)
+                for c in node.out_cols:
+                    env.pop(c, None)
+        for c in node.dead_after:
+            if env.pop(c, None) is not None:
+                freed[c] = i
+
+    outputs = plan._outputs
+    if outputs is not None:
+        for c in outputs:
+            if c not in env and c not in poisoned:
+                why = (
+                    f"freed by node {freed[c]}'s dead_after"
+                    if c in freed
+                    else "never produced"
+                )
+                rep.add(
+                    MISSING_OUTPUT,
+                    "error",
+                    f"{where}: requested output column {c!r} absent from the "
+                    f"final environment ({why})",
+                )
+        keep = set(outputs)
+        for c, at in sorted(produced_at.items()):
+            if c in keep or c in read_cols or c not in env:
+                continue
+            rep.add(
+                DEAD_COLUMN,
+                "warning",
+                f"{where}: column {c!r} (produced by node {at}) is never "
+                f"read, is not a requested output and is never freed — the "
+                f"planner missed a dead column",
+            )
+        # provided columns nothing reads and no output requests: skew note
+        unused = sorted(
+            provided - read_cols - keep
+        )
+        for c in unused:
+            rep.add(
+                SCHEMA_SKEW,
+                "warning",
+                f"{where}: provided input column {c!r} is never read by any "
+                f"scheduled node",
+            )
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# structural checks (no jax): the cheap export/registry gate
+# ---------------------------------------------------------------------------
+
+
+def plan_required_inputs(plan) -> List[str]:
+    """External input columns the scheduled nodes read (works for full-env
+    plans too, where ``plan.required_inputs()`` returns None)."""
+    produced: set = set()
+    required: List[str] = []
+    for n in plan._nodes:
+        for c, _, _ in n.in_specs:
+            if c not in produced and c not in required:
+                required.append(c)
+        produced.update(n.out_cols)
+        produced.update(getattr(n, "internal", ()))
+    for c in plan._outputs or ():
+        if c not in produced and c not in required:
+            required.append(c)
+    return required
+
+
+def _sched_walk_member(d: dict, state: dict, rep: Report, where: str, i) -> None:
+    """Version/liveness bookkeeping for one staged node dict of a schedule."""
+    env, version, freed = state["env"], state["version"], state["freed"]
+    for col, ver, _tok in d["in_specs"]:
+        state["read"].add(col)
+        if col not in env:
+            if col in freed:
+                rep.add(
+                    USE_AFTER_FREE,
+                    "error",
+                    f"{where}: node {i} reads column {col!r} after node "
+                    f"{freed[col]} freed it (dead_after)",
+                )
+            elif state["closed"]:
+                rep.add(
+                    MISSING_INPUT,
+                    "error",
+                    f"{where}: node {i} reads column {col!r} which is "
+                    f"neither produced upstream nor in the recorded input "
+                    f"schema",
+                )
+            else:
+                env.add(col)  # open world: assume a raw input column
+        if ver != version.get(col, 0):
+            rep.add(
+                VERSION_SKEW,
+                "error",
+                f"{where}: node {i} expects version {ver} of column {col!r} "
+                f"but the schedule produces version {version.get(col, 0)} "
+                f"at this point",
+            )
+    for c in d["out_cols"]:
+        version[c] = version.get(c, 0) + 1
+        env.add(c)
+        freed.pop(c, None)
+
+
+def verify_schedule_structure(
+    sched: dict,
+    n_stages: Optional[int] = None,
+    input_schema: Optional[Dict[str, dict]] = None,
+    where: str = "schedule",
+) -> Report:
+    """Jax-free structural verification of a serialized plan schedule (the
+    dict :meth:`TransformPlan.schedule` emits, as stored in export
+    bundles).  Checks stage indices, column versions, use-after-free and
+    output presence; with ``input_schema`` the environment is CLOSED —
+    a read of a column the schema does not provide is an error (the skew
+    gate for bundle load)."""
+    rep = Report()
+    closed = input_schema is not None
+    state = {
+        "env": set(input_schema or ()),
+        "version": {},
+        "freed": {},
+        "read": set(),
+        "closed": closed,
+    }
+
+    def walk(d: dict, i) -> None:
+        if "fused" in d:
+            for m in d["members"]:
+                walk(m, i)
+            for c in d.get("internal", ()):
+                if c in state["env"]:
+                    state["env"].discard(c)
+                    state["freed"][c] = i
+        else:
+            idx = d.get("stage", -1)
+            if n_stages is not None and not 0 <= int(idx) < n_stages:
+                rep.add(
+                    MISSING_INPUT,
+                    "error",
+                    f"{where}: node {i} references stage index {idx} but the "
+                    f"bundle has {n_stages} stages",
+                )
+                return
+            _sched_walk_member(d, state, rep, where, i)
+        for c in d.get("dead_after", ()):
+            if c in state["env"]:
+                state["env"].discard(c)
+                state["freed"][c] = i
+
+    for i, d in enumerate(sched.get("nodes", [])):
+        walk(d, i)
+
+    for c in sched.get("outputs") or ():
+        if c not in state["env"]:
+            why = (
+                f"freed by node {state['freed'][c]}'s dead_after"
+                if c in state["freed"]
+                else "never produced"
+            )
+            rep.add(
+                MISSING_OUTPUT,
+                "error",
+                f"{where}: requested output column {c!r} absent from the "
+                f"final environment ({why})",
+            )
+    return rep
+
+
+def gate_enabled() -> bool:
+    """The verifier gates in export/registry honour ``REPRO_ANALYZE_GATE``
+    (default on) so a knowingly-skewed artifact can still be loaded for
+    forensics."""
+    from repro.obs import envknobs
+
+    return envknobs.env_flag("REPRO_ANALYZE_GATE", True)

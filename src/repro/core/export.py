@@ -114,7 +114,12 @@ def _decompress(flag: bytes, body: bytes) -> bytes:
 class PreprocessModel:
     """Dependency-light, fusable inference preprocessing graph."""
 
-    def __init__(self, nodes: List[dict], schedule: Optional[dict] = None):
+    def __init__(
+        self,
+        nodes: List[dict],
+        schedule: Optional[dict] = None,
+        input_schema: Optional[Dict[str, dict]] = None,
+    ):
         # node: {op, config, weights: {name: array}, inputs, outputs}
         self.nodes = nodes
         self._stages = [
@@ -124,6 +129,10 @@ class PreprocessModel:
         # serialized TransformPlan schedule (cross-request plan persistence):
         # present on loaded bundles, so serving hosts skip plan analysis
         self._schedule = schedule
+        # fit-time raw-column schema ({col: {dtype, shape}}): rides in the
+        # bundle so the load-time verifier gate can prove the schedule is
+        # executable on what the pipeline was actually fit on
+        self.input_schema = input_schema
         self._plans: Dict[Optional[tuple], object] = {}
 
     # -- construction --------------------------------------------------
@@ -142,7 +151,16 @@ class PreprocessModel:
             )
         if outputs is not None:
             nodes = _prune(nodes, set(outputs))
-        return cls(nodes)
+        schema = getattr(fitted, "input_schema", None)
+        if schema is not None:
+            # restrict to raw columns the (possibly pruned) node list reads
+            produced: set = set()
+            needed: set = set()
+            for n in nodes:
+                needed.update(c for c in n["inputs"] if c not in produced)
+                produced.update(n["outputs"])
+            schema = {k: v for k, v in schema.items() if k in needed}
+        return cls(nodes, input_schema=schema)
 
     # -- evaluation ------------------------------------------------------
     def __call__(self, features: T.Batch) -> T.Batch:
@@ -195,6 +213,8 @@ class PreprocessModel:
 
     # -- serialisation -----------------------------------------------------
     def save_bytes(self) -> bytes:
+        schedule = self.plan().schedule()
+        self._verify_gate(schedule, self.input_schema, "export save")
         payload = {
             "version": _FORMAT_VERSION,
             "nodes": [
@@ -209,11 +229,29 @@ class PreprocessModel:
             ],
             # plan schedule rides along so a serving host can rebuild the
             # TransformPlan without re-running liveness/CSE analysis on load
-            "schedule": self.plan().schedule(),
+            "schedule": schedule,
+            "input_schema": self.input_schema,
         }
         packer, raw = _pack_payload(payload)
         codec, body = _compress(raw)
         return _MAGIC + packer + codec + body
+
+    @staticmethod
+    def _verify_gate(schedule, input_schema, where: str) -> None:
+        """Structural plan verification (no jax, no tracing): refuse to
+        save/load a bundle whose schedule reads outside its recorded fit
+        schema, references missing stages, resurrects freed buffers or
+        never produces a declared output.  ``REPRO_ANALYZE_GATE=0``
+        disables (forensics escape hatch)."""
+        if schedule is None:
+            return
+        from repro.analyze import PlanSchemaError, plan_check  # noqa: F401
+
+        if not plan_check.gate_enabled():
+            return
+        plan_check.verify_schedule_structure(
+            schedule, input_schema=input_schema, where=where
+        ).raise_if_errors(where)
 
     def save(self, path: str) -> None:
         with open(path, "wb") as f:
@@ -244,7 +282,10 @@ class PreprocessModel:
             }
             for n in payload["nodes"]
         ]
-        return cls(nodes, schedule=payload.get("schedule"))
+        schedule = payload.get("schedule")
+        input_schema = payload.get("input_schema")
+        cls._verify_gate(schedule, input_schema, "export load")
+        return cls(nodes, schedule=schedule, input_schema=input_schema)
 
     @classmethod
     def load(cls, path: str) -> "PreprocessModel":

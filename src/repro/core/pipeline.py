@@ -71,6 +71,7 @@ class Pipeline:
         # An all-transformer pipeline never touches the data at all.
         raw_cols: frozenset = frozenset()
         leftover: Optional[Iterable[T.Batch]] = None
+        input_schema: Optional[Dict[str, dict]] = None
         if any(r is None for r in resolved):
             peek_iter = iter(factory())
             try:
@@ -79,6 +80,21 @@ class Pipeline:
                 raise ValueError("data factory yielded no batches")
             raw_cols = frozenset(first_batch.keys())
             leftover = itertools.chain([first_batch], peek_iter)
+            # record the fit-time schema of the raw columns the stages
+            # actually read: the static verifier gates export bundles and
+            # registry entries against it (offline/online skew detection)
+            produced: set = set()
+            needed: set = set()
+            for s in self.stages:
+                needed.update(n for n in s.input_names if n not in produced)
+                produced.update(s.output_names)
+            from repro.analyze.plan_check import schema_of_batch
+
+            input_schema = {
+                k: v
+                for k, v in schema_of_batch(first_batch).items()
+                if k in needed
+            }
 
         n_passes = 0
         while any(r is None for r in resolved):
@@ -123,7 +139,9 @@ class Pipeline:
             for i, e in pending.items():
                 resolved[i] = FittedStage(e, e.finalize(jax.device_get(stats[i])))
 
-        return FittedPipeline(self, resolved, n_passes=n_passes)
+        return FittedPipeline(
+            self, resolved, n_passes=n_passes, input_schema=input_schema
+        )
 
     # Spark parity alias ------------------------------------------------
     def getStages(self):
@@ -137,10 +155,19 @@ KamaeSparkPipeline = Pipeline
 class FittedPipeline:
     """All stages resolved; behaves like a Spark PipelineModel."""
 
-    def __init__(self, pipeline: Pipeline, resolved: Sequence[object], n_passes: int = 0):
+    def __init__(
+        self,
+        pipeline: Pipeline,
+        resolved: Sequence[object],
+        n_passes: int = 0,
+        input_schema: Optional[Dict[str, dict]] = None,
+    ):
         self.pipeline = pipeline
         self.stages = list(resolved)
         self.n_passes = n_passes
+        # fit-time raw-column schema ({col: {dtype, shape}}), None when the
+        # pipeline was all-transformer (fit never saw data)
+        self.input_schema = input_schema
         self._plans: Dict[tuple, object] = {}
 
     def transform(self, batch: T.Batch) -> T.Batch:

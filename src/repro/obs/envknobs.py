@@ -151,3 +151,7 @@ register("REPRO_OBS_SHED_SPIKE", "int", 32,
          "Gateway sheds within one second that trigger a flight dump.")
 register("REPRO_OBS_LOG", "str", "info",
          "Minimum obs.log level (debug/info/warn/error).")
+# Static analysis
+register("REPRO_ANALYZE_GATE", "flag", True,
+         "Plan/schema verifier gate inside export bundle load and "
+         "registry.register; off = accept artifacts unchecked.")

@@ -325,7 +325,7 @@ class MultiHostExecutor:
             return
         self._maybe_rejoin(pid, conn)
 
-    def _probe_clock_locked(self, w: _Worker) -> None:
+    def _probe_clock_locked(self, w: _Worker) -> None:  # analyze: allow(lock-unguarded-mutation) caller holds w.lock for the whole clock exchange
         """Estimate the worker's monotonic-clock offset (coordinator minus
         worker) from one round trip, taking the RTT midpoint as the exchange
         instant — worker-side span timestamps are shifted by this before
@@ -351,7 +351,7 @@ class MultiHostExecutor:
         if status == "ok":
             w.clock_offset = (t0 + t1) / 2.0 - float(payload)
 
-    def _maybe_rejoin(self, pid: int, conn) -> None:
+    def _maybe_rejoin(self, pid: int, conn) -> None:  # analyze: allow(lock-blocking-call) liveness probe of an idle socket; w.lock exists to serialize exactly this request/reply protocol
         w = self._workers[pid]
         if w.alive:
             # the old socket may be silently dead (dropped connection the
@@ -376,7 +376,7 @@ class MultiHostExecutor:
                 )
         self._rejoin(pid, conn)
 
-    def _rejoin(self, pid: int, conn) -> None:
+    def _rejoin(self, pid: int, conn) -> None:  # analyze: allow(lock-blocking-call) rejoin swap/warm protocol: the socket must be exclusively held until the worker is warm or declared dead
         """Re-adopt a returned worker: swap the connection, re-answer the
         trace probe, warm it with its block of each registered example, and
         only then mark it live (never route to a cold restart)."""
@@ -485,7 +485,7 @@ class MultiHostExecutor:
             self.monitor.report(rank, self._clock() - t0)
         return out
 
-    def execute(self, name: str, host_cols: Dict[str, np.ndarray]):
+    def execute(self, name: str, host_cols: Dict[str, np.ndarray]):  # analyze: allow(lock-unguarded-mutation) every w.pending touch is under that worker's w.lock; branch-local releases defeat the lint's linear model
         """One routed batch: scatter row blocks, run the local shard while
         workers run theirs, gather and reassemble in row order.  Worker
         loss and stalls are absorbed (hedge / reshard); only worker-REPORTED
@@ -675,7 +675,7 @@ class MultiHostExecutor:
                 out = self._run_local(name, block)
             return out, None
 
-    def _consume_reply(self, p, w, name, t0):
+    def _consume_reply(self, p, w, name, t0):  # analyze: allow(lock-unguarded-mutation) caller holds w.lock (dispatch/gather path)
         status, payload = w.conn.recv()
         if w.pending:
             w.pending.pop(0)
@@ -695,7 +695,7 @@ class MultiHostExecutor:
             payload = payload.out
         return payload, None
 
-    def _drain_stale(self, p, w) -> bool:
+    def _drain_stale(self, p, w) -> bool:  # analyze: allow(lock-unguarded-mutation) caller holds w.lock (dispatch, sweep and probe paths)
         """Consume replies left over from won hedges and from ping/trace
         probes that missed their poll window (FIFO, timed from their
         original send).  True when the connection is idle and usable."""
@@ -746,10 +746,14 @@ class MultiHostExecutor:
             self._dead.add(p)
             self._death_reasons[p] = why
             self._degraded_pm = None
-            try:
-                w.conn.close()
-            except (OSError, ValueError):
-                pass
+            conn = w.conn
+        # close OUTSIDE the membership lock: close can block on linger/flush,
+        # and every membership read (live_workers, snapshots, budget checks)
+        # would stall behind a wedged socket teardown
+        try:
+            conn.close()
+        except (OSError, ValueError):
+            pass
         self._ft.inc("worker_deaths")
         self._ft.inc("reshards")
         self._ft.set("last_death_t", self._clock())
@@ -783,7 +787,7 @@ class MultiHostExecutor:
             except Exception:  # the sweeper must outlive any single fault
                 pass
 
-    def _sweep_once(self) -> None:
+    def _sweep_once(self) -> None:  # analyze: allow(lock-blocking-call) idle-socket ping under a 50ms micro-poll; w.lock serializes the request/reply pair
         for p in self.live_workers:
             w = self._workers.get(p)
             if w is None or not w.alive or w.liveness.age() <= self.heartbeat_s:
@@ -802,7 +806,11 @@ class MultiHostExecutor:
                 try:
                     t_ping = self._clock()
                     w.conn.send(("ping",))
-                    if w.conn.poll(min(self.heartbeat_s, 1.0)):
+                    # micro-poll only: this thread holds w.lock, and every
+                    # batch dispatched to this worker queues behind it — a
+                    # heartbeat-length poll here stalled dispatch for up to
+                    # 1s per suspect worker (the sweeper-vs-dispatch bug)
+                    if w.conn.poll(0.05):
                         w.conn.recv()
                         w.liveness.beat()
                     else:
@@ -865,7 +873,7 @@ class MultiHostExecutor:
         out.update(self._ft.snapshot())
         return out
 
-    def trace_count(self, name: str) -> int:
+    def trace_count(self, name: str) -> int:  # analyze: allow(lock-blocking-call) introspection probe: w.lock serializes the request/reply pair, bounded by probe_poll_s
         _, traces = self._local[name]
         total = traces() if traces is not None else 0
         for p in self.live_workers:
@@ -891,7 +899,7 @@ class MultiHostExecutor:
                 total += payload
         return total
 
-    def close(self, timeout_s: float = 5.0) -> None:
+    def close(self, timeout_s: float = 5.0) -> None:  # analyze: allow(lock-blocking-call) orderly shutdown drain: bounded by timeout_s, nothing races a closing coordinator
         """Orderly shutdown: stop the sweep/accept loops, then per worker —
         drain any outstanding hedged replies, send an explicit ``shutdown``
         frame and consume its ack — so a reply in flight is drained, never
@@ -981,7 +989,8 @@ def accept_workers(
             conn.close()
             raise RuntimeError(f"unexpected first message {tag!r} from a worker")
         executor.attach(int(pid), conn)
-    executor._started = True
+    with executor._mlock:  # _started is read by other threads' membership ops
+        executor._started = True
     if live:
         t = threading.Thread(
             target=_accept_loop, args=(listener, executor), daemon=True,

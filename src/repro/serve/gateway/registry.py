@@ -76,6 +76,46 @@ def _normalize(name, model, sharding, donate) -> Tuple[Callable, Optional[Callab
     raise TypeError(f"cannot serve {type(model).__name__} as model {name!r}")
 
 
+def _schema_gate(name: str, model, example: Dict[str, Any]) -> None:
+    """Static skew check at registration: the example row (the gateway's
+    shape/dtype template for every warmup and padded batch) must satisfy
+    the servable's plan — required columns present, dtype kinds matching
+    the fit-time schema.  Raises :class:`repro.analyze.PlanSchemaError`
+    instead of letting a mismatched entry fail (or silently corrupt) on
+    its first request.  ``REPRO_ANALYZE_GATE=0`` disables."""
+    from repro.analyze import plan_check
+
+    if not plan_check.gate_enabled():
+        return
+    servable = model
+    if isinstance(servable, FusedModel):
+        plan = getattr(servable, "_plan", None)
+    elif isinstance(servable, PreprocessModel):
+        plan = servable.plan()
+    else:
+        plan = getattr(servable, "_plan", None)  # duck-typed servables
+    if plan is None or not getattr(plan, "_nodes", None):
+        return
+    fit_schema = (
+        getattr(servable, "input_schema", None)
+        or getattr(getattr(servable, "preprocess", None), "input_schema", None)
+        or {}
+    )
+    required = {
+        c: fit_schema.get(c) for c in plan_check.plan_required_inputs(plan)
+    }
+    provided = {
+        k: {
+            "dtype": str(np.asarray(v).dtype),
+            "shape": [int(d) for d in np.asarray(v).shape],  # one row
+        }
+        for k, v in example.items()
+    }
+    plan_check.check_schema(
+        required, provided, where=f"registry.register({name!r})"
+    ).raise_if_errors(f"registry.register({name!r})")
+
+
 class ModelRegistry:
     def __init__(self):
         self._entries: Dict[str, ModelEntry] = {}
@@ -114,6 +154,7 @@ class ModelRegistry:
                     f"model {name!r}: no bucket holds >= {floor} rows "
                     f"(one per data shard)"
                 )
+        _schema_gate(name, model, example)
         fn, traces = _normalize(name, model, sharding, donate)
         hook = getattr(model, "register_example", None)
         if hook is not None:

@@ -217,7 +217,7 @@ class BatchScheduler:
         times = [self._ready_at(k, g, now) for k, g in self._groups.items()]
         return min(times) if times else None
 
-    def _form(self, key, now: float):
+    def _form(self, key, now: float):  # analyze: allow(lock-unguarded-mutation) caller holds _cv (the notify_all below would raise otherwise)
         model = key[0]
         group = self._groups.pop(key)
         group.sort(key=Request.urgency)

@@ -48,7 +48,7 @@ class LatencySketch:
         h[int(sketches.dd_bin_np(seconds))] += 1
         # single-writer per tid: a plain increment is safe; pollers reading a
         # torn-by-one version merely recompute (or serve) one poll early
-        self._counts[tid] += 1
+        self._counts[tid] += 1  # analyze: allow(lock-unguarded-mutation) single writer per tid; torn reads only cost one early recompute
 
     def _version(self) -> int:
         with self._lock:

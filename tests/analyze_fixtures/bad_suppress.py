@@ -1,0 +1,14 @@
+"""Golden fixture: exactly one analyze-bad-suppression finding.
+
+An allow() without a reason does not suppress anything — it becomes a
+finding itself.  The comment below sits on a line with nothing to
+suppress, so this file contributes only the bad-suppression error.
+"""
+import threading
+
+idle_lock = threading.Lock()  # analyze: allow(lock-blocking-call)
+
+
+def harmless():
+    with idle_lock:
+        return 0

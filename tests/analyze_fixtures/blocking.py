@@ -1,0 +1,14 @@
+"""Golden fixture: exactly one lock-blocking-call finding.
+
+``time.sleep`` under a held lock stalls every thread queued on it.
+"""
+import threading
+import time
+
+state_lock = threading.Lock()
+
+
+def slow_update():
+    with state_lock:
+        time.sleep(0.5)
+        return True

@@ -1,0 +1,22 @@
+"""Golden fixture: exactly one lock-order-inversion finding.
+
+Two call paths take the same pair of locks in opposite orders — the
+classic ABBA deadlock.  The analyzer reports the cycle once (on the
+lexicographically-first direction's acquisition site).
+"""
+import threading
+
+a_lock = threading.Lock()
+b_lock = threading.Lock()
+
+
+def path_one():
+    with a_lock:
+        with b_lock:
+            return 1
+
+
+def path_two():
+    with b_lock:
+        with a_lock:
+            return 2

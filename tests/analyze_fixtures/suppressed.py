@@ -1,0 +1,14 @@
+"""Golden fixture: one finding, legitimately suppressed with a reason.
+
+The allow comment sits on the enclosing ``def`` line, covering the
+blocking call inside; the finding stays in the report, marked suppressed.
+"""
+import threading
+import time
+
+quiet_lock = threading.Lock()
+
+
+def deliberate_wait():  # analyze: allow(lock-blocking-call) fixture: the wait IS the feature under test
+    with quiet_lock:
+        time.sleep(0.01)

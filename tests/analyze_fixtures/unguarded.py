@@ -1,0 +1,20 @@
+"""Golden fixture: exactly one lock-unguarded-mutation finding.
+
+``items`` is mutated under ``_lock`` in one method and with no lock held
+in another (constructors are exempt) — either the lock is unnecessary or
+the bare site races.
+"""
+import threading
+
+
+class Box:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.items = []
+
+    def guarded_add(self, x):
+        with self._lock:
+            self.items.append(x)
+
+    def racy_add(self, x):
+        self.items.append(x)

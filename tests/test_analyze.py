@@ -1,0 +1,634 @@
+"""Static-analysis subsystem: findings/suppression machinery, the golden
+lockcheck corpus (each rule fires exactly once on its seeded-violation
+fixture, stays silent on the shipped repo), the plan verifier's abstract
+interpretation on the real pipelines (clean) and on mutated schedules
+(each rule fires), the export/registry schema gates, and regression tests
+for the concurrency fixes the lint surfaced in multihost.py."""
+import threading
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import analyze
+from repro.analyze import (
+    PlanSchemaError,
+    Report,
+    knobcheck,
+    lockcheck,
+    parse_suppressions,
+    plan_check,
+)
+from repro.core import (
+    HashIndexTransformer,
+    KamaeSparkPipeline,
+    LogTransformer,
+    StringIndexEstimator,
+    StringToStringListTransformer,
+)
+from repro.core import types as T
+from repro.core.export import PreprocessModel
+from repro.core.fusion import ChainOp, ChainProgram
+from repro.core.plan import TransformPlan, _FusedNode
+
+pytestmark = pytest.mark.analyze
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "analyze_fixtures"
+
+
+# ---------------------------------------------------------------------------
+# findings / suppression machinery
+# ---------------------------------------------------------------------------
+
+
+def test_parse_suppressions_rules_and_reasons():
+    text = (
+        "x = 1\n"
+        "y = 2  # analyze: allow(rule-a, rule-b) both are fine here\n"
+        "z = 3  # analyze: allow(rule-c)\n"
+    )
+    allowed, bad = parse_suppressions(text)
+    assert allowed == {
+        2: {"rule-a": "both are fine here", "rule-b": "both are fine here"}
+    }
+    assert bad == [(3, ["rule-c"])]
+
+
+def test_apply_suppressions_def_line_and_bad_reason():
+    rep = Report()
+    rep.add("rule-a", "error", "seeded", file="f.py", line=5)
+    text = "\n".join(
+        [
+            "def g():  # analyze: allow(rule-a) covered by caller",
+            "    pass",
+            "",
+            "",
+            "x = 1",
+            "y = 2  # analyze: allow(rule-b)",
+        ]
+    )
+    rep.apply_suppressions("f.py", text, def_lines={5: 1})
+    supp = [f for f in rep.findings if f.suppressed]
+    assert len(supp) == 1 and supp[0].suppress_reason == "covered by caller"
+    bad = rep.by_rule(analyze.BAD_SUPPRESSION)
+    assert len(bad) == 1 and bad[0].line == 6
+    assert not rep.ok()  # the bad suppression is itself an error
+
+
+def test_raise_if_errors_is_typed_and_carries_findings():
+    rep = Report()
+    rep.add("rule-a", "error", "boom")
+    with pytest.raises(PlanSchemaError) as ei:
+        rep.raise_if_errors("unit")
+    assert ei.value.findings and ei.value.findings[0].rule == "rule-a"
+    assert isinstance(ei.value, ValueError)
+
+
+# ---------------------------------------------------------------------------
+# golden corpus: each lint rule fires exactly once on its fixture
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return lockcheck.check([str(FIXTURES)])
+
+
+def test_golden_lock_order_inversion_fires_once(corpus):
+    hits = corpus.by_rule(lockcheck.ORDER_INVERSION)
+    assert len(hits) == 1
+    assert hits[0].file.endswith("lock_order.py") and hits[0].line == 15
+    assert "opposite order" in hits[0].message
+
+
+def test_golden_blocking_call_fires_once(corpus):
+    active = [
+        f for f in corpus.by_rule(lockcheck.BLOCKING_CALL) if not f.suppressed
+    ]
+    assert len(active) == 1
+    assert active[0].file.endswith("blocking.py") and active[0].line == 13
+    assert "state_lock" in active[0].message
+
+
+def test_golden_unguarded_mutation_fires_once(corpus):
+    hits = corpus.by_rule(lockcheck.UNGUARDED_MUTATION)
+    assert len(hits) == 1
+    assert hits[0].file.endswith("unguarded.py") and hits[0].line == 20
+    assert hits[0].severity == "warning"
+
+
+def test_golden_suppressed_finding_is_marked_not_active(corpus):
+    supp = [f for f in corpus.findings if f.suppressed]
+    assert len(supp) == 1
+    assert supp[0].file.endswith("suppressed.py") and supp[0].line == 14
+    assert supp[0].suppress_reason.startswith("fixture:")
+    assert supp[0] not in corpus.active
+
+
+def test_golden_bad_suppression_fires_once(corpus):
+    hits = corpus.by_rule(analyze.BAD_SUPPRESSION)
+    assert len(hits) == 1
+    assert hits[0].file.endswith("bad_suppress.py") and hits[0].line == 9
+
+
+# ---------------------------------------------------------------------------
+# the shipped repo is clean
+# ---------------------------------------------------------------------------
+
+
+def test_lockcheck_repo_clean():
+    rep = lockcheck.check(lockcheck.default_paths(REPO / "src"))
+    assert rep.active == [], "\n" + rep.format_text()
+    # the intentional sites are recorded (with reasons), not hidden
+    assert any(f.suppressed for f in rep.findings)
+    assert all(f.suppress_reason for f in rep.findings if f.suppressed)
+
+
+def test_lockcheck_started_flag_is_guarded():
+    """Regression (lint fix): ``executor._started`` was set with no lock
+    held in ``accept_workers`` while other threads read/write it under
+    ``_mlock``."""
+    rep = lockcheck.check(
+        [str(REPO / "src" / "repro" / "serve" / "gateway" / "multihost.py")]
+    )
+    assert not [
+        f
+        for f in rep.by_rule(lockcheck.UNGUARDED_MUTATION)
+        if "_started" in f.message and not f.suppressed
+    ]
+
+
+def test_knobcheck_repo_clean():
+    rep = knobcheck.check(REPO / "src", REPO / "README.md")
+    assert rep.ok(), "\n" + rep.format_text()
+
+
+def test_knobcheck_rules_fire(tmp_path):
+    src = tmp_path / "src"
+    src.mkdir()
+    (src / "mod.py").write_text('flag = os.environ.get("REPRO_BOGUS_KNOB")\n')
+    (tmp_path / "README.md").write_text("# nothing here\n")
+    rep = knobcheck.check(src, tmp_path / "README.md", knobs={})
+    rules = sorted(f.rule for f in rep.findings)
+    assert rules == [knobcheck.KNOB_UNDOCUMENTED, knobcheck.KNOB_UNREGISTERED]
+    assert all(f.file.endswith("mod.py") and f.line == 1 for f in rep.findings)
+
+
+# ---------------------------------------------------------------------------
+# plan verifier: clean on the real pipelines (staged AND fused)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def ltr():
+    from repro.apps.ltr_pipeline import build_ltr_pipeline
+    from repro.data import ltr_rows
+
+    train = ltr_rows(96, seed=0)
+    fitted, cols = build_ltr_pipeline(train)
+    batch = {k: v[:48] for k, v in ltr_rows(48, seed=5).items()}
+    return fitted, cols, batch
+
+
+@pytest.fixture(scope="module")
+def quickstart():
+    rng = np.random.default_rng(1)
+    n = 64
+    batch = {
+        "UserID": jnp.asarray(rng.integers(1, 5000, n), jnp.int32),
+        "Genres": jnp.asarray(
+            T.encode_strings(rng.choice(["Action|Comedy", "Drama"], n), 32)
+        ),
+        "Price": jnp.asarray(rng.lognormal(3, 2, n), jnp.float32),
+    }
+    pipe = KamaeSparkPipeline(
+        stages=[
+            HashIndexTransformer(
+                inputCol="UserID", outputCol="UserID_indexed",
+                inputDtype="string", numBins=10000,
+            ),
+            StringToStringListTransformer(
+                inputCol="Genres", outputCol="Genres_split", separator="|",
+                listLength=4, defaultValue="PADDED",
+            ),
+            StringIndexEstimator(
+                inputCol="Genres_split", outputCol="Genres_indexed",
+                numOOVIndices=1, maskToken="PADDED",
+            ),
+            LogTransformer(inputCol="Price", outputCol="Price_log", alpha=1.0),
+        ]
+    )
+    return pipe.fit(batch), batch
+
+
+@pytest.fixture()
+def hash_chain():
+    from repro.core.transformers.math import (
+        BucketizeTransformer,
+        ClipTransformer,
+        ScaleTransformer,
+    )
+
+    n = 96
+    batch = {
+        "city": jnp.asarray(
+            T.encode_strings([f"city_{i % 37}" for i in range(n)], 32)
+        )
+    }
+    pipe = KamaeSparkPipeline(
+        stages=[
+            HashIndexTransformer(inputCol="city", outputCol="h", numBins=97, seed=3),
+            ScaleTransformer(inputCol="h", outputCol="s", multiplier=0.25, offset=1.0),
+            BucketizeTransformer(inputCol="s", outputCol="b", splits=[2.0, 5.0, 11.0]),
+            ClipTransformer(inputCol="b", outputCol="c", minValue=1, maxValue=2),
+        ]
+    )
+    return pipe.fit(batch), batch
+
+
+def _restricted(plan, batch):
+    req = set(plan_check.plan_required_inputs(plan))
+    return {k: v for k, v in batch.items() if k in req}
+
+
+@pytest.mark.parametrize("fuse", [False, True], ids=["staged", "fused"])
+def test_verify_plan_ltr_clean(ltr, fuse):
+    fitted, cols, batch = ltr
+    plan = TransformPlan(fitted.stages, outputs=cols, fuse=fuse)
+    rep = plan_check.verify_plan(plan, example=_restricted(plan, batch))
+    assert rep.findings == [], "\n" + rep.format_text()
+
+
+@pytest.mark.parametrize("fuse", [False, True], ids=["staged", "fused"])
+def test_verify_plan_quickstart_clean(quickstart, fuse):
+    fitted, batch = quickstart
+    plan = TransformPlan(fitted.stages, fuse=fuse)
+    rep = plan_check.verify_plan(plan, example=batch)
+    assert rep.findings == [], "\n" + rep.format_text()
+
+
+def test_verify_plan_hash_chain_clean_and_fused(hash_chain):
+    fitted, batch = hash_chain
+    plan = TransformPlan(fitted.stages, outputs=["c"], fuse=True)
+    assert any(isinstance(n, _FusedNode) for n in plan._nodes)
+    rep = plan_check.verify_plan(plan, example=batch)
+    assert rep.findings == [], "\n" + rep.format_text()
+
+
+def test_verify_plan_from_schema_without_batch(quickstart):
+    fitted, batch = quickstart
+    plan = TransformPlan(fitted.stages, fuse=True)
+    schema = plan_check.schema_of_batch(batch)
+    rep = plan_check.verify_plan(plan, schema=schema)
+    assert rep.findings == [], "\n" + rep.format_text()
+
+
+# ---------------------------------------------------------------------------
+# plan verifier: mutated schedules (each rule fires)
+# ---------------------------------------------------------------------------
+
+
+def test_mutation_version_flip_detected(quickstart):
+    fitted, batch = quickstart
+    plan = TransformPlan(fitted.stages, fuse=False)
+    node = plan._nodes[-1]
+    col, ver, tok = node.in_specs[0]
+    node.in_specs[0] = (col, ver + 1, tok)
+    rep = plan_check.verify_plan(plan, example=batch)
+    assert rep.by_rule(plan_check.VERSION_SKEW), "\n" + rep.format_text()
+
+
+def test_mutation_dropped_producer_detected(quickstart):
+    fitted, batch = quickstart
+    plan = TransformPlan(fitted.stages, fuse=False)
+    # drop the producer of a column a later node reads: its read dangles
+    reads = {c for n in plan._nodes for c, _, _ in n.in_specs}
+    idx = next(
+        i
+        for i, n in enumerate(plan._nodes)
+        if any(c in reads for c in n.out_cols)
+    )
+    dropped = plan._nodes.pop(idx)
+    rep = plan_check.verify_plan(plan, example=batch)
+    assert rep.by_rule(plan_check.MISSING_INPUT), (
+        f"dropping producer of {dropped.out_cols} raised nothing:\n"
+        + rep.format_text()
+    )
+
+
+def test_mutation_bogus_dead_after_is_use_after_free(quickstart):
+    fitted, batch = quickstart
+    plan = TransformPlan(fitted.stages, fuse=False)
+    # free a column right at its producer although a later node reads it
+    later = [c for n in plan._nodes[1:] for c, _, _ in n.in_specs]
+    victim = next(c for n in plan._nodes for c in n.out_cols if c in later)
+    producer = next(n for n in plan._nodes if victim in n.out_cols)
+    producer.dead_after = list(producer.dead_after) + [victim]
+    rep = plan_check.verify_plan(plan, example=batch)
+    assert rep.by_rule(plan_check.USE_AFTER_FREE), "\n" + rep.format_text()
+
+
+def test_mutation_missing_output_detected(quickstart):
+    fitted, batch = quickstart
+    plan = TransformPlan(fitted.stages, outputs=["Price_log"], fuse=False)
+    plan._nodes = [n for n in plan._nodes if "Price_log" not in n.out_cols]
+    rep = plan_check.verify_plan(plan, example=batch)
+    assert rep.by_rule(plan_check.MISSING_OUTPUT), "\n" + rep.format_text()
+
+
+def test_mutation_illegal_fused_op_breaks_legality(hash_chain):
+    fitted, batch = hash_chain
+    plan = TransformPlan(fitted.stages, outputs=["c"], fuse=True)
+    node = next(n for n in plan._nodes if isinstance(n, _FusedNode))
+    out = node.out_cols[0]
+    # graft a dtype-flipping cast onto the chain output: the program no
+    # longer matches its staged members — exactly the skew fusion must
+    # never introduce
+    node.program = ChainProgram(
+        list(node.program.ops) + [ChainOp("cast", (out,), out, ("int16",))],
+        node.program.inputs,
+        node.program.outputs,
+    )
+    rep = plan_check.verify_plan(plan, example=batch)
+    hits = rep.by_rule(plan_check.FUSION_LEGALITY)
+    assert hits and "not" in hits[0].message, "\n" + rep.format_text()
+
+
+def test_mutation_input_dtype_flip_is_schema_error(quickstart):
+    fitted, batch = quickstart
+    plan = TransformPlan(fitted.stages, fuse=False)
+    skewed = dict(batch)
+    skewed["Price"] = np.asarray(batch["Price"]).astype(np.int32)  # kind flip
+    provided = plan_check.schema_of_batch(skewed)
+    required = {
+        c: plan_check.schema_of_batch(batch).get(c)
+        for c in plan_check.plan_required_inputs(plan)
+    }
+    rep = plan_check.check_schema(required, provided)
+    errs = [
+        f for f in rep.by_rule(plan_check.SCHEMA_SKEW) if f.severity == "error"
+    ]
+    assert errs and "Price" in errs[0].message
+
+
+def test_width_only_dtype_difference_is_warning():
+    rep = plan_check.check_schema(
+        {"x": {"dtype": "float32", "shape": []}},
+        {"x": {"dtype": "float64", "shape": []}},
+    )
+    assert rep.ok()
+    assert rep.warnings()
+
+
+# ---------------------------------------------------------------------------
+# structural schedule verification (the jax-free gate)
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_structure_clean_and_closed_world(quickstart):
+    fitted, batch = quickstart
+    plan = TransformPlan(fitted.stages, fuse=True)
+    sched = plan.schedule()
+    schema = plan_check.schema_of_batch(batch)
+    rep = plan_check.verify_schedule_structure(
+        sched, n_stages=len(fitted.stages), input_schema=schema
+    )
+    assert rep.findings == [], "\n" + rep.format_text()
+    # closed world: drop a raw input from the schema -> missing-input error
+    short = {k: v for k, v in schema.items() if k != "Price"}
+    rep2 = plan_check.verify_schedule_structure(sched, input_schema=short)
+    assert rep2.by_rule(plan_check.MISSING_INPUT)
+
+
+# ---------------------------------------------------------------------------
+# export-bundle gate (satellite: typed PlanSchemaError, not silent accept)
+# ---------------------------------------------------------------------------
+
+
+def test_fit_records_input_schema(quickstart):
+    fitted, batch = quickstart
+    schema = fitted.input_schema
+    assert schema is not None
+    assert schema["Price"]["dtype"] == "float32"
+    assert schema["Genres"]["shape"] == [32]
+    assert "UserID_indexed" not in schema  # derived, not raw
+
+
+def test_export_bundle_round_trips_schema_through_gate(quickstart):
+    fitted, batch = quickstart
+    model = fitted.export()
+    blob = model.save_bytes()  # save gate passes on a healthy artifact
+    loaded = PreprocessModel.load_bytes(blob)  # load gate passes too
+    assert loaded.input_schema == model.input_schema
+    assert loaded.input_schema["Price"]["dtype"] == "float32"
+
+
+def test_export_save_rejects_skewed_schema(quickstart):
+    fitted, batch = quickstart
+    model = fitted.export()
+    # forge skew: the recorded fit schema loses a column the schedule reads
+    model.input_schema = {
+        k: v for k, v in model.input_schema.items() if k != "Price"
+    }
+    with pytest.raises(PlanSchemaError) as ei:
+        model.save_bytes()
+    assert any(f.rule == plan_check.MISSING_INPUT for f in ei.value.findings)
+
+
+def test_export_load_rejects_skewed_bundle(quickstart, monkeypatch):
+    """Pre-fix behaviour: a bundle whose schedule reads columns its recorded
+    fit schema cannot provide loaded silently and failed (or mis-bound) at
+    first execute.  The verifier gate now raises a typed PlanSchemaError at
+    load time."""
+    fitted, batch = quickstart
+    model = fitted.export()
+    model.input_schema = {
+        k: v for k, v in model.input_schema.items() if k != "Price"
+    }
+    monkeypatch.setenv("REPRO_ANALYZE_GATE", "0")
+    blob = model.save_bytes()  # gate off: the skewed artifact serialises
+    monkeypatch.delenv("REPRO_ANALYZE_GATE")
+    with pytest.raises(PlanSchemaError) as ei:
+        PreprocessModel.load_bytes(blob)
+    assert any(f.rule == plan_check.MISSING_INPUT for f in ei.value.findings)
+    # forensics escape hatch: gate off loads it anyway
+    monkeypatch.setenv("REPRO_ANALYZE_GATE", "0")
+    assert PreprocessModel.load_bytes(blob) is not None
+
+
+# ---------------------------------------------------------------------------
+# registry gate (satellite: typed PlanSchemaError on a mismatched example)
+# ---------------------------------------------------------------------------
+
+
+def _registry_and_model(quickstart):
+    from repro.serve.gateway.registry import ModelRegistry
+
+    fitted, batch = quickstart
+    return ModelRegistry(), fitted.export(), batch
+
+
+def test_registry_accepts_matching_example(quickstart):
+    reg, model, batch = _registry_and_model(quickstart)
+    example = {k: np.asarray(v)[0] for k, v in batch.items()}
+    entry = reg.register("m", model, example, buckets=(1, 2))
+    assert entry.name == "m"
+
+
+def test_registry_rejects_missing_column(quickstart):
+    reg, model, batch = _registry_and_model(quickstart)
+    example = {k: np.asarray(v)[0] for k, v in batch.items() if k != "Price"}
+    with pytest.raises(PlanSchemaError) as ei:
+        reg.register("m", model, example, buckets=(1, 2))
+    assert "Price" in str(ei.value)
+    assert "m" not in reg.names()  # nothing half-registered
+
+
+def test_registry_rejects_dtype_kind_flip(quickstart):
+    reg, model, batch = _registry_and_model(quickstart)
+    example = {k: np.asarray(v)[0] for k, v in batch.items()}
+    example["Price"] = np.int64(3)  # fit on float32: a kind flip, not width
+    with pytest.raises(PlanSchemaError):
+        reg.register("m", model, example, buckets=(1, 2))
+
+
+def test_registry_gate_env_off(quickstart, monkeypatch):
+    reg, model, batch = _registry_and_model(quickstart)
+    example = {k: np.asarray(v)[0] for k, v in batch.items() if k != "Price"}
+    monkeypatch.setenv("REPRO_ANALYZE_GATE", "0")
+    assert reg.register("m", model, example, buckets=(1, 2)) is not None
+
+
+# ---------------------------------------------------------------------------
+# concurrency-fix regression tests (satellite: sweeper, _mark_dead)
+# ---------------------------------------------------------------------------
+
+
+class _SlowPollConn:
+    """Fake Connection whose poll sleeps out its requested timeout (a silent
+    worker) — the pre-fix sweeper blocked dispatch for the whole heartbeat
+    window while holding the worker's lock."""
+
+    def __init__(self):
+        self.sent = []
+
+    def send(self, frame):
+        self.sent.append(frame)
+
+    def poll(self, timeout=0.0):
+        time.sleep(min(float(timeout), 2.0))
+        return False
+
+    def recv(self):  # pragma: no cover - never answered
+        raise EOFError
+
+    def close(self):
+        pass
+
+
+def _executor():
+    """A coordinator with one silent fake worker, built without sockets or
+    the background sweeper thread (``_sweep_once`` is driven by hand)."""
+    from repro.ft import Liveness, StragglerMonitor
+    from repro.serve.gateway.multihost import MultiHostExecutor, _Worker
+    from repro.serve.gateway.telemetry import CounterSet
+
+    ex = MultiHostExecutor.__new__(MultiHostExecutor)
+    ex.num_processes = 2
+    ex.heartbeat_s = 5.0
+    ex._mlock = threading.Lock()
+    ex._lock = threading.Lock()
+    ex._workers = {}
+    ex._dead = set()
+    ex._death_reasons = {}
+    ex._degraded_pm = None
+    ex._closed = False
+    ex._clock = time.monotonic
+    ex._shard_lat = {}
+    ex.monitor = StragglerMonitor()
+    ex._ft = CounterSet()
+    w = _Worker(_SlowPollConn(), Liveness(ex.heartbeat_s, ex._clock))
+    ex._workers[1] = w
+    return ex, w
+
+
+def test_sweeper_micro_polls_and_tracks_pending():
+    """Regression (lint fix): ``_sweep_once`` polled the pong for up to
+    ``min(heartbeat_s, 1.0)`` seconds while holding ``w.lock``; every batch
+    for that worker queued behind the sweep.  Now it micro-polls (50ms) and
+    records the owed pong as pending so ``_drain_stale`` consumes it before
+    the socket carries a batch."""
+    ex, w = _executor()
+    # silent past one window (suspect, not dead): the sweep must ping it
+    w.liveness.last = ex._clock() - 1.5 * ex.heartbeat_s
+    t0 = time.monotonic()
+    ex._sweep_once()
+    elapsed = time.monotonic() - t0
+    assert elapsed < 0.5, f"sweep held the worker lock for {elapsed:.2f}s"
+    assert ("ping",) in w.conn.sent
+    assert w.pending and w.pending[0][1] is None  # the owed pong is tracked
+    assert w.alive and not w.lock.locked()
+
+
+def test_sweeper_skips_worker_mid_batch():
+    ex, w = _executor()
+    w.liveness.last = ex._clock() - 1.5 * ex.heartbeat_s
+    with w.lock:  # a dispatch holds the connection
+        t0 = time.monotonic()
+        ex._sweep_once()
+        assert time.monotonic() - t0 < 0.2
+    assert w.conn.sent == []  # never pinged a busy connection
+
+
+class _BlockingCloseConn(_SlowPollConn):
+    def __init__(self, gate):
+        super().__init__()
+        self.gate = gate
+        self.closing = threading.Event()
+
+    def close(self):
+        self.closing.set()
+        self.gate.wait(timeout=5.0)
+
+
+def test_mark_dead_closes_outside_membership_lock():
+    """Regression (lint fix): ``_mark_dead`` closed the worker socket while
+    holding ``_mlock`` — a wedged close stalled every membership read
+    (live_workers, snapshots, reshard-budget checks)."""
+    ex, w = _executor()
+    gate = threading.Event()
+    w.conn = _BlockingCloseConn(gate)
+    t = threading.Thread(target=ex._mark_dead, args=(1, "test"), daemon=True)
+    t.start()
+    assert w.conn.closing.wait(timeout=2.0)
+    # close is in flight: the membership lock must be free
+    got = ex._mlock.acquire(timeout=1.0)
+    try:
+        assert got, "_mlock held across a blocking socket close"
+        assert not w.alive and 1 in ex._dead  # state already updated
+    finally:
+        if got:
+            ex._mlock.release()
+        gate.set()
+        t.join(timeout=5.0)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_lint_only_strict_exits_zero(tmp_path, capsys):
+    import json
+
+    from repro.analyze.__main__ import main
+
+    out = tmp_path / "report.json"
+    rc = main(["--strict", "--skip-plans", "--json", str(out)])
+    assert rc == 0, capsys.readouterr().out
+    data = json.loads(out.read_text())
+    assert data["errors"] == 0 and data["warnings"] == 0
+    assert data["suppressed"] > 0  # the justified sites are on record
