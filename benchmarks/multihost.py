@@ -17,6 +17,12 @@ works and what it costs on the CPU harness, every PR:
                       STRICTLY higher or the row itself raises
   serve_ft_kill_recover_ms  detection -> first degraded-mesh answer latency
                       after a worker kill -9, with zero failed requests
+  mh_transport_pickle_wide  routed round-trip latency of a wide row-local
+                      batch on the inline-pickle data plane (2 processes)
+  mh_transport_shm_wide     the same batch over the shared-memory ring
+                      transport; derived carries the speedup vs pickle and
+                      the bit-identity cross-check against BOTH the pickle
+                      leg and the 1-process in-process reference
 
 ``benchmarks/run.py --smoke`` fails loudly when these rows are missing —
 a refactor that silently stops exercising multi-host (or its fault
@@ -49,6 +55,7 @@ def run(smoke: bool = False) -> None:
     _stream(mh, smoke)
     _serve(mh, smoke)
     _serve_ft(mh, smoke)
+    _transport(mh, smoke)
 
 
 def _stream(mh, smoke: bool) -> None:
@@ -194,4 +201,69 @@ def _serve_ft(mh, smoke: bool) -> None:
         f"recover_ms={recover_ms:.1f} deaths={coord['ft']['worker_deaths']} "
         f"reshards={coord['ft']['reshards']} completed={coord['completed']}/{n} "
         f"failed=0",
+    )
+
+
+def _transport(mh, smoke: bool) -> None:
+    """Data-plane comparison on a wide LTR-shaped batch: the same routed
+    round-trip over inline pickle and over the shared-memory rings.  The
+    bit-identity cross-check (shm == pickle == 1-process, exact) rides
+    along with the measurement, and the shm leg must genuinely have used
+    the ring (negotiated kind, frames flowed, zero inline fallbacks) — a
+    silently-declined negotiation would otherwise record pickle's number
+    under shm's name."""
+    payload = {
+        "rows": 128 if smoke else 256,
+        "width": 16384,  # wide LTR feature block: 64 KiB per row
+        "iters": 8 if smoke else 16,
+        "seed": 24,
+        "narrow_out": True,  # scores come back, not features
+    }
+    ref = mh.launch("transport_roundtrip", 1, payload)[0]
+    legs = {}
+    for kind in ("pickle", "shm"):
+        legs[kind] = mh.launch(
+            "transport_roundtrip", 2, payload,
+            extra_env={
+                "REPRO_MH_TRANSPORT": kind,
+                # the per-worker half block is up to 8 MiB: two slots that
+                # size per direction (request + reply in flight at once is
+                # all the strict request/reply order ever needs)
+                "REPRO_MH_SHM_SLOTS": "2",
+                "REPRO_MH_SHM_SLOT_MB": "16",
+            },
+        )[0]
+        for k in ref["outputs"]:
+            np.testing.assert_array_equal(
+                legs[kind]["outputs"][k], ref["outputs"][k]
+            )
+    wt = legs["shm"]["ft"]["workers"]["process1"]["transport"]
+    if wt["kind"] != "shm" or wt["frames"] == 0 or wt["inline"]:
+        raise RuntimeError(
+            f"shm leg did not ride the ring: transport={wt}"
+        )
+    if legs["shm"]["leaked_shm"]:
+        raise RuntimeError(
+            f"shm segments outlived the executor: {legs['shm']['leaked_shm']}"
+        )
+    # the row value is the SHARD round-trip p50 (dispatch -> reply
+    # consumed): the path the transport owns.  Coordinator-local compute
+    # and output concat are identical across transports and would only
+    # dilute the comparison; wall time rides along in derived.
+    pickle_us = legs["pickle"]["shard_us"]["process1"]["p50_us"]
+    shm_us = legs["shm"]["shard_us"]["process1"]["p50_us"]
+    mb = legs["shm"]["bytes_per_call"] / 2**20
+    emit(
+        "mh_transport_pickle_wide",
+        pickle_us,
+        f"wall_us={legs['pickle']['us_per_call']:.0f} "
+        f"rows={payload['rows']} width={payload['width']} mb_in={mb:.1f}",
+    )
+    emit(
+        "mh_transport_shm_wide",
+        shm_us,
+        f"vs_pickle={pickle_us / max(shm_us, 1e-9):.2f}x "
+        f"wall_us={legs['shm']['us_per_call']:.0f} "
+        f"frames={wt['frames']} inline=0 rows={payload['rows']} "
+        f"width={payload['width']} bit_identical=yes",
     )

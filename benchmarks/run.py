@@ -156,6 +156,7 @@ def main() -> None:
             "stream_mh_",
             "serve_mh_",
             "serve_ft_",
+            "mh_transport_",
             "analyze_repo_clean",
         ):
             if not any(n.startswith(prefix) for n in names):
@@ -179,6 +180,26 @@ def main() -> None:
                     file=sys.stderr,
                 )
                 failures.append(f"pre_fused_{bs}-regression")
+        # shm-transport guard: the zero-copy data plane must never lose to
+        # inline pickle on the wide batch it exists for (the acceptance
+        # target is >=2x; the CI floor is parity, absorbing timer noise on
+        # loaded runners — the row's derived field records the real ratio)
+        shm = by_name.get("mh_transport_shm_wide")
+        pickled = by_name.get("mh_transport_pickle_wide")
+        if shm is None or pickled is None:
+            print(
+                "\nBENCHMARK FAILED: mh_transport_{shm,pickle}_wide row missing",
+                file=sys.stderr,
+            )
+            failures.append("missing-mh_transport_wide")
+        elif shm["us_per_call"] > pickled["us_per_call"]:
+            print(
+                f"\nBENCHMARK FAILED: shm transport ({shm['us_per_call']}us) "
+                f"slower than pickle ({pickled['us_per_call']}us) on the wide "
+                f"batch",
+                file=sys.stderr,
+            )
+            failures.append("mh_transport_shm-regression")
         # observability must stay cheap enough to be on by default: the
         # serving benchmark measures tracing on vs off at equal load and
         # this guard fails the run if the row is missing or the overhead

@@ -40,7 +40,7 @@ BLOCKING_CALL = "lock-blocking-call"
 UNGUARDED_MUTATION = "lock-unguarded-mutation"
 
 #: default scan roots, relative to the package source root
-DEFAULT_SUBDIRS = ("serve/gateway", "ft", "obs")
+DEFAULT_SUBDIRS = ("serve/gateway", "ft", "obs", "transport")
 
 _LOCK_CTORS = {"Lock", "RLock", "Condition", "Semaphore", "BoundedSemaphore"}
 

@@ -75,6 +75,7 @@ import numpy as np
 from repro.obs import envknobs
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
+from repro.transport.frames import ascontiguous
 
 from . import types as T
 
@@ -407,7 +408,13 @@ class PlanRunner:
                     np.concatenate(vals, axis=0)
                     if len(vals) > 1
                     else (
-                        vals[0]
+                        # the single-piece fast path hands the batch's row
+                        # slice through as a VIEW; normalise it to
+                        # C-contiguous here (identity when already so) so a
+                        # downstream multi-host dispatch never serialises a
+                        # strided column — plan-stream shard feeding and the
+                        # gateway see one layout
+                        ascontiguous(vals[0])
                         if vals
                         else np.asarray(group[0][k])[0:0]  # empty block
                     )

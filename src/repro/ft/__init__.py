@@ -1,5 +1,7 @@
-"""Fault tolerance: heartbeats, supervised restart, straggler detection."""
+"""Fault tolerance: heartbeats, supervised restart, straggler detection,
+death-time resource reclamation."""
+from .reclaim import DeathReclaimer
 from .supervisor import Heartbeat, Liveness, Supervisor
 from .straggler import StragglerMonitor
 
-__all__ = ["Heartbeat", "Liveness", "Supervisor", "StragglerMonitor"]
+__all__ = ["DeathReclaimer", "Heartbeat", "Liveness", "Supervisor", "StragglerMonitor"]

@@ -1,0 +1,81 @@
+"""Death-time resource reclamation hooks, keyed by worker.
+
+The multi-host executor owns per-worker resources beyond the socket — a
+shared-memory transport's slot rings and segment — whose cleanup must run
+on EVERY path a worker leaves the fleet by (ping timeout, send failure,
+EOF mid-gather, rejoin replacing a silently-dead connection, orderly
+close).  :class:`DeathReclaimer` centralises that: each resource owner
+registers a callback under the worker's key, and the death paths call
+:meth:`reclaim` exactly once per death without knowing what is behind it.
+
+Reclaim callbacks run with error containment — a failing hook must never
+abort the recovery path that invoked it (recovery is already handling one
+fault; it cannot afford a second) — and reclamation is idempotent: the
+callback is popped before it runs, so racing death paths (sweep vs
+gather) reclaim once.  What a callback should do for a shm transport:
+free the dead worker's in-flight slots (so a wedged ring never blocks a
+rejoin's warmup) and unlink the pair's segment (the dead peer cannot; a
+leaked name outlives both processes).  Resharding needs no slot motion —
+re-homed row blocks are dispatched through the *surviving* workers'
+transports, whose rings are untouched.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, Hashable, Optional
+
+
+class DeathReclaimer:
+    """Registry of per-key cleanup callbacks, fired once on death."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._hooks: Dict[Hashable, Callable[[], Any]] = {}
+        self.reclaims = 0
+        self.errors = 0
+
+    def register(self, key: Hashable, hook: Callable[[], Any]) -> None:
+        """(Re-)register ``key``'s cleanup; a rejoined worker's new
+        transport simply replaces the old entry."""
+        with self._lock:
+            self._hooks[key] = hook
+
+    def forget(self, key: Hashable) -> None:
+        """Drop ``key`` without running its hook (ownership transferred,
+        e.g. an orderly close that already tore the resource down)."""
+        with self._lock:
+            self._hooks.pop(key, None)
+
+    def reclaim(self, key: Hashable) -> Optional[Any]:
+        """Run and drop ``key``'s hook.  Returns the hook's result, or None
+        when no hook is registered (already reclaimed, or nothing to do) or
+        the hook itself failed — reclamation is best-effort by design."""
+        with self._lock:
+            hook = self._hooks.pop(key, None)
+        if hook is None:
+            return None
+        try:
+            out = hook()
+        except Exception:
+            self.errors += 1
+            return None
+        self.reclaims += 1
+        return out
+
+    def reclaim_all(self) -> int:
+        """Run every remaining hook (executor shutdown); returns how many
+        ran."""
+        with self._lock:
+            keys = list(self._hooks)
+        for k in keys:
+            self.reclaim(k)
+        return len(keys)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            registered = len(self._hooks)
+        return {
+            "registered": registered,
+            "reclaims": self.reclaims,
+            "errors": self.errors,
+        }

@@ -125,6 +125,15 @@ register("REPRO_GW_COST_MIN_SAMPLES", "int", 1,
          "Observations a bucket needs before its own histogram is trusted.")
 register("REPRO_GW_COST_FIT", "flag", True,
          "Linear rows->time fallback for unseen buckets.")
+# Multi-host transport
+register("REPRO_MH_TRANSPORT", "str", "pickle",
+         "Shard data-plane wire format: pickle (inline, default) or shm "
+         "(zero-copy shared-memory rings, negotiated per worker).")
+register("REPRO_MH_SHM_SLOTS", "int", 4,
+         "Slots per direction in each worker pair's shared-memory ring.")
+register("REPRO_MH_SHM_SLOT_MB", "float", 4.0,
+         "Payload capacity (MiB) of one shared-memory slot; larger frames "
+         "fall back to inline pickle per frame.")
 # Fault tolerance
 register("REPRO_FT_HEARTBEAT_S", "float", 5.0,
          "Liveness window: suspect after one silent window, dead after two.")

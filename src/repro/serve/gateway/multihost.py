@@ -76,12 +76,19 @@ import jax
 import numpy as np
 
 from repro.core.runner import stage_batch
-from repro.ft import Liveness, StragglerMonitor
+from repro.ft import DeathReclaimer, Liveness, StragglerMonitor
 from repro.obs import flight as obs_flight
 from repro.obs import log as obs_log
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.obs.envknobs import env_flag as _env_flag, env_float as _env_float
+from repro.transport import (
+    PickleTransport,
+    SharedMemoryTransport,
+    WireSpans,
+    ascontiguous,
+    transport_kind,
+)
 
 from .telemetry import CounterSet, LatencySketch
 
@@ -95,24 +102,33 @@ def _ft_debug(msg: str) -> None:
     obs_log.debug("ft", msg)
 
 
-class _WireSpans:
-    """Execute-reply payload wrapper piggybacking worker-side obs spans on
-    the reply frame: ``out`` is the block's output pytree, ``spans`` the
-    finished span tuples recorded while executing it (worker clock).  The
-    coordinator unwraps in ``_consume_reply``, re-bases the timestamps by
-    the worker's estimated clock offset and ingests them — one stitched
-    trace.  Only sent when the coordinator propagated a trace context."""
+# the span-piggyback reply wrapper moved into the transport layer (it is
+# wire format, not routing); the old name stays importable — workers pickle
+# instances across the socket, so both sides must agree on the class
+_WireSpans = WireSpans
 
-    __slots__ = ("out", "spans")
 
-    def __init__(self, out, spans):
-        self.out = out
-        self.spans = spans
+def _part_rows(part) -> int:
+    """Batch-axis length of one output pytree (its first array leaf)."""
+    for leaf in jax.tree.leaves(part):
+        return int(np.shape(leaf)[0]) if np.ndim(leaf) else 1
+    return 0
 
 
 def _concat_outputs(parts: List[Any]):
-    """Concatenate per-process output pytrees along the batch axis."""
+    """Concatenate per-process output pytrees along the batch axis.
+
+    Zero-row parts are elided before concatenating: a degraded mesh with
+    fewer rows than shards produces empty row blocks, and while dispatch
+    skips them, a defensively-executed empty block (or an all-empty batch)
+    must reassemble without np.concatenate ever seeing a 0-row frame —
+    empty parts can disagree on dtype promotion and, for object columns,
+    crash outright.  When EVERY part is empty the first is returned as the
+    canonical empty output (right structure, right dtypes, zero rows)."""
     parts = [p for p in parts if p is not None]
+    if len(parts) > 1:
+        nonempty = [p for p in parts if _part_rows(p)]
+        parts = nonempty or parts[:1]
     if len(parts) == 1:
         return parts[0]
     return jax.tree.map(lambda *xs: np.concatenate(xs, axis=0), *parts)
@@ -127,7 +143,8 @@ class _Worker:
     """Coordinator-side state of one shard worker connection."""
 
     __slots__ = (
-        "conn", "lock", "liveness", "alive", "batches", "pending", "clock_offset",
+        "conn", "lock", "liveness", "alive", "batches", "pending",
+        "clock_offset", "transport",
     )
 
     def __init__(self, conn, liveness: Liveness):
@@ -140,12 +157,18 @@ class _Worker:
         # clock probe (RTT-midpoint): worker span timestamps are shifted by
         # this before ingestion so a stitched trace has one time base
         self.clock_offset = 0.0
-        # (t_send, model_or_None) of requests SENT whose replies were not
-        # consumed — a hedge won the race, or a ping/trace probe missed its
-        # poll window (name None); strict request/reply order means they are
-        # drained FIFO before the connection carries anything else, or the
-        # next execute's recv would consume a stale reply as its own
-        self.pending: List[Tuple[float, Optional[str]]] = []
+        # data-plane codec for this pair; starts on the always-correct
+        # pickle path and is upgraded per worker by shm negotiation
+        self.transport = PickleTransport()
+        # (t_send, model_or_None, slot_token) of requests SENT whose replies
+        # were not consumed — a hedge won the race, or a ping/trace probe
+        # missed its poll window (name None); strict request/reply order
+        # means they are drained FIFO before the connection carries anything
+        # else, or the next execute's recv would consume a stale reply as
+        # its own.  The token is the request's shm slot (None on the inline
+        # paths): released when its reply is consumed OR drained, so a won
+        # hedge can never leak ring capacity
+        self.pending: List[Tuple[float, Optional[str], Optional[int]]] = []
 
 
 class MultiHostServable:
@@ -221,6 +244,10 @@ class MultiHostExecutor:
       monitor: straggler statistics (default: EWMA alpha 0.3, flag at 1.5x
         the warm-fleet median after 3 warm steps).
       clock: time source for liveness/timing bookkeeping (injectable).
+      transport: data-plane wire format, ``"pickle"`` or ``"shm"``
+        (``REPRO_MH_TRANSPORT``, default pickle).  ``shm`` is negotiated
+        per worker at attach/rejoin; a worker that cannot map the segment
+        stays on pickle — mixed fleets serve bit-identically.
     """
 
     def __init__(
@@ -232,6 +259,7 @@ class MultiHostExecutor:
         max_reshards: Optional[int] = None,
         monitor: Optional[StragglerMonitor] = None,
         clock=time.perf_counter,
+        transport: Optional[str] = None,
     ):
         if process_mesh.process_id != 0:
             raise ValueError("the gateway coordinator must be process 0")
@@ -254,8 +282,20 @@ class MultiHostExecutor:
             alpha=0.3, threshold=1.5, warmup_steps=3
         )
         self._clock = clock
+        self.transport_kind = transport_kind(transport)
+        # death-time transport teardown (slot reclaim + segment unlink) runs
+        # through one registry so every death path — ping timeout, send
+        # failure, EOF mid-gather, rejoin replacement, close — frees a dead
+        # worker's in-flight slots exactly once
+        self._reclaimer = DeathReclaimer()
         self._local: Dict[str, Tuple[Any, Any]] = {}
         self._examples: Dict[str, Tuple[Dict[str, np.ndarray], Tuple[int, ...]]] = {}
+        # rejoin warm frames, keyed (model, start, stop): the example block
+        # and its pickled wire frame are invariant per (model, row block),
+        # so re-encoding them on every rejoin was pure waste — invalidated
+        # by set_example
+        self._warm_blocks: Dict[Tuple[str, int, int], Dict[str, np.ndarray]] = {}
+        self._warm_wire: Dict[Tuple[str, int, int], bytes] = {}
         self._sharding = sharding
         self._workers: Dict[int, _Worker] = {}
         self._dead: set = set()
@@ -299,6 +339,11 @@ class MultiHostExecutor:
             {k: np.asarray(v) for k, v in example.items()},
             tuple(int(b) for b in buckets),
         )
+        # the cached warm frames were built from the previous example
+        for key in [k for k in self._warm_blocks if k[0] == name]:
+            del self._warm_blocks[key]
+        for key in [k for k in self._warm_wire if k[0] == name]:
+            del self._warm_wire[key]
 
     def attach(self, process_id: int, conn) -> None:
         """Adopt an accepted worker connection.  Before the initial roster is
@@ -322,8 +367,65 @@ class MultiHostExecutor:
         if existing is None:
             with w.lock:
                 self._probe_clock_locked(w)
+                self._negotiate_transport_locked(pid, w)
             return
         self._maybe_rejoin(pid, conn)
+
+    def _negotiate_transport_locked(self, pid: int, w: _Worker) -> None:  # analyze: allow(lock-blocking-call,lock-unguarded-mutation) attach/rejoin negotiation: caller holds w.lock for the whole request/reply pair and the transport swap
+        """Upgrade this pair to the shm data plane when configured.  The
+        coordinator creates the segment and offers it; a worker that cannot
+        map it (cross-machine, exhausted /dev/shm) declines and the pair
+        stays on pickle — per-worker, silently, correctly.  Caller holds
+        ``w.lock``; the connection must be idle (any outstanding probe reply
+        is drained first, or the attach ack would be misread as it)."""
+        if self.transport_kind != "shm":
+            return
+        if w.pending and not self._drain_stale(pid, w):
+            _ft_debug(
+                f"process {pid}: connection busy at shm negotiation; staying on pickle"
+            )
+            return
+        if not w.alive:
+            return
+        try:
+            t = SharedMemoryTransport.create()
+        except (OSError, ValueError) as e:
+            _ft_debug(f"shm segment creation failed ({e}); staying on pickle")
+            return
+        try:
+            w.conn.send(("shm_attach", t.handshake()))
+            if not w.conn.poll(self.probe_poll_s):
+                # a fresh, idle worker that cannot ack a tiny control frame
+                # within the probe window is not a worker to route to — and
+                # its late ack would desync which transport each side thinks
+                # is active, so death (rejoinable) beats limping on
+                raise OSError("no shm_attach ack within the probe window")
+            status, payload = w.conn.recv()
+            w.liveness.beat()
+        except (OSError, EOFError, BrokenPipeError, ValueError) as e:
+            t.close(unlink=True)
+            self._mark_dead(pid, f"shm negotiation failed: {e}")
+            return
+        if status != "ok":
+            t.close(unlink=True)
+            _ft_debug(f"process {pid} declined shm ({payload}); staying on pickle")
+            return
+        w.transport = t
+        self._reclaimer.register(pid, self._transport_reaper(t))
+        _ft_debug(f"process {pid} attached shm segment {t.name}")
+
+    @staticmethod
+    def _transport_reaper(t):
+        """Death hook for one worker's shm transport: free its in-flight
+        slots (a wedged ring must never block a rejoin) and unlink the
+        segment (the dead peer cannot)."""
+
+        def _reap():
+            stuck = t.reclaim()
+            t.close(unlink=True)
+            return stuck
+
+        return _reap
 
     def _probe_clock_locked(self, w: _Worker) -> None:  # analyze: allow(lock-unguarded-mutation) caller holds w.lock for the whole clock exchange
         """Estimate the worker's monotonic-clock offset (coordinator minus
@@ -341,7 +443,7 @@ class MultiHostExecutor:
             # so it is serving; on a miss the offset stays 0 (spans merely
             # unaligned) rather than stalling attach for the probe window
             if not w.conn.poll(min(self.heartbeat_s, 1.0)):
-                w.pending.append((t0, None))
+                w.pending.append((t0, None, None))
                 return
             status, payload = w.conn.recv()
             t1 = self._clock()
@@ -376,7 +478,7 @@ class MultiHostExecutor:
                 )
         self._rejoin(pid, conn)
 
-    def _rejoin(self, pid: int, conn) -> None:  # analyze: allow(lock-blocking-call) rejoin swap/warm protocol: the socket must be exclusively held until the worker is warm or declared dead
+    def _rejoin(self, pid: int, conn) -> None:  # analyze: allow(lock-blocking-call,lock-unguarded-mutation) rejoin swap/warm protocol: w.lock is held for the whole exchange, so the transport/pending swaps are serialized
         """Re-adopt a returned worker: swap the connection, re-answer the
         trace probe, warm it with its block of each registered example, and
         only then mark it live (never route to a cold restart)."""
@@ -386,6 +488,12 @@ class MultiHostExecutor:
                 w.conn.close()
             except (OSError, ValueError):
                 pass
+            # the previous incarnation's transport is dead with it: free any
+            # slots its in-flight frames held and unlink its segment (a
+            # rejoin that replaced a silently-dead connection is a death
+            # path too — _mark_dead may never have run)
+            self._reclaimer.reclaim(pid)
+            w.transport = PickleTransport()
             w.conn = conn
             w.pending.clear()
             try:
@@ -394,9 +502,13 @@ class MultiHostExecutor:
                     if not conn.poll(self.probe_poll_s):
                         raise OSError("no trace-probe reply from rejoined worker")
                     conn.recv()
-                    warm = self._warm_block(name, pid)
-                    if warm is not None:
-                        conn.send(("execute", name, warm))
+                    wire = self._warm_wire_frame(name, pid)
+                    if wire is not None:
+                        # the pre-pickled frame: warm bytes are invariant
+                        # per (model, block), so rejoin N re-sends the bytes
+                        # rejoin 1 encoded instead of re-pickling the full
+                        # example block every time
+                        conn.send_bytes(wire)
                         if not conn.poll(max(4 * self.heartbeat_s, 30.0)):
                             raise OSError("no warmup reply from rejoined worker")
                         status, payload = conn.recv()
@@ -413,6 +525,9 @@ class MultiHostExecutor:
             w.alive = True
             w.batches = 0
             w.liveness = Liveness(self.heartbeat_s, self._clock)
+            self._negotiate_transport_locked(pid, w)
+            if not w.alive:
+                return  # negotiation declared it dead; a later dial-in may retry
         with self._mlock:
             self._dead.discard(pid)
             self._death_reasons.pop(pid, None)
@@ -424,7 +539,8 @@ class MultiHostExecutor:
     def _warm_block(self, name: str, pid: int) -> Optional[Dict[str, np.ndarray]]:
         """This worker's row block of the largest registered bucket, built
         from the example row — the shape rotation will actually route to it
-        under the healthy mesh."""
+        under the healthy mesh.  Cached per (model, block): every rejoin of
+        any worker owning the same block reuses one materialisation."""
         ex = self._examples.get(name)
         if ex is None:
             return None
@@ -433,7 +549,32 @@ class MultiHostExecutor:
         s, e = blocks[pid]
         if e <= s:
             return None
-        return {k: np.repeat(v[None], e - s, axis=0) for k, v in example.items()}
+        key = (name, s, e)
+        block = self._warm_blocks.get(key)
+        if block is None:
+            block = self._warm_blocks.setdefault(
+                key, {k: np.repeat(v[None], e - s, axis=0) for k, v in example.items()}
+            )
+        return block
+
+    def _warm_wire_frame(self, name: str, pid: int) -> Optional[bytes]:
+        """The PICKLED warm execute frame for this worker's block, cached
+        per (model, block) and invalidated by :meth:`set_example` — rejoin
+        warms always travel inline (the rejoining pair is on the pickle
+        transport until shm is renegotiated afterwards)."""
+        block = self._warm_block(name, pid)
+        if block is None:
+            return None
+        blocks = self._blocks_for(self.pm, max(self._examples[name][1]))
+        key = (name,) + blocks[pid]
+        wire = self._warm_wire.get(key)
+        if wire is None:
+            from multiprocessing.reduction import ForkingPickler
+
+            wire = self._warm_wire.setdefault(
+                key, bytes(ForkingPickler.dumps(("execute", name, block)))
+            )
+        return wire
 
     @property
     def connected(self) -> bool:
@@ -500,11 +641,21 @@ class MultiHostExecutor:
         self._events.last = ev
         n = int(next(iter(host_cols.values())).shape[0])
         blocks = self._process_blocks(n)
+        # normalise every block to C-contiguous ONCE at slicing time: a row
+        # slice of a padded superbatch can be a strided view, which pickle
+        # serialises via a gather and the shm writer would have to copy per
+        # leaf anyway — both transports now see one layout, and an
+        # already-contiguous slice passes through untouched (no copy)
         host_blocks = {
-            p: {k: v[s:e] for k, v in host_cols.items()}
+            p: {k: ascontiguous(v[s:e]) for k, v in host_cols.items()}
             for p, (s, e) in enumerate(blocks)
             if e > s
         }
+        if not host_blocks:
+            # an all-empty batch (zero rows) carves no blocks anywhere:
+            # execute the empty frame locally so output structure/dtypes
+            # are preserved without touching the wire
+            return self._run_local(name, host_cols)
         parts: Dict[int, Any] = {}
         routed: List[int] = []
         absorbed: List[int] = []
@@ -553,11 +704,12 @@ class MultiHostExecutor:
                 )
                 try:
                     t_send[p] = self._clock()
-                    frame = ("execute", name, host_blocks[p])
+                    payload, token = w.transport.encode_request(host_blocks[p])
+                    frame = ("execute", name, payload)
                     if sp.sampled:
                         frame = frame + ((sp.trace_id, sp.span_id),)
                     w.conn.send(frame)
-                    w.pending.append((t_send[p], name))
+                    w.pending.append((t_send[p], name, token))
                     shard_spans[p] = sp
                     routed.append(p)
                 except (OSError, BrokenPipeError, ValueError):
@@ -678,7 +830,9 @@ class MultiHostExecutor:
     def _consume_reply(self, p, w, name, t0):  # analyze: allow(lock-unguarded-mutation) caller holds w.lock (dispatch/gather path)
         status, payload = w.conn.recv()
         if w.pending:
-            w.pending.pop(0)
+            # the reply is consumed: its request slot is provably done (the
+            # worker read the request before it could answer) — release it
+            w.transport.release(w.pending.pop(0)[2])
         dt = self._clock() - t0
         self._shard_sketch(name, p).record(dt)
         self.monitor.report(f"process{p}", dt)
@@ -688,12 +842,15 @@ class MultiHostExecutor:
                 f"worker process {p} failed on model {name!r}: {payload}"
             )
         w.batches += 1
-        if isinstance(payload, _WireSpans):
+        # decode under w.lock: a shm reply slot may be overwritten once the
+        # connection carries the next frame, so the output must own its
+        # memory before the lock is released
+        out, spans = w.transport.decode_reply(payload)
+        if spans:
             # worker-side spans, re-based onto the coordinator's clock by
             # the offset estimated at attach — the stitched half of the tree
-            obs_trace.get_recorder().ingest(payload.spans, offset=w.clock_offset)
-            payload = payload.out
-        return payload, None
+            obs_trace.get_recorder().ingest(spans, offset=w.clock_offset)
+        return out, None
 
     def _drain_stale(self, p, w) -> bool:  # analyze: allow(lock-unguarded-mutation) caller holds w.lock (dispatch, sweep and probe paths)
         """Consume replies left over from won hedges and from ping/trace
@@ -703,12 +860,16 @@ class MultiHostExecutor:
             try:
                 if not w.conn.poll(0):
                     return False
-                t0, name = w.pending[0]
+                t0, name, token = w.pending[0]
                 status, payload = w.conn.recv()
             except (OSError, EOFError, BrokenPipeError):
                 self._mark_dead(p, "connection lost draining stale replies")
                 return False
             w.pending.pop(0)
+            # a drained reply is never decoded (its slot bytes are never
+            # mapped), but its REQUEST slot must go back to the ring or a
+            # few won hedges would exhaust it
+            w.transport.release(token)
             w.liveness.beat()
             if name is None:
                 continue  # late probe reply: consume only, no shard stats
@@ -754,6 +915,12 @@ class MultiHostExecutor:
             conn.close()
         except (OSError, ValueError):
             pass
+        # transport teardown rides the same outside-the-lock rule: reclaim
+        # frees the dead pair's in-flight slots and unlinks its segment —
+        # run once per death, whichever path got here first
+        stuck = self._reclaimer.reclaim(p)
+        if stuck:
+            self._ft.inc("slots_reclaimed", stuck)
         self._ft.inc("worker_deaths")
         self._ft.inc("reshards")
         self._ft.set("last_death_t", self._clock())
@@ -819,7 +986,7 @@ class MultiHostExecutor:
                         # later reply on it is off-by-one — track it so
                         # _drain_stale consumes it first (a suspect worker
                         # keeps its socket; _mark_dead clears pending)
-                        w.pending.append((t_ping, None))
+                        w.pending.append((t_ping, None, None))
                         if w.liveness.state() == "dead":
                             self._mark_dead(p, "unanswered ping")
                 except (OSError, EOFError, BrokenPipeError, ValueError):
@@ -859,6 +1026,7 @@ class MultiHostExecutor:
                     "age_ms": round(w.liveness.age() * 1e3, 1),
                     "batches": w.batches,
                     "outstanding": len(w.pending),
+                    "transport": w.transport.stats(),
                 }
                 for p, w in sorted(self._workers.items())
             }
@@ -869,6 +1037,10 @@ class MultiHostExecutor:
             "dead": dead,
             "death_reasons": reasons,
             "flagged": list(self.monitor.flagged),
+            "transport": {
+                "configured": self.transport_kind,
+                "reclaimer": self._reclaimer.snapshot(),
+            },
         }
         out.update(self._ft.snapshot())
         return out
@@ -889,7 +1061,7 @@ class MultiHostExecutor:
                         # _drain_stale consumes it before the next batch
                         # (untracked, it would be read as that batch's
                         # reply and desync the connection)
-                        w.pending.append((t_probe, None))
+                        w.pending.append((t_probe, None, None))
                         continue
                     status, payload = w.conn.recv()
                 except (OSError, EOFError, BrokenPipeError, ValueError):
@@ -916,7 +1088,7 @@ class MultiHostExecutor:
                     try:
                         if w.conn.poll(0.05):
                             w.conn.recv()
-                            w.pending.pop(0)
+                            w.transport.release(w.pending.pop(0)[2])
                     except (OSError, EOFError, BrokenPipeError):
                         w.pending.clear()
                         break
@@ -927,8 +1099,17 @@ class MultiHostExecutor:
             except (OSError, EOFError, BrokenPipeError, ValueError):
                 pass
             finally:
+                # orderly teardown owns the segment directly (the worker has
+                # acked the drain, or had its chance): unlink here and drop
+                # the death hook so nothing double-reclaims
+                self._reclaimer.forget(p)
+                w.transport.close(unlink=True)
                 if got:
                     w.lock.release()
+        # backstop: anything still registered (workers that died before
+        # close, races with the accept loop) is reclaimed now — no segment
+        # may outlive the executor
+        self._reclaimer.reclaim_all()
         with self._mlock:
             self._workers.clear()
             self._dead.clear()
@@ -1080,6 +1261,9 @@ class ShardServer:
         self._sharding = sharding
         self._fns: Dict[str, Tuple[Any, Any]] = {}
         self.shutdown_received = False
+        # data-plane codec: every connection starts on pickle and may be
+        # upgraded by the coordinator's shm_attach negotiation
+        self.transport = PickleTransport()
         # spans this worker records carry its mesh process id, so the
         # coordinator's stitched tree attributes work to the right process
         obs_trace.get_recorder().process = process_mesh.process_id
@@ -1128,13 +1312,30 @@ class ShardServer:
         except (OSError, EOFError, BrokenPipeError, ValueError):
             return False
 
-    def serve(self, conn) -> int:
+    def serve(self, conn) -> int:  # analyze: allow(lock-unguarded-mutation) worker side is single-threaded per connection; 'transport' is lock-guarded only on the coordinator
+        # each connection negotiates its transport from scratch: a re-dial
+        # after a severed connection must not reply through a stale shm
+        # segment the coordinator has already reclaimed
+        self.transport.close()
+        self.transport = PickleTransport()
+        try:
+            return self._serve_loop(conn)
+        finally:
+            # drop the mapping (never the name: the coordinator owns the
+            # unlink) so a supervised restart leaks nothing
+            self.transport.close()
+            self.transport = PickleTransport()
+
+    def _serve_loop(self, conn) -> int:  # analyze: allow(lock-unguarded-mutation) worker side is single-threaded per connection; 'transport' is lock-guarded only on the coordinator
         batches = 0
         while True:
             try:
                 msg = conn.recv()
             except (EOFError, OSError):
                 return batches
+            # ANY frame arriving proves the coordinator consumed (or
+            # deliberately dropped) the previous reply: its slot is free
+            self.transport.note_incoming()
             if msg[0] in ("close", "shutdown"):
                 self.shutdown_received = True
                 if msg[0] == "shutdown":
@@ -1155,6 +1356,23 @@ class ShardServer:
                 ):
                     return batches
                 continue
+            if msg[0] == "shm_attach":
+                # transport negotiation: map the offered segment, or decline
+                # and stay on pickle (the coordinator treats a decline as
+                # per-worker fallback, not an error)
+                try:
+                    t = SharedMemoryTransport.attach(**msg[1])
+                except Exception as e:
+                    if not self._safe_send(
+                        conn, ("error", f"{type(e).__name__}: {e}")
+                    ):
+                        return batches
+                    continue
+                self.transport.close()
+                self.transport = t
+                if not self._safe_send(conn, ("ok", "shm")):
+                    return batches
+                continue
             if msg[0] == "traces":
                 _, traces = self._fns.get(msg[1], (None, None))
                 if not self._safe_send(
@@ -1166,13 +1384,15 @@ class ShardServer:
                 if not self._safe_send(conn, ("error", f"unknown message {msg[0]!r}")):
                     return batches
                 continue
-            name, block = msg[1], msg[2]
+            name = msg[1]
             # optional 4th element: the coordinator's (trace_id, span_id) —
             # absent when tracing is off/unsampled (and from old coordinators)
             ctx = msg[3] if len(msg) > 3 else None
             try:
+                block = self.transport.decode_request(msg[2])
                 fn, _ = self._fns[name]
                 rec = obs_trace.get_recorder()
+                spans = None
                 if ctx is not None and rec.enabled:
                     with rec.capture() as cap:
                         with rec.span(
@@ -1184,11 +1404,13 @@ class ShardServer:
                             )
                     self.fault_hook(name, batches)
                     # piggyback this batch's worker spans on the reply
-                    out = _WireSpans(out, [s.as_tuple() for s in cap])
+                    spans = [s.as_tuple() for s in cap]
                 else:
                     out = jax.device_get(fn(stage_batch(block, self._sharding)))
                     self.fault_hook(name, batches)
-                if not self._safe_send(conn, ("ok", out)):
+                if not self._safe_send(
+                    conn, ("ok", self.transport.encode_reply(out, spans))
+                ):
                     return batches
                 batches += 1
             except _DropConnection:

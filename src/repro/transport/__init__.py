@@ -1,0 +1,84 @@
+"""Pluggable shard-frame transport for the multi-host serving tier.
+
+The coordinator↔worker protocol of :mod:`repro.serve.gateway.multihost` is
+two planes with very different needs:
+
+* the **control plane** — hellos, pings, clock/trace probes, shutdown acks,
+  execute/reply *headers* — is tiny, latency-tolerant and stays on the
+  existing ``multiprocessing.connection`` socket (length-prefixed pickle,
+  authkey-authenticated, strictly ordered);
+* the **data plane** — the numpy column blocks of every routed batch and
+  the output pytrees coming back — is the hot path: under the pickle
+  transport each shard crosses the socket as a serialized copy (pickle
+  buffer → kernel → peer buffer → unpickle allocation), the redundant
+  serialize/copy tax the tabular-preprocessing literature identifies as the
+  dominant input-pipeline cost.
+
+This package makes the data plane pluggable behind the :class:`Transport`
+protocol:
+
+* :class:`PickleTransport` — the default-correct fallback: payloads ride
+  inline in the pickled control frame, byte-for-byte the pre-transport wire
+  format.  Works across machines.
+* :class:`SharedMemoryTransport` — the zero-copy fast path: a
+  ``multiprocessing.shared_memory`` segment per worker pair, split into a
+  request ring and a reply ring of fixed-size slots.  Numpy columns are
+  written **in place** into a slot (one memcpy, no serialization) and the
+  control frame carries only a compact :class:`~repro.transport.frames.
+  ShmFrame` header (per-leaf dtype/shape/offset + slot coordinates).  The
+  receiver maps the slot and reads the columns back in place.  Frames
+  larger than a slot (or arriving when the ring is exhausted) fall back to
+  inline pickle per frame — bounded, counted, never wrong.
+
+Selection: ``REPRO_MH_TRANSPORT=pickle|shm`` (or the executor's
+``transport=`` argument).  The shm path is *negotiated* per worker at
+attach: the coordinator creates the segment and sends a ``shm_attach``
+control frame; a worker that cannot map it (cross-machine, exhausted
+``/dev/shm``) answers with an error and that worker pair silently runs on
+pickle — mixed fleets are fine.
+
+Slot lifecycle (see :class:`~repro.transport.ring.SlotRing`): the strict
+one-in-flight request/reply discipline of the socket protocol means a
+request slot is only reusable once its reply has been consumed (the worker
+has necessarily finished reading the request before it replies), and a
+reply slot once the next request lands (the coordinator drains every reply
+— real, hedged-stale or probe — before the connection carries anything
+else).  Every slot write stamps a generation; readers verify it, so a
+lifecycle violation surfaces as a loud :class:`TransportDesyncError`
+instead of silent corruption.  On worker death the coordinator *reclaims*
+the pair's ring — in-flight slots are freed and the segment unlinked via
+the :class:`~repro.ft.DeathReclaimer` hook — so a dead worker's in-flight
+slot never wedges the ring, and a reshard re-homes that worker's blocks to
+survivors whose own rings are untouched.
+"""
+from .frames import (
+    FrameTooLargeError,
+    ShmFrame,
+    TransportDesyncError,
+    WireSpans,
+    ascontiguous,
+    flatten_payload,
+    unflatten_payload,
+)
+from .ring import SlotRing
+from .transports import (
+    PickleTransport,
+    SharedMemoryTransport,
+    Transport,
+    transport_kind,
+)
+
+__all__ = [
+    "Transport",
+    "PickleTransport",
+    "SharedMemoryTransport",
+    "SlotRing",
+    "ShmFrame",
+    "WireSpans",
+    "ascontiguous",
+    "flatten_payload",
+    "unflatten_payload",
+    "transport_kind",
+    "TransportDesyncError",
+    "FrameTooLargeError",
+]

@@ -1,0 +1,181 @@
+"""Frame codec: payload pytrees ⇄ flat numpy leaves + a picklable spec.
+
+The shard payloads this tier moves are numpy-column dicts (requests) and
+small pytrees of numpy arrays (replies).  The codec here flattens either
+into ``(leaves, spec)`` where every leaf is an ndarray and ``spec`` is a
+compact picklable structure descriptor — dicts keep sorted-key order, so
+encode/decode round-trips bit-identically and deterministically on both
+ends of the wire.  Non-array leaves (python scalars, None) ride inside the
+spec itself; they are control-plane sized.
+
+Kept numpy-only on purpose: both sides of the multi-host socket import
+this before jax is necessarily initialised, and the transport must never
+drag a device runtime into a worker that only ships bytes.
+"""
+from __future__ import annotations
+
+import numpy as np
+from typing import Any, List, Optional, Tuple
+
+
+class TransportDesyncError(RuntimeError):
+    """A shm slot's generation stamp does not match its frame header: the
+    slot was overwritten while a reader still held its descriptor, i.e. the
+    strict request/reply slot lifecycle was violated.  Always a bug — the
+    transport raises loudly instead of returning silently wrong bytes."""
+
+
+class FrameTooLargeError(RuntimeError):
+    """A payload exceeds the slot size (or the ring is exhausted); callers
+    fall back to the inline-pickle path for that frame."""
+
+
+class WireSpans:
+    """Execute-reply wrapper piggybacking worker-side obs spans on the reply
+    frame: ``out`` is the block's output pytree, ``spans`` the finished span
+    tuples recorded while executing it (worker clock).  The pickle transport
+    ships it as-is; the shm transport carries ``spans`` in the frame header
+    and only ``out``'s leaves through the ring."""
+
+    __slots__ = ("out", "spans")
+
+    def __init__(self, out, spans):
+        self.out = out
+        self.spans = spans
+
+
+def ascontiguous(a: np.ndarray) -> np.ndarray:
+    """``a`` itself when already C-contiguous, else a C-contiguous copy.
+
+    Dispatch normalises every column block through this at slicing time, so
+    both transports see one layout: the pickle path stops serialising
+    strided views (numpy pickles them via a gather) and the shm path writes
+    with a single straight memcpy.  The identity fast path is load-bearing —
+    tests assert no per-dispatch copy for already-contiguous blocks."""
+    if isinstance(a, np.ndarray) and not a.flags.c_contiguous:
+        return np.ascontiguousarray(a)
+    return a
+
+
+# -- pytree flatten (numpy-only; no jax treedefs cross the wire) ------------
+
+
+def flatten_payload(obj: Any) -> Tuple[List[np.ndarray], Any]:
+    """Flatten a payload pytree (dict/list/tuple nests of ndarrays plus
+    arbitrary small non-array leaves) into ``(leaves, spec)``."""
+    leaves: List[np.ndarray] = []
+
+    def walk(o):
+        if isinstance(o, np.ndarray):
+            leaves.append(o)
+            return ("a", len(leaves) - 1)
+        if isinstance(o, dict):
+            return ("d", [(k, walk(o[k])) for k in sorted(o)])
+        if isinstance(o, tuple):
+            return ("t", [walk(v) for v in o])
+        if isinstance(o, list):
+            return ("l", [walk(v) for v in o])
+        return ("o", o)  # scalar / None / small object: rides in the spec
+
+    return leaves, walk(obj)
+
+
+def unflatten_payload(spec: Any, leaves: List[np.ndarray]) -> Any:
+    tag, val = spec
+    if tag == "a":
+        return leaves[val]
+    if tag == "d":
+        return {k: unflatten_payload(s, leaves) for k, s in val}
+    if tag == "t":
+        return tuple(unflatten_payload(s, leaves) for s in val)
+    if tag == "l":
+        return [unflatten_payload(s, leaves) for s in val]
+    return val
+
+
+_ALIGN = 64  # leaf offsets are 64B-aligned: jax CPU zero-copy wants it
+
+
+def _aligned(n: int) -> int:
+    return (n + _ALIGN - 1) & ~(_ALIGN - 1)
+
+
+def measure(leaves: List[np.ndarray]) -> int:
+    """Slot bytes needed to hold ``leaves`` at aligned offsets."""
+    total = 0
+    for a in leaves:
+        total = _aligned(total) + a.nbytes
+    return total
+
+
+class ShmFrame:
+    """Compact, picklable header of one shm-resident payload.
+
+    ``region``/``slot``/``generation`` locate (and validate) the slot;
+    ``entries`` is one ``(dtype_str, shape, offset)`` per array leaf in
+    flatten order; ``spec`` rebuilds the pytree; ``spans`` optionally
+    carries worker-side obs span tuples (control-plane sized); ``inline``
+    holds the whole payload instead when the slot path was unusable
+    (oversized frame / exhausted ring) — the per-frame pickle fallback."""
+
+    __slots__ = ("region", "slot", "generation", "entries", "spec", "spans", "inline")
+
+    def __init__(self, region, slot, generation, entries, spec, spans=None, inline=None):
+        self.region = region
+        self.slot = slot
+        self.generation = generation
+        self.entries = entries
+        self.spec = spec
+        self.spans = spans
+        self.inline = inline
+
+    def __getstate__(self):
+        return (self.region, self.slot, self.generation, self.entries,
+                self.spec, self.spans, self.inline)
+
+    def __setstate__(self, st):
+        (self.region, self.slot, self.generation, self.entries,
+         self.spec, self.spans, self.inline) = st
+
+    @property
+    def nbytes(self) -> int:
+        return sum(
+            int(np.prod(shape, dtype=np.int64)) * np.dtype(dt).itemsize
+            for dt, shape, _ in self.entries
+        )
+
+
+def write_leaves(buf: memoryview, leaves: List[np.ndarray]) -> List[Tuple[str, tuple, int]]:
+    """Write ``leaves`` in place at aligned offsets into ``buf``; returns the
+    frame entries.  One straight memcpy per leaf — callers pass C-contiguous
+    arrays (see :func:`ascontiguous`)."""
+    entries: List[Tuple[str, tuple, int]] = []
+    off = 0
+    for a in leaves:
+        off = _aligned(off)
+        if a.nbytes:
+            dst = np.frombuffer(buf, dtype=np.uint8, count=a.nbytes, offset=off)
+            dst[:] = np.frombuffer(
+                np.ascontiguousarray(a).data, dtype=np.uint8, count=a.nbytes
+            )
+        entries.append((a.dtype.str, tuple(a.shape), off))
+        off += a.nbytes
+    return entries
+
+
+def read_leaves(
+    buf: memoryview,
+    entries: List[Tuple[str, tuple, int]],
+    copy: bool = True,
+) -> List[np.ndarray]:
+    """Rebuild leaves from a slot buffer.  ``copy=False`` returns views onto
+    the shared slot — valid only while the slot's lifecycle guarantees no
+    overwrite (the worker's request-decode path, where the strict
+    request/reply protocol orders every overwrite after the reply)."""
+    out: List[np.ndarray] = []
+    for dt, shape, off in entries:
+        dtype = np.dtype(dt)
+        n = int(np.prod(shape, dtype=np.int64))
+        a = np.frombuffer(buf, dtype=dtype, count=n, offset=off).reshape(shape)
+        out.append(a.copy() if copy else a)
+    return out

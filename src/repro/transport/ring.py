@@ -1,0 +1,132 @@
+"""Fixed-slot shared-memory ring with generation-stamped slots.
+
+One :class:`SlotRing` manages one *region* (request or reply direction) of
+a worker pair's shared segment: ``nslots`` slots of ``slot_bytes`` each,
+laid out back to back at a region offset.  Each slot begins with a 16-byte
+header — ``(generation: u64, length: u64)`` — followed by the payload area.
+
+The writer side owns allocation: ``acquire`` hands out a free slot and
+bumps its generation; ``commit`` stamps the header after the payload is
+written; ``release`` returns it to the free set once the peer can no
+longer be reading it (see the lifecycle contract in the package
+docstring).  The reader side never allocates — ``read`` maps a committed
+slot and validates the generation stamp against the frame header, raising
+:class:`~repro.transport.frames.TransportDesyncError` on mismatch instead
+of returning overwritten bytes.
+
+``reclaim`` frees every in-flight slot at once — the coordinator calls it
+through the :class:`~repro.ft.DeathReclaimer` when the peer dies, so a
+dead worker's unreleased slot can never wedge the ring for a rejoin.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .frames import FrameTooLargeError, TransportDesyncError
+
+_HEADER = 16  # u64 generation + u64 committed payload length
+
+
+class SlotRing:
+    """One direction's slot ring over a shared-memory buffer.
+
+    Args:
+      buf: the segment's full ``memoryview`` (shared by both regions).
+      offset: byte offset of this region within the segment.
+      nslots: slots in the ring.
+      slot_bytes: payload capacity per slot (header not included).
+    """
+
+    def __init__(self, buf: memoryview, offset: int, nslots: int, slot_bytes: int):
+        self.nslots = int(nslots)
+        self.slot_bytes = int(slot_bytes)
+        self._buf = buf
+        self._offset = int(offset)
+        self._lock = threading.Lock()
+        self._free: List[int] = list(range(self.nslots))
+        self._gen: List[int] = [0] * self.nslots
+        self._inflight: Dict[int, int] = {}  # slot -> generation
+
+    @staticmethod
+    def region_bytes(nslots: int, slot_bytes: int) -> int:
+        return nslots * (slot_bytes + _HEADER)
+
+    def _slot_view(self, idx: int) -> memoryview:
+        start = self._offset + idx * (self.slot_bytes + _HEADER)
+        return self._buf[start : start + self.slot_bytes + _HEADER]
+
+    def _header(self, idx: int) -> np.ndarray:
+        return np.frombuffer(self._slot_view(idx), dtype=np.uint64, count=2)
+
+    # -- writer side -------------------------------------------------------
+
+    def acquire(self, nbytes: int) -> Tuple[int, int, memoryview]:
+        """A free slot able to hold ``nbytes``: ``(slot, generation,
+        payload_view)``.  Raises :class:`FrameTooLargeError` when the frame
+        cannot fit a slot or every slot is in flight — the caller's cue to
+        fall back to an inline-pickle frame."""
+        if nbytes > self.slot_bytes:
+            raise FrameTooLargeError(
+                f"frame of {nbytes} bytes exceeds slot capacity {self.slot_bytes}"
+            )
+        with self._lock:
+            if not self._free:
+                raise FrameTooLargeError(
+                    f"ring exhausted: all {self.nslots} slots in flight"
+                )
+            idx = self._free.pop(0)
+            self._gen[idx] += 1
+            gen = self._gen[idx]
+            self._inflight[idx] = gen
+        view = self._slot_view(idx)
+        return idx, gen, view[_HEADER:]
+
+    def commit(self, idx: int, gen: int, nbytes: int) -> None:
+        """Stamp the slot header after its payload is fully written."""
+        hdr = self._header(idx)
+        hdr[0] = np.uint64(gen)
+        hdr[1] = np.uint64(nbytes)
+
+    def release(self, idx: int) -> None:
+        """Return a slot to the free set (idempotent: a slot reclaimed on a
+        death path may see a late release from a draining caller)."""
+        with self._lock:
+            if idx in self._inflight:
+                del self._inflight[idx]
+                self._free.append(idx)
+
+    def reclaim(self) -> int:
+        """Free every in-flight slot; returns how many were stuck.  The
+        death path: the peer that would have consumed (and thereby
+        released) them is gone."""
+        with self._lock:
+            stuck = len(self._inflight)
+            for idx in list(self._inflight):
+                del self._inflight[idx]
+                self._free.append(idx)
+        return stuck
+
+    @property
+    def in_flight(self) -> int:
+        with self._lock:
+            return len(self._inflight)
+
+    # -- reader side -------------------------------------------------------
+
+    def read(self, idx: int, gen: int) -> memoryview:
+        """Map a committed slot's payload, validating its generation stamp
+        against the frame header — a mismatch means the writer overwrote a
+        slot whose reader had not finished (a lifecycle violation), and the
+        bytes here would be another frame's."""
+        if not 0 <= idx < self.nslots:
+            raise TransportDesyncError(f"slot {idx} out of range 0..{self.nslots - 1}")
+        hdr = self._header(idx)
+        if int(hdr[0]) != int(gen):
+            raise TransportDesyncError(
+                f"slot {idx} generation {int(hdr[0])} != frame generation {gen}: "
+                "slot overwritten while its frame was in flight"
+            )
+        return self._slot_view(idx)[_HEADER : _HEADER + int(hdr[1])]

@@ -1,0 +1,342 @@
+"""The two wire formats behind the :class:`Transport` protocol.
+
+Both transports speak the SAME frame positions on the control socket —
+``("execute", name, <payload>, ctx?)`` out, ``("ok", <payload>)`` back —
+and differ only in what ``<payload>`` is:
+
+* :class:`PickleTransport` — the payload rides inline (the numpy column
+  dict / output pytree itself, replies optionally wrapped in
+  :class:`~repro.transport.frames.WireSpans`).  Byte-for-byte the
+  pre-transport wire format; works across machines; the default.
+* :class:`SharedMemoryTransport` — the payload is a
+  :class:`~repro.transport.frames.ShmFrame` header and the bytes live in a
+  per-worker-pair ``multiprocessing.shared_memory`` segment: a request
+  ring written by the coordinator and read by the worker, and a reply ring
+  written by the worker and read by the coordinator.
+
+Slot lifecycle (the package docstring has the full argument):
+
+* **request slots** are allocated/released by the coordinator — released
+  when the request's reply is consumed (by then the worker has necessarily
+  finished reading the request, because it replied);
+* **reply slots** are allocated by the worker and released when the NEXT
+  control frame arrives on its connection (:meth:`note_incoming`) — the
+  coordinator only sends after draining every outstanding reply, so a new
+  frame proves the previous reply was consumed (or deliberately dropped
+  without ever mapping the slot, as the stale-hedge drain does).
+
+A worker attaches via the ``shm_attach`` negotiation frame; in Python's
+``SharedMemory`` the *attach* side is ALSO registered with the
+``resource_tracker`` (3.10 registers unconditionally), which would
+double-unlink the segment — and spam leak warnings — once the coordinator
+unlinks it, so :meth:`SharedMemoryTransport.attach` immediately
+unregisters the worker side: the coordinator is the one owner of the
+segment's lifetime, and a SIGKILL'd worker leaks nothing.
+"""
+from __future__ import annotations
+
+import os
+import uuid
+from multiprocessing import shared_memory
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.envknobs import env_float as _env_float
+from repro.obs.envknobs import env_int as _env_int
+from repro.obs.envknobs import env_str as _env_str
+
+from .frames import (
+    FrameTooLargeError,
+    ShmFrame,
+    WireSpans,
+    ascontiguous,
+    flatten_payload,
+    measure,
+    read_leaves,
+    unflatten_payload,
+    write_leaves,
+)
+from .ring import SlotRing
+
+TRANSPORT_KINDS = ("pickle", "shm")
+
+
+def transport_kind(override: Optional[str] = None) -> str:
+    """The configured data-plane transport: ``override`` if given, else
+    ``REPRO_MH_TRANSPORT`` (default ``pickle``)."""
+    kind = (override or _env_str("REPRO_MH_TRANSPORT", "pickle")).strip().lower()
+    if kind not in TRANSPORT_KINDS:
+        raise ValueError(
+            f"unknown transport {kind!r}: expected one of {TRANSPORT_KINDS}"
+        )
+    return kind
+
+
+class Transport:
+    """Data-plane codec for one coordinator↔worker pair.
+
+    The coordinator calls :meth:`encode_request` / :meth:`decode_reply` /
+    :meth:`release`; the worker calls :meth:`decode_request` /
+    :meth:`encode_reply` / :meth:`note_incoming`.  The base class IS the
+    pickle transport's behaviour; :class:`SharedMemoryTransport` overrides
+    the payload representation only — the control protocol around it never
+    changes, which is what keeps the two formats interchangeable under
+    hedges, probes, drains and deaths.
+    """
+
+    kind = "pickle"
+
+    # -- coordinator side --------------------------------------------------
+
+    def encode_request(self, payload: Any) -> Tuple[Any, Optional[int]]:
+        """``(wire_payload, slot_token)`` for one request.  The token (None
+        on the inline paths) must be handed back to :meth:`release` once
+        the request's reply has been consumed or abandoned."""
+        return payload, None
+
+    def decode_reply(self, payload: Any) -> Tuple[Any, Optional[list]]:
+        """``(output_pytree, worker_span_tuples_or_None)``."""
+        if isinstance(payload, WireSpans):
+            return payload.out, payload.spans
+        return payload, None
+
+    def release(self, token: Optional[int]) -> None:
+        """Return a request slot to the ring (no-op for ``None`` — inline
+        frames hold no slot)."""
+
+    # -- worker side -------------------------------------------------------
+
+    def decode_request(self, payload: Any) -> Any:
+        return payload
+
+    def encode_reply(self, out: Any, spans: Optional[list] = None) -> Any:
+        return WireSpans(out, spans) if spans is not None else out
+
+    def note_incoming(self) -> None:
+        """Worker hook on EVERY received control frame: the previous reply
+        slot (if any) is now provably consumed — release it."""
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def handshake(self) -> Optional[dict]:
+        """Attach parameters to send the worker, or None when this
+        transport needs no negotiation."""
+        return None
+
+    def reclaim(self) -> int:
+        """Free every in-flight slot (worker-death path); returns the
+        number of slots that were stuck."""
+        return 0
+
+    def close(self, unlink: bool = False) -> None:
+        """Drop the transport's resources.  ``unlink=True`` (coordinator
+        only) also removes the shared segment from the system."""
+
+    def stats(self) -> Dict[str, Any]:
+        return {"kind": self.kind}
+
+
+class PickleTransport(Transport):
+    """Inline-pickle data plane — the default-correct fallback."""
+
+
+class SharedMemoryTransport(Transport):
+    """Zero-copy data plane over one shared segment per worker pair.
+
+    Layout: ``[request ring | reply ring]``, each ``nslots`` slots of
+    ``slot_bytes`` payload (plus the 16-byte per-slot header).  Construct
+    via :meth:`create` (coordinator — owns the segment and its unlink) or
+    :meth:`attach` (worker — maps it and renounces tracker ownership).
+    """
+
+    kind = "shm"
+    NAME_PREFIX = "repro_mh_"
+
+    def __init__(self, shm, name: str, nslots: int, slot_bytes: int, side: str):
+        self.name = name
+        self.nslots = int(nslots)
+        self.slot_bytes = int(slot_bytes)
+        self.side = side  # "coordinator" | "worker"
+        self._shm = shm
+        region = SlotRing.region_bytes(self.nslots, self.slot_bytes)
+        self._req = SlotRing(shm.buf, 0, self.nslots, self.slot_bytes)
+        self._rep = SlotRing(shm.buf, region, self.nslots, self.slot_bytes)
+        self._last_reply_slot: Optional[int] = None
+        self._frames = 0
+        self._inline = 0
+        self._bytes = 0
+        reg = obs_metrics.get_registry()
+        self._c_written = reg.counter("transport.bytes_written")
+        self._c_read = reg.counter("transport.bytes_read")
+        self._c_inline = reg.counter("transport.frames_inline")
+        self._c_frames = reg.counter("transport.frames_shm")
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def create(
+        cls, nslots: Optional[int] = None, slot_bytes: Optional[int] = None
+    ) -> "SharedMemoryTransport":
+        """Coordinator side: create (and own) one segment for one worker
+        pair.  Sizes come from ``REPRO_MH_SHM_SLOTS`` / ``REPRO_MH_SHM_SLOT_MB``
+        unless given."""
+        nslots = int(nslots if nslots is not None else _env_int("REPRO_MH_SHM_SLOTS", 4))
+        if slot_bytes is None:
+            slot_bytes = int(_env_float("REPRO_MH_SHM_SLOT_MB", 4.0) * 2**20)
+        nslots = max(1, nslots)
+        slot_bytes = max(4096, int(slot_bytes))
+        name = f"{cls.NAME_PREFIX}{os.getpid()}_{uuid.uuid4().hex[:8]}"
+        size = 2 * SlotRing.region_bytes(nslots, slot_bytes)
+        shm = shared_memory.SharedMemory(name=name, create=True, size=size)
+        return cls(shm, name, nslots, slot_bytes, "coordinator")
+
+    @classmethod
+    def attach(cls, name: str, slots: int, slot_bytes: int) -> "SharedMemoryTransport":
+        """Worker side: map an existing segment and immediately renounce
+        resource-tracker ownership — Python 3.10 registers attaches too,
+        and a tracker that thinks a worker owns the segment would unlink
+        it (and warn about a leak) behind the coordinator's back."""
+        shm = shared_memory.SharedMemory(name=name, create=False)
+        # the creator embeds its pid in the name: a same-process attach (unit
+        # tests) shares the creator's tracker cache entry and must NOT remove
+        # it, or the creator's unlink-time unregister errors in the tracker
+        creator = name[len(cls.NAME_PREFIX):].split("_", 1)[0]
+        if creator != str(os.getpid()):
+            try:
+                from multiprocessing import resource_tracker
+
+                resource_tracker.unregister(shm._name, "shared_memory")
+            except Exception:
+                pass  # tracker semantics vary by version; the coordinator owns the unlink regardless
+        return cls(shm, name, slots, slot_bytes, "worker")
+
+    def handshake(self) -> dict:
+        return {"name": self.name, "slots": self.nslots, "slot_bytes": self.slot_bytes}
+
+    # -- codec (shared by both directions) ---------------------------------
+
+    def _encode(self, ring: SlotRing, region: str, payload, spans=None):
+        leaves, spec = flatten_payload(payload)
+        leaves = [ascontiguous(a) for a in leaves]
+        nbytes = measure(leaves)
+        rec = obs_trace.get_recorder()
+        with rec.span(
+            "transport.write", component="transport",
+            attrs={"region": region, "bytes": nbytes},
+        ):
+            try:
+                idx, gen, view = ring.acquire(nbytes)
+            except FrameTooLargeError:
+                # oversized frame / exhausted ring: this one frame rides the
+                # socket as inline pickle — bounded, counted, never wrong
+                self._inline += 1
+                self._c_inline.inc()
+                return ShmFrame(region, None, None, None, None,
+                                spans=spans, inline=payload), None
+            entries = write_leaves(view, leaves)
+            ring.commit(idx, gen, nbytes)
+        self._frames += 1
+        self._bytes += nbytes
+        self._c_frames.inc()
+        self._c_written.inc(nbytes)
+        return ShmFrame(region, idx, gen, entries, spec, spans=spans), idx
+
+    def _decode(self, ring: SlotRing, frame: ShmFrame, copy: bool):
+        if frame.inline is not None:
+            return frame.inline
+        rec = obs_trace.get_recorder()
+        with rec.span(
+            "transport.read", component="transport",
+            attrs={"region": frame.region, "bytes": frame.nbytes},
+        ):
+            view = ring.read(frame.slot, frame.generation)
+            leaves = read_leaves(view, frame.entries, copy=copy)
+        self._c_read.inc(frame.nbytes)
+        return unflatten_payload(frame.spec, leaves)
+
+    # -- coordinator side --------------------------------------------------
+
+    def encode_request(self, payload):
+        return self._encode(self._req, "req", payload)
+
+    def decode_reply(self, payload):
+        if isinstance(payload, ShmFrame):
+            # copy=True: the reply slot may be overwritten as soon as this
+            # connection carries another frame — the output must own its
+            # memory before the executor releases the worker's lock
+            return self._decode(self._rep, payload, copy=True), payload.spans
+        return Transport.decode_reply(self, payload)
+
+    def release(self, token: Optional[int]) -> None:
+        ring = self._req
+        if token is not None and ring is not None:  # closed: reclaim already freed it
+            ring.release(token)
+
+    # -- worker side -------------------------------------------------------
+
+    def decode_request(self, payload):
+        if isinstance(payload, ShmFrame):
+            # copy=False: views onto the slot are safe here — the
+            # coordinator cannot release/rewrite a request slot before this
+            # worker's reply is consumed, and the block is only read while
+            # executing it (before the reply is sent)
+            return self._decode(self._req, payload, copy=False)
+        return payload
+
+    def encode_reply(self, out, spans=None):
+        frame, slot = self._encode(self._rep, "rep", out, spans=spans)
+        if slot is not None:
+            self._last_reply_slot = slot
+        return frame
+
+    def note_incoming(self) -> None:
+        if self._last_reply_slot is not None:
+            self._rep.release(self._last_reply_slot)
+            self._last_reply_slot = None
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def reclaim(self) -> int:
+        req, rep = self._req, self._rep
+        stuck = 0
+        if req is not None:
+            stuck += req.reclaim()
+        if rep is not None:
+            stuck += rep.reclaim()
+        return stuck
+
+    def close(self, unlink: bool = False) -> None:
+        self._req = self._rep = None
+        shm, self._shm = self._shm, None
+        if shm is None:
+            return
+        try:
+            shm.close()
+        except BufferError:
+            # live views (worker-side zero-copy decodes not yet collected)
+            # keep the mapping pinned; the mapping dies with the process and
+            # the NAME — the leakable resource — is what unlink removes.
+            # Disarm the handle so __del__ doesn't retry the close and spam
+            # "Exception ignored" at interpreter shutdown.
+            shm._buf = None
+            shm._mmap = None
+        if unlink:
+            try:
+                shm.unlink()
+            except FileNotFoundError:
+                pass
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "kind": self.kind,
+            "segment": self.name,
+            "slots": self.nslots,
+            "slot_bytes": self.slot_bytes,
+            "frames": self._frames,
+            "inline": self._inline,
+            "bytes": self._bytes,
+            "in_flight": (self._req.in_flight if self._req is not None else 0),
+        }

@@ -737,6 +737,129 @@ def gateway_chaos(ctx: MHContext, payload):
     return out
 
 
+def _wide_row_model():
+    """A jitted wide row-local model — purely elementwise (no reductions),
+    so outputs are bit-identical whatever shard widths the rows were
+    computed under; wide in AND out, so both wire directions carry the
+    fat payload the transport benchmark times."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def fn(cols):
+        items = cols["items"]  # (rows, width) f32
+        q = cols["q"]  # (rows,) f32
+        return {
+            "boosted": items * jnp.float32(1.5) + q[:, None],
+            "score": items[:, 0] * jnp.float32(2.0) - q,
+        }
+
+    return fn
+
+
+def _ltr_score_model():
+    """Wide-in narrow-out, the LTR serving shape: a fat feature block rides
+    the wire in and a per-row score comes back.  Explicit column arithmetic
+    only (no axis reductions, whose summation order the compiler may pick
+    per batch shape) keeps outputs bit-stable across shard widths."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def fn(cols):
+        items = cols["items"]
+        q = cols["q"]
+        score = (
+            items[:, 0] * jnp.float32(1.5)
+            + items[:, 1]
+            - items[:, 2] * jnp.float32(0.25)
+            + q
+        )
+        return {"score": score, "rank_key": items[:, 3] % jnp.float32(97.0)}
+
+    return fn
+
+
+def transport_roundtrip(ctx: MHContext, payload):
+    """Direct shard round-trip driver for the transport benchmark and the
+    differential transport tests: the coordinator executes ``iters`` routed
+    batches of a wide row-local model through ``MultiHostExecutor`` (the
+    payload picks the transport), returning the final outputs (bit-identity
+    is asserted by the caller across transports and process counts), the
+    measured per-call latency, the executor's transport/ft snapshot, and a
+    post-close ``/dev/shm`` leak census.  At nproc=1 the same model runs
+    in-process — the reference leg.  ``rows`` below the shard count
+    exercises the empty-block dispatch path end to end."""
+    import os as _os
+    import time as _time
+
+    import numpy as np
+
+    from repro.serve import MultiHostExecutor, ShardServer, accept_workers
+
+    pm = ctx.process_mesh()
+    model = (
+        _ltr_score_model() if payload.get("narrow_out") else _wide_row_model()
+    )
+    if not ctx.is_coordinator:
+        server = ShardServer(pm, {"wide": model})
+        batches = server.connect_and_serve(ctx.coord_address, ctx.authkey)
+        return {"batches": batches}
+
+    rows = int(payload.get("rows", 64))
+    width = int(payload.get("width", 512))
+    iters = int(payload.get("iters", 20))
+    rng = np.random.default_rng(7000 + payload.get("seed", 0))
+    cols = {
+        "items": np.asarray(rng.normal(size=(rows, width)), np.float32),
+        "q": np.asarray(rng.normal(size=(rows,)), np.float32),
+    }
+    ex = None
+    if ctx.num_processes > 1:
+        listener = ctx.listen()
+        ex = MultiHostExecutor(
+            pm, hedge=False, transport=payload.get("transport")
+        )
+        ex.add_model("wide", model)
+        accept_workers(listener, ex, live=False)
+        listener.close()
+
+        def run():
+            return ex.execute("wide", cols)
+
+    else:
+        import jax
+
+        from repro.core.runner import stage_batch
+
+        def run():
+            return jax.device_get(model(stage_batch(cols)))
+
+    out = run()  # compile + first routed round trip
+    t0 = _time.perf_counter()
+    for _ in range(iters):
+        out = run()
+    dt = _time.perf_counter() - t0
+    snap = ex.ft_snapshot() if ex is not None else {}
+    # per-shard round-trip sketches (dispatch -> reply consumed): the
+    # transport benchmark's metric — coordinator-local compute and output
+    # concat, identical across transports, are excluded
+    shard_us = ex.shard_snapshot("wide") if ex is not None else {}
+    if ex is not None:
+        ex.close()
+    leaked = sorted(
+        f for f in _os.listdir("/dev/shm") if f.startswith("repro_mh_")
+    )
+    return {
+        "outputs": {k: np.asarray(v) for k, v in out.items()},
+        "us_per_call": dt / iters * 1e6,
+        "shard_us": shard_us,
+        "bytes_per_call": sum(v.nbytes for v in cols.values()),
+        "ft": snap,
+        "leaked_shm": leaked,
+    }
+
+
 def jaxdist_topology(ctx: MHContext, payload):
     """Real ``jax.distributed`` initialization over fake CPU devices: every
     process sees the global device set, ProcessMesh.from_runtime computes

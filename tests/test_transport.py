@@ -1,0 +1,468 @@
+"""Shard-frame transport: unit coverage plus shm differential legs.
+
+The fast tier (no markers) exercises the pieces in-process: the slot
+ring's generation-stamped lifecycle (acquire/commit/read/release, FIFO
+reuse, desync detection, exhaustion/oversize → inline fallback), the
+numpy frame codec (flatten/unflatten, 64-byte leaf alignment, the
+``ascontiguous`` no-copy identity the dispatch path relies on), a full
+same-process create/attach shm round trip, the death reclaimer, and the
+executor-side transport plumbing that needs no workers (warm-wire cache
+and its ``set_example`` invalidation, zero-row part elision in
+``_concat_outputs``).
+
+The differential legs (``multihost``/``subprocess`` markers) rerun the
+real multi-host streams with ``REPRO_MH_TRANSPORT=shm`` injected into
+every child and assert BIT-IDENTITY against the pickle transport and the
+1-process reference — the same contract tests/test_multihost.py pins for
+pickle.  The ``chaos`` legs kill and drop+rejoin a worker mid-stream
+under shm: recovery must hold AND no ``/dev/shm`` segment may outlive
+the job (the reclaimer owns death-time unlink).
+"""
+import os
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+from multihost import launch  # noqa: E402
+
+from repro.transport import (  # noqa: E402
+    FrameTooLargeError,
+    PickleTransport,
+    SharedMemoryTransport,
+    SlotRing,
+    TransportDesyncError,
+    ascontiguous,
+    flatten_payload,
+    transport_kind,
+    unflatten_payload,
+)
+from repro.transport.frames import read_leaves, write_leaves  # noqa: E402
+
+SHM_ENV = {"REPRO_MH_TRANSPORT": "shm"}
+
+
+def _shm_segments():
+    try:
+        return {f for f in os.listdir("/dev/shm") if f.startswith("repro_mh_")}
+    except OSError:  # /dev/shm-less host: leak checks degrade to no-ops
+        return set()
+
+
+# ---------------------------------------------------------------------------
+# slot ring
+# ---------------------------------------------------------------------------
+
+
+def test_slot_ring_lifecycle_and_fifo_reuse():
+    buf = memoryview(bytearray(SlotRing.region_bytes(2, 256)))
+    ring = SlotRing(buf, 0, 2, 256)
+    idx, gen, payload = ring.acquire(10)
+    payload[:10] = b"0123456789"
+    ring.commit(idx, gen, 10)
+    assert bytes(ring.read(idx, gen)) == b"0123456789"
+    assert ring.in_flight == 1
+    idx2, gen2, _ = ring.acquire(1)
+    assert idx2 != idx
+    ring.release(idx)
+    ring.release(idx)  # idempotent
+    ring.release(idx2)
+    assert ring.in_flight == 0
+    # FIFO free list: the first-released slot is handed out first
+    idx3, gen3, _ = ring.acquire(1)
+    assert idx3 == idx and gen3 > gen  # generation advanced on reuse
+    ring.release(idx3)
+
+
+def test_slot_ring_generation_desync_detected():
+    buf = memoryview(bytearray(SlotRing.region_bytes(1, 128)))
+    ring = SlotRing(buf, 0, 1, 128)
+    idx, gen, _ = ring.acquire(4)
+    ring.commit(idx, gen, 4)
+    ring.release(idx)
+    idx2, gen2, _ = ring.acquire(4)
+    ring.commit(idx2, gen2, 4)
+    with pytest.raises(TransportDesyncError):
+        ring.read(idx, gen)  # stale generation: the slot moved on
+    ring.release(idx2)
+
+
+def test_slot_ring_oversize_exhaustion_and_reclaim():
+    buf = memoryview(bytearray(SlotRing.region_bytes(1, 64)))
+    ring = SlotRing(buf, 0, 1, 64)
+    with pytest.raises(FrameTooLargeError):
+        ring.acquire(65)  # larger than any slot
+    idx, gen, _ = ring.acquire(8)
+    ring.commit(idx, gen, 8)
+    with pytest.raises(FrameTooLargeError):
+        ring.acquire(8)  # ring exhausted
+    assert ring.reclaim() == 1  # death path frees the stuck slot
+    assert ring.in_flight == 0
+    idx2, _, _ = ring.acquire(8)  # usable again
+    ring.release(idx2)
+
+
+# ---------------------------------------------------------------------------
+# frame codec
+# ---------------------------------------------------------------------------
+
+
+def test_flatten_unflatten_round_trip_nested():
+    payload = {
+        "items": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "ids": np.array(["a", "bb", "ccc"]),
+        "nested": {"t": (np.int64(7), [np.ones(2), "tag"]), "none": None},
+    }
+    leaves, spec = flatten_payload(payload)
+    assert all(isinstance(a, np.ndarray) for a in leaves)
+    back = unflatten_payload(spec, leaves)
+    np.testing.assert_array_equal(back["items"], payload["items"])
+    np.testing.assert_array_equal(back["ids"], payload["ids"])
+    assert back["nested"]["t"][0] == 7
+    np.testing.assert_array_equal(back["nested"]["t"][1][0], np.ones(2))
+    assert back["nested"]["t"][1][1] == "tag"
+    assert back["nested"]["none"] is None
+
+
+def test_write_read_leaves_aligned_and_exact():
+    leaves = [
+        np.arange(5, dtype=np.int32),
+        np.random.default_rng(0).normal(size=(3, 7)).astype(np.float32),
+    ]
+    buf = memoryview(bytearray(4096))
+    entries = write_leaves(buf, leaves)
+    for _, _, off in entries:
+        assert off % 64 == 0  # jax-cpu-friendly leaf alignment
+    out = read_leaves(buf, entries, copy=True)
+    for a, b in zip(leaves, out):
+        np.testing.assert_array_equal(a, b)
+    # copy=False views alias the buffer (the worker-side zero-copy read)
+    views = read_leaves(buf, entries, copy=False)
+    buf[entries[0][2]] = 0xFF
+    assert views[0][0] != leaves[0][0]
+
+
+def test_ascontiguous_identity_no_copy_when_contiguous():
+    a = np.arange(24, dtype=np.float32).reshape(6, 4)
+    assert ascontiguous(a) is a  # the dispatch fast path: NO copy
+    rows = a[1:3]  # contiguous row-block view (the block-slicing shape)
+    assert ascontiguous(rows) is rows  # still no copy
+    col = a[:, :2]  # non-contiguous column view: must normalise
+    fixed = ascontiguous(col)
+    assert fixed is not col and fixed.flags["C_CONTIGUOUS"]
+    np.testing.assert_array_equal(fixed, col)
+
+
+# ---------------------------------------------------------------------------
+# transports
+# ---------------------------------------------------------------------------
+
+
+def test_transport_kind_env_and_override(monkeypatch):
+    monkeypatch.delenv("REPRO_MH_TRANSPORT", raising=False)
+    assert transport_kind() == "pickle"
+    monkeypatch.setenv("REPRO_MH_TRANSPORT", "shm")
+    assert transport_kind() == "shm"
+    assert transport_kind("pickle") == "pickle"  # explicit override wins
+    with pytest.raises(ValueError):
+        transport_kind("carrier-pigeon")
+
+
+def test_pickle_transport_is_identity():
+    t = PickleTransport()
+    payload = {"x": np.ones(3)}
+    wire, token = t.encode_request(payload)
+    assert wire is payload and token is None
+    assert t.decode_request(wire) is payload
+    out = {"y": np.zeros(2)}
+    reply = t.encode_reply(out, None)
+    assert reply is out  # no spans: nothing to wrap
+    got, spans = t.decode_reply(reply)
+    assert got is out and spans is None
+    got, spans = t.decode_reply(t.encode_reply(out, [{"name": "s"}]))
+    assert got is out and spans == [{"name": "s"}]
+    assert t.stats()["kind"] == "pickle"
+    t.release(None)
+    t.close(unlink=True)
+
+
+def test_shm_transport_same_process_round_trip():
+    before = _shm_segments()
+    coord = SharedMemoryTransport.create(nslots=2, slot_bytes=1 << 16)
+    worker = SharedMemoryTransport.attach(**coord.handshake())
+    try:
+        payload = {
+            "items": np.random.default_rng(1).normal(size=(8, 32)).astype(np.float32),
+            "q": np.arange(8, dtype=np.float32),
+        }
+        frame, token = coord.encode_request(payload)
+        assert token is not None and frame.inline is None  # rode the ring
+        block = worker.decode_request(frame)
+        for k in payload:
+            np.testing.assert_array_equal(block[k], payload[k])
+        reply = worker.encode_reply(
+            {"score": block["q"] * 2}, spans=[{"name": "execute"}]
+        )
+        out, spans = coord.decode_reply(reply)
+        coord.release(token)
+        np.testing.assert_array_equal(out["score"], payload["q"] * 2)
+        assert spans == [{"name": "execute"}]
+        worker.note_incoming()  # next control frame frees the reply slot
+        stats = coord.stats()
+        assert stats["kind"] == "shm" and stats["frames"] >= 1
+        assert stats["inline"] == 0 and stats["in_flight"] == 0
+        assert stats["segment"] in _shm_segments() - before
+    finally:
+        worker.close()
+        coord.close(unlink=True)
+    assert _shm_segments() <= before  # no leaked segment
+
+
+def test_shm_transport_oversize_falls_back_inline():
+    coord = SharedMemoryTransport.create(nslots=1, slot_bytes=4096)
+    worker = SharedMemoryTransport.attach(**coord.handshake())
+    try:
+        big = {"wide": np.zeros((64, 64), np.float64)}  # 32 KiB > one slot
+        frame, token = coord.encode_request(big)
+        assert token is None and frame.inline is not None
+        out = worker.decode_request(frame)
+        np.testing.assert_array_equal(out["wide"], big["wide"])
+        coord.release(token)
+        assert coord.stats()["inline"] == 1
+    finally:
+        worker.close()
+        coord.close(unlink=True)
+
+
+def test_death_reclaimer_pops_before_running_and_contains_errors():
+    from repro.ft import DeathReclaimer
+
+    calls = []
+    r = DeathReclaimer()
+    r.register(1, lambda: calls.append("a") or 2)
+    r.register(1, lambda: calls.append("b") or 3)  # re-register replaces
+    assert r.reclaim(1) == 3 and calls == ["b"]
+    assert r.reclaim(1) is None  # popped: a second death path is a no-op
+    r.register(2, lambda: 1 / 0)
+    r.register(3, lambda: 1)
+    assert r.reclaim(2) is None  # error contained, not raised
+    assert r.reclaim_all() == 1  # only key 3 remained
+    snap = r.snapshot()
+    assert snap["reclaims"] >= 2 and snap["errors"] == 1
+    r.register(4, lambda: calls.append("x"))
+    r.forget(4)
+    r.reclaim_all()
+    assert "x" not in calls
+
+
+# ---------------------------------------------------------------------------
+# executor-side plumbing (no workers needed)
+# ---------------------------------------------------------------------------
+
+
+def test_concat_outputs_elides_zero_row_parts():
+    from repro.serve.gateway.multihost import _concat_outputs
+
+    parts = [
+        {"s": np.arange(3, dtype=np.float32)},
+        {"s": np.zeros((0,), np.float32)},
+        {"s": np.arange(2, dtype=np.float32)},
+    ]
+    out = _concat_outputs(parts)
+    np.testing.assert_array_equal(out["s"], [0, 1, 2, 0, 1])
+    # all-empty: the first part is the canonical empty output
+    empty = _concat_outputs([{"s": np.zeros((0,), np.float32)}] * 2)
+    assert empty["s"].shape == (0,)
+
+
+def test_warm_wire_frame_cached_and_invalidated_by_set_example():
+    from repro.launch.mesh import ProcessMesh
+    from repro.serve.gateway.multihost import MultiHostExecutor
+
+    ex = MultiHostExecutor(ProcessMesh.emulated(2, 0), hedge=False)
+    try:
+        example = {"items": np.ones(4, np.float32)}
+        ex.set_example("m", example, buckets=(2, 4))
+        w1 = ex._warm_wire_frame("m", 1)
+        w2 = ex._warm_wire_frame("m", 1)
+        assert isinstance(w1, bytes) and w1 is w2  # re-pickle elided
+        assert ex._warm_block("m", 1) is ex._warm_block("m", 1)
+        ex.set_example("m", {"items": np.zeros(4, np.float32)}, buckets=(2, 4))
+        w3 = ex._warm_wire_frame("m", 1)
+        assert w3 is not w1  # new example → cache invalidated
+        assert ex._warm_wire_frame("nope", 1) is None  # no example: no warm
+    finally:
+        ex.close(timeout_s=0.5)
+
+
+# ---------------------------------------------------------------------------
+# differential legs: the multi-host streams under REPRO_MH_TRANSPORT=shm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.multihost
+@pytest.mark.subprocess
+def test_transport_roundtrip_shm_bit_identical_to_pickle_and_local():
+    """The wide row-local model through the routed executor: shm outputs ==
+    pickle outputs == the 1-process in-process outputs, bit for bit; the
+    shm pair really negotiated (frames flowed through the ring, not the
+    inline fallback) and no segment survived executor close."""
+    payload = {"rows": 64, "width": 256, "iters": 4, "seed": 2}
+    before = _shm_segments()
+    ref = launch("transport_roundtrip", 1, payload)[0]
+    pickle2 = launch(
+        "transport_roundtrip", 2, payload,
+        extra_env={"REPRO_MH_TRANSPORT": "pickle"},
+    )[0]
+    shm2 = launch("transport_roundtrip", 2, payload, extra_env=SHM_ENV)[0]
+    for k in ref["outputs"]:
+        np.testing.assert_array_equal(pickle2["outputs"][k], ref["outputs"][k])
+        np.testing.assert_array_equal(shm2["outputs"][k], ref["outputs"][k])
+    wt = shm2["ft"]["workers"]["process1"]["transport"]
+    assert wt["kind"] == "shm"
+    assert wt["frames"] > 0 and wt["in_flight"] == 0
+    assert shm2["ft"]["transport"]["configured"] == "shm"
+    assert pickle2["ft"]["workers"]["process1"]["transport"]["kind"] == "pickle"
+    assert shm2["leaked_shm"] == []  # measured in-coordinator after close
+    assert _shm_segments() <= before
+
+
+@pytest.mark.parametrize("transport", ["pickle", "shm"])
+@pytest.mark.multihost
+@pytest.mark.subprocess
+def test_zero_row_blocks_route_and_concat(transport):
+    """rows < processes: a worker owns an EMPTY row block.  Dispatch must
+    skip the zero-row execute (regression: it used to ship a 0-row block
+    and concat a 0-row part) and outputs stay bit-identical to 1-process."""
+    payload = {"rows": 2, "width": 16, "iters": 2, "seed": 4}
+    ref = launch("transport_roundtrip", 1, payload)[0]
+    got = launch(
+        "transport_roundtrip", 3, payload,
+        extra_env={"REPRO_MH_TRANSPORT": transport},
+    )[0]
+    for k in ref["outputs"]:
+        assert got["outputs"][k].shape == ref["outputs"][k].shape
+        np.testing.assert_array_equal(got["outputs"][k], ref["outputs"][k])
+
+
+@pytest.mark.multihost
+@pytest.mark.subprocess
+def test_stream_shm_bit_identical():
+    """The full plan stream of test_multihost.py, rerun on the shm data
+    plane: per-process row blocks concat bit-identically to 1-process."""
+    payload = {"seed": 3, "sizes": [16, 16, 12, 16, 8, 13], "pack": 2}
+    before = _shm_segments()
+    ref = launch("stream_plan", 1, payload)[0]
+    parts = launch("stream_plan", 2, payload, extra_env=SHM_ENV)
+    for i, ref_out in enumerate(ref["outputs"]):
+        for k in ref_out:
+            joined = np.concatenate(
+                [p["outputs"][i][k] for p in parts], axis=0
+            )
+            np.testing.assert_array_equal(ref_out[k], joined, err_msg=f"batch {i} col {k}")
+    assert _shm_segments() <= before
+
+
+@pytest.mark.multihost
+@pytest.mark.subprocess
+def test_gateway_replay_shm_bit_identical():
+    """The replayed gateway matrix over shm: every request's reply matches
+    the 1-process reference bit for bit and the worker genuinely served."""
+    payload = {"seed": 5, "requests": 48, "buckets": (2, 4, 8), "max_batch": 8}
+    before = _shm_segments()
+    ref = launch("gateway_replay", 1, payload)[0]
+    got = launch("gateway_replay", 2, payload, extra_env=SHM_ENV)
+    coord, worker = got[0], got[1]
+    assert worker["batches"] > 0
+    assert coord["stats"]["completed"] == payload["requests"]
+    for i, (a, b) in enumerate(zip(ref["results"], coord["results"])):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+    assert _shm_segments() <= before
+
+
+# ---------------------------------------------------------------------------
+# chaos under shm: death reclaim + rejoin renegotiation
+# ---------------------------------------------------------------------------
+
+_CHAOS_BASE = {
+    "seed": 11,
+    "requests": 40,
+    "buckets": (2, 4, 8),
+    "max_batch": 8,
+    "heartbeat_s": 0.5,
+    "cost_model": False,
+    "traffic": "stream",
+    "clients": 3,
+}
+
+
+@pytest.mark.chaos
+@pytest.mark.multihost
+@pytest.mark.subprocess
+def test_chaos_kill_under_shm_reclaims_and_stays_bit_identical():
+    """kill -9 mid-stream with the pair on shm: the reclaimer frees the
+    dead worker's in-flight slots and unlinks its segment, survivors absorb
+    the rows, results match the 1-process run, and /dev/shm is clean."""
+    payload = dict(
+        _CHAOS_BASE,
+        faults=[{"process": 1, "type": "kill", "after_batches": 4}],
+    )
+    before = _shm_segments()
+    ref_payload = dict(payload)
+    ref_payload.pop("faults")
+    ref = launch("gateway_chaos", 1, ref_payload, devices_per_proc=1)[0]
+    coord = launch(
+        "gateway_chaos", 2, payload, devices_per_proc=1,
+        expendable=[1], extra_env=SHM_ENV,
+    )[0]
+    assert coord["worker_failed"] == 0, coord["errors"]
+    assert coord["completed"] == payload["requests"]
+    for i, (got, want) in enumerate(zip(coord["results"], ref["results"])):
+        np.testing.assert_array_equal(got, want, err_msg=f"request {i}")
+    ft = coord["ft"]
+    assert ft["worker_deaths"] >= 1 and 1 in ft["dead"]
+    assert ft["transport"]["configured"] == "shm"
+    assert ft["transport"]["reclaimer"]["reclaims"] >= 1  # death freed the pair
+    assert _shm_segments() <= before
+
+
+@pytest.mark.chaos
+@pytest.mark.multihost
+@pytest.mark.subprocess
+def test_chaos_rejoin_renegotiates_shm_bit_identical():
+    """Drop + rejoin under shm: the first life's segment is reclaimed on
+    death, the rejoined worker is warmed over pickle then renegotiates a
+    FRESH shm pair, serves real traffic through it, and nothing leaks."""
+    payload = dict(
+        _CHAOS_BASE,
+        requests=64,
+        clients=2,
+        gap_s=0.02,
+        waves=2,
+        wave_gap_s=0.8,
+        rejoin_delay_s=0.2,
+        faults=[{"process": 1, "type": "drop", "after_batches": 4, "rejoin": True}],
+    )
+    before = _shm_segments()
+    ref_payload = dict(payload)
+    ref_payload.pop("faults")
+    ref = launch("gateway_chaos", 1, ref_payload, devices_per_proc=1)[0]
+    parts = launch(
+        "gateway_chaos", 2, payload, devices_per_proc=1, extra_env=SHM_ENV
+    )
+    coord, worker = parts[0], parts[1]
+    assert coord["worker_failed"] == 0, coord["errors"]
+    assert coord["completed"] == payload["requests"]
+    for i, (got, want) in enumerate(zip(coord["results"], ref["results"])):
+        np.testing.assert_array_equal(got, want, err_msg=f"request {i}")
+    ft = coord["ft"]
+    assert ft.get("worker_rejoins", 0) >= 1
+    assert ft["dead"] == []  # back in rotation at shutdown
+    assert worker["serves"] == 2 and worker["batches"] > 5
+    # the second life renegotiated shm (a fresh segment, since the first
+    # life's pair was reclaimed and unlinked on death)
+    assert ft["workers"]["process1"]["transport"]["kind"] == "shm"
+    assert ft["transport"]["reclaimer"]["reclaims"] >= 1
+    assert _shm_segments() <= before
